@@ -1,0 +1,114 @@
+//! End-to-end driver: the full three-layer system on a real (synthetic)
+//! corpus workload.
+//!
+//! - L3: rust actor pipeline (threads driver — real OS threads, real
+//!   queues, real wall-clock), token-doubling load balancer.
+//! - L2/L1: the reducers' aggregation state is updated by the AOT-compiled
+//!   Pallas histogram kernel through PJRT; the final state merge runs the
+//!   compiled `merge_state` program; routing parity with the compiled
+//!   `route` program is asserted on a sample.
+//!
+//! Requires `make artifacts`. Run:
+//!
+//! ```sh
+//! cargo run --release --example e2e_pipeline
+//! ```
+//!
+//! Reports the paper's headline metric (skew S with vs without LB) plus
+//! wall-clock throughput; the run is recorded in EXPERIMENTS.md.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use dpa::exec::builtin::TokenizeMap;
+use dpa::exec::xla::xla_wordcount_factory;
+use dpa::hash::Strategy;
+use dpa::pipeline::{DriverKind, Pipeline, PipelineConfig};
+use dpa::runtime::programs::SharedRuntime;
+use dpa::workload::corpus;
+
+fn main() -> dpa::Result<()> {
+    dpa::util::logger::init();
+
+    // ---- the workload: a zipf-distributed English-like corpus ----------
+    let n_words = 40_000;
+    let text = corpus::generate(n_words, 1.0, 7);
+    let lines: Vec<String> = text.lines().map(str::to_string).collect();
+    println!(
+        "corpus: {} words in {} lines (zipf s=1.0 over {} distinct words)",
+        n_words,
+        lines.len(),
+        corpus::WORDS.len()
+    );
+
+    // ---- load the compiled data plane ----------------------------------
+    let t0 = Instant::now();
+    let runtime = SharedRuntime::load_default()?;
+    println!(
+        "PJRT {} — artifacts compiled+loaded in {:?} (B={}, V={})",
+        runtime.platform(),
+        t0.elapsed(),
+        runtime.manifest().b,
+        runtime.manifest().v,
+    );
+
+    // routing parity spot-check: rust ring vs compiled route program
+    let ring = dpa::hash::Ring::new(4, 1);
+    let sample: Vec<&[u8]> = corpus::WORDS.iter().take(64).map(|w| w.as_bytes()).collect();
+    let routed = runtime.route_batch(&sample, &ring)?;
+    for (w, (h, owner)) in sample.iter().zip(&routed) {
+        assert_eq!(*h, dpa::hash::murmur3_x86_32(w));
+        assert_eq!(*owner, ring.lookup(w));
+    }
+    println!("route parity OK on {} sampled words", sample.len());
+
+    // ---- run: no-LB baseline vs token doubling -------------------------
+    let mut cfg = PipelineConfig::default();
+    cfg.driver = DriverKind::Threads;
+    cfg.strategy = Strategy::None;
+    cfg.initial_tokens = Some(1);
+    cfg.reduce_delay_us = 0; // the XLA batch execution IS the reduce cost
+    cfg.chunk_size = 16;
+
+    let runs = [
+        ("no LB", Strategy::None, 0u32),
+        ("doubling, ≤2 rounds", Strategy::Doubling, 2u32),
+    ];
+    let mut results = Vec::new();
+    for (label, strategy, rounds) in runs {
+        let mut c = cfg.clone();
+        c.strategy = strategy;
+        c.max_rounds = rounds.max(1);
+        let pipeline = Pipeline::new(
+            c,
+            Arc::new(TokenizeMap),
+            xla_wordcount_factory(runtime.clone()),
+        );
+        let report = pipeline.run(lines.clone())?;
+        println!(
+            "\n=== {label} ===\n{}throughput: {:.0} words/s (wall {:?})",
+            report.render(),
+            report.throughput(),
+            report.wall
+        );
+        results.push((label, report));
+    }
+
+    let (_, base) = &results[0];
+    let (_, lb) = &results[1];
+    assert_eq!(base.result, lb.result, "LB must not change the answer");
+    assert_eq!(base.total_processed(), n_words as u64);
+    println!(
+        "\nheadline: skew S {:.3} -> {:.3} (Δ {:+.3}); LB events: {}",
+        base.skew(),
+        lb.skew(),
+        base.skew() - lb.skew(),
+        lb.lb_events.len()
+    );
+
+    let mut top = lb.result.clone();
+    top.sort_by(|a, b| b.1.cmp(&a.1));
+    top.truncate(8);
+    println!("top words: {top:?}");
+    Ok(())
+}

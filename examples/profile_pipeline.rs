@@ -1,0 +1,17 @@
+use dpa::hash::Strategy;
+use dpa::pipeline::{DriverKind, Pipeline, PipelineConfig};
+use dpa::workload::generators;
+fn main() {
+    let w = generators::zipf(200_000, 300, 1.2, 6);
+    let mut cfg = PipelineConfig::default();
+    cfg.driver = DriverKind::Threads;
+    cfg.strategy = Strategy::Doubling;
+    cfg.initial_tokens = Some(1);
+    cfg.reduce_delay_us = 0;
+    cfg.chunk_size = 100;
+    let p = Pipeline::wordcount(cfg);
+    for _ in 0..5 {
+        let r = p.run(w.items.clone()).unwrap();
+        println!("{:.0} items/s", r.throughput());
+    }
+}

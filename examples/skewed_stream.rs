@@ -1,0 +1,79 @@
+//! Skewed-stream study: how strategy, τ and round budget interact on
+//! zipf / hot-key streams (the workloads the paper's introduction
+//! motivates: "some letters (e.g. h) are a lot more common than others").
+//!
+//! ```sh
+//! cargo run --release --example skewed_stream
+//! ```
+
+use dpa::hash::Strategy;
+use dpa::pipeline::{Pipeline, PipelineConfig};
+use dpa::util::table::{delta2, f2, Table};
+use dpa::workload::{generators, Workload};
+
+fn mean_skew(w: &Workload, strategy: Strategy, tau: f64, rounds: u32) -> dpa::Result<f64> {
+    let mut cfg = PipelineConfig::default();
+    cfg.strategy = strategy;
+    cfg.initial_tokens = Some(strategy.initial_tokens(8));
+    cfg.tau = tau;
+    cfg.max_rounds = rounds.max(1);
+    if rounds == 0 {
+        cfg.strategy = Strategy::None;
+    }
+    let p = Pipeline::wordcount(cfg);
+    let reports = p.run_seeds(&w.items, &[0, 1, 2])?;
+    Ok(reports.iter().map(|r| r.skew()).sum::<f64>() / reports.len() as f64)
+}
+
+fn main() -> dpa::Result<()> {
+    dpa::util::logger::init();
+
+    let workloads = vec![
+        generators::zipf(1000, 100, 0.8, 1),
+        generators::zipf(1000, 100, 1.2, 1),
+        generators::zipf(1000, 100, 1.6, 1),
+        generators::hot_key(1000, 0.4, 50, 1),
+        generators::hot_key(1000, 0.8, 50, 1),
+        generators::uniform(1000, 100, 1),
+    ];
+
+    println!("== strategies on skewed streams (τ=0.2, ≤2 rounds, 3 seeds) ==");
+    let mut t = Table::new(["workload", "S no-LB", "S halving", "S doubling", "Δ best"]);
+    for w in &workloads {
+        let s0 = mean_skew(w, Strategy::None, 0.2, 0)?;
+        let sh = mean_skew(w, Strategy::Halving, 0.2, 2)?;
+        let sd = mean_skew(w, Strategy::Doubling, 0.2, 2)?;
+        t.row([
+            w.name.clone(),
+            f2(s0),
+            f2(sh),
+            f2(sd),
+            delta2(s0 - sh.min(sd)),
+        ]);
+    }
+    t.print();
+
+    println!("\n== τ sensitivity (doubling, zipf s=1.6, ≤2 rounds) ==");
+    let w = &workloads[2];
+    let mut t = Table::new(["τ", "S", "LB events (seed 0)"]);
+    for tau in [0.0, 0.1, 0.2, 0.5, 1.0, 2.0] {
+        let s = mean_skew(w, Strategy::Doubling, tau, 2)?;
+        let mut cfg = PipelineConfig::default();
+        cfg.strategy = Strategy::Doubling;
+        cfg.initial_tokens = Some(1);
+        cfg.tau = tau;
+        cfg.max_rounds = 2;
+        let events = Pipeline::wordcount(cfg).run(w.items.clone())?.lb_rounds();
+        t.row([format!("{tau:.1}"), f2(s), events.to_string()]);
+    }
+    t.print();
+
+    println!("\n== round budget (doubling, hot-key 80%) ==");
+    let w = &workloads[4];
+    let mut t = Table::new(["max rounds", "S"]);
+    for rounds in 0..=4u32 {
+        t.row([rounds.to_string(), f2(mean_skew(w, Strategy::Doubling, 0.2, rounds)?)]);
+    }
+    t.print();
+    Ok(())
+}

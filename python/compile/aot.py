@@ -1,0 +1,109 @@
+"""AOT lowering: JAX programs -> HLO *text* artifacts for the rust runtime.
+
+Run once at build time (``make artifacts``):
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Emits ``hash_only.hlo.txt``, ``route.hlo.txt``, ``reduce_count.hlo.txt``,
+``merge_state.hlo.txt`` and ``manifest.json`` (the static shapes rust pads
+batches to).
+
+HLO **text**, not ``.serialize()``: jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which the image's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Static shapes — the artifact contract with rust (DESIGN.md §6).
+B = 256   # route/hash/reduce batch size
+W = 8     # u32 words per key (max 32-byte keys on the XLA path)
+T = 512   # ring capacity (max tokens)
+V = 4096  # vocab slots per reducer
+
+
+def to_hlo_text(lowered, return_tuple=True) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format).
+
+    ``return_tuple=False`` gives an *untupled* root — required by the
+    device-resident execution path (``execute_b``), whose output buffer is
+    fed straight back as the next call's input and therefore must be a
+    plain array, not a tuple.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def programs():
+    """name -> (fn, example arg specs)."""
+    u32, i32 = jnp.uint32, jnp.int32
+    return {
+        "hash_only": (model.hash_only, (spec((B, W), u32), spec((B,), i32))),
+        "route": (
+            model.route,
+            (
+                spec((B, W), u32),
+                spec((B,), i32),
+                spec((T,), u32),
+                spec((T,), i32),
+                spec((), i32),
+            ),
+        ),
+        "reduce_count": (model.reduce_count, (spec((V,), u32), spec((B,), i32))),
+        "merge_state": (model.merge_state, (spec((V,), u32), spec((V,), u32))),
+    }
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output directory")
+    args = parser.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    for name, (fn, arg_specs) in programs().items():
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    # untupled reduce_count for the device-resident state path: its output
+    # buffer is reused directly as the next execution's counts input
+    def reduce_count_raw(counts, ids):
+        return model.reduce_count(counts, ids)[0]
+
+    lowered = jax.jit(reduce_count_raw).lower(
+        spec((V,), jnp.uint32), spec((B,), jnp.int32)
+    )
+    text = to_hlo_text(lowered, return_tuple=False)
+    path = os.path.join(args.out, "reduce_count_raw.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = {"B": B, "W": W, "T": T, "V": V}
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    print(f"wrote {mpath}: {manifest}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,136 @@
+"""L1 Pallas kernel: batched MurmurHash3_x86_32.
+
+The paper's consistent-hash ring places tokens and keys with MurmurHash3
+[Appleby, 2014]. This kernel hashes a whole batch of keys at once on the
+data plane; it must agree bit-for-bit with the rust implementation
+(``rust/src/hash/murmur3.rs``) — both are checked against the published
+reference vectors, and ``rust/tests/xla_parity.rs`` checks them against
+each other through the compiled artifact.
+
+Layout contract (shared with ``rust/src/runtime/programs.rs::pack_key``):
+a key of ``len <= 4*W`` bytes is packed into ``W`` little-endian u32 words,
+zero padded. The kernel unrolls over the ``W`` static words, applying the
+murmur body for full 4-byte blocks (``j < len//4``), the tail mix for the
+partial word (``j == len//4`` and ``len%4 > 0``), then finalizes with the
+length xor + avalanche.
+
+TPU shape notes (§Hardware-Adaptation in DESIGN.md): the kernel is pure
+u32 lane arithmetic over a ``(TB, W)`` block — VPU-friendly, no MXU, no
+gather. Block sizes keep the working set (TB*W*4 bytes ≈ 2 KiB at TB=64)
+trivially VMEM-resident. ``interpret=True`` everywhere: the CPU PJRT
+plugin cannot execute Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# plain python ints: weak-typed constants stay uint32 under jax numpy
+# promotion and, crucially, are not captured as traced arrays by pallas
+C1 = 0xCC9E2D51
+C2 = 0x1B873593
+M5 = 5
+N1 = 0xE6546B64
+F1 = 0x85EBCA6B
+F2 = 0xC2B2AE35
+
+
+def _rotl32(x, r):
+    """Rotate-left on uint32 lanes (r is a python int)."""
+    return (x << r) | (x >> (32 - r))
+
+
+def _mix_k1(k1):
+    """The murmur block mix."""
+    k1 = k1 * jnp.uint32(C1)
+    k1 = _rotl32(k1, 15)
+    return k1 * jnp.uint32(C2)
+
+
+def _fmix32(h):
+    """Final avalanche."""
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(F1)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(F2)
+    return h ^ (h >> 16)
+
+
+def murmur3_rows(words, lens):
+    """Hash each row: ``words`` (N, W) uint32, ``lens`` (N,) int32 -> (N,) uint32.
+
+    Shared by the Pallas kernel body and the pure-jnp reference — the
+    *kernel* is this math staged through pallas refs/blocks; the reference
+    applies it directly (see ref.py), so the two can disagree only through
+    the pallas machinery, which is exactly what the tests pin down.
+    """
+    n, w = words.shape
+    h = jnp.zeros((n,), jnp.uint32)
+    nblocks = (lens // 4).astype(jnp.int32)
+    rem = (lens % 4).astype(jnp.int32)
+    for j in range(w):
+        k = words[:, j]
+        # body step for full blocks
+        k1 = _mix_k1(k)
+        h_block = _rotl32(h ^ k1, 13) * jnp.uint32(M5) + jnp.uint32(N1)
+        h = jnp.where(j < nblocks, h_block, h)
+        # tail mix for the trailing partial word
+        mask = (jnp.uint32(1) << (rem.astype(jnp.uint32) * 8)) - 1
+        kt = _mix_k1(k & mask)
+        is_tail = jnp.logical_and(j == nblocks, rem > 0)
+        h = jnp.where(is_tail, h ^ kt, h)
+    h = h ^ lens.astype(jnp.uint32)
+    return _fmix32(h)
+
+
+def _kernel(words_ref, lens_ref, out_ref):
+    out_ref[...] = murmur3_rows(words_ref[...], lens_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def murmur3_kernel(words, lens, *, block_b=64):
+    """Batched murmur3 via ``pl.pallas_call``.
+
+    ``words``: (B, W) uint32 packed key words; ``lens``: (B,) int32 byte
+    lengths. B must be a multiple of ``block_b``.
+    """
+    b, w = words.shape
+    assert b % block_b == 0, f"batch {b} not a multiple of block {block_b}"
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, w), lambda i: (i, 0)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.uint32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(words, lens)
+
+
+def pack_key(data: bytes, w: int):
+    """Host-side packing (python mirror of rust ``pack_key``), for tests."""
+    assert len(data) <= 4 * w, f"key of {len(data)} bytes exceeds {4*w}"
+    words = []
+    for j in range(w):
+        chunk = data[4 * j : 4 * j + 4]
+        words.append(int.from_bytes(chunk.ljust(4, b"\0"), "little"))
+    return words, len(data)
+
+
+def pack_batch(keys, b, w):
+    """Pack up to ``b`` keys into (b, w) words + (b,) lens arrays."""
+    assert len(keys) <= b
+    import numpy as np
+
+    words = np.zeros((b, w), dtype=np.uint32)
+    lens = np.zeros((b,), dtype=np.int32)
+    for i, k in enumerate(keys):
+        kw, kl = pack_key(k, w)
+        words[i] = kw
+        lens[i] = kl
+    return jnp.asarray(words), jnp.asarray(lens)

@@ -1,0 +1,60 @@
+"""L2: the JAX data-plane programs lowered to the rust runtime.
+
+Four programs (shapes fixed at AOT time, see ``aot.py``):
+
+- ``hash_only(words, lens)``                      -> (hashes,)
+- ``route(words, lens, ring_hashes, ring_owners, ring_len)``
+                                                  -> (hashes, owners)
+- ``reduce_count(counts, ids)``                   -> (counts',)
+- ``merge_state(a, b)``                           -> (a + b,)
+
+``route`` composes the L1 murmur3 Pallas kernel with a consistent-ring
+lookup. The ring is a *runtime input* (sorted token hashes padded with
+``0xFFFFFFFF``, owners, live length) so one compiled executable serves
+every repartition the load balancer makes — the rust side just feeds the
+current ring tensors.
+
+Tie/wraparound contract (must match ``rust/src/hash/ring.rs``): tokens are
+pre-sorted by ``(hash, node, idx)`` on the rust side; lookup returns the
+owner at the first index with ``token_hash >= key_hash`` (``searchsorted
+side='left'``), wrapping to index 0 past the live end.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.histogram import histogram_kernel
+from .kernels.murmur3 import murmur3_kernel
+
+
+def ring_lookup(hashes, ring_hashes, ring_owners, ring_len):
+    """Consistent-ring lookup: first token at/after each hash, wrapped.
+
+    ``ring_hashes`` is sorted ascending with ``0xFFFFFFFF`` padding, so
+    searchsorted lands either on a live token or in the pad region; the
+    pad/past-end case wraps to token 0.
+    """
+    idx = jnp.searchsorted(ring_hashes, hashes, side="left")
+    idx = jnp.where(idx >= ring_len, 0, idx).astype(jnp.int32)
+    return ring_owners[idx]
+
+
+def hash_only(words, lens):
+    """Batched murmur3 (L1 kernel)."""
+    return (murmur3_kernel(words, lens),)
+
+
+def route(words, lens, ring_hashes, ring_owners, ring_len):
+    """Hash + ring lookup: the mapper's routing decision, batched."""
+    hashes = murmur3_kernel(words, lens)
+    owners = ring_lookup(hashes, ring_hashes, ring_owners, ring_len)
+    return hashes, owners
+
+
+def reduce_count(counts, ids):
+    """Reducer state update: histogram-add a batch of interned ids."""
+    return (histogram_kernel(counts, ids),)
+
+
+def merge_state(a, b):
+    """§2 state merge for counts: elementwise add."""
+    return (a + b,)

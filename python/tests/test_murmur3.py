@@ -1,0 +1,102 @@
+"""Murmur3 Pallas kernel vs references: published vectors, pure-python
+oracle, pure-jnp reference, and hypothesis sweeps over key bytes/lengths
+and kernel block shapes."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.murmur3 import murmur3_kernel, pack_batch, pack_key
+from compile.kernels.ref import murmur3_py, murmur3_ref
+
+# Published MurmurHash3_x86_32 vectors (seed 0) — same set the rust tests
+# pin (rust/src/hash/murmur3.rs).
+VECTORS = [
+    (b"", 0x00000000),
+    (b"a", 0x3C2569B2),
+    (b"abc", 0xB3DD93FA),
+    (b"test", 0xBA6BD213),
+    (b"hello", 0x248BFA47),
+    (b"Hello, world!", 0xC0363E43),
+    (b"The quick brown fox jumps over the lazy dog", None),  # 44 bytes > 32: py-ref only
+]
+
+
+def kernel_hash(keys, b=64, w=8, block_b=32):
+    words, lens = pack_batch(keys, b, w)
+    return np.array(murmur3_kernel(words, lens, block_b=block_b))[: len(keys)]
+
+
+def test_python_reference_matches_published_vectors():
+    for data, expect in VECTORS:
+        if expect is not None:
+            assert murmur3_py(data) == expect, data
+    # non-zero seeds from the smhasher verification suite
+    assert murmur3_py(b"", 1) == 0x514E28B7
+    assert murmur3_py(b"", 0xFFFFFFFF) == 0x81F16F39
+    assert murmur3_py(b"aaaa", 0x9747B28C) == 0x5A97808A
+
+
+def test_kernel_matches_published_vectors():
+    keys = [k for k, _ in VECTORS if len(k) <= 32]
+    got = kernel_hash(keys)
+    for k, h in zip(keys, got):
+        assert int(h) == murmur3_py(k), k
+
+
+def test_kernel_all_lengths_0_to_32():
+    keys = [bytes(range(1, n + 1)) for n in range(33)]
+    got = kernel_hash(keys, b=64)
+    for k, h in zip(keys, got):
+        assert int(h) == murmur3_py(k), f"len {len(k)}"
+
+
+def test_kernel_matches_jnp_reference():
+    keys = [f"key-{i}".encode() for i in range(50)]
+    words, lens = pack_batch(keys, 64, 8)
+    kern = np.array(murmur3_kernel(words, lens, block_b=32))
+    ref = np.array(murmur3_ref(words, lens))
+    np.testing.assert_array_equal(kern, ref)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.binary(min_size=0, max_size=32), min_size=1, max_size=64))
+def test_kernel_matches_python_on_random_bytes(keys):
+    got = kernel_hash(keys, b=64)
+    for k, h in zip(keys, got):
+        assert int(h) == murmur3_py(k)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.sampled_from([(8, 2), (16, 4), (32, 8), (64, 16), (128, 8)]),
+    st.integers(min_value=0, max_value=2**32 - 1),
+)
+def test_kernel_shape_sweep(shape, seed):
+    """The kernel is correct for any (B, block_b) divisible pairing and any
+    W big enough for the keys."""
+    b, block_b = shape
+    rng = np.random.default_rng(seed)
+    keys = [bytes(rng.integers(0, 256, rng.integers(0, 33)).astype(np.uint8)) for _ in range(b)]
+    w = 8
+    words, lens = pack_batch(keys, b, w)
+    got = np.array(murmur3_kernel(words, lens, block_b=block_b))
+    for k, h in zip(keys, got):
+        assert int(h) == murmur3_py(k)
+
+
+def test_pack_key_layout_matches_rust_contract():
+    words, ln = pack_key(b"abcdef", 8)
+    assert ln == 6
+    assert words[0] == int.from_bytes(b"abcd", "little")
+    assert words[1] == int.from_bytes(b"ef\0\0", "little")
+    assert all(w == 0 for w in words[2:])
+    with pytest.raises(AssertionError):
+        pack_key(b"x" * 33, 8)
+
+
+def test_hash_dispersion_over_token_names():
+    # the ring hashes "token-{i}-{j}" strings; they must not collide
+    names = [f"token-{i}-{j}".encode() for i in range(4) for j in range(8)]
+    hashes = set(kernel_hash(names, b=64).tolist())
+    assert len(hashes) == len(names)

@@ -1,0 +1,79 @@
+"""Ring lookup (L2 searchsorted path) vs the linear-scan oracle:
+boundaries, wraparound, padding and hypothesis sweeps."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import ring_lookup_ref
+from compile.model import ring_lookup
+
+
+def run(hashes, ring_hashes, owners, live):
+    return np.array(
+        ring_lookup(
+            jnp.asarray(hashes, jnp.uint32),
+            jnp.asarray(ring_hashes, jnp.uint32),
+            jnp.asarray(owners, jnp.int32),
+            jnp.int32(live),
+        )
+    )
+
+
+def padded_ring(token_hashes, owners, t):
+    rh = np.full(t, 0xFFFFFFFF, np.uint32)
+    ro = np.zeros(t, np.int32)
+    order = np.argsort(token_hashes, kind="stable")
+    rh[: len(token_hashes)] = np.asarray(token_hashes, np.uint32)[order]
+    ro[: len(token_hashes)] = np.asarray(owners, np.int32)[order]
+    return rh, ro
+
+
+def test_exact_and_adjacent_hashes():
+    rh, ro = padded_ring([100, 200, 300], [0, 1, 2], 8)
+    live = 3
+    # exactly at a token -> that token
+    assert run([100], rh, ro, live)[0] == 0
+    assert run([200], rh, ro, live)[0] == 1
+    # just above -> next clockwise
+    assert run([101], rh, ro, live)[0] == 1
+    # below the smallest -> first token
+    assert run([5], rh, ro, live)[0] == 0
+
+
+def test_wraparound_past_largest_token():
+    rh, ro = padded_ring([100, 200, 300], [0, 1, 2], 8)
+    assert run([301], rh, ro, 3)[0] == 0
+    assert run([0xFFFFFFFF], rh, ro, 3)[0] == 0
+
+
+def test_padding_never_selected():
+    rh, ro = padded_ring([100], [3], 16)
+    got = run(np.linspace(0, 2**32 - 1, 50, dtype=np.uint64).astype(np.uint32), rh, ro, 1)
+    assert (got == 3).all(), "single-token ring owns everything"
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=30),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_matches_linear_oracle(live, seed):
+    rng = np.random.default_rng(seed)
+    token_hashes = rng.choice(2**32, size=live, replace=False).astype(np.uint32)
+    owners = rng.integers(0, 4, live).astype(np.int32)
+    rh, ro = padded_ring(token_hashes, owners, 32)
+    hashes = rng.integers(0, 2**32, 200).astype(np.uint32)
+    got = run(hashes, rh, ro, live)
+    ref = ring_lookup_ref(hashes, rh, ro, live)
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_duplicate_token_hashes_take_first():
+    # tie contract: rust pre-sorts by (hash, node, idx); lookup must take
+    # the first of equals (searchsorted side='left')
+    rh, ro = padded_ring([100, 100, 200], [2, 1, 0], 8)
+    # after the stable sort by hash the order of owners at 100 is (2, 1)
+    # as given; side='left' returns index of the first
+    assert run([100], rh, ro, 3)[0] == ro[0]
+    assert run([99], rh, ro, 3)[0] == ro[0]

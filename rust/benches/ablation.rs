@@ -1,0 +1,137 @@
+//! Ablation studies over the design choices DESIGN.md calls out:
+//!
+//! - trigger policy: the paper's Eq. 1 (max vs second-max) vs a
+//!   mean-ratio variant vs never;
+//! - τ sensitivity (the paper's §6.3 discussion of threshold trade-offs);
+//! - load-report cadence (staleness vs trigger latency);
+//! - cost model: mapper/reducer speed ratio — demonstrates the
+//!   premature-trigger pathology the paper attributes to distributed
+//!   indeterminism;
+//! - consistency mode: merge-at-end vs §7 state forwarding overhead.
+//!
+//! ```sh
+//! cargo bench --bench ablation
+//! ```
+
+use dpa::balancer::policy::{MeanRatioPolicy, NeverPolicy, ThresholdPolicy};
+use dpa::balancer::state_forward::ConsistencyMode;
+use dpa::balancer::BalancerCore;
+use dpa::exec::builtin::{IdentityMap, WordCount};
+use dpa::hash::{Ring, SharedRing, Strategy};
+use dpa::pipeline::{Pipeline, PipelineConfig};
+use dpa::sim::{SimDriver, SimParams};
+use dpa::util::stats::Summary;
+use dpa::util::table::{f2, Table};
+use dpa::workload::{generators, paperwl};
+use std::sync::Arc;
+
+fn base_cfg(strategy: Strategy) -> PipelineConfig {
+    let mut cfg = PipelineConfig::default();
+    cfg.strategy = strategy;
+    cfg.initial_tokens = Some(strategy.initial_tokens(8));
+    cfg.max_rounds = 2;
+    cfg
+}
+
+fn mean_skew_with(cfg: &PipelineConfig, items: &[String], seeds: &[u64]) -> f64 {
+    let p = Pipeline::wordcount(cfg.clone());
+    let reports = p.run_seeds(items, seeds).unwrap();
+    Summary::from_slice(&reports.iter().map(|r| r.skew()).collect::<Vec<_>>()).mean()
+}
+
+fn main() {
+    dpa::util::logger::init();
+    let seeds: Vec<u64> = (0..5).collect();
+
+    // ---- A. policy ablation (direct BalancerCore wiring) -----------------
+    println!("== A. trigger policy (WL4, doubling layout, 5 seeds) ==");
+    let w = paperwl::wl4();
+    let mut t = Table::new(["policy", "mean S", "mean LB events"]);
+    type PolicyCtor = Box<dyn Fn() -> Box<dyn dpa::balancer::policy::LbPolicy + Send>>;
+    let policies: Vec<(&str, PolicyCtor)> = vec![
+        ("eq1 (paper)", Box::new(|| Box::new(ThresholdPolicy::new(0.2, 8)))),
+        (
+            "mean-ratio",
+            Box::new(|| Box::new(MeanRatioPolicy { tau: 0.2, min_trigger_qlen: 8 })),
+        ),
+        ("never", Box::new(|| Box::new(NeverPolicy))),
+    ];
+    for (name, ctor) in &policies {
+        let mut skews = Summary::new();
+        let mut events = Summary::new();
+        for &seed in &seeds {
+            let ring = SharedRing::new(Ring::new(4, 1));
+            let balancer = BalancerCore::new(ring, Strategy::Doubling, 0.2, 8, 2, 50)
+                .with_policy(ctor());
+            let driver = SimDriver::new(SimParams { seed, ..Default::default() });
+            let factory: dpa::exec::ReduceFactory =
+                Arc::new(|_| Box::new(WordCount::new()) as _);
+            let r = driver.run(Arc::new(IdentityMap), &factory, 4, balancer, w.items.clone());
+            skews.push(r.skew());
+            events.push(r.lb_events.len() as f64);
+        }
+        t.row([name.to_string(), f2(skews.mean()), f2(events.mean())]);
+    }
+    t.print();
+
+    // ---- B. τ sweep -------------------------------------------------------
+    println!("\n== B. τ sensitivity (WL1, doubling; paper fixes τ=0.2) ==");
+    let w = paperwl::wl1();
+    let mut t = Table::new(["τ", "mean S (doubling)"]);
+    for tau in [0.0, 0.1, 0.2, 0.5, 1.0, 2.0, 5.0] {
+        let mut cfg = base_cfg(Strategy::Doubling);
+        cfg.tau = tau;
+        t.row([format!("{tau:.1}"), f2(mean_skew_with(&cfg, &w.items, &seeds))]);
+    }
+    t.print();
+
+    // ---- C. report cadence -------------------------------------------------
+    println!("\n== C. load-report interval (WL4, halving) ==");
+    let w = paperwl::wl4();
+    let mut t = Table::new(["report every N msgs", "mean S (halving)"]);
+    for interval in [1u64, 2, 4, 8, 16, 64] {
+        let mut cfg = base_cfg(Strategy::Halving);
+        cfg.report_interval = interval;
+        t.row([interval.to_string(), f2(mean_skew_with(&cfg, &w.items, &seeds))]);
+    }
+    t.print();
+
+    // ---- D. cost-model: premature triggers ---------------------------------
+    println!("\n== D. mapper speed vs premature triggers (WL2 — uniform!) ==");
+    println!("fast mappers flood queues; stale load reports then satisfy Eq.1");
+    println!("on a workload with NO real skew (the paper's §6.3 anomaly):");
+    let w = paperwl::wl2();
+    let mut t = Table::new(["map_cost (reduce=5)", "mean S halving", "mean S doubling"]);
+    for map_cost in [1u64, 2, 4] {
+        let mut row = vec![map_cost.to_string()];
+        for strategy in Strategy::methods() {
+            let mut cfg = base_cfg(strategy);
+            cfg.sim_costs.map_cost = map_cost;
+            row.push(f2(mean_skew_with(&cfg, &w.items, &seeds)));
+        }
+        t.row(row);
+    }
+    t.print();
+
+    // ---- E. consistency-mode overhead ---------------------------------------
+    println!("\n== E. merge-at-end vs §7 state forwarding (zipf 2k, doubling) ==");
+    let w = generators::zipf(2000, 150, 1.3, 3);
+    let mut t = Table::new(["mode", "mean S", "mean virtual end (ticks)"]);
+    for (name, mode) in [
+        ("merge-at-end", ConsistencyMode::MergeAtEnd),
+        ("state-forward", ConsistencyMode::StateForward),
+    ] {
+        let mut skews = Summary::new();
+        let mut vtime = Summary::new();
+        for &seed in &seeds {
+            let mut cfg = base_cfg(Strategy::Doubling);
+            cfg.mode = mode;
+            cfg.seed = seed;
+            let r = Pipeline::wordcount(cfg).run(w.items.clone()).unwrap();
+            skews.push(r.skew());
+            vtime.push(r.virtual_end as f64);
+        }
+        t.row([name.to_string(), f2(skews.mean()), format!("{:.0}", vtime.mean())]);
+    }
+    t.print();
+}

@@ -1,0 +1,65 @@
+//! Bench target for **Figure 3 / Experiment 2**: skew S as a function of
+//! the maximum LB rounds allowed per reducer (1..=4), per workload ×
+//! method. The paper's qualitative findings to check against:
+//!
+//! 1. extra rounds help at least one method on every workload;
+//! 2. WL1/WL2 can recover in round 2 from skew introduced in round 1;
+//! 3. extra rounds never hurt halving, but can hurt doubling (token
+//!    reshuffling reintroduces skew).
+//!
+//! ```sh
+//! cargo bench --bench fig3
+//! ```
+
+use dpa::cli::mean_skew;
+use dpa::hash::Strategy;
+use dpa::util::table::f2;
+use dpa::util::table::Table;
+use dpa::workload::paperwl;
+
+fn main() {
+    dpa::util::logger::init();
+    let max_rounds = 4u32;
+    let seeds = 3;
+    println!("Experiment 2 (Figure 3): S vs max LB rounds/reducer (τ=0.2, {seeds} seeds)\n");
+
+    let mut header = vec!["Workload".to_string(), "Method".to_string(), "r=0 (noLB)".to_string()];
+    for r in 1..=max_rounds {
+        header.push(format!("r={r}"));
+    }
+    let mut t = Table::new(header);
+
+    let mut halving_monotone = true;
+    let mut doubling_hurt_somewhere = false;
+    for w in paperwl::all() {
+        for strategy in Strategy::methods() {
+            let mut row = vec![w.name.clone(), strategy.to_string()];
+            let (s0, _) = mean_skew(&w, strategy, false, 1, seeds).unwrap();
+            row.push(f2(s0));
+            let mut series = Vec::new();
+            for rounds in 1..=max_rounds {
+                let (s, _) = mean_skew(&w, strategy, true, rounds, seeds).unwrap();
+                series.push(s);
+                row.push(f2(s));
+            }
+            t.row(row);
+            for win in series.windows(2) {
+                match strategy {
+                    Strategy::Halving if win[1] > win[0] + 0.02 => halving_monotone = false,
+                    Strategy::Doubling if win[1] > win[0] + 0.02 => doubling_hurt_somewhere = true,
+                    _ => {}
+                }
+            }
+        }
+    }
+    t.print();
+    println!("\npaper-shape checks:");
+    println!(
+        "- additional rounds never hurt halving: {}",
+        if halving_monotone { "HOLDS" } else { "violated (see table)" }
+    );
+    println!(
+        "- additional rounds can hurt doubling: {}",
+        if doubling_hurt_somewhere { "observed" } else { "not observed on these seeds" }
+    );
+}

@@ -1,0 +1,94 @@
+//! End-to-end pipeline throughput benchmarks: sim-driver execution speed
+//! (events/s of the DES itself), threads-driver wall throughput across
+//! reducer counts and queue capacities, and queue op costs.
+//!
+//! ```sh
+//! cargo bench --bench pipeline
+//! ```
+
+use std::time::Duration;
+
+use dpa::benchkit::{black_box, Bench};
+use dpa::exec::Record;
+use dpa::hash::Strategy;
+use dpa::pipeline::{DriverKind, Pipeline, PipelineConfig};
+use dpa::queue::DataQueue;
+use dpa::workload::generators;
+
+fn main() {
+    dpa::util::logger::init();
+    let mut bench = Bench::quick();
+
+    // --- queue substrate -------------------------------------------------
+    let q = DataQueue::new(1 << 16);
+    bench.run("queue push+pop 10k", Some(10_000), || {
+        for i in 0..10_000 {
+            q.push(Record::new("k", i));
+        }
+        while q.try_pop().is_some() {}
+    });
+
+    // --- sim driver ------------------------------------------------------
+    let w = generators::zipf(10_000, 300, 1.2, 5);
+    for strategy in [Strategy::None, Strategy::Doubling] {
+        let mut cfg = PipelineConfig::default();
+        cfg.strategy = strategy;
+        cfg.initial_tokens = Some(1);
+        cfg.max_rounds = 2;
+        let p = Pipeline::wordcount(cfg);
+        let name = format!("sim 10k items ({strategy})");
+        bench.run(&name, Some(10_000), || {
+            black_box(p.run(w.items.clone()).unwrap());
+        });
+    }
+
+    // --- threads driver: scaling in reducers ------------------------------
+    let w = generators::zipf(20_000, 300, 1.2, 6);
+    for reducers in [2usize, 4, 8] {
+        let mut cfg = PipelineConfig::default();
+        cfg.driver = DriverKind::Threads;
+        cfg.reducers = reducers;
+        cfg.mappers = 4;
+        cfg.strategy = Strategy::Doubling;
+        cfg.initial_tokens = Some(1);
+        cfg.reduce_delay_us = 0;
+        let p = Pipeline::wordcount(cfg);
+        let name = format!("threads 20k items, {reducers} reducers");
+        bench.run(&name, Some(20_000), || {
+            black_box(p.run(w.items.clone()).unwrap());
+        });
+    }
+
+    // --- threads driver: compute-heavy regime (the paper's target) --------
+    let w = generators::zipf(2_000, 300, 1.2, 7);
+    for (label, delay) in [("5µs", 5u64), ("50µs", 50)] {
+        let mut cfg = PipelineConfig::default();
+        cfg.driver = DriverKind::Threads;
+        cfg.strategy = Strategy::Doubling;
+        cfg.initial_tokens = Some(1);
+        cfg.reduce_delay_us = delay;
+        let p = Pipeline::wordcount(cfg);
+        let name = format!("threads 2k items, reduce={label}");
+        bench.run(&name, Some(2_000), || {
+            black_box(p.run(w.items.clone()).unwrap());
+        });
+    }
+
+    // --- chunk-size ablation ----------------------------------------------
+    let w = generators::zipf(10_000, 300, 1.2, 8);
+    for chunk in [1usize, 10, 100] {
+        let mut cfg = PipelineConfig::default();
+        cfg.driver = DriverKind::Threads;
+        cfg.chunk_size = chunk;
+        cfg.reduce_delay_us = 0;
+        let p = Pipeline::wordcount(cfg);
+        let name = format!("threads 10k items, chunk={chunk}");
+        bench.run(&name, Some(10_000), || {
+            black_box(p.run(w.items.clone()).unwrap());
+        });
+    }
+
+    bench.print();
+    // give the condvar-parked reducer threads a beat to exit cleanly
+    std::thread::sleep(Duration::from_millis(50));
+}

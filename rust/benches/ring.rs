@@ -1,0 +1,84 @@
+//! Microbenchmarks of the routing substrate: murmur3, ring lookup at
+//! various token counts, redistribution cost, and the shared-ring access
+//! paths (RwLock vs epoch-cached snapshot) that the §Perf pass compares.
+//!
+//! ```sh
+//! cargo bench --bench ring
+//! ```
+
+use dpa::benchkit::{black_box, Bench};
+use dpa::hash::ring::RingCache;
+use dpa::hash::{murmur3_x86_32, Ring, SharedRing};
+use dpa::util::prng::Xoshiro256;
+
+fn main() {
+    dpa::util::logger::init();
+    let mut bench = Bench::new();
+
+    // keys of realistic routing size
+    let mut rng = Xoshiro256::new(1);
+    let keys: Vec<String> = (0..10_000)
+        .map(|i| format!("key-{}-{}", i, rng.next_u64() % 1000))
+        .collect();
+
+    bench.run("murmur3 10k keys", Some(10_000), || {
+        let mut acc = 0u32;
+        for k in &keys {
+            acc ^= murmur3_x86_32(k.as_bytes());
+        }
+        black_box(acc);
+    });
+
+    for tokens_per_node in [1u32, 8, 32, 128] {
+        let ring = Ring::new(4, tokens_per_node);
+        let name = format!("ring lookup 10k keys, T={}", ring.total_tokens());
+        bench.run(&name, Some(10_000), || {
+            let mut acc = 0usize;
+            for k in &keys {
+                acc ^= ring.lookup(k.as_bytes());
+            }
+            black_box(acc);
+        });
+    }
+
+    // pre-hashed lookup isolates the binary search
+    let ring = Ring::new(4, 32);
+    let hashes: Vec<u32> = keys.iter().map(|k| murmur3_x86_32(k.as_bytes())).collect();
+    bench.run("ring lookup_hash 10k (T=128)", Some(10_000), || {
+        let mut acc = 0usize;
+        for &h in &hashes {
+            acc ^= ring.lookup_hash(h);
+        }
+        black_box(acc);
+    });
+
+    // shared-ring access paths
+    let shared = SharedRing::new(Ring::new(4, 32));
+    bench.run("SharedRing (RwLock) 10k lookups", Some(10_000), || {
+        let mut acc = 0usize;
+        for k in &keys {
+            acc ^= shared.lookup(k.as_bytes());
+        }
+        black_box(acc);
+    });
+    let mut cache = RingCache::new(shared.clone());
+    bench.run("RingCache (epoch) 10k lookups", Some(10_000), || {
+        let mut acc = 0usize;
+        for k in &keys {
+            acc ^= cache.lookup(k.as_bytes());
+        }
+        black_box(acc);
+    });
+
+    // redistribution cost (rebuild + sort)
+    bench.run("halve+rebuild (T=512)", None, || {
+        let mut ring = Ring::new(4, 128);
+        black_box(ring.halve(2));
+    });
+    bench.run("double_others+rebuild (1->2 tokens)", None, || {
+        let mut ring = Ring::new(4, 1);
+        black_box(ring.double_others(0));
+    });
+
+    bench.print();
+}

@@ -1,0 +1,76 @@
+//! Bench target for **Table 1 / Experiment 1**: regenerates the paper's
+//! skew table (5 workloads × {halving, doubling} × {no LB, LB}, τ = 0.2,
+//! ≤ 1 LB round per reducer, mean of 3 seeded runs) and prints the paper's
+//! published values next to ours.
+//!
+//! ```sh
+//! cargo bench --bench table1
+//! ```
+
+use dpa::cli::mean_skew;
+use dpa::hash::Strategy;
+use dpa::util::table::{delta2, f2, Table};
+use dpa::workload::paperwl;
+
+/// The paper's published Table 1, for side-by-side comparison.
+/// (workload, method) -> (no_lb, with_lb)
+fn paper_values(wl: &str, m: Strategy) -> (f64, f64) {
+    match (wl, m) {
+        ("WL1", Strategy::Halving) => (0.00, 0.08),
+        ("WL1", Strategy::Doubling) => (1.00, 0.20),
+        ("WL2", Strategy::Halving) => (0.00, 0.00),
+        ("WL2", Strategy::Doubling) => (0.00, 0.08),
+        ("WL3", Strategy::Halving) => (1.00, 1.00),
+        ("WL3", Strategy::Doubling) => (1.00, 0.75),
+        ("WL4", Strategy::Halving) => (0.80, 0.52),
+        ("WL4", Strategy::Doubling) => (0.49, 0.11),
+        ("WL5", Strategy::Halving) => (0.20, 0.20),
+        ("WL5", Strategy::Doubling) => (0.55, 0.12),
+        _ => (f64::NAN, f64::NAN),
+    }
+}
+
+fn main() {
+    dpa::util::logger::init();
+    let seeds = 3;
+    println!("Experiment 1 (Table 1): S with/without LB — ours vs paper");
+    println!("setup: 4 mappers, 4 reducers, τ=0.2, ≤1 round/reducer, {seeds} seeds\n");
+
+    let mut t = Table::new([
+        "Workload", "Method", "No LB", "(paper)", "With LB", "(paper)", "Δ", "(paper Δ)",
+    ]);
+    let mut shape_ok = 0usize;
+    let mut shape_total = 0usize;
+    for w in paperwl::all() {
+        for strategy in Strategy::methods() {
+            let (p_nolb, p_lb) = paper_values(&w.name, strategy);
+            let (s_nolb, _) = mean_skew(&w, strategy, false, 1, seeds).unwrap();
+            let (s_lb, _) = mean_skew(&w, strategy, true, 1, seeds).unwrap();
+            let ours_delta = s_nolb - s_lb;
+            let paper_delta = p_nolb - p_lb;
+            // "shape" agreement: Δ sign matches (or both negligible)
+            shape_total += 1;
+            if (ours_delta.abs() < 0.15 && paper_delta.abs() < 0.15)
+                || (ours_delta.signum() == paper_delta.signum()
+                    && ours_delta.abs() >= 0.1
+                    && paper_delta.abs() >= 0.1)
+            {
+                shape_ok += 1;
+            }
+            t.row([
+                w.name.clone(),
+                strategy.to_string(),
+                f2(s_nolb),
+                f2(p_nolb),
+                f2(s_lb),
+                f2(p_lb),
+                delta2(ours_delta),
+                delta2(paper_delta),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "\nshape agreement (Δ direction/magnitude class): {shape_ok}/{shape_total}"
+    );
+}

@@ -1,0 +1,130 @@
+//! XLA data-plane benchmarks: latency/throughput of the compiled
+//! `hash_only`, `route`, `reduce_count` and `merge_state` programs through
+//! PJRT, side by side with the bit-identical rust-native equivalents.
+//!
+//! This quantifies the batch-size economics the runtime design is built
+//! on: per-execution PJRT overhead is amortized over B=256 records, so
+//! the XLA lane wins only for batch-level work — which is exactly how the
+//! `XlaWordCount` executor uses it (one execution per 256 records).
+//!
+//! Requires `make artifacts`. Run: `cargo bench --bench xla_exec`.
+
+use dpa::benchkit::{black_box, Bench};
+use dpa::exec::builtin::WordCount;
+use dpa::exec::xla::{Interner, XlaWordCount};
+use dpa::exec::{Record, ReduceExecutor};
+use dpa::hash::{murmur3_x86_32, Ring};
+use dpa::runtime::programs::SharedRuntime;
+use dpa::util::prng::Xoshiro256;
+use std::sync::Arc;
+
+fn main() {
+    dpa::util::logger::init();
+    let rt = match SharedRuntime::load_default() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping xla_exec bench: {e:#}\nrun `make artifacts` first");
+            return;
+        }
+    };
+    let m = rt.manifest();
+    println!("platform: {}  B={} W={} T={} V={}\n", rt.platform(), m.b, m.w, m.t, m.v);
+    let mut bench = Bench::quick();
+
+    let mut rng = Xoshiro256::new(3);
+    let keys: Vec<Vec<u8>> = (0..m.b)
+        .map(|i| format!("key-{i}-{}", rng.next_u64() % 997).into_bytes())
+        .collect();
+    let key_refs: Vec<&[u8]> = keys.iter().map(Vec::as_slice).collect();
+    let ring = Ring::new(4, 8);
+
+    // --- hashing: XLA batch vs native loop --------------------------------
+    bench.run("XLA hash_only (256 keys)", Some(m.b as u64), || {
+        black_box(rt.hash_batch(&key_refs).unwrap());
+    });
+    bench.run("native murmur3 (256 keys)", Some(m.b as u64), || {
+        let mut acc = 0u32;
+        for k in &key_refs {
+            acc ^= murmur3_x86_32(k);
+        }
+        black_box(acc);
+    });
+
+    // --- routing -----------------------------------------------------------
+    bench.run("XLA route (256 keys)", Some(m.b as u64), || {
+        black_box(rt.route_batch(&key_refs, &ring).unwrap());
+    });
+    bench.run("native hash+lookup (256 keys)", Some(m.b as u64), || {
+        let mut acc = 0usize;
+        for k in &key_refs {
+            acc ^= ring.lookup(k);
+        }
+        black_box(acc);
+    });
+
+    // --- reduce: histogram batch vs HashMap --------------------------------
+    let ids: Vec<i32> = (0..m.b).map(|_| rng.index(1000) as i32).collect();
+    let counts = vec![0u32; m.v];
+    bench.run("XLA reduce_count (256 ids)", Some(m.b as u64), || {
+        black_box(rt.reduce_counts(&counts, &ids).unwrap());
+    });
+    let skeys: Vec<String> = ids.iter().map(|i| format!("k{i}")).collect();
+    bench.run("native HashMap reduce (256 recs)", Some(m.b as u64), || {
+        let mut wc = WordCount::new();
+        for k in &skeys {
+            wc.reduce(Record::new(k.clone(), 1));
+        }
+        black_box(wc);
+    });
+
+    // --- merge --------------------------------------------------------------
+    let a: Vec<u32> = (0..m.v).map(|_| rng.index(100) as u32).collect();
+    let b: Vec<u32> = (0..m.v).map(|_| rng.index(100) as u32).collect();
+    bench.run("XLA merge_state (V=4096)", Some(m.v as u64), || {
+        black_box(rt.merge_states(&a, &b).unwrap());
+    });
+    bench.run("native vec add (V=4096)", Some(m.v as u64), || {
+        let out: Vec<u32> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
+        black_box(out);
+    });
+
+    // --- host-literal vs device-resident state (§Perf iteration 2 A/B) ------
+    bench.run("reduce 16 batches, host-literal state", Some(16 * m.b as u64), || {
+        let mut c = vec![0u32; m.v];
+        for _ in 0..16 {
+            c = rt.reduce_counts(&c, &ids).unwrap();
+        }
+        black_box(c[0]);
+    });
+    bench.run("reduce 16 batches, device-resident state", Some(16 * m.b as u64), || {
+        let h = rt.counts_create().unwrap();
+        for _ in 0..16 {
+            rt.counts_update(h, &ids).unwrap();
+        }
+        let c = rt.counts_read(h).unwrap();
+        rt.counts_free(h);
+        black_box(c[0]);
+    });
+
+    // --- the actual executor hot path ---------------------------------------
+    let interner = Arc::new(Interner::new(m.v));
+    let pool = dpa::workload::generators::key_pool();
+    let stream: Vec<String> = (0..4096).map(|_| pool[rng.index(400)].clone()).collect();
+    bench.run("XlaWordCount 4096 records (16 flushes)", Some(4096), || {
+        let mut wc = XlaWordCount::new(rt.clone(), interner.clone());
+        for k in &stream {
+            wc.reduce(Record::new(k.clone(), 1));
+        }
+        wc.flush();
+        black_box(wc.dense_records);
+    });
+    bench.run("WordCount 4096 records", Some(4096), || {
+        let mut wc = WordCount::new();
+        for k in &stream {
+            wc.reduce(Record::new(k.clone(), 1));
+        }
+        black_box(wc.snapshot().len());
+    });
+
+    bench.print();
+}

@@ -1,0 +1,166 @@
+//! Actor plumbing shared by the drivers: queue envelopes, shutdown
+//! accounting and named-thread helpers. The paper implements every
+//! component (coordinator, queues, reducers, mappers, load balancer) as a
+//! Ray actor; here each is either a thread (threads driver) or a
+//! deterministically-scheduled state machine (sim driver) over the same
+//! core logic.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread;
+
+use crate::exec::Record;
+
+/// What travels through a reducer queue. `Data` is a routed record;
+/// `State` is a §7 state-forwarding transfer (key + extracted state) that
+/// must be applied before any data processing.
+#[derive(Clone, Debug)]
+pub enum Envelope {
+    Data(Record),
+    State(Record),
+}
+
+impl Envelope {
+    pub fn record(&self) -> &Record {
+        match self {
+            Envelope::Data(r) | Envelope::State(r) => r,
+        }
+    }
+}
+
+/// Shutdown accounting (§2.3): "a reducer can never stop on its own ...
+/// the coordinator tracks all the reducers and ensures that they shutdown
+/// once all of them are done processing the data."
+///
+/// A record becomes *in flight* when a mapper enqueues it and stops being
+/// in flight when a reducer *reduces* it (forwarding keeps it in flight).
+/// Reducers may stop exactly when all mappers are done **and** nothing is
+/// in flight — at that point no queue holds data and no forward can ever
+/// arrive, so the condition is stable.
+#[derive(Debug, Default)]
+pub struct ShutdownMonitor {
+    mappers_running: AtomicUsize,
+    in_flight: AtomicU64,
+}
+
+impl ShutdownMonitor {
+    pub fn new(mappers: usize) -> Self {
+        ShutdownMonitor {
+            mappers_running: AtomicUsize::new(mappers),
+            in_flight: AtomicU64::new(0),
+        }
+    }
+
+    /// A mapper enqueued `n` records.
+    #[inline]
+    pub fn produced(&self, n: u64) {
+        self.in_flight.fetch_add(n, Ordering::SeqCst);
+    }
+
+    /// A reducer reduced one record (forwards do NOT call this).
+    #[inline]
+    pub fn consumed(&self) {
+        let prev = self.in_flight.fetch_sub(1, Ordering::SeqCst);
+        debug_assert!(prev > 0, "consumed more records than produced");
+    }
+
+    /// A mapper exhausted its tasks.
+    pub fn mapper_done(&self) {
+        let prev = self.mappers_running.fetch_sub(1, Ordering::SeqCst);
+        debug_assert!(prev > 0);
+    }
+
+    pub fn in_flight(&self) -> u64 {
+        self.in_flight.load(Ordering::SeqCst)
+    }
+
+    pub fn mappers_running(&self) -> usize {
+        self.mappers_running.load(Ordering::SeqCst)
+    }
+
+    /// Stable termination condition for reducers.
+    pub fn drained(&self) -> bool {
+        // order matters: check mappers first so a concurrent
+        // produce-then-mapper-done cannot slip between the two loads
+        self.mappers_running() == 0 && self.in_flight() == 0
+    }
+}
+
+/// Spawn a named worker thread.
+pub fn spawn_named<F>(name: String, f: F) -> thread::JoinHandle<()>
+where
+    F: FnOnce() + Send + 'static,
+{
+    thread::Builder::new()
+        .name(name)
+        .spawn(f)
+        .expect("failed to spawn actor thread")
+}
+
+/// A cancellation flag shared across actors (error propagation: any actor
+/// hitting a fatal error trips it so the others unwind promptly).
+#[derive(Clone, Default)]
+pub struct CancelToken {
+    flag: Arc<std::sync::atomic::AtomicBool>,
+}
+
+impl CancelToken {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shutdown_monitor_lifecycle() {
+        let m = ShutdownMonitor::new(2);
+        assert!(!m.drained());
+        m.produced(3);
+        m.mapper_done();
+        m.mapper_done();
+        assert!(!m.drained(), "records still in flight");
+        m.consumed();
+        m.consumed();
+        m.consumed();
+        assert!(m.drained());
+    }
+
+    #[test]
+    fn forwarding_keeps_record_in_flight() {
+        let m = ShutdownMonitor::new(1);
+        m.produced(1);
+        m.mapper_done();
+        // a forward happens here — no consumed() call — still not drained
+        assert!(!m.drained());
+        m.consumed();
+        assert!(m.drained());
+    }
+
+    #[test]
+    fn cancel_token() {
+        let t = CancelToken::new();
+        let t2 = t.clone();
+        assert!(!t.is_cancelled());
+        t2.cancel();
+        assert!(t.is_cancelled());
+    }
+
+    #[test]
+    fn envelope_accessors() {
+        let e = Envelope::Data(Record::new("k", 1));
+        assert_eq!(e.record().key, "k");
+        let s = Envelope::State(Record::new("j", 2));
+        assert_eq!(s.record().value, 2);
+    }
+}

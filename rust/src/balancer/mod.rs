@@ -1,0 +1,275 @@
+//! The load balancer — "the heart of the system" (§2.4).
+//!
+//! It owns the consistent-hashing object, maintains the last-reported load
+//! state (queue size) of every reducer, and repartitions the keyspace when
+//! the §4.1 policy fires. [`policy`] holds the trigger predicate,
+//! [`BalancerCore`] the actor state shared by both drivers, and
+//! [`state_forward`] the §7 staged state-forwarding extension.
+
+pub mod policy;
+pub mod state_forward;
+
+use crate::hash::{SharedRing, Strategy};
+use crate::metrics::LbEvent;
+
+use policy::{LbPolicy, ThresholdPolicy};
+
+/// Balancer actor state. Thread driver wraps it in a `Mutex`; the sim
+/// driver calls it directly. Reducers report load via [`Self::report`];
+/// mappers/reducers route via the [`SharedRing`] it updates.
+pub struct BalancerCore {
+    ring: SharedRing,
+    strategy: Strategy,
+    policy: Box<dyn LbPolicy + Send>,
+    /// Last reported queue length per reducer.
+    qlens: Vec<usize>,
+    /// Which reducers have reported at least once. Until everyone has, the
+    /// policy is not evaluated: a cold balancer seeing one busy reducer
+    /// before the others check in would fire on `Q_s = 0` noise — the
+    /// "premature LB" the paper blames for the small skew *increases* on
+    /// WL1/WL2. Disable via [`Self::without_warmup`] to study that effect.
+    reported: Vec<bool>,
+    /// LB rounds already spent per reducer (Experiment 2 caps this).
+    rounds: Vec<u32>,
+    /// Max rounds *per reducer* (§6.4: "maximum allowable number of
+    /// rounds per reducer").
+    max_rounds: u32,
+    /// Minimum virtual-time/µs gap between consecutive LB events; right
+    /// after a repartition the queue lengths are stale (old-scheme records
+    /// are still being forwarded), so immediate re-triggering would act on
+    /// noise. The paper's periodic check has the same effect implicitly.
+    cooldown: u64,
+    last_event_at: Option<u64>,
+    events: Vec<LbEvent>,
+}
+
+impl BalancerCore {
+    pub fn new(
+        ring: SharedRing,
+        strategy: Strategy,
+        tau: f64,
+        min_trigger_qlen: usize,
+        max_rounds: u32,
+        cooldown: u64,
+    ) -> Self {
+        let reducers = ring.nodes();
+        BalancerCore {
+            ring,
+            strategy,
+            policy: Box::new(ThresholdPolicy::new(tau, min_trigger_qlen)),
+            qlens: vec![0; reducers],
+            reported: vec![false; reducers],
+            rounds: vec![0; reducers],
+            max_rounds,
+            cooldown,
+            last_event_at: None,
+            events: Vec::new(),
+        }
+    }
+
+    /// Swap in a custom policy (ablations).
+    pub fn with_policy(mut self, policy: Box<dyn LbPolicy + Send>) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Disable warm-up gating: evaluate Eq. 1 even before every reducer
+    /// has reported (reproduces the cold-start premature triggers).
+    pub fn without_warmup(mut self) -> Self {
+        self.reported.iter_mut().for_each(|r| *r = true);
+        self
+    }
+
+    pub fn ring(&self) -> &SharedRing {
+        &self.ring
+    }
+
+    pub fn events(&self) -> &[LbEvent] {
+        &self.events
+    }
+
+    pub fn take_events(&mut self) -> Vec<LbEvent> {
+        std::mem::take(&mut self.events)
+    }
+
+    pub fn rounds(&self) -> &[u32] {
+        &self.rounds
+    }
+
+    /// A reducer (or the driver on its behalf) reports its current queue
+    /// length (§3: reducers "periodically call a remote method on the load
+    /// balancer to update their current load state"). The balancer checks
+    /// the policy on every report and repartitions if it fires. Returns
+    /// the event if the ring changed.
+    pub fn report(&mut self, reducer: usize, qlen: usize, now: u64) -> Option<LbEvent> {
+        self.observe(reducer, qlen);
+        self.maybe_rebalance(now)
+    }
+
+    /// Update the load state *without* evaluating the policy — used while
+    /// the §7 state-forwarding protocol is mid-stage (updates must be
+    /// atomic and infrequent) and by idle-poll reports.
+    pub fn observe(&mut self, reducer: usize, qlen: usize) {
+        if reducer >= self.qlens.len() {
+            // a reducer added at runtime (elastic extension)
+            self.qlens.resize(reducer + 1, 0);
+            self.rounds.resize(reducer + 1, 0);
+            self.reported.resize(reducer + 1, false);
+        }
+        self.qlens[reducer] = qlen;
+        self.reported[reducer] = true;
+    }
+
+    /// Evaluate the policy over the current load vector and apply the
+    /// strategy if it fires.
+    pub fn maybe_rebalance(&mut self, now: u64) -> Option<LbEvent> {
+        if self.strategy == Strategy::None {
+            return None;
+        }
+        if !self.reported.iter().all(|&r| r) {
+            return None; // warm-up: wait until every reducer has reported
+        }
+        if let Some(last) = self.last_event_at {
+            if now.saturating_sub(last) < self.cooldown {
+                return None;
+            }
+        }
+        let target = self.policy.pick_target(&self.qlens)?;
+        if self.rounds[target] >= self.max_rounds {
+            return None;
+        }
+        let changed = self.ring.update(|r| r.redistribute(target, self.strategy));
+        if !changed {
+            // e.g. halving exhausted — count the round so we stop retrying
+            self.rounds[target] = self.max_rounds;
+            return None;
+        }
+        self.rounds[target] += 1;
+        self.last_event_at = Some(now);
+        let event = LbEvent {
+            at: now,
+            target: target as u32,
+            qlens: self.qlens.clone(),
+            epoch: self.ring.epoch(),
+            strategy: self.strategy,
+        };
+        log::info!(
+            "LB fired at {now}: target reducer {target}, qlens {:?}, strategy {}",
+            event.qlens,
+            self.strategy
+        );
+        self.events.push(event.clone());
+        Some(event)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::Ring;
+
+    fn mk(strategy: Strategy, max_rounds: u32) -> BalancerCore {
+        let ring = SharedRing::new(Ring::for_strategy(4, strategy, 8));
+        // tests drive reports for a subset of reducers; disable warm-up
+        // gating except where it is the behaviour under test
+        BalancerCore::new(ring, strategy, 0.2, 4, max_rounds, 10).without_warmup()
+    }
+
+    #[test]
+    fn fires_on_skewed_reports() {
+        let mut b = mk(Strategy::Doubling, 1);
+        assert!(b.report(0, 2, 0).is_none(), "below min trigger");
+        assert!(b.report(1, 1, 1).is_none());
+        let e = b.report(0, 20, 2).expect("should fire");
+        assert_eq!(e.target, 0);
+        assert_eq!(b.rounds()[0], 1);
+    }
+
+    #[test]
+    fn respects_round_cap() {
+        let mut b = mk(Strategy::Doubling, 1);
+        assert!(b.report(0, 20, 0).is_some());
+        // well past cooldown, still overloaded — but round cap hit
+        assert!(b.report(0, 40, 100).is_none());
+    }
+
+    #[test]
+    fn second_round_allowed_when_cap_is_two() {
+        let mut b = mk(Strategy::Doubling, 2);
+        assert!(b.report(0, 20, 0).is_some());
+        assert!(b.report(0, 40, 100).is_some());
+        assert!(b.report(0, 80, 200).is_none(), "cap 2 exhausted");
+    }
+
+    #[test]
+    fn cooldown_suppresses_imm_retrigger() {
+        let mut b = mk(Strategy::Doubling, 4);
+        assert!(b.report(0, 20, 0).is_some());
+        assert!(b.report(0, 40, 5).is_none(), "within cooldown of 10");
+        assert!(b.report(0, 40, 20).is_some(), "after cooldown");
+    }
+
+    #[test]
+    fn none_strategy_never_fires() {
+        let mut b = mk(Strategy::None, 4);
+        assert!(b.report(0, 1000, 0).is_none());
+        assert!(b.events().is_empty());
+    }
+
+    #[test]
+    fn uniform_load_never_fires() {
+        let mut b = mk(Strategy::Halving, 4);
+        // all reducers known-busy first (a cold balancer seeing one busy
+        // reducer before the others report WOULD fire — that is exactly
+        // the paper's "premature trigger" observation)
+        for r in 0..4 {
+            b.observe(r, 20);
+        }
+        for t in 0..50 {
+            for r in 0..4 {
+                assert!(b.report(r, 20, t * 4 + r as u64).is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn cold_start_first_report_can_fire_prematurely() {
+        // documents the §6.3 effect: with only one reducer reported, Qs=0
+        // and Eq.1 fires as soon as Qmax clears the floor
+        let mut b = mk(Strategy::Doubling, 1);
+        assert!(b.report(2, 10, 0).is_some());
+    }
+
+    #[test]
+    fn warmup_gates_until_all_reported() {
+        let ring = SharedRing::new(Ring::for_strategy(4, Strategy::Doubling, 8));
+        let mut b = BalancerCore::new(ring, Strategy::Doubling, 0.2, 4, 1, 10);
+        assert!(b.report(0, 100, 0).is_none(), "3 reducers still unheard");
+        b.observe(1, 0);
+        b.observe(2, 0);
+        assert!(b.report(0, 100, 1).is_none(), "one reducer still unheard");
+        b.observe(3, 0);
+        assert!(b.report(0, 100, 2).is_some(), "warm-up complete");
+    }
+
+    #[test]
+    fn halving_exhaustion_burns_rounds() {
+        // node with 1 token cannot halve: the balancer must not spin
+        let ring = SharedRing::new(Ring::new(4, 1));
+        let mut b =
+            BalancerCore::new(ring, Strategy::Halving, 0.2, 4, 4, 0).without_warmup();
+        assert!(b.report(2, 100, 0).is_none(), "halving impossible");
+        assert_eq!(b.rounds()[2], 4, "rounds burned to stop retry loop");
+    }
+
+    #[test]
+    fn ring_actually_changes_on_event() {
+        let mut b = mk(Strategy::Doubling, 1);
+        let tokens_before: Vec<u32> = (0..4).map(|n| b.ring().tokens_of(n)).collect();
+        b.report(3, 50, 0).unwrap();
+        assert_eq!(b.ring().tokens_of(3), tokens_before[3]);
+        for n in 0..3 {
+            assert_eq!(b.ring().tokens_of(n), tokens_before[n] * 2);
+        }
+    }
+}

@@ -1,0 +1,184 @@
+//! Load-balancing trigger policies.
+//!
+//! The paper's policy (§4.1, Eq. 1): with `Q_max` the largest queue and
+//! `Q_s` the second largest, repartition when `Q_max > Q_s * (1 + τ)`.
+//! [`ThresholdPolicy`] implements exactly that (plus a small absolute
+//! floor so empty pipelines don't trigger on `1 > 0`). Alternative
+//! policies are provided for the ablation benches.
+
+/// A policy inspects the last-reported queue lengths and either picks an
+/// overloaded reducer to relieve or stays quiet.
+pub trait LbPolicy {
+    fn pick_target(&self, qlens: &[usize]) -> Option<usize>;
+    fn name(&self) -> &'static str;
+}
+
+/// Eq. 1 of the paper: trigger on `Q_max > Q_s * (1 + τ)`.
+///
+/// `min_trigger_qlen` is an implementation guard the paper leaves
+/// implicit: `Q_s` can be 0 (e.g. while queues are still filling), making
+/// the raw predicate fire on a single enqueued record. Requiring
+/// `Q_max >= min_trigger_qlen` keeps the trigger meaningful; set it to 1
+/// to recover the literal predicate.
+#[derive(Clone, Debug)]
+pub struct ThresholdPolicy {
+    pub tau: f64,
+    pub min_trigger_qlen: usize,
+}
+
+impl ThresholdPolicy {
+    pub fn new(tau: f64, min_trigger_qlen: usize) -> Self {
+        assert!(tau >= 0.0, "τ must be non-negative (§4.1)");
+        ThresholdPolicy {
+            tau,
+            min_trigger_qlen: min_trigger_qlen.max(1),
+        }
+    }
+
+    /// Indices of the max and second-max queue lengths.
+    fn argmax2(qlens: &[usize]) -> Option<(usize, usize)> {
+        if qlens.len() < 2 {
+            return None;
+        }
+        let mut x = 0usize;
+        for i in 1..qlens.len() {
+            if qlens[i] > qlens[x] {
+                x = i;
+            }
+        }
+        let mut s = usize::from(x == 0);
+        for i in 0..qlens.len() {
+            if i != x && qlens[i] > qlens[s] {
+                s = i;
+            }
+        }
+        Some((x, s))
+    }
+}
+
+impl LbPolicy for ThresholdPolicy {
+    fn pick_target(&self, qlens: &[usize]) -> Option<usize> {
+        let (x, s) = Self::argmax2(qlens)?;
+        let qmax = qlens[x] as f64;
+        let qs = qlens[s] as f64;
+        if qlens[x] >= self.min_trigger_qlen && qmax > qs * (1.0 + self.tau) {
+            Some(x)
+        } else {
+            None
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "threshold(eq1)"
+    }
+}
+
+/// Ablation: trigger when `Q_max` exceeds the *mean* of the other queues
+/// by factor `(1 + τ)` — less sensitive to a single other busy reducer.
+#[derive(Clone, Debug)]
+pub struct MeanRatioPolicy {
+    pub tau: f64,
+    pub min_trigger_qlen: usize,
+}
+
+impl LbPolicy for MeanRatioPolicy {
+    fn pick_target(&self, qlens: &[usize]) -> Option<usize> {
+        if qlens.len() < 2 {
+            return None;
+        }
+        let x = (0..qlens.len()).max_by_key(|&i| qlens[i])?;
+        if qlens[x] < self.min_trigger_qlen.max(1) {
+            return None;
+        }
+        let rest: f64 = qlens
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != x)
+            .map(|(_, &q)| q as f64)
+            .sum::<f64>()
+            / (qlens.len() - 1) as f64;
+        if qlens[x] as f64 > rest * (1.0 + self.tau) {
+            Some(x)
+        } else {
+            None
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "mean-ratio"
+    }
+}
+
+/// Ablation: never trigger (equivalent to Strategy::None but at the
+/// policy layer, for harness symmetry).
+#[derive(Clone, Debug)]
+pub struct NeverPolicy;
+
+impl LbPolicy for NeverPolicy {
+    fn pick_target(&self, _qlens: &[usize]) -> Option<usize> {
+        None
+    }
+
+    fn name(&self) -> &'static str {
+        "never"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq1_fires_exactly_per_paper() {
+        // τ = 0.2: fire iff Qmax > 1.2 * Qs
+        let p = ThresholdPolicy::new(0.2, 1);
+        assert_eq!(p.pick_target(&[13, 10, 2, 1]), Some(0)); // 13 > 12
+        assert_eq!(p.pick_target(&[12, 10, 2, 1]), None); // 12 !> 12
+        assert_eq!(p.pick_target(&[5, 5, 5, 5]), None);
+        assert_eq!(p.pick_target(&[0, 0, 0, 7]), Some(3)); // Qs = 0
+    }
+
+    #[test]
+    fn tau_zero_is_maximally_sensitive() {
+        let p = ThresholdPolicy::new(0.0, 1);
+        assert_eq!(p.pick_target(&[2, 1, 1, 1]), Some(0));
+        assert_eq!(p.pick_target(&[1, 1, 1, 1]), None, "no strict excess");
+    }
+
+    #[test]
+    fn min_trigger_floor() {
+        let p = ThresholdPolicy::new(0.2, 8);
+        assert_eq!(p.pick_target(&[7, 0, 0, 0]), None);
+        assert_eq!(p.pick_target(&[8, 0, 0, 0]), Some(0));
+    }
+
+    #[test]
+    fn argmax2_handles_max_at_zero() {
+        let p = ThresholdPolicy::new(0.2, 1);
+        assert_eq!(p.pick_target(&[50, 1, 1, 42]), None); // 50 !> 50.4
+        assert_eq!(p.pick_target(&[50, 1, 1, 30]), Some(0)); // 50 > 36
+    }
+
+    #[test]
+    fn too_few_reducers_never_fire() {
+        let p = ThresholdPolicy::new(0.2, 1);
+        assert_eq!(p.pick_target(&[100]), None);
+        assert_eq!(p.pick_target(&[]), None);
+    }
+
+    #[test]
+    fn mean_ratio_differs_from_eq1() {
+        // second-max 10 suppresses eq1; mean of others (10+2+0)/3 = 4
+        // lets mean-ratio fire
+        let eq1 = ThresholdPolicy::new(0.2, 1);
+        let mr = MeanRatioPolicy { tau: 0.2, min_trigger_qlen: 1 };
+        let q = [11, 10, 2, 0];
+        assert_eq!(eq1.pick_target(&q), None);
+        assert_eq!(mr.pick_target(&q), Some(0));
+    }
+
+    #[test]
+    fn never_policy() {
+        assert_eq!(NeverPolicy.pick_target(&[1000, 0, 0, 0]), None);
+    }
+}

@@ -1,0 +1,217 @@
+//! §7 extension — **state forwarding** instead of merge-at-end.
+//!
+//! In the base design, inputs for one key may be reduced on several
+//! reducers over the run, so per-key state is distributed and must be
+//! merged at the end — fine for commutative/associative reductions, not in
+//! general. The Discussion section sketches an alternative the authors
+//! planned for Quokka: keep each key's state resident on exactly one
+//! reducer by *forwarding state* ahead of data, with processing broken
+//! into synchronized stages:
+//!
+//! 1. the balancer publishes a new partitioning (atomically, infrequently);
+//! 2. **substage 1**: every reducer extracts the state of keys it no
+//!    longer owns and ships it to the new owners; *no data may be
+//!    forwarded* — data that would need forwarding is put back into the
+//!    local queue;
+//! 3. **substage 2**: once all state transfers have landed, reducers
+//!    resume and may forward data freely — the destination is guaranteed
+//!    to hold the state for any key the current partitioning assigns it.
+//!
+//! [`StageTracker`] implements the stage machinery: it counts outstanding
+//! state transfers for the current ring epoch and tells reducers whether
+//! the pipeline is `Synchronizing` (substage 1) or `Synchronized`
+//! (substage 2). The deterministic sim driver wires it in when
+//! [`ConsistencyMode::StateForward`] is selected; the invariant it buys —
+//! *at shutdown every key's state lives on exactly one reducer* — is
+//! asserted in `rust/tests/lb_behavior.rs`.
+
+/// How the pipeline keeps per-key state consistent across repartitions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConsistencyMode {
+    /// Base paper design: reducers keep whatever state they accumulated;
+    /// the coordinator merges all snapshots at the end (§2, word count:
+    /// add the counts).
+    MergeAtEnd,
+    /// §7 extension: state moves with the partitioning; the final merge
+    /// is a disjoint union.
+    StateForward,
+}
+
+/// Stage the pipeline is in (only meaningful under
+/// [`ConsistencyMode::StateForward`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Substage 1: state transfers in flight; reducers must not forward
+    /// data (they re-queue it locally) and must apply incoming state
+    /// transfers before anything else.
+    Synchronizing,
+    /// Substage 2: all transfers landed; normal processing + forwarding.
+    Synchronized,
+}
+
+/// Tracks the state-forwarding protocol across a repartition.
+#[derive(Debug)]
+pub struct StageTracker {
+    /// Ring epoch the reducers are synchronized to.
+    synced_epoch: u64,
+    /// Outstanding state-transfer messages for the in-progress epoch.
+    outstanding: u64,
+    /// Per-reducer flag: has it run its substage-1 extraction for the
+    /// in-progress epoch?
+    extracted: Vec<bool>,
+    /// Epoch currently being synchronized to (if any).
+    pending_epoch: Option<u64>,
+    /// Total state transfers performed (metrics).
+    pub transfers: u64,
+}
+
+impl StageTracker {
+    pub fn new(reducers: usize, initial_epoch: u64) -> Self {
+        StageTracker {
+            synced_epoch: initial_epoch,
+            outstanding: 0,
+            extracted: vec![true; reducers],
+            pending_epoch: None,
+            transfers: 0,
+        }
+    }
+
+    pub fn stage(&self) -> Stage {
+        if self.pending_epoch.is_some() {
+            Stage::Synchronizing
+        } else {
+            Stage::Synchronized
+        }
+    }
+
+    pub fn synced_epoch(&self) -> u64 {
+        self.synced_epoch
+    }
+
+    /// The balancer published a new partitioning: enter substage 1. Every
+    /// reducer must now run its extraction exactly once.
+    ///
+    /// The §7 algorithm assumes updates are "very infrequent and atomic";
+    /// we enforce it — a new epoch may only start from `Synchronized`.
+    pub fn begin_epoch(&mut self, epoch: u64) {
+        assert!(
+            self.pending_epoch.is_none(),
+            "repartition while still synchronizing (updates must be atomic + infrequent)"
+        );
+        assert!(epoch > self.synced_epoch);
+        self.pending_epoch = Some(epoch);
+        self.extracted.iter_mut().for_each(|e| *e = false);
+    }
+
+    /// Reducer `i` finished extracting and sending its non-owned state,
+    /// having emitted `sent` transfer messages.
+    pub fn extraction_done(&mut self, reducer: usize, sent: u64) {
+        assert!(self.pending_epoch.is_some());
+        assert!(!self.extracted[reducer], "double extraction");
+        self.extracted[reducer] = true;
+        self.outstanding += sent;
+        self.transfers += sent;
+        self.maybe_finish();
+    }
+
+    /// A state-transfer message was applied at its destination.
+    pub fn transfer_landed(&mut self) {
+        assert!(self.outstanding > 0, "transfer landed with none outstanding");
+        self.outstanding -= 1;
+        self.maybe_finish();
+    }
+
+    /// True once every reducer extracted for the pending epoch.
+    pub fn all_extracted(&self) -> bool {
+        self.extracted.iter().all(|&e| e)
+    }
+
+    fn maybe_finish(&mut self) {
+        if self.all_extracted() && self.outstanding == 0 {
+            if let Some(e) = self.pending_epoch.take() {
+                self.synced_epoch = e;
+            }
+        }
+    }
+
+    /// Does reducer `i` still owe its substage-1 extraction?
+    pub fn needs_extraction(&self, reducer: usize) -> bool {
+        self.pending_epoch.is_some() && !self.extracted[reducer]
+    }
+
+    /// Grow tracking when a reducer is added at runtime (elastic §7).
+    pub fn add_reducer(&mut self) {
+        // a brand-new reducer has no state to extract
+        self.extracted.push(true);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle() {
+        let mut t = StageTracker::new(4, 1);
+        assert_eq!(t.stage(), Stage::Synchronized);
+
+        t.begin_epoch(2);
+        assert_eq!(t.stage(), Stage::Synchronizing);
+        assert!(t.needs_extraction(0));
+
+        t.extraction_done(0, 2);
+        t.extraction_done(1, 0);
+        t.extraction_done(2, 0);
+        assert_eq!(t.stage(), Stage::Synchronizing, "reducer 3 not extracted");
+        t.extraction_done(3, 1);
+        assert_eq!(t.stage(), Stage::Synchronizing, "3 transfers outstanding");
+
+        t.transfer_landed();
+        t.transfer_landed();
+        t.transfer_landed();
+        assert_eq!(t.stage(), Stage::Synchronized);
+        assert_eq!(t.synced_epoch(), 2);
+        assert_eq!(t.transfers, 3);
+    }
+
+    #[test]
+    fn zero_transfer_epoch_finishes_immediately() {
+        let mut t = StageTracker::new(2, 5);
+        t.begin_epoch(6);
+        t.extraction_done(0, 0);
+        assert_eq!(t.stage(), Stage::Synchronizing);
+        t.extraction_done(1, 0);
+        assert_eq!(t.stage(), Stage::Synchronized);
+        assert_eq!(t.synced_epoch(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "atomic")]
+    fn overlapping_epochs_panic() {
+        let mut t = StageTracker::new(2, 1);
+        t.begin_epoch(2);
+        t.begin_epoch(3);
+    }
+
+    #[test]
+    #[should_panic(expected = "double extraction")]
+    fn double_extraction_panics() {
+        let mut t = StageTracker::new(2, 1);
+        t.begin_epoch(2);
+        t.extraction_done(0, 0);
+        t.extraction_done(0, 0);
+    }
+
+    #[test]
+    fn elastic_add_reducer() {
+        let mut t = StageTracker::new(2, 1);
+        t.add_reducer();
+        t.begin_epoch(2);
+        // all three must now extract
+        t.extraction_done(0, 0);
+        t.extraction_done(1, 0);
+        assert_eq!(t.stage(), Stage::Synchronizing);
+        t.extraction_done(2, 0);
+        assert_eq!(t.stage(), Stage::Synchronized);
+    }
+}

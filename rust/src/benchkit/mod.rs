@@ -1,0 +1,177 @@
+//! A small benchmark harness (offline build: no criterion).
+//!
+//! [`Bench`] runs a closure repeatedly with warmup, measures per-iteration
+//! wall time, and reports mean/median/p95 + throughput. Output is
+//! markdown-friendly so `cargo bench` results paste into EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+use crate::util::table::Table;
+
+/// One benchmark case result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    /// Per-iteration seconds.
+    pub per_iter: Summary,
+    /// Optional items-per-iteration for throughput reporting.
+    pub items_per_iter: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn mean_ns(&self) -> f64 {
+        self.per_iter.mean() * 1e9
+    }
+
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter
+            .map(|n| n as f64 / self.per_iter.mean())
+    }
+}
+
+/// Format a nanosecond quantity human-readably.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner: measures a closure until `target_time` is spent or
+/// `max_iters` reached, after `warmup` iterations.
+pub struct Bench {
+    pub warmup: usize,
+    pub max_iters: usize,
+    pub target_time: Duration,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: 3,
+            max_iters: 200,
+            target_time: Duration::from_secs(2),
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn quick() -> Self {
+        Bench {
+            warmup: 1,
+            max_iters: 30,
+            target_time: Duration::from_millis(500),
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`; `items` is the per-iteration work amount for throughput.
+    pub fn run<F: FnMut()>(&mut self, name: &str, items: Option<u64>, mut f: F) -> &BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut per_iter = Summary::new();
+        let t0 = Instant::now();
+        let mut iters = 0;
+        while iters < self.max_iters && (iters < 5 || t0.elapsed() < self.target_time) {
+            let it0 = Instant::now();
+            f();
+            per_iter.push(it0.elapsed().as_secs_f64());
+            iters += 1;
+        }
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            iters,
+            per_iter,
+            items_per_iter: items,
+        });
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Render all results as a markdown table.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(["bench", "iters", "mean", "median", "p95", "throughput"]);
+        for r in &self.results {
+            let thr = r
+                .throughput()
+                .map(|x| {
+                    if x > 1e6 {
+                        format!("{:.2} M items/s", x / 1e6)
+                    } else {
+                        format!("{:.0} items/s", x)
+                    }
+                })
+                .unwrap_or_else(|| "-".into());
+            t.row([
+                r.name.clone(),
+                r.iters.to_string(),
+                fmt_ns(r.per_iter.mean() * 1e9),
+                fmt_ns(r.per_iter.median() * 1e9),
+                fmt_ns(r.per_iter.percentile(95.0) * 1e9),
+                thr,
+            ]);
+        }
+        t.render()
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bench {
+            warmup: 1,
+            max_iters: 10,
+            target_time: Duration::from_millis(50),
+            results: Vec::new(),
+        };
+        let mut acc = 0u64;
+        b.run("spin", Some(1000), || {
+            for i in 0..1000u64 {
+                acc = black_box(acc.wrapping_add(i));
+            }
+        });
+        let r = &b.results()[0];
+        assert!(r.iters >= 5);
+        assert!(r.per_iter.mean() > 0.0);
+        assert!(r.throughput().unwrap() > 0.0);
+        assert!(b.render().contains("spin"));
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(12.0), "12.0 ns");
+        assert_eq!(fmt_ns(12_500.0), "12.50 µs");
+        assert_eq!(fmt_ns(3_200_000.0), "3.20 ms");
+        assert_eq!(fmt_ns(2.5e9), "2.50 s");
+    }
+}

@@ -1,0 +1,133 @@
+//! Minimal argv parser: positionals, `--flag` booleans and `--key value`
+//! options, with unknown-argument detection at `finish()`.
+
+use std::collections::HashMap;
+
+use anyhow::bail;
+
+/// Tokenized argv with taken/untaken tracking.
+pub struct Args {
+    pub positional: Vec<String>,
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+    taken_flags: Vec<String>,
+}
+
+impl Args {
+    /// Tokenize. `--key value` and `--key=value` both work; a `--key`
+    /// followed by another `--...` (or end of argv) is a boolean flag.
+    pub fn new(argv: &[String]) -> crate::Result<Self> {
+        let mut positional = Vec::new();
+        let mut opts = HashMap::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' is not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    opts.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    opts.insert(name.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    flags.push(name.to_string());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Args {
+            positional,
+            opts,
+            flags,
+            taken_flags: Vec::new(),
+        })
+    }
+
+    /// Take a `--key value` option as a string.
+    pub fn take_opt(&mut self, key: &str) -> Option<String> {
+        self.opts.remove(key)
+    }
+
+    /// Take and parse a `--key value` option.
+    pub fn take_opt_parse<T: std::str::FromStr>(&mut self, key: &str) -> crate::Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opts.remove(key) {
+            None => Ok(None),
+            Some(v) => match v.parse::<T>() {
+                Ok(x) => Ok(Some(x)),
+                Err(e) => bail!("invalid value '{v}' for --{key}: {e}"),
+            },
+        }
+    }
+
+    /// Take a boolean `--flag`.
+    pub fn take_flag(&mut self, name: &str) -> bool {
+        if let Some(pos) = self.flags.iter().position(|f| f == name) {
+            self.flags.remove(pos);
+            self.taken_flags.push(name.to_string());
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Error on any un-consumed options/flags (catches typos).
+    pub fn finish(self) -> crate::Result<()> {
+        if let Some(k) = self.opts.keys().next() {
+            bail!("unknown option --{k}");
+        }
+        if let Some(f) = self.flags.first() {
+            bail!("unknown flag --{f}");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_positionals_opts_flags() {
+        let mut a = Args::new(&sv(&["run", "--k", "v", "--flag", "--x=y"])).unwrap();
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.take_opt("k").as_deref(), Some("v"));
+        assert_eq!(a.take_opt("x").as_deref(), Some("y"));
+        assert!(a.take_flag("flag"));
+        assert!(!a.take_flag("flag"), "flags are consumed");
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn parse_typed_values() {
+        let mut a = Args::new(&sv(&["--n", "42", "--f", "0.5"])).unwrap();
+        assert_eq!(a.take_opt_parse::<u32>("n").unwrap(), Some(42));
+        assert_eq!(a.take_opt_parse::<f64>("f").unwrap(), Some(0.5));
+        assert_eq!(a.take_opt_parse::<u32>("missing").unwrap(), None);
+    }
+
+    #[test]
+    fn bad_typed_value_errors() {
+        let mut a = Args::new(&sv(&["--n", "notanumber"])).unwrap();
+        assert!(a.take_opt_parse::<u32>("n").is_err());
+    }
+
+    #[test]
+    fn leftover_args_error_at_finish() {
+        let a = Args::new(&sv(&["--unknown", "1"])).unwrap();
+        assert!(a.finish().is_err());
+        let a = Args::new(&sv(&["--mystery-flag"])).unwrap();
+        assert!(a.finish().is_err());
+    }
+}

@@ -1,0 +1,342 @@
+//! Hand-rolled CLI argument parsing (offline build: no clap) and the
+//! `dpa` binary's subcommand surface.
+
+pub mod args;
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context};
+
+use crate::balancer::state_forward::ConsistencyMode;
+use crate::hash::Strategy;
+use crate::metrics::RunReport;
+use crate::pipeline::{DriverKind, ExecutorKind, Pipeline, PipelineConfig};
+use crate::util::stats::Summary;
+use crate::util::table::{delta2, f2, Table};
+use crate::workload::{generators, paperwl, trace, Workload};
+
+use args::Args;
+
+pub const USAGE: &str = "\
+dpa — DPA Load Balancer (paper reproduction)
+
+USAGE:
+  dpa run [--workload WL] [--strategy S] [--rounds N] [--tau F] [options]
+  dpa table1 [--seeds N]         reproduce Table 1 (Experiment 1)
+  dpa fig3 [--max-rounds N]      reproduce Figure 3 (Experiment 2)
+  dpa workloads                  describe the five paper workloads
+  dpa help
+
+OPTIONS (run):
+  --workload WL     wl1|wl2|wl3|wl4|wl5|zipf|uniform|corpus|hot or a trace
+                    file path                                [default: wl4]
+  --strategy S      none|halving|doubling                    [default: doubling]
+  --rounds N        max LB rounds per reducer                [default: 1]
+  --tau F           Eq.1 threshold τ                         [default: 0.2]
+  --mappers N / --reducers N                                 [default: 4/4]
+  --driver D        sim|threads                              [default: sim]
+  --seed N          sim schedule seed                        [default: 0]
+  --items N         generated workload size                  [default: 100]
+  --executor E      wordcount|tokenized|sum|distinct|topk    [default: wordcount]
+  --state-forward   use §7 state forwarding (sim driver)
+  --config PATH     TOML config file (see configs/)
+  --save-trace PATH write the workload to a trace file
+  --quiet           one-line report
+";
+
+/// Parsed top-level command.
+pub enum Command {
+    Run(Box<RunOpts>),
+    Table1 { seeds: usize },
+    Fig3 { max_rounds: u32 },
+    Workloads,
+    Help,
+}
+
+/// Options for `dpa run`.
+pub struct RunOpts {
+    pub workload: String,
+    pub items: usize,
+    pub cfg: PipelineConfig,
+    pub executor: ExecutorKind,
+    pub save_trace: Option<PathBuf>,
+    pub quiet: bool,
+}
+
+/// Parse argv (without the program name).
+pub fn parse(argv: &[String]) -> crate::Result<Command> {
+    let mut args = Args::new(argv)?;
+    let cmd = args.positional.first().cloned().unwrap_or_default();
+    match cmd.as_str() {
+        "" | "help" | "--help" | "-h" => Ok(Command::Help),
+        "workloads" => Ok(Command::Workloads),
+        "table1" => {
+            let seeds = args.take_opt_parse("seeds")?.unwrap_or(3usize);
+            args.finish()?;
+            Ok(Command::Table1 { seeds })
+        }
+        "fig3" => {
+            let max_rounds = args.take_opt_parse("max-rounds")?.unwrap_or(4u32);
+            args.finish()?;
+            Ok(Command::Fig3 { max_rounds })
+        }
+        "run" => {
+            let mut cfg = PipelineConfig::default();
+            if let Some(path) = args.take_opt("config") {
+                cfg = PipelineConfig::from_toml_file(std::path::Path::new(&path))?;
+            }
+            cfg.strategy = args
+                .take_opt("strategy")
+                .map(|s| s.parse::<Strategy>())
+                .transpose()
+                .map_err(anyhow::Error::msg)?
+                .unwrap_or(Strategy::Doubling);
+            if let Some(v) = args.take_opt_parse("rounds")? {
+                cfg.max_rounds = v;
+            }
+            if let Some(v) = args.take_opt_parse("tau")? {
+                cfg.tau = v;
+            }
+            if let Some(v) = args.take_opt_parse("mappers")? {
+                cfg.mappers = v;
+            }
+            if let Some(v) = args.take_opt_parse("reducers")? {
+                cfg.reducers = v;
+            }
+            if let Some(v) = args.take_opt("driver") {
+                cfg.driver = v.parse::<DriverKind>().map_err(anyhow::Error::msg)?;
+            }
+            if let Some(v) = args.take_opt_parse("seed")? {
+                cfg.seed = v;
+            }
+            if args.take_flag("state-forward") {
+                cfg.mode = ConsistencyMode::StateForward;
+            }
+            let executor = match args.take_opt("executor").as_deref() {
+                None | Some("wordcount") => ExecutorKind::WordCount,
+                Some("tokenized") => ExecutorKind::TokenizedWordCount,
+                Some("sum") => ExecutorKind::KeyedSum,
+                Some("distinct") => ExecutorKind::Distinct,
+                Some("topk") => ExecutorKind::TopK(10),
+                Some(other) => bail!("unknown executor '{other}'"),
+            };
+            let opts = RunOpts {
+                workload: args.take_opt("workload").unwrap_or_else(|| "wl4".into()),
+                items: args.take_opt_parse("items")?.unwrap_or(100),
+                cfg,
+                executor,
+                save_trace: args.take_opt("save-trace").map(PathBuf::from),
+                quiet: args.take_flag("quiet"),
+            };
+            args.finish()?;
+            Ok(Command::Run(Box::new(opts)))
+        }
+        other => bail!("unknown command '{other}' (try `dpa help`)"),
+    }
+}
+
+/// Resolve a workload name (or trace path) to items.
+pub fn resolve_workload(name: &str, items: usize, seed: u64) -> crate::Result<Workload> {
+    Ok(match name {
+        "wl1" => paperwl::wl1(),
+        "wl2" => paperwl::wl2(),
+        "wl3" => paperwl::wl3(),
+        "wl4" => paperwl::wl4(),
+        "wl5" => paperwl::wl5(),
+        "zipf" => generators::zipf(items, 200, 1.2, seed),
+        "uniform" => generators::uniform(items, 200, seed),
+        "hot" => generators::hot_key(items, 0.6, 50, seed),
+        "corpus" => crate::workload::corpus::workload(items, 1.0, seed),
+        path => {
+            let p = std::path::Path::new(path);
+            if !p.exists() {
+                bail!(
+                    "unknown workload '{name}' (expected wl1..wl5|zipf|uniform|hot|corpus \
+                     or a trace file path)"
+                );
+            }
+            trace::load(p).context("loading workload trace")?
+        }
+    })
+}
+
+/// Execute a parsed command; returns the process exit code.
+pub fn execute(cmd: Command) -> crate::Result<i32> {
+    match cmd {
+        Command::Help => {
+            println!("{USAGE}");
+            Ok(0)
+        }
+        Command::Workloads => {
+            let (rh, rd) = paperwl::initial_rings();
+            let mut t = Table::new(["workload", "items", "distinct", "S halving", "S doubling", "construction"]);
+            for w in paperwl::all() {
+                t.row([
+                    w.name.clone(),
+                    w.len().to_string(),
+                    w.distinct_keys().len().to_string(),
+                    f2(w.static_skew(&rh)),
+                    f2(w.static_skew(&rd)),
+                    w.description.clone(),
+                ]);
+            }
+            t.print();
+            Ok(0)
+        }
+        Command::Run(opts) => {
+            let w = resolve_workload(&opts.workload, opts.items, opts.cfg.seed)?;
+            if let Some(path) = &opts.save_trace {
+                trace::save(&w, path)?;
+            }
+            let pipeline = Pipeline::builtin(opts.cfg.clone(), opts.executor);
+            let report = pipeline.run(w.items.clone())?;
+            if opts.quiet {
+                println!("{}", report.one_line());
+            } else {
+                println!("workload: {} ({} items)", w.name, w.len());
+                if !w.description.is_empty() {
+                    println!("  {}", w.description);
+                }
+                print!("{}", report.render());
+            }
+            Ok(0)
+        }
+        Command::Table1 { seeds } => {
+            print!("{}", table1(seeds)?);
+            Ok(0)
+        }
+        Command::Fig3 { max_rounds } => {
+            print!("{}", fig3(max_rounds)?);
+            Ok(0)
+        }
+    }
+}
+
+/// Mean skew of a workload under a strategy / rounds cap over `seeds`
+/// seeded sim runs (the paper's 3-run protocol).
+pub fn mean_skew(
+    w: &Workload,
+    strategy: Strategy,
+    lb: bool,
+    max_rounds: u32,
+    seeds: usize,
+) -> crate::Result<(f64, f64)> {
+    let mut cfg = PipelineConfig::default();
+    // the no-LB baseline runs on the *same initial layout* as the method
+    cfg.initial_tokens = Some(strategy.initial_tokens(cfg.halving_init_tokens));
+    cfg.strategy = if lb { strategy } else { Strategy::None };
+    cfg.max_rounds = max_rounds;
+    let pipeline = Pipeline::wordcount(cfg);
+    let seed_list: Vec<u64> = (0..seeds as u64).collect();
+    let reports = pipeline.run_seeds(&w.items, &seed_list)?;
+    let s = Summary::from_slice(&reports.iter().map(RunReport::skew).collect::<Vec<_>>());
+    Ok((s.mean(), s.variance()))
+}
+
+/// Reproduce Table 1 (Experiment 1): S with/without LB for WL1–WL5 ×
+/// {halving, doubling}, ≤ 1 LB round, mean over seeds.
+pub fn table1(seeds: usize) -> crate::Result<String> {
+    let mut out = String::from("Experiment 1 (Table 1): skew S, no-LB vs LB (≤1 round/reducer)\n");
+    let mut t = Table::new(["Workload", "Method", "No LB", "With LB", "Δ"]);
+    for w in paperwl::all() {
+        for strategy in Strategy::methods() {
+            let (s_nolb, _) = mean_skew(&w, strategy, false, 1, seeds)?;
+            let (s_lb, _) = mean_skew(&w, strategy, true, 1, seeds)?;
+            t.row([
+                w.name.clone(),
+                strategy.to_string(),
+                f2(s_nolb),
+                f2(s_lb),
+                delta2(s_nolb - s_lb),
+            ]);
+        }
+    }
+    out.push_str(&t.render());
+    Ok(out)
+}
+
+/// Reproduce Figure 3 (Experiment 2): S as a function of the max LB
+/// rounds per reducer.
+pub fn fig3(max_rounds: u32) -> crate::Result<String> {
+    let mut out = String::from("Experiment 2 (Figure 3): skew S vs max LB rounds per reducer\n");
+    let mut header: Vec<String> = vec!["Workload".into(), "Method".into(), "rounds=0".into()];
+    for r in 1..=max_rounds {
+        header.push(format!("rounds={r}"));
+    }
+    let mut t = Table::new(header);
+    for w in paperwl::all() {
+        for strategy in Strategy::methods() {
+            let mut row = vec![w.name.clone(), strategy.to_string()];
+            let (s0, _) = mean_skew(&w, strategy, false, 1, 3)?;
+            row.push(f2(s0));
+            for rounds in 1..=max_rounds {
+                let (s, _) = mean_skew(&w, strategy, true, rounds, 3)?;
+                row.push(f2(s));
+            }
+            t.row(row);
+        }
+    }
+    out.push_str(&t.render());
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_help_and_unknown() {
+        assert!(matches!(parse(&sv(&["help"])).unwrap(), Command::Help));
+        assert!(matches!(parse(&sv(&[])).unwrap(), Command::Help));
+        assert!(parse(&sv(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn parse_run_options() {
+        let cmd = parse(&sv(&[
+            "run",
+            "--workload",
+            "wl1",
+            "--strategy",
+            "halving",
+            "--rounds",
+            "3",
+            "--tau",
+            "0.5",
+            "--quiet",
+        ]))
+        .unwrap();
+        match cmd {
+            Command::Run(o) => {
+                assert_eq!(o.workload, "wl1");
+                assert_eq!(o.cfg.strategy, Strategy::Halving);
+                assert_eq!(o.cfg.max_rounds, 3);
+                assert!((o.cfg.tau - 0.5).abs() < 1e-12);
+                assert!(o.quiet);
+            }
+            _ => panic!("expected Run"),
+        }
+    }
+
+    #[test]
+    fn parse_rejects_unknown_flag() {
+        assert!(parse(&sv(&["run", "--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn resolve_known_workloads() {
+        assert_eq!(resolve_workload("wl3", 0, 0).unwrap().len(), 100);
+        assert_eq!(resolve_workload("zipf", 50, 1).unwrap().len(), 50);
+        assert!(resolve_workload("nope", 0, 0).is_err());
+    }
+
+    #[test]
+    fn run_command_executes() {
+        let cmd = parse(&sv(&["run", "--workload", "wl2", "--quiet"])).unwrap();
+        assert_eq!(execute(cmd).unwrap(), 0);
+    }
+}

@@ -1,0 +1,9 @@
+//! Configuration: a typed [`pipeline::PipelineConfig`](crate::pipeline::PipelineConfig)
+//! loaded from a minimal TOML-subset file ([`toml_lite`]) and/or CLI
+//! overrides. The offline build carries no `serde`/`toml`, so we parse the
+//! subset we need ourselves: `[sections]`, `key = value` with string, int,
+//! float and bool values, `#` comments.
+
+pub mod toml_lite;
+
+pub use toml_lite::{parse, Document, Value};

@@ -1,0 +1,268 @@
+//! A minimal TOML-subset parser (offline build: no `toml` crate).
+//!
+//! Supported:
+//! - `# comments` and blank lines
+//! - `[section]` headers (one level)
+//! - `key = "string"`, `key = 'string'`, `key = 123`, `key = 1.5`,
+//!   `key = true|false`
+//!
+//! Lookup is by `"section.key"` (or bare `"key"` for the root section).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use thiserror::Error;
+
+/// A parsed scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "\"{s}\""),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+        }
+    }
+}
+
+/// Parse error with line information.
+#[derive(Debug, Error)]
+#[error("config parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// A parsed document: flat `section.key -> value` map.
+#[derive(Clone, Debug, Default)]
+pub struct Document {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Document {
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(Value::as_str)
+    }
+
+    pub fn get_int(&self, key: &str) -> Option<i64> {
+        self.get(key).and_then(Value::as_int)
+    }
+
+    pub fn get_float(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(Value::as_float)
+    }
+
+    pub fn get_bool(&self, key: &str) -> Option<bool> {
+        self.get(key).and_then(Value::as_bool)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(String::as_str)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quoted strings
+    let mut in_str: Option<char> = None;
+    for (i, c) in line.char_indices() {
+        match (in_str, c) {
+            (None, '#') => return &line[..i],
+            (None, '"') => in_str = Some('"'),
+            (None, '\'') => in_str = Some('\''),
+            (Some(q), c) if c == q => in_str = None,
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(raw: &str, line: usize) -> Result<Value, ParseError> {
+    let raw = raw.trim();
+    if raw.is_empty() {
+        return Err(ParseError {
+            line,
+            msg: "missing value".into(),
+        });
+    }
+    if (raw.starts_with('"') && raw.ends_with('"') && raw.len() >= 2)
+        || (raw.starts_with('\'') && raw.ends_with('\'') && raw.len() >= 2)
+    {
+        return Ok(Value::Str(raw[1..raw.len() - 1].to_string()));
+    }
+    match raw {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = raw.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = raw.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(ParseError {
+        line,
+        msg: format!("cannot parse value '{raw}'"),
+    })
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<Document, ParseError> {
+    let mut doc = Document::default();
+    let mut section = String::new();
+    for (lineno, raw_line) in text.lines().enumerate() {
+        let line = strip_comment(raw_line).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let lineno = lineno + 1;
+        if line.starts_with('[') {
+            if !line.ends_with(']') || line.len() < 3 {
+                return Err(ParseError {
+                    line: lineno,
+                    msg: format!("malformed section header '{line}'"),
+                });
+            }
+            section = line[1..line.len() - 1].trim().to_string();
+            if section.is_empty() {
+                return Err(ParseError {
+                    line: lineno,
+                    msg: "empty section name".into(),
+                });
+            }
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            return Err(ParseError {
+                line: lineno,
+                msg: format!("expected 'key = value', got '{line}'"),
+            });
+        };
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(ParseError {
+                line: lineno,
+                msg: "empty key".into(),
+            });
+        }
+        let value = parse_value(&line[eq + 1..], lineno)?;
+        let full_key = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        doc.entries.insert(full_key, value);
+    }
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_sections() {
+        let doc = parse(
+            r#"
+# top comment
+name = "dpa"   # trailing comment
+count = 4
+tau = 0.2
+enabled = true
+
+[balancer]
+strategy = 'doubling'
+max_rounds = 2
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("name"), Some("dpa"));
+        assert_eq!(doc.get_int("count"), Some(4));
+        assert_eq!(doc.get_float("tau"), Some(0.2));
+        assert_eq!(doc.get_bool("enabled"), Some(true));
+        assert_eq!(doc.get_str("balancer.strategy"), Some("doubling"));
+        assert_eq!(doc.get_int("balancer.max_rounds"), Some(2));
+        assert_eq!(doc.len(), 6);
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let doc = parse("tau = 1").unwrap();
+        assert_eq!(doc.get_float("tau"), Some(1.0));
+    }
+
+    #[test]
+    fn hash_inside_string_is_kept() {
+        let doc = parse(r##"s = "a#b""##).unwrap();
+        assert_eq!(doc.get_str("s"), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse("a = 1\nbogus line\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err = parse("[unclosed\n").unwrap_err();
+        assert_eq!(err.line, 1);
+        let err = parse("x = \n").unwrap_err();
+        assert_eq!(err.line, 1);
+        let err = parse("x = what?\n").unwrap_err();
+        assert_eq!(err.line, 1);
+    }
+
+    #[test]
+    fn later_keys_override_earlier() {
+        let doc = parse("a = 1\na = 2\n").unwrap();
+        assert_eq!(doc.get_int("a"), Some(2));
+    }
+}

@@ -1,0 +1,70 @@
+//! The coordinator (§2.3): creates and launches mappers/reducers,
+//! initializes the load balancer, assigns tasks to mappers, tracks reducer
+//! lifetimes (shutdown protocol in [`crate::actor::ShutdownMonitor`]) and
+//! runs the final state-merge step.
+
+pub mod tasks;
+
+use crate::exec::{merge_snapshots, MergeOp};
+
+pub use tasks::{chunk_items, TaskPool};
+
+/// Final state merge (§2): combine all reducer snapshots into the result.
+///
+/// For [`ConsistencyMode::StateForward`](crate::balancer::state_forward::ConsistencyMode)
+/// runs the snapshots are key-disjoint and this is a plain union; the
+/// `expect_disjoint` flag asserts that invariant.
+pub fn merge_states(
+    snaps: Vec<Vec<(String, i64)>>,
+    op: MergeOp,
+    expect_disjoint: bool,
+) -> Vec<(String, i64)> {
+    if expect_disjoint {
+        let total: usize = snaps.iter().map(Vec::len).sum();
+        let merged = merge_snapshots(snaps, op);
+        assert_eq!(
+            merged.len(),
+            total,
+            "state-forwarding invariant violated: some key had state on \
+             more than one reducer"
+        );
+        merged
+    } else {
+        merge_snapshots(snaps, op)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_overlapping_counts() {
+        let merged = merge_states(
+            vec![vec![("a".into(), 2)], vec![("a".into(), 3), ("b".into(), 1)]],
+            MergeOp::Sum,
+            false,
+        );
+        assert_eq!(merged, vec![("a".into(), 5), ("b".into(), 1)]);
+    }
+
+    #[test]
+    fn disjoint_union_passes_assertion() {
+        let merged = merge_states(
+            vec![vec![("a".into(), 2)], vec![("b".into(), 1)]],
+            MergeOp::Sum,
+            true,
+        );
+        assert_eq!(merged.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "state-forwarding invariant")]
+    fn overlap_fails_disjoint_assertion() {
+        merge_states(
+            vec![vec![("a".into(), 2)], vec![("a".into(), 3)]],
+            MergeOp::Sum,
+            true,
+        );
+    }
+}

@@ -1,0 +1,119 @@
+//! Task management: the coordinator chunks the input into tasks and hands
+//! them to mappers on request (§3: "mapper actors fetch tasks or data
+//! items from the coordinator by means of a remote method call").
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use crate::exec::Task;
+
+/// Split input items into fixed-size tasks.
+pub fn chunk_items(items: Vec<String>, chunk_size: usize) -> Vec<Task> {
+    assert!(chunk_size > 0);
+    let mut tasks = Vec::with_capacity(items.len().div_ceil(chunk_size));
+    let mut id = 0u64;
+    let mut iter = items.into_iter().peekable();
+    while iter.peek().is_some() {
+        let chunk: Vec<String> = iter.by_ref().take(chunk_size).collect();
+        tasks.push(Task { id, items: chunk });
+        id += 1;
+    }
+    tasks
+}
+
+/// The coordinator's task queue; mappers pull until it is empty. Shared
+/// across mapper threads in the threads driver (the "remote method call"
+/// becomes a mutex-protected pop).
+pub struct TaskPool {
+    tasks: Mutex<VecDeque<Task>>,
+    total: usize,
+}
+
+impl TaskPool {
+    pub fn new(tasks: Vec<Task>) -> Self {
+        let total = tasks.len();
+        TaskPool {
+            tasks: Mutex::new(tasks.into()),
+            total,
+        }
+    }
+
+    pub fn from_items(items: Vec<String>, chunk_size: usize) -> Self {
+        Self::new(chunk_items(items, chunk_size))
+    }
+
+    /// Next task, or `None` when the input is exhausted.
+    pub fn fetch(&self) -> Option<Task> {
+        self.tasks.lock().unwrap().pop_front()
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.tasks.lock().unwrap().len()
+    }
+
+    pub fn total(&self) -> usize {
+        self.total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunking_covers_all_items_in_order() {
+        let items: Vec<String> = (0..25).map(|i| format!("i{i}")).collect();
+        let tasks = chunk_items(items.clone(), 10);
+        assert_eq!(tasks.len(), 3);
+        assert_eq!(tasks[0].items.len(), 10);
+        assert_eq!(tasks[2].items.len(), 5);
+        let flat: Vec<String> = tasks.into_iter().flat_map(|t| t.items).collect();
+        assert_eq!(flat, items);
+    }
+
+    #[test]
+    fn chunk_ids_are_sequential() {
+        let tasks = chunk_items((0..30).map(|i| i.to_string()).collect(), 7);
+        let ids: Vec<u64> = tasks.iter().map(|t| t.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_input_no_tasks() {
+        assert!(chunk_items(vec![], 10).is_empty());
+    }
+
+    #[test]
+    fn pool_fetch_drains() {
+        let pool = TaskPool::from_items((0..5).map(|i| i.to_string()).collect(), 2);
+        assert_eq!(pool.total(), 3);
+        let mut fetched = 0;
+        while pool.fetch().is_some() {
+            fetched += 1;
+        }
+        assert_eq!(fetched, 3);
+        assert!(pool.fetch().is_none());
+        assert_eq!(pool.remaining(), 0);
+    }
+
+    #[test]
+    fn pool_is_thread_safe() {
+        let pool = std::sync::Arc::new(TaskPool::from_items(
+            (0..100).map(|i| i.to_string()).collect(),
+            1,
+        ));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let p = pool.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut n = 0;
+                while p.fetch().is_some() {
+                    n += 1;
+                }
+                n
+            }));
+        }
+        let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, 100);
+    }
+}

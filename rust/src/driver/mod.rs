@@ -1,0 +1,301 @@
+//! Threads driver: the deployment-shaped execution mode. Every mapper and
+//! reducer is an OS thread; queues are the bounded [`DataQueue`]s; the
+//! balancer is shared behind a mutex (reports are rare relative to data
+//! ops); routing goes through lock-free epoch-cached ring snapshots.
+//!
+//! Nondeterministic by nature — this is the mode that exhibits the paper's
+//! "indeterminate" behaviours (premature LB triggers, run-to-run
+//! variance). The deterministic counterpart is [`crate::sim`].
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::actor::ShutdownMonitor;
+use crate::balancer::BalancerCore;
+use crate::coordinator::{merge_states, TaskPool};
+use crate::exec::{MapExecutor, ReduceFactory};
+use crate::mapper::MapperCore;
+use crate::metrics::RunReport;
+use crate::queue::DataQueue;
+use crate::reducer::{Handled, ReducerCore};
+
+/// Threads-driver parameters.
+#[derive(Clone, Debug)]
+pub struct ThreadParams {
+    /// Load report every N handled messages.
+    pub report_interval: u64,
+    pub chunk_size: usize,
+    /// Per-reducer queue capacity (backpressure bound).
+    pub queue_capacity: usize,
+    /// Busy-wait per mapped item (µs) — simulates map cost.
+    pub map_delay_us: u64,
+    /// Busy-wait per reduced record (µs) — simulates the compute-heavy
+    /// reducers of the paper's target regime.
+    pub reduce_delay_us: u64,
+    /// Reducer queue-poll timeout.
+    pub pop_timeout: Duration,
+}
+
+impl Default for ThreadParams {
+    fn default() -> Self {
+        ThreadParams {
+            report_interval: 2,
+            chunk_size: 10,
+            queue_capacity: 1 << 16,
+            map_delay_us: 0,
+            reduce_delay_us: 200,
+            pop_timeout: Duration::from_millis(2),
+        }
+    }
+}
+
+#[inline]
+fn spin_us(us: u64) {
+    if us == 0 {
+        return;
+    }
+    let deadline = Instant::now() + Duration::from_micros(us);
+    while Instant::now() < deadline {
+        std::hint::spin_loop();
+    }
+}
+
+/// One pipeline execution on OS threads.
+pub struct ThreadDriver {
+    pub params: ThreadParams,
+}
+
+impl ThreadDriver {
+    pub fn new(params: ThreadParams) -> Self {
+        ThreadDriver { params }
+    }
+
+    pub fn run(
+        &self,
+        map_exec: Arc<dyn MapExecutor>,
+        reduce_factory: &ReduceFactory,
+        n_mappers: usize,
+        balancer: BalancerCore,
+        items: Vec<String>,
+    ) -> RunReport {
+        let p = self.params.clone();
+        let ring = balancer.ring().clone();
+        let n_reducers = ring.nodes();
+        let input_items = items.len() as u64;
+
+        let pool = Arc::new(TaskPool::from_items(items, p.chunk_size));
+        let queues: Vec<Arc<DataQueue>> = (0..n_reducers)
+            .map(|_| Arc::new(DataQueue::new(p.queue_capacity)))
+            .collect();
+        let monitor = Arc::new(ShutdownMonitor::new(n_mappers));
+        let balancer = Arc::new(Mutex::new(balancer));
+        let t0 = Instant::now();
+
+        // mappers: fetch → map → route → enqueue
+        let mut mapper_handles = Vec::with_capacity(n_mappers);
+        for i in 0..n_mappers {
+            let pool = pool.clone();
+            let queues = queues.clone();
+            let monitor = monitor.clone();
+            let exec = map_exec.clone();
+            let ring = ring.clone();
+            let map_delay = p.map_delay_us;
+            mapper_handles.push(
+                std::thread::Builder::new()
+                    .name(format!("dpa-mapper-{i}"))
+                    .spawn(move || {
+                        let mut core = MapperCore::new(i, exec, ring);
+                        let n_queues = queues.len();
+                        // per-destination staging, reused across tasks
+                        // (§Perf iteration 3: one queue lock per task per
+                        // destination instead of one per record)
+                        let mut staged: Vec<Vec<crate::exec::Record>> =
+                            (0..n_queues).map(|_| Vec::new()).collect();
+                        while let Some(task) = pool.fetch() {
+                            for item in &task.items {
+                                for (dest, rec) in core.process_item(item) {
+                                    staged[dest].push(rec);
+                                }
+                                spin_us(map_delay);
+                            }
+                            for (dest, recs) in staged.iter_mut().enumerate() {
+                                if recs.is_empty() {
+                                    continue;
+                                }
+                                // produced() strictly before push so
+                                // in_flight never undercounts
+                                monitor.produced(recs.len() as u64);
+                                queues[dest].push_batch(std::mem::take(recs));
+                            }
+                        }
+                        monitor.mapper_done();
+                        core
+                    })
+                    .expect("spawn mapper"),
+            );
+        }
+
+        // reducers: poll → ownership check → reduce / forward → report
+        let mut reducer_handles = Vec::with_capacity(n_reducers);
+        for i in 0..n_reducers {
+            let queues = queues.clone();
+            let monitor = monitor.clone();
+            let balancer = balancer.clone();
+            let ring = ring.clone();
+            let exec = reduce_factory(i);
+            let report_interval = p.report_interval;
+            let reduce_delay = p.reduce_delay_us;
+            let pop_timeout = p.pop_timeout;
+            reducer_handles.push(
+                std::thread::Builder::new()
+                    .name(format!("dpa-reducer-{i}"))
+                    .spawn(move || {
+                        let mut core = ReducerCore::new(i, exec, ring);
+                        loop {
+                            match queues[i].pop_timeout(pop_timeout) {
+                                Some(rec) => {
+                                    match core.handle(rec) {
+                                        Handled::Reduced => {
+                                            spin_us(reduce_delay);
+                                            monitor.consumed();
+                                        }
+                                        Handled::Forward(dest, rec) => {
+                                            queues[dest].push(rec);
+                                        }
+                                    }
+                                    if core.due_report(report_interval) {
+                                        let now_us = t0.elapsed().as_micros() as u64;
+                                        balancer.lock().unwrap().report(
+                                            i,
+                                            queues[i].len(),
+                                            now_us,
+                                        );
+                                    }
+                                }
+                                None => {
+                                    balancer.lock().unwrap().observe(i, 0);
+                                    // §2.3: a reducer can never stop on its
+                                    // own — only when the coordinator-level
+                                    // drain condition holds
+                                    if monitor.drained() && queues[i].is_empty() {
+                                        break;
+                                    }
+                                }
+                            }
+                        }
+                        core
+                    })
+                    .expect("spawn reducer"),
+            );
+        }
+
+        let mappers: Vec<MapperCore> = mapper_handles
+            .into_iter()
+            .map(|h| h.join().expect("mapper panicked"))
+            .collect();
+        let mut reducers: Vec<ReducerCore> = reducer_handles
+            .into_iter()
+            .map(|h| h.join().expect("reducer panicked"))
+            .collect();
+        let wall = t0.elapsed();
+
+        // final state merge (§2)
+        let snaps: Vec<Vec<(String, i64)>> =
+            reducers.iter_mut().map(|r| r.final_snapshot()).collect();
+        let op = reduce_factory(0).merge_op();
+        let result = merge_states(snaps, op, false);
+
+        let mut balancer = Arc::try_unwrap(balancer)
+            .map(|m| m.into_inner().unwrap())
+            .unwrap_or_else(|_| panic!("balancer still shared after join"));
+
+        RunReport {
+            processed: reducers.iter().map(|r| r.processed).collect(),
+            forwarded: reducers.iter().map(|r| r.forwarded).collect(),
+            mapped: mappers.iter().map(|m| m.emitted).collect(),
+            lb_events: balancer.take_events(),
+            result,
+            wall,
+            virtual_end: 0,
+            peak_qlen: queues.iter().map(|q| q.peak()).collect(),
+            input_items,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::builtin::{IdentityMap, WordCount};
+    use crate::hash::{Ring, SharedRing, Strategy};
+
+    fn wordcount_factory() -> ReduceFactory {
+        Arc::new(|_| Box::new(WordCount::new()) as Box<dyn crate::exec::ReduceExecutor>)
+    }
+
+    fn balancer(strategy: Strategy) -> BalancerCore {
+        let ring = SharedRing::new(Ring::for_strategy(4, strategy, 8));
+        BalancerCore::new(ring, strategy, 0.2, 8, 1, 20_000)
+    }
+
+    fn oracle(items: &[String]) -> Vec<(String, i64)> {
+        let mut m = std::collections::HashMap::new();
+        for i in items {
+            *m.entry(i.clone()).or_insert(0i64) += 1;
+        }
+        let mut v: Vec<(String, i64)> = m.into_iter().collect();
+        v.sort();
+        v
+    }
+
+    #[test]
+    fn threaded_wordcount_is_exact() {
+        let items: Vec<String> = (0..500).map(|i| format!("k{}", i % 13)).collect();
+        let d = ThreadDriver::new(ThreadParams {
+            reduce_delay_us: 0,
+            ..Default::default()
+        });
+        let r = d.run(
+            Arc::new(IdentityMap),
+            &wordcount_factory(),
+            4,
+            balancer(Strategy::None),
+            items.clone(),
+        );
+        assert!(r.check_conservation().is_ok());
+        assert_eq!(r.result, oracle(&items));
+        assert_eq!(r.total_processed(), 500);
+        assert!(r.wall > Duration::ZERO);
+    }
+
+    #[test]
+    fn threaded_lb_run_stays_correct() {
+        let w = crate::workload::paperwl::wl1();
+        let d = ThreadDriver::new(ThreadParams {
+            reduce_delay_us: 500, // compute-heavy so queues build
+            ..Default::default()
+        });
+        let r = d.run(
+            Arc::new(IdentityMap),
+            &wordcount_factory(),
+            4,
+            balancer(Strategy::Doubling),
+            w.items.clone(),
+        );
+        assert!(r.check_conservation().is_ok());
+        assert_eq!(r.result, oracle(&w.items));
+    }
+
+    #[test]
+    fn empty_input_terminates_quickly() {
+        let d = ThreadDriver::new(ThreadParams::default());
+        let r = d.run(
+            Arc::new(IdentityMap),
+            &wordcount_factory(),
+            2,
+            balancer(Strategy::None),
+            vec![],
+        );
+        assert_eq!(r.total_processed(), 0);
+    }
+}

@@ -1,0 +1,294 @@
+//! Builtin executors: word count (the paper's running example), keyed sum,
+//! distinct, top-k, and a configurable-cost wrapper that makes reducers
+//! compute-heavy (the regime the paper's pipelined parallelism targets).
+
+use std::collections::HashMap;
+
+use super::{MapExecutor, MergeOp, Record, ReduceExecutor};
+
+/// Identity mapper: each input item is a key with weight 1 (word count
+/// over a pre-split stream of letters/words).
+pub struct IdentityMap;
+
+impl MapExecutor for IdentityMap {
+    fn map(&self, item: &str) -> Vec<Record> {
+        vec![Record::new(item, 1)]
+    }
+}
+
+/// Tokenizing mapper: splits an input line into whitespace-separated,
+/// lowercased words — the e2e corpus pipeline's map function.
+pub struct TokenizeMap;
+
+impl MapExecutor for TokenizeMap {
+    fn map(&self, item: &str) -> Vec<Record> {
+        item.split_whitespace()
+            .map(|w| Record::new(w.to_ascii_lowercase(), 1))
+            .collect()
+    }
+}
+
+/// Parsing mapper for `key:value` items (keyed-sum pipelines).
+pub struct KeyValueMap;
+
+impl MapExecutor for KeyValueMap {
+    fn map(&self, item: &str) -> Vec<Record> {
+        match item.split_once(':') {
+            Some((k, v)) => match v.trim().parse::<i64>() {
+                Ok(value) => vec![Record::new(k.trim(), value)],
+                Err(_) => {
+                    log::warn!("dropping unparsable item '{item}'");
+                    vec![]
+                }
+            },
+            None => vec![Record::new(item, 1)],
+        }
+    }
+}
+
+/// The paper's reducer: tally per-key counts in a dictionary.
+#[derive(Default)]
+pub struct WordCount {
+    counts: HashMap<String, i64>,
+}
+
+impl WordCount {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl ReduceExecutor for WordCount {
+    fn reduce(&mut self, rec: Record) {
+        *self.counts.entry(rec.key).or_insert(0) += rec.value;
+    }
+
+    fn snapshot(&mut self) -> Vec<(String, i64)> {
+        let mut v: Vec<(String, i64)> = self.counts.iter().map(|(k, c)| (k.clone(), *c)).collect();
+        v.sort();
+        v
+    }
+
+    fn merge_op(&self) -> MergeOp {
+        MergeOp::Sum
+    }
+
+    fn extract_key(&mut self, key: &str) -> Option<i64> {
+        self.counts.remove(key)
+    }
+}
+
+/// Keyed sum — same state shape as word count, different map side.
+pub type KeyedSum = WordCount;
+
+/// Distinct: state is "have I seen this key" (value pinned to 1).
+#[derive(Default)]
+pub struct Distinct {
+    seen: HashMap<String, i64>,
+}
+
+impl Distinct {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl ReduceExecutor for Distinct {
+    fn reduce(&mut self, rec: Record) {
+        self.seen.insert(rec.key, 1);
+    }
+
+    fn snapshot(&mut self) -> Vec<(String, i64)> {
+        let mut v: Vec<(String, i64)> = self.seen.iter().map(|(k, _)| (k.clone(), 1)).collect();
+        v.sort();
+        v
+    }
+
+    fn merge_op(&self) -> MergeOp {
+        MergeOp::Max
+    }
+
+    fn extract_key(&mut self, key: &str) -> Option<i64> {
+        self.seen.remove(key)
+    }
+}
+
+/// Top-K by count. State is a full count map (so snapshots stay mergeable
+/// across reducers — a truncated state would not merge associatively,
+/// exactly the paper's caveat about non-commutative merges); the K cut is
+/// applied by [`TopK::top`] after the global merge.
+pub struct TopK {
+    pub k: usize,
+    counts: HashMap<String, i64>,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> Self {
+        TopK { k, counts: HashMap::new() }
+    }
+
+    /// Post-merge selection: top-k entries by (count desc, key asc).
+    pub fn top(merged: &[(String, i64)], k: usize) -> Vec<(String, i64)> {
+        let mut v = merged.to_vec();
+        v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        v.truncate(k);
+        v
+    }
+}
+
+impl ReduceExecutor for TopK {
+    fn reduce(&mut self, rec: Record) {
+        *self.counts.entry(rec.key).or_insert(0) += rec.value;
+    }
+
+    fn snapshot(&mut self) -> Vec<(String, i64)> {
+        let mut v: Vec<(String, i64)> = self.counts.iter().map(|(k, c)| (k.clone(), *c)).collect();
+        v.sort();
+        v
+    }
+
+    fn merge_op(&self) -> MergeOp {
+        MergeOp::Sum
+    }
+
+    fn extract_key(&mut self, key: &str) -> Option<i64> {
+        self.counts.remove(key)
+    }
+}
+
+/// Wraps any reducer with a busy-wait of `cost_us` per record, simulating
+/// the compute-heavy reducers the paper's straggler analysis assumes.
+/// Used by the threads driver; the sim driver models cost in virtual time.
+pub struct CostlyReduce<E: ReduceExecutor> {
+    inner: E,
+    cost_us: u64,
+}
+
+impl<E: ReduceExecutor> CostlyReduce<E> {
+    pub fn new(inner: E, cost_us: u64) -> Self {
+        CostlyReduce { inner, cost_us }
+    }
+}
+
+impl<E: ReduceExecutor> ReduceExecutor for CostlyReduce<E> {
+    fn reduce(&mut self, rec: Record) {
+        if self.cost_us > 0 {
+            let deadline = std::time::Instant::now() + std::time::Duration::from_micros(self.cost_us);
+            while std::time::Instant::now() < deadline {
+                std::hint::spin_loop();
+            }
+        }
+        self.inner.reduce(rec);
+    }
+
+    fn flush(&mut self) {
+        self.inner.flush();
+    }
+
+    fn snapshot(&mut self) -> Vec<(String, i64)> {
+        self.inner.snapshot()
+    }
+
+    fn merge_op(&self) -> MergeOp {
+        self.inner.merge_op()
+    }
+
+    fn extract_key(&mut self, key: &str) -> Option<i64> {
+        self.inner.extract_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::merge_snapshots;
+
+    #[test]
+    fn identity_map() {
+        assert_eq!(IdentityMap.map("h"), vec![Record::new("h", 1)]);
+    }
+
+    #[test]
+    fn tokenize_map_splits_and_lowercases() {
+        let recs = TokenizeMap.map("The quick  the");
+        assert_eq!(
+            recs,
+            vec![
+                Record::new("the", 1),
+                Record::new("quick", 1),
+                Record::new("the", 1)
+            ]
+        );
+    }
+
+    #[test]
+    fn keyvalue_map_parses() {
+        assert_eq!(KeyValueMap.map("x: 7"), vec![Record::new("x", 7)]);
+        assert_eq!(KeyValueMap.map("bare"), vec![Record::new("bare", 1)]);
+        assert!(KeyValueMap.map("x:notanint").is_empty());
+    }
+
+    #[test]
+    fn wordcount_counts() {
+        let mut wc = WordCount::new();
+        for k in ["a", "b", "a"] {
+            wc.reduce(Record::new(k, 1));
+        }
+        assert_eq!(wc.snapshot(), vec![("a".into(), 2), ("b".into(), 1)]);
+    }
+
+    #[test]
+    fn wordcount_merge_matches_paper_example() {
+        // "foo" first processed by reducer A then by reducer B: merge adds
+        let mut a = WordCount::new();
+        let mut b = WordCount::new();
+        a.reduce(Record::new("foo", 1));
+        a.reduce(Record::new("foo", 1));
+        b.reduce(Record::new("foo", 1));
+        let merged = merge_snapshots(vec![a.snapshot(), b.snapshot()], MergeOp::Sum);
+        assert_eq!(merged, vec![("foo".into(), 3)]);
+    }
+
+    #[test]
+    fn distinct_is_idempotent_under_merge() {
+        let mut a = Distinct::new();
+        let mut b = Distinct::new();
+        a.reduce(Record::new("x", 1));
+        b.reduce(Record::new("x", 1));
+        b.reduce(Record::new("y", 1));
+        let merged = merge_snapshots(vec![a.snapshot(), b.snapshot()], MergeOp::Max);
+        assert_eq!(merged, vec![("x".into(), 1), ("y".into(), 1)]);
+    }
+
+    #[test]
+    fn topk_selection() {
+        let merged = vec![
+            ("a".into(), 5),
+            ("b".into(), 9),
+            ("c".into(), 5),
+            ("d".into(), 1),
+        ];
+        assert_eq!(
+            TopK::top(&merged, 2),
+            vec![("b".into(), 9), ("a".into(), 5)]
+        );
+    }
+
+    #[test]
+    fn extract_key_removes_state() {
+        let mut wc = WordCount::new();
+        wc.reduce(Record::new("k", 1));
+        wc.reduce(Record::new("k", 1));
+        assert_eq!(wc.extract_key("k"), Some(2));
+        assert_eq!(wc.extract_key("k"), None);
+        assert!(wc.snapshot().is_empty());
+    }
+
+    #[test]
+    fn costly_reduce_delegates() {
+        let mut c = CostlyReduce::new(WordCount::new(), 0);
+        c.reduce(Record::new("z", 1));
+        assert_eq!(c.snapshot(), vec![("z".into(), 1)]);
+        assert_eq!(c.merge_op(), MergeOp::Sum);
+    }
+}

@@ -1,0 +1,208 @@
+//! Streaming hash-join executor — the paper's motivating example for why
+//! merge-at-end is not universal (§7):
+//!
+//! > "Depending on reducer B's execution semantics it might decide to
+//! > throw away such inputs (e.g. hash join not matching on build table),
+//! > leading to incorrect execution behavior."
+//!
+//! The reducer state is the *build side* (key → build value). Probe
+//! records match against the local build state; a probe that finds no
+//! build row is **dropped** (inner-join semantics) — so if a repartition
+//! separates a key's build state from its probe records, merge-at-end
+//! CANNOT repair the loss. The §7 state-forwarding mode can: the build
+//! state moves to the key's new owner *before* any probe is processed
+//! there. `rust/tests/lb_behavior.rs` demonstrates both behaviours.
+//!
+//! Input encoding (see [`JoinMap`]): `B:key:value` for build rows,
+//! `P:key:value` for probe rows. Join results are accumulated as a count
+//! of matched (probe, build) value-sums per key so they stay in the
+//! `(String, i64)` snapshot shape.
+
+use std::collections::HashMap;
+
+use super::{MapExecutor, MergeOp, Record, ReduceExecutor};
+
+/// Tags build vs probe rows through the `value` channel: build records
+/// carry `BUILD_BIT | value`, probes carry the plain value. Values are
+/// limited to 31 bits by this encoding (asserted).
+const BUILD_BIT: i64 = 1 << 40;
+
+/// Mapper for `B:key:v` / `P:key:v` items.
+pub struct JoinMap;
+
+impl MapExecutor for JoinMap {
+    fn map(&self, item: &str) -> Vec<Record> {
+        let mut parts = item.splitn(3, ':');
+        let (tag, key, v) = (parts.next(), parts.next(), parts.next());
+        match (tag, key, v.and_then(|v| v.trim().parse::<i64>().ok())) {
+            (Some("B"), Some(k), Some(v)) => {
+                assert!(v.abs() < BUILD_BIT, "join values limited to 40 bits");
+                vec![Record::new(k, BUILD_BIT | v)]
+            }
+            (Some("P"), Some(k), Some(v)) => {
+                assert!(v.abs() < BUILD_BIT, "join values limited to 40 bits");
+                vec![Record::new(k, v)]
+            }
+            _ => {
+                log::warn!("join: dropping malformed item '{item}'");
+                vec![]
+            }
+        }
+    }
+}
+
+/// Inner hash join: build rows install state; probe rows that match emit
+/// `build_value + probe_value` into the per-key result accumulator, and
+/// probe rows that do NOT match are dropped (the §7 hazard).
+pub struct HashJoin {
+    /// Build side: key -> build value (last write wins).
+    build: HashMap<String, i64>,
+    /// Join output: key -> sum of (build_value + probe_value) matches.
+    matched: HashMap<String, i64>,
+    /// Probes that found no local build state (the §7 correctness hazard
+    /// under merge-at-end; zero under state forwarding).
+    pub dropped_probes: u64,
+}
+
+impl Default for HashJoin {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HashJoin {
+    pub fn new() -> Self {
+        HashJoin {
+            build: HashMap::new(),
+            matched: HashMap::new(),
+            dropped_probes: 0,
+        }
+    }
+}
+
+impl ReduceExecutor for HashJoin {
+    fn reduce(&mut self, rec: Record) {
+        if rec.value & BUILD_BIT != 0 {
+            self.build.insert(rec.key, rec.value & !BUILD_BIT);
+        } else {
+            match self.build.get(&rec.key) {
+                Some(&b) => {
+                    *self.matched.entry(rec.key).or_insert(0) += b + rec.value;
+                }
+                None => {
+                    self.dropped_probes += 1;
+                    log::debug!("join: probe for '{}' found no build state", rec.key);
+                }
+            }
+        }
+    }
+
+    /// Snapshot: join results, plus the build state tagged so
+    /// `extract_key`/state forwarding can move it.
+    fn snapshot(&mut self) -> Vec<(String, i64)> {
+        let mut out: Vec<(String, i64)> =
+            self.matched.iter().map(|(k, v)| (k.clone(), *v)).collect();
+        out.sort();
+        out
+    }
+
+    fn merge_op(&self) -> MergeOp {
+        MergeOp::Sum
+    }
+
+    /// State forwarding moves the *build* state (what probes need).
+    fn extract_key(&mut self, key: &str) -> Option<i64> {
+        self.build.remove(key).map(|v| BUILD_BIT | v)
+    }
+
+    /// Match sums are output, not state: they stay where they were
+    /// produced and merge additively across reducers.
+    fn snapshot_is_state(&self) -> bool {
+        false
+    }
+
+    /// Absorb forwarded build state (or, defensively, a forwarded match
+    /// accumulation).
+    fn absorb_key(&mut self, key: &str, value: i64) {
+        if value & BUILD_BIT != 0 {
+            self.build.insert(key.to_string(), value & !BUILD_BIT);
+        } else {
+            *self.matched.entry(key.to_string()).or_insert(0) += value;
+        }
+    }
+}
+
+/// Serial oracle for a join input stream (what a single reducer computes).
+pub fn join_oracle(items: &[String]) -> (Vec<(String, i64)>, u64) {
+    let mut j = HashJoin::new();
+    for item in items {
+        for rec in JoinMap.map(item) {
+            j.reduce(rec);
+        }
+    }
+    (j.snapshot(), j.dropped_probes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_parses_build_and_probe() {
+        let b = JoinMap.map("B:user1:10");
+        assert_eq!(b[0].key, "user1");
+        assert_eq!(b[0].value, BUILD_BIT | 10);
+        let p = JoinMap.map("P:user1:5");
+        assert_eq!(p[0].value, 5);
+        assert!(JoinMap.map("garbage").is_empty());
+        assert!(JoinMap.map("X:k:1").is_empty());
+    }
+
+    #[test]
+    fn probe_after_build_matches() {
+        let mut j = HashJoin::new();
+        j.reduce(Record::new("k", BUILD_BIT | 10));
+        j.reduce(Record::new("k", 5));
+        j.reduce(Record::new("k", 7));
+        assert_eq!(j.snapshot(), vec![("k".into(), 32)]); // (10+5)+(10+7)
+        assert_eq!(j.dropped_probes, 0);
+    }
+
+    #[test]
+    fn probe_without_build_is_dropped() {
+        let mut j = HashJoin::new();
+        j.reduce(Record::new("k", 5));
+        assert!(j.snapshot().is_empty());
+        assert_eq!(j.dropped_probes, 1);
+    }
+
+    #[test]
+    fn extract_moves_build_state() {
+        let mut j = HashJoin::new();
+        j.reduce(Record::new("k", BUILD_BIT | 10));
+        let state = j.extract_key("k").unwrap();
+        assert_eq!(state, BUILD_BIT | 10);
+        // the state is gone: probes now drop
+        j.reduce(Record::new("k", 5));
+        assert_eq!(j.dropped_probes, 1);
+        // absorbing restores it
+        let mut other = HashJoin::new();
+        other.absorb_key("k", state);
+        other.reduce(Record::new("k", 5));
+        assert_eq!(other.snapshot(), vec![("k".into(), 15)]);
+    }
+
+    #[test]
+    fn oracle_counts() {
+        let items: Vec<String> = vec![
+            "B:a:1".into(),
+            "P:a:2".into(),
+            "P:b:9".into(), // no build -> dropped
+            "B:b:3".into(),
+            "P:b:4".into(),
+        ];
+        let (result, dropped) = join_oracle(&items);
+        assert_eq!(result, vec![("a".into(), 3), ("b".into(), 7)]);
+        assert_eq!(dropped, 1);
+    }
+}

@@ -1,0 +1,208 @@
+//! Executor framework: the user-provided map and reduce functions the
+//! paper's runtime applies to input elements (§2), plus builtin executors
+//! (word count — the paper's running example — and friends) and the
+//! XLA-backed word counter whose aggregation runs through the AOT-compiled
+//! Pallas kernels ([`xla`]).
+
+pub mod builtin;
+pub mod join;
+pub mod xla;
+
+use std::fmt;
+
+/// One routed message: a key and an integer payload. The paper's word
+/// count maps a letter to `(letter, 1)`.
+///
+/// The key's MurmurHash3 is memoized on first use (§Perf iteration 4):
+/// the mapper hashes for routing, and the reducer's ownership check —
+/// plus any forwarding hops — reuse the cached value instead of
+/// re-hashing. The cache is invisible to equality/debug.
+#[derive(Debug)]
+pub struct Record {
+    pub key: String,
+    pub value: i64,
+    hash_cache: std::cell::Cell<Option<u32>>,
+}
+
+// SAFETY-free: Cell<Option<u32>> is Send (not Sync); Record moves between
+// threads through queues but is never shared by reference across threads.
+impl Record {
+    pub fn new(key: impl Into<String>, value: i64) -> Self {
+        Record {
+            key: key.into(),
+            value,
+            hash_cache: std::cell::Cell::new(None),
+        }
+    }
+
+    /// MurmurHash3 of the key, computed once.
+    #[inline]
+    pub fn hash(&self) -> u32 {
+        match self.hash_cache.get() {
+            Some(h) => h,
+            None => {
+                let h = crate::hash::murmur3_x86_32(self.key.as_bytes());
+                self.hash_cache.set(Some(h));
+                h
+            }
+        }
+    }
+}
+
+impl Clone for Record {
+    fn clone(&self) -> Self {
+        Record {
+            key: self.key.clone(),
+            value: self.value,
+            hash_cache: self.hash_cache.clone(),
+        }
+    }
+}
+
+impl PartialEq for Record {
+    fn eq(&self, other: &Self) -> bool {
+        self.key == other.key && self.value == other.value
+    }
+}
+
+impl Eq for Record {}
+
+/// A unit of input handed to a mapper by the coordinator (§3: "mapper
+/// actors fetch tasks or data items from the coordinator").
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub id: u64,
+    pub items: Vec<String>,
+}
+
+/// How two values for the same key combine during the final state merge
+/// (§2: "the state merge step would simply add those counts"; other
+/// reductions admit other merge functions).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MergeOp {
+    Sum,
+    Min,
+    Max,
+    /// Later snapshot wins; for idempotent states (e.g. distinct = 1).
+    Last,
+}
+
+impl MergeOp {
+    #[inline]
+    pub fn apply(&self, a: i64, b: i64) -> i64 {
+        match self {
+            MergeOp::Sum => a + b,
+            MergeOp::Min => a.min(b),
+            MergeOp::Max => a.max(b),
+            MergeOp::Last => b,
+        }
+    }
+}
+
+impl fmt::Display for MergeOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MergeOp::Sum => write!(f, "sum"),
+            MergeOp::Min => write!(f, "min"),
+            MergeOp::Max => write!(f, "max"),
+            MergeOp::Last => write!(f, "last"),
+        }
+    }
+}
+
+/// The stateless map executor (§2.1: "mappers are stateless").
+pub trait MapExecutor: Send + Sync {
+    /// Transform one input item into zero or more routed records.
+    fn map(&self, item: &str) -> Vec<Record>;
+}
+
+/// The stateful reduce executor (§2.1: "reducers can be stateful").
+///
+/// `snapshot` must flush any internal batching and return the complete
+/// state as `(key, value)` pairs — this is what the coordinator's state
+/// merge consumes. After `snapshot` the executor may keep running (the
+/// balancer also snapshots live state in the state-forwarding extension).
+pub trait ReduceExecutor: Send {
+    /// Fold one record into local state.
+    fn reduce(&mut self, rec: Record);
+
+    /// Flush any batched-but-unapplied records into state.
+    fn flush(&mut self) {}
+
+    /// Flushed view of the full state.
+    fn snapshot(&mut self) -> Vec<(String, i64)>;
+
+    /// How the coordinator merges snapshots from different reducers.
+    fn merge_op(&self) -> MergeOp;
+
+    /// Extract and *remove* the state associated with `key`, if any —
+    /// used by the §7 state-forwarding extension.
+    fn extract_key(&mut self, key: &str) -> Option<i64>;
+
+    /// Does `snapshot` consist purely of forwardable *state*? If so,
+    /// state forwarding guarantees per-key single residency and the final
+    /// merge asserts key-disjoint snapshots (word count: counts are the
+    /// state). Executors whose snapshot includes commutative *output*
+    /// accumulators that legitimately accrue on several reducers (e.g.
+    /// [`join::HashJoin`]'s match sums) return `false`.
+    fn snapshot_is_state(&self) -> bool {
+        true
+    }
+
+    /// Absorb state for a key forwarded from another reducer.
+    fn absorb_key(&mut self, key: &str, value: i64) {
+        self.reduce(Record::new(key, value));
+    }
+}
+
+/// Factory producing a fresh reducer-state executor per reducer actor.
+/// `Arc` so pipelines can be re-run / seed-swept without re-wiring.
+pub type ReduceFactory = std::sync::Arc<dyn Fn(usize) -> Box<dyn ReduceExecutor> + Send + Sync>;
+
+/// Merge many snapshots into one sorted result using `op` (§2's final
+/// state-merge step, pairwise-folded).
+pub fn merge_snapshots(snaps: Vec<Vec<(String, i64)>>, op: MergeOp) -> Vec<(String, i64)> {
+    let mut acc: std::collections::HashMap<String, i64> = std::collections::HashMap::new();
+    for snap in snaps {
+        for (k, v) in snap {
+            acc.entry(k)
+                .and_modify(|a| *a = op.apply(*a, v))
+                .or_insert(v);
+        }
+    }
+    let mut out: Vec<(String, i64)> = acc.into_iter().collect();
+    out.sort();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_ops() {
+        assert_eq!(MergeOp::Sum.apply(2, 3), 5);
+        assert_eq!(MergeOp::Min.apply(2, 3), 2);
+        assert_eq!(MergeOp::Max.apply(2, 3), 3);
+        assert_eq!(MergeOp::Last.apply(2, 3), 3);
+    }
+
+    #[test]
+    fn merge_snapshots_sums_shared_keys() {
+        // the paper's example: "foo" counted on reducer A and reducer B
+        let merged = merge_snapshots(
+            vec![
+                vec![("foo".into(), 3), ("bar".into(), 1)],
+                vec![("foo".into(), 2)],
+            ],
+            MergeOp::Sum,
+        );
+        assert_eq!(merged, vec![("bar".into(), 1), ("foo".into(), 5)]);
+    }
+
+    #[test]
+    fn merge_snapshots_empty() {
+        assert!(merge_snapshots(vec![], MergeOp::Sum).is_empty());
+        assert!(merge_snapshots(vec![vec![], vec![]], MergeOp::Sum).is_empty());
+    }
+}

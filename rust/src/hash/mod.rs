@@ -1,0 +1,19 @@
+//! Keyspace partitioning: MurmurHash3 and the consistent-hash token ring.
+//!
+//! This is the mechanism layer of the paper's load balancer: keys are
+//! placed on a 32-bit hash ring ([`ring::Ring`]) populated with per-node
+//! tokens; lookups walk the ring clockwise (binary search over sorted
+//! token hashes, `O(log T)`); the two repartitioning strategies from §4.2
+//! (token *halving* and token *doubling*) live in [`strategy`].
+//!
+//! The identical MurmurHash3_x86_32 is implemented in the Pallas kernel
+//! (`python/compile/kernels/murmur3.py`); `rust/tests/xla_parity.rs`
+//! asserts bit-exact agreement so routing decisions match across layers.
+
+pub mod murmur3;
+pub mod ring;
+pub mod strategy;
+
+pub use murmur3::murmur3_x86_32;
+pub use ring::{Ring, SharedRing, Token};
+pub use strategy::Strategy;

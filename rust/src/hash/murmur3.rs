@@ -1,0 +1,146 @@
+//! MurmurHash3_x86_32 (Austin Appleby, public domain) — the hash the paper
+//! uses for its consistent-hash ring [Appleby, 2014].
+//!
+//! This implementation is bit-exact with the reference `MurmurHash3_x86_32`
+//! and with the Pallas kernel in `python/compile/kernels/murmur3.py`; both
+//! are checked against the same published test vectors.
+
+const C1: u32 = 0xcc9e2d51;
+const C2: u32 = 0x1b873593;
+
+/// Mix a single 4-byte block into the hash state.
+#[inline(always)]
+fn mix_k1(mut k1: u32) -> u32 {
+    k1 = k1.wrapping_mul(C1);
+    k1 = k1.rotate_left(15);
+    k1.wrapping_mul(C2)
+}
+
+/// Final avalanche.
+#[inline(always)]
+fn fmix32(mut h: u32) -> u32 {
+    h ^= h >> 16;
+    h = h.wrapping_mul(0x85ebca6b);
+    h ^= h >> 13;
+    h = h.wrapping_mul(0xc2b2ae35);
+    h ^= h >> 16;
+    h
+}
+
+/// MurmurHash3_x86_32 over `data` with `seed`.
+pub fn murmur3_x86_32_seed(data: &[u8], seed: u32) -> u32 {
+    let nblocks = data.len() / 4;
+    let mut h1 = seed;
+
+    // body: 4-byte little-endian blocks
+    for i in 0..nblocks {
+        let k1 = u32::from_le_bytes([
+            data[4 * i],
+            data[4 * i + 1],
+            data[4 * i + 2],
+            data[4 * i + 3],
+        ]);
+        h1 ^= mix_k1(k1);
+        h1 = h1.rotate_left(13);
+        h1 = h1.wrapping_mul(5).wrapping_add(0xe6546b64);
+    }
+
+    // tail
+    let tail = &data[nblocks * 4..];
+    let mut k1: u32 = 0;
+    if !tail.is_empty() {
+        if tail.len() >= 3 {
+            k1 ^= (tail[2] as u32) << 16;
+        }
+        if tail.len() >= 2 {
+            k1 ^= (tail[1] as u32) << 8;
+        }
+        k1 ^= tail[0] as u32;
+        h1 ^= mix_k1(k1);
+    }
+
+    // finalization
+    h1 ^= data.len() as u32;
+    fmix32(h1)
+}
+
+/// MurmurHash3_x86_32 with the conventional zero seed (what the ring uses).
+#[inline]
+pub fn murmur3_x86_32(data: &[u8]) -> u32 {
+    murmur3_x86_32_seed(data, 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Published MurmurHash3_x86_32 test vectors (seed 0 unless noted).
+    /// Cross-checked against the smhasher reference implementation and the
+    /// python `mmh3` package.
+    #[test]
+    fn reference_vectors_seed0() {
+        assert_eq!(murmur3_x86_32(b""), 0x0000_0000);
+        assert_eq!(murmur3_x86_32(b"a"), 0x3c25_69b2);
+        assert_eq!(murmur3_x86_32(b"abc"), 0xb3dd_93fa);
+        assert_eq!(murmur3_x86_32(b"test"), 0xba6b_d213);
+        assert_eq!(murmur3_x86_32(b"hello"), 0x248b_fa47);
+        assert_eq!(murmur3_x86_32(b"Hello, world!"), 0xc036_3e43);
+        assert_eq!(murmur3_x86_32(b"xxxxxxxx"), murmur3_x86_32(b"xxxxxxxx"));
+        assert_eq!(
+            murmur3_x86_32(b"The quick brown fox jumps over the lazy dog"),
+            0x2e4f_f723
+        );
+    }
+
+    #[test]
+    fn reference_vectors_nonzero_seed() {
+        // From the smhasher verification suite.
+        assert_eq!(murmur3_x86_32_seed(b"", 1), 0x514e_28b7);
+        assert_eq!(murmur3_x86_32_seed(b"", 0xffff_ffff), 0x81f1_6f39);
+        assert_eq!(murmur3_x86_32_seed(b"aaaa", 0x9747b28c), 0x5a97_808a);
+    }
+
+    #[test]
+    fn all_tail_lengths_exercise_switch() {
+        // lengths 0..=8 cover every (nblocks, tail) combination twice
+        let data = b"abcdefgh";
+        let expected: [u32; 9] = [
+            0x0000_0000, // ""
+            0x3c25_69b2, // "a"
+            0x9bbf_d75f, // "ab"
+            0xb3dd_93fa, // "abc"
+            0x43ed_676a, // "abcd"
+            0xe89b_9af6, // "abcde"
+            0x6181_c085, // "abcdef"
+            0x883c_9b06, // "abcdefg"
+            0x49ddccc4,  // "abcdefgh"
+        ];
+        for len in 0..=8 {
+            assert_eq!(
+                murmur3_x86_32(&data[..len]),
+                expected[len],
+                "len {len}"
+            );
+        }
+    }
+
+    #[test]
+    fn token_format_hashes_are_spread() {
+        // the ring hashes strings "token-{i}-{j}"; sanity check dispersion
+        let mut hs: Vec<u32> = Vec::new();
+        for i in 0..4 {
+            for j in 0..8 {
+                hs.push(murmur3_x86_32(format!("token-{i}-{j}").as_bytes()));
+            }
+        }
+        hs.sort_unstable();
+        hs.dedup();
+        assert_eq!(hs.len(), 32, "no collisions among 32 tokens");
+        // rough dispersion: max gap < 1/2 of the ring
+        let mut max_gap = hs[0].wrapping_sub(*hs.last().unwrap());
+        for w in hs.windows(2) {
+            max_gap = max_gap.max(w[1] - w[0]);
+        }
+        assert!(max_gap < u32::MAX / 2);
+    }
+}

@@ -1,0 +1,546 @@
+//! The consistent-hash token ring (§4.2 of the paper).
+//!
+//! Each node (reducer) `i` owns tokens `token-{i}-{j}`; a token's position
+//! on the 32-bit ring is `murmur3("token-{i}-{j}")`. A key maps to the
+//! node owning the first token at or clockwise after `murmur3(key)`
+//! (wrapping to the smallest token). Lookup is `O(log T)` binary search
+//! over tokens kept sorted by `(hash, node, idx)` — the tie order is part
+//! of the cross-layer contract with the XLA `route` program, which receives
+//! the same sorted arrays and must agree bit-for-bit.
+//!
+//! [`Ring::halve`] and [`Ring::double_others`] implement the two
+//! redistribution strategies; [`Ring::add_node`] supports the paper's §7
+//! elastic scale-out extension (a new reducer claims tokens at runtime).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use super::murmur3::murmur3_x86_32;
+use super::strategy::Strategy;
+
+/// Maximum tokens a single node may hold. Doubling saturates here instead
+/// of growing without bound (the paper never needs more than a handful of
+/// redistributions; this cap also bounds the XLA route program's `T`).
+pub const MAX_TOKENS_PER_NODE: u32 = 128;
+
+/// One token on the ring.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Token {
+    /// Owning node (reducer) id.
+    pub node: u32,
+    /// Token index `j` within the node (names are never reused after
+    /// halving; doubling extends the index range).
+    pub idx: u32,
+    /// `murmur3("token-{node}-{idx}")`.
+    pub hash: u32,
+}
+
+impl Token {
+    pub fn new(node: u32, idx: u32) -> Self {
+        let name = format!("token-{node}-{idx}");
+        Token {
+            node,
+            idx,
+            hash: murmur3_x86_32(name.as_bytes()),
+        }
+    }
+}
+
+/// The consistent-hash ring.
+#[derive(Clone, Debug)]
+pub struct Ring {
+    /// Tokens sorted by `(hash, node, idx)`.
+    tokens: Vec<Token>,
+    /// `tokens[i].hash`, kept parallel for cache-friendly binary search.
+    hashes: Vec<u32>,
+    /// Live token indices per node (token *names*, i.e. `idx` values).
+    node_tokens: Vec<Vec<u32>>,
+    /// Bumped on every mutation; lets readers cache snapshots cheaply.
+    epoch: u64,
+}
+
+impl Ring {
+    /// A ring with `nodes` nodes and `tokens_per_node` tokens each
+    /// (indices `0..tokens_per_node`).
+    pub fn new(nodes: usize, tokens_per_node: u32) -> Self {
+        assert!(nodes > 0, "ring needs at least one node");
+        assert!(tokens_per_node >= 1);
+        assert!(tokens_per_node <= MAX_TOKENS_PER_NODE);
+        let mut ring = Ring {
+            tokens: Vec::new(),
+            hashes: Vec::new(),
+            node_tokens: vec![Vec::new(); nodes],
+            epoch: 0,
+        };
+        for node in 0..nodes as u32 {
+            for idx in 0..tokens_per_node {
+                ring.node_tokens[node as usize].push(idx);
+            }
+        }
+        ring.rebuild();
+        ring
+    }
+
+    /// A ring initialized per the given strategy (§4.2 initial layouts).
+    pub fn for_strategy(nodes: usize, strategy: Strategy, halving_init: u32) -> Self {
+        Ring::new(nodes, strategy.initial_tokens(halving_init))
+    }
+
+    /// Rebuild the sorted token arrays from `node_tokens`.
+    fn rebuild(&mut self) {
+        self.tokens.clear();
+        for (node, idxs) in self.node_tokens.iter().enumerate() {
+            for &idx in idxs {
+                self.tokens.push(Token::new(node as u32, idx));
+            }
+        }
+        self.tokens
+            .sort_by_key(|t| (t.hash, t.node, t.idx));
+        self.hashes = self.tokens.iter().map(|t| t.hash).collect();
+        self.epoch += 1;
+    }
+
+    /// Number of nodes (including any added at runtime).
+    pub fn nodes(&self) -> usize {
+        self.node_tokens.len()
+    }
+
+    /// Total live tokens `T`.
+    pub fn total_tokens(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// Live token count for `node`.
+    pub fn tokens_of(&self, node: usize) -> u32 {
+        self.node_tokens[node].len() as u32
+    }
+
+    /// Monotone mutation counter.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Sorted `(hash, owner)` view — the exact arrays fed to the XLA
+    /// `route` program (padded there to its static `T`).
+    pub fn sorted_tokens(&self) -> &[Token] {
+        &self.tokens
+    }
+
+    /// Map a raw 32-bit hash to its owning node: first token with
+    /// `token.hash >= h`, wrapping to the first token.
+    #[inline]
+    pub fn lookup_hash(&self, h: u32) -> usize {
+        // partition_point = first index with hash >= h
+        let i = self.hashes.partition_point(|&th| th < h);
+        let i = if i == self.hashes.len() { 0 } else { i };
+        self.tokens[i].node as usize
+    }
+
+    /// Map a key (its bytes) to its owning node.
+    #[inline]
+    pub fn lookup(&self, key: &[u8]) -> usize {
+        self.lookup_hash(murmur3_x86_32(key))
+    }
+
+    /// §4.2 strategy 1 — remove half of `node`'s tokens (the highest
+    /// indices, deterministically). Returns `false` when the node has a
+    /// single token left ("run out of halving") and nothing changes.
+    pub fn halve(&mut self, node: usize) -> bool {
+        let n = self.node_tokens[node].len();
+        if n <= 1 {
+            return false;
+        }
+        let keep = n / 2;
+        // tokens are stored in insertion (idx) order; drop the later half
+        self.node_tokens[node].sort_unstable();
+        self.node_tokens[node].truncate(keep);
+        self.rebuild();
+        true
+    }
+
+    /// §4.2 strategy 2 — double the token count of every node *except*
+    /// `node`. Saturates at [`MAX_TOKENS_PER_NODE`]; returns `true` if any
+    /// node gained tokens.
+    pub fn double_others(&mut self, node: usize) -> bool {
+        let mut changed = false;
+        for other in 0..self.node_tokens.len() {
+            if other == node {
+                continue;
+            }
+            let cur = self.node_tokens[other].len() as u32;
+            let target = (cur * 2).min(MAX_TOKENS_PER_NODE);
+            if target > cur {
+                // new token names continue from the node's max index so
+                // names never collide with live or halved-away tokens
+                let next = self.node_tokens[other].iter().copied().max().unwrap_or(0) + 1;
+                for k in 0..(target - cur) {
+                    self.node_tokens[other].push(next + k);
+                }
+                changed = true;
+            }
+        }
+        if changed {
+            self.rebuild();
+        }
+        changed
+    }
+
+    /// Apply the given strategy's redistribution for an overloaded node.
+    /// Returns `true` if the ring changed.
+    pub fn redistribute(&mut self, node: usize, strategy: Strategy) -> bool {
+        match strategy {
+            Strategy::None => false,
+            Strategy::Halving => self.halve(node),
+            Strategy::Doubling => self.double_others(node),
+        }
+    }
+
+    /// §7 extension — add a brand-new node claiming `tokens` tokens.
+    /// Returns its node id.
+    pub fn add_node(&mut self, tokens: u32) -> usize {
+        assert!(tokens >= 1 && tokens <= MAX_TOKENS_PER_NODE);
+        let node = self.node_tokens.len();
+        self.node_tokens.push((0..tokens).collect());
+        self.rebuild();
+        node
+    }
+
+    /// Fraction of the ring's hash space owned by `node` (sums to 1 across
+    /// nodes). Useful for diagnostics and property tests.
+    pub fn arc_fraction(&self, node: usize) -> f64 {
+        if self.tokens.len() == 1 {
+            return if self.tokens[0].node as usize == node { 1.0 } else { 0.0 };
+        }
+        let mut owned: u64 = 0;
+        for (i, t) in self.tokens.iter().enumerate() {
+            // the arc *ending* at token i is owned by token i's node
+            let prev = if i == 0 {
+                self.tokens[self.tokens.len() - 1].hash
+            } else {
+                self.tokens[i - 1].hash
+            };
+            let arc = t.hash.wrapping_sub(prev) as u64;
+            if t.node as usize == node {
+                owned += arc;
+            }
+        }
+        owned as f64 / 2f64.powi(32)
+    }
+
+    /// Linear-scan lookup oracle — used by property tests to validate the
+    /// binary-search path.
+    pub fn lookup_hash_linear(&self, h: u32) -> usize {
+        let mut best: Option<&Token> = None;
+        for t in &self.tokens {
+            if t.hash >= h {
+                match best {
+                    None => best = Some(t),
+                    Some(b) if (t.hash, t.node, t.idx) < (b.hash, b.node, b.idx) => {
+                        best = Some(t)
+                    }
+                    _ => {}
+                }
+            }
+        }
+        let t = best.unwrap_or_else(|| {
+            self.tokens
+                .iter()
+                .min_by_key(|t| (t.hash, t.node, t.idx))
+                .unwrap()
+        });
+        t.node as usize
+    }
+}
+
+/// Shared, epoch-versioned ring handle. Mappers and reducers route through
+/// this; the balancer is the only writer. The paper routes via remote calls
+/// to the LB actor and argues the read-mostly access is acceptable — this
+/// is the same design with the read path made explicit (RwLock + epoch).
+#[derive(Clone)]
+pub struct SharedRing {
+    inner: Arc<RwLock<Ring>>,
+    epoch: Arc<AtomicU64>,
+}
+
+impl SharedRing {
+    pub fn new(ring: Ring) -> Self {
+        let epoch = ring.epoch();
+        SharedRing {
+            inner: Arc::new(RwLock::new(ring)),
+            epoch: Arc::new(AtomicU64::new(epoch)),
+        }
+    }
+
+    /// Route a key to its owning node.
+    pub fn lookup(&self, key: &[u8]) -> usize {
+        self.inner.read().unwrap().lookup(key)
+    }
+
+    pub fn lookup_hash(&self, h: u32) -> usize {
+        self.inner.read().unwrap().lookup_hash(h)
+    }
+
+    /// Current epoch without taking the lock — lets hot paths skip
+    /// re-snapshotting when nothing changed.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// Clone the current ring state (for snapshot-based routing and for
+    /// feeding the XLA route program).
+    pub fn snapshot(&self) -> Ring {
+        self.inner.read().unwrap().clone()
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.inner.read().unwrap().nodes()
+    }
+
+    pub fn tokens_of(&self, node: usize) -> u32 {
+        self.inner.read().unwrap().tokens_of(node)
+    }
+
+    pub fn total_tokens(&self) -> usize {
+        self.inner.read().unwrap().total_tokens()
+    }
+
+    /// Mutate the ring under the write lock; publishes the new epoch.
+    pub fn update<R>(&self, f: impl FnOnce(&mut Ring) -> R) -> R {
+        let mut g = self.inner.write().unwrap();
+        let r = f(&mut g);
+        self.epoch.store(g.epoch(), Ordering::Release);
+        r
+    }
+}
+
+/// Epoch-validated local snapshot of a [`SharedRing`].
+///
+/// Routing hot paths (mappers route every record; reducers check every
+/// dequeue) would otherwise take the `RwLock` read lock per lookup. The
+/// cache re-snapshots only when the published epoch moves — between LB
+/// events (rare by design) lookups are lock-free on a local `Ring`.
+pub struct RingCache {
+    shared: SharedRing,
+    local: Ring,
+    epoch: u64,
+}
+
+impl RingCache {
+    pub fn new(shared: SharedRing) -> Self {
+        let local = shared.snapshot();
+        let epoch = local.epoch();
+        RingCache { shared, local, epoch }
+    }
+
+    /// Refresh the local snapshot if the shared ring moved.
+    #[inline]
+    fn refresh(&mut self) {
+        let e = self.shared.epoch();
+        if e != self.epoch {
+            self.local = self.shared.snapshot();
+            self.epoch = self.local.epoch();
+        }
+    }
+
+    #[inline]
+    pub fn lookup(&mut self, key: &[u8]) -> usize {
+        self.refresh();
+        self.local.lookup(key)
+    }
+
+    #[inline]
+    pub fn lookup_hash(&mut self, h: u32) -> usize {
+        self.refresh();
+        self.local.lookup_hash(h)
+    }
+
+    /// Current (refreshed) snapshot — for feeding the XLA route program.
+    pub fn ring(&mut self) -> &Ring {
+        self.refresh();
+        &self.local
+    }
+
+    pub fn shared(&self) -> &SharedRing {
+        &self.shared
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_cache_tracks_updates() {
+        let sr = SharedRing::new(Ring::new(4, 8));
+        let mut cache = RingCache::new(sr.clone());
+        let key = b"hello";
+        assert_eq!(cache.lookup(key), sr.lookup(key));
+        let owner = sr.lookup(key);
+        sr.update(|r| {
+            r.halve(owner);
+            r.halve(0);
+            r.halve(1);
+        });
+        assert_eq!(cache.lookup(key), sr.lookup(key), "cache refreshed on epoch bump");
+    }
+
+    #[test]
+    fn lookup_matches_linear_oracle() {
+        let ring = Ring::new(4, 8);
+        for i in 0..4096u32 {
+            let h = i.wrapping_mul(0x9E37_79B9);
+            assert_eq!(ring.lookup_hash(h), ring.lookup_hash_linear(h), "h={h:#x}");
+        }
+        // boundary hashes: exactly at, just below and just above each token
+        for t in ring.sorted_tokens().to_vec() {
+            for h in [t.hash.wrapping_sub(1), t.hash, t.hash.wrapping_add(1)] {
+                assert_eq!(ring.lookup_hash(h), ring.lookup_hash_linear(h));
+            }
+        }
+    }
+
+    #[test]
+    fn wraparound_maps_to_first_token() {
+        let ring = Ring::new(3, 2);
+        let max_hash = ring.sorted_tokens().last().unwrap().hash;
+        if max_hash < u32::MAX {
+            let first = ring.sorted_tokens().first().unwrap().node as usize;
+            assert_eq!(ring.lookup_hash(max_hash + 1), first);
+            assert_eq!(ring.lookup_hash(u32::MAX), first);
+        }
+    }
+
+    /// Figure 2 of the paper: 3 nodes, T_i = 2, T = 6 — lookup walks
+    /// clockwise to the next token.
+    #[test]
+    fn fig2_example() {
+        let ring = Ring::new(3, 2);
+        assert_eq!(ring.total_tokens(), 6);
+        // for every consecutive token pair, a hash strictly between them
+        // resolves to the owner of the clockwise (second) token
+        let toks = ring.sorted_tokens().to_vec();
+        for w in toks.windows(2) {
+            if w[1].hash - w[0].hash >= 2 {
+                let mid = w[0].hash + (w[1].hash - w[0].hash) / 2 + 1;
+                assert_eq!(ring.lookup_hash(mid), w[1].node as usize);
+            }
+        }
+    }
+
+    #[test]
+    fn halve_removes_half_and_only_that_node() {
+        let mut ring = Ring::new(4, 8);
+        let before: Vec<u32> = (0..4).map(|n| ring.tokens_of(n)).collect();
+        assert!(ring.halve(2));
+        assert_eq!(ring.tokens_of(2), 4);
+        for n in [0usize, 1, 3] {
+            assert_eq!(ring.tokens_of(n), before[n]);
+        }
+        assert!(ring.halve(2));
+        assert!(ring.halve(2));
+        assert_eq!(ring.tokens_of(2), 1);
+        // run out of halving
+        assert!(!ring.halve(2));
+        assert_eq!(ring.tokens_of(2), 1);
+    }
+
+    #[test]
+    fn halving_only_moves_keys_away_from_target() {
+        // consistent hashing property: removing tokens of node x never
+        // changes the owner of a key owned by another node
+        let mut ring = Ring::new(4, 8);
+        let keys: Vec<String> = (0..500).map(|i| format!("key-{i}")).collect();
+        let before: Vec<usize> = keys.iter().map(|k| ring.lookup(k.as_bytes())).collect();
+        ring.halve(1);
+        for (k, &owner) in keys.iter().zip(&before) {
+            if owner != 1 {
+                assert_eq!(
+                    ring.lookup(k.as_bytes()),
+                    owner,
+                    "key {k} moved although it wasn't on the halved node"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn double_others_leaves_target_alone() {
+        let mut ring = Ring::new(4, 1);
+        assert!(ring.double_others(0));
+        assert_eq!(ring.tokens_of(0), 1);
+        for n in 1..4 {
+            assert_eq!(ring.tokens_of(n), 2);
+        }
+        assert!(ring.double_others(0));
+        for n in 1..4 {
+            assert_eq!(ring.tokens_of(n), 4);
+        }
+    }
+
+    #[test]
+    fn doubling_saturates_at_cap() {
+        let mut ring = Ring::new(2, 1);
+        for _ in 0..10 {
+            ring.double_others(0);
+        }
+        assert_eq!(ring.tokens_of(1), MAX_TOKENS_PER_NODE);
+        assert!(!ring.double_others(0), "saturated ring reports no change");
+    }
+
+    #[test]
+    fn add_node_claims_keys() {
+        let mut ring = Ring::new(4, 8);
+        let keys: Vec<String> = (0..2000).map(|i| format!("key-{i}")).collect();
+        let before: Vec<usize> = keys.iter().map(|k| ring.lookup(k.as_bytes())).collect();
+        let new = ring.add_node(8);
+        assert_eq!(new, 4);
+        let mut claimed = 0;
+        for (k, &owner) in keys.iter().zip(&before) {
+            let now = ring.lookup(k.as_bytes());
+            if now != owner {
+                assert_eq!(now, new, "moved keys must move to the new node only");
+                claimed += 1;
+            }
+        }
+        assert!(claimed > 0, "the new node claimed some keys");
+    }
+
+    #[test]
+    fn arc_fractions_sum_to_one() {
+        let ring = Ring::new(4, 8);
+        let total: f64 = (0..4).map(|n| ring.arc_fraction(n)).sum();
+        assert!((total - 1.0).abs() < 1e-9, "total {total}");
+    }
+
+    #[test]
+    fn epoch_bumps_on_mutation() {
+        let mut ring = Ring::new(4, 8);
+        let e0 = ring.epoch();
+        ring.halve(0);
+        assert!(ring.epoch() > e0);
+    }
+
+    #[test]
+    fn shared_ring_update_publishes_epoch() {
+        let sr = SharedRing::new(Ring::new(4, 8));
+        let e0 = sr.epoch();
+        sr.update(|r| {
+            r.halve(0);
+        });
+        assert!(sr.epoch() > e0);
+        assert_eq!(sr.tokens_of(0), 4);
+    }
+
+    #[test]
+    fn lookup_distribution_roughly_uniform_with_many_tokens() {
+        let ring = Ring::new(4, 64);
+        let mut counts = [0usize; 4];
+        for i in 0..40_000 {
+            counts[ring.lookup(format!("k{i}").as_bytes())] += 1;
+        }
+        for c in counts {
+            // 64 tokens/node: expect within ~3x of fair share
+            assert!(c > 2_000 && c < 30_000, "count {c}");
+        }
+    }
+}

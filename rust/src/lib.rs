@@ -1,0 +1,65 @@
+//! # dpa — DPA Load Balancer
+//!
+//! A reproduction of *"DPA Load Balancer: Load balancing for Data Parallel
+//! Actor-based systems"* (Wang, Ziai, Aguer — CS.DC 2023) as a
+//! production-shaped rust + JAX + Pallas stack.
+//!
+//! The library implements a streaming map-reduce runtime built from
+//! stateful actors in which input skew across hash-partitioned reducers is
+//! corrected **at runtime** — no coordinated global rollback. The keyspace
+//! is partitioned with a MurmurHash3 consistent-hash token ring
+//! ([`hash::ring`]); a load-balancer actor ([`balancer`]) watches
+//! per-reducer queue lengths and repartitions via *token halving* or
+//! *token doubling* when the paper's Eq. 1 predicate
+//! `Q_max > Q_s * (1 + tau)` fires. Records enqueued under an old
+//! partition scheme are *forwarded* by the dequeuing reducer, and reducer
+//! states are *merged* at the end of the run.
+//!
+//! ## Layers
+//!
+//! - **L3 (this crate)** — coordinator, mappers, reducers, queues, load
+//!   balancer, metrics, CLI. Two drivers: a deterministic discrete-event
+//!   simulator ([`sim`]) and real OS threads ([`driver`]).
+//! - **L2/L1 (python, build-time only)** — the batched data-plane (murmur3
+//!   hashing, ring lookup, count aggregation, state merge) authored in
+//!   JAX + Pallas and AOT-lowered to HLO text under `artifacts/`.
+//! - **runtime** — loads those artifacts through the PJRT CPU client
+//!   (`xla` crate) so the rust hot path executes the XLA programs with no
+//!   python anywhere near the request path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use dpa::pipeline::{Pipeline, PipelineConfig};
+//! use dpa::hash::strategy::Strategy;
+//!
+//! let mut cfg = PipelineConfig::default();
+//! cfg.strategy = Strategy::Doubling;
+//! cfg.tau = 0.2;
+//! let input: Vec<String> = ["a", "b", "a", "c"].iter().map(|s| s.to_string()).collect();
+//! let report = Pipeline::wordcount(cfg).run(input).unwrap();
+//! println!("skew S = {:.2}", report.skew());
+//! ```
+
+pub mod util;
+pub mod hash;
+pub mod config;
+pub mod cli;
+pub mod metrics;
+pub mod workload;
+pub mod exec;
+pub mod actor;
+pub mod queue;
+pub mod balancer;
+pub mod mapper;
+pub mod reducer;
+pub mod coordinator;
+pub mod sim;
+pub mod driver;
+pub mod pipeline;
+pub mod runtime;
+pub mod benchkit;
+pub mod testkit;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,19 @@
+//! `dpa` — the DPA Load Balancer CLI.
+//!
+//! Run `dpa help` for usage. The interesting commands:
+//! - `dpa run --workload wl4 --strategy doubling` — one pipeline run
+//! - `dpa table1` — reproduce the paper's Table 1 (Experiment 1)
+//! - `dpa fig3` — reproduce the paper's Figure 3 (Experiment 2)
+
+fn main() {
+    dpa::util::logger::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match dpa::cli::parse(&argv).and_then(dpa::cli::execute) {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}

@@ -1,0 +1,120 @@
+//! Mapper core logic (§2.1): stateless actors that fetch tasks from the
+//! coordinator, apply the map executor to each input element and push the
+//! resulting records to the owning reducer's queue — owner resolved
+//! through the (shared) consistent-hashing object.
+//!
+//! Both drivers run this same core; only the surrounding loop differs.
+
+use std::sync::Arc;
+
+use crate::exec::{MapExecutor, Record, Task};
+use crate::hash::ring::RingCache;
+use crate::hash::SharedRing;
+
+/// Per-mapper state + the map-and-route step.
+pub struct MapperCore {
+    pub id: usize,
+    exec: Arc<dyn MapExecutor>,
+    ring: RingCache,
+    /// Records emitted (the run report's `mapped[i]`).
+    pub emitted: u64,
+    /// Input items consumed.
+    pub items_in: u64,
+    /// Tasks fetched.
+    pub tasks_in: u64,
+}
+
+impl MapperCore {
+    pub fn new(id: usize, exec: Arc<dyn MapExecutor>, ring: SharedRing) -> Self {
+        MapperCore {
+            id,
+            exec,
+            ring: RingCache::new(ring),
+            emitted: 0,
+            items_in: 0,
+            tasks_in: 0,
+        }
+    }
+
+    /// Map one input item and route each output record: returns
+    /// `(destination reducer, record)` pairs in emission order.
+    pub fn process_item(&mut self, item: &str) -> Vec<(usize, Record)> {
+        self.items_in += 1;
+        let recs = self.exec.map(item);
+        self.emitted += recs.len() as u64;
+        recs.into_iter()
+            .map(|r| {
+                // memoized hash: the reducer's ownership check reuses it
+                let dest = self.ring.lookup_hash(r.hash());
+                (dest, r)
+            })
+            .collect()
+    }
+
+    /// Process a whole task (convenience for drivers that work per-task).
+    pub fn process_task(&mut self, task: &Task) -> Vec<(usize, Record)> {
+        self.tasks_in += 1;
+        let mut out = Vec::with_capacity(task.items.len());
+        for item in &task.items {
+            out.extend(self.process_item(item));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::builtin::IdentityMap;
+    use crate::hash::Ring;
+
+    fn mk() -> MapperCore {
+        MapperCore::new(0, Arc::new(IdentityMap), SharedRing::new(Ring::new(4, 8)))
+    }
+
+    #[test]
+    fn routes_consistently_with_ring() {
+        let ring = SharedRing::new(Ring::new(4, 8));
+        let mut m = MapperCore::new(0, Arc::new(IdentityMap), ring.clone());
+        for key in ["a", "hello", "zz"] {
+            let routed = m.process_item(key);
+            assert_eq!(routed.len(), 1);
+            assert_eq!(routed[0].0, ring.lookup(key.as_bytes()));
+            assert_eq!(routed[0].1.key, key);
+        }
+        assert_eq!(m.emitted, 3);
+        assert_eq!(m.items_in, 3);
+    }
+
+    #[test]
+    fn observes_ring_updates() {
+        let ring = SharedRing::new(Ring::new(4, 1));
+        let mut m = MapperCore::new(0, Arc::new(IdentityMap), ring.clone());
+        // find a key owned by node 0, then double others until it moves
+        let pool = crate::workload::generators::key_pool();
+        let key = pool
+            .iter()
+            .find(|k| ring.lookup(k.as_bytes()) == 0)
+            .unwrap()
+            .clone();
+        assert_eq!(m.process_item(&key)[0].0, 0);
+        let mut moved = false;
+        for _ in 0..7 {
+            ring.update(|r| r.double_others(0));
+            if m.process_item(&key)[0].0 != 0 {
+                moved = true;
+                break;
+            }
+        }
+        assert!(moved, "key never left the overloaded node after 7 doublings");
+    }
+
+    #[test]
+    fn task_processing_counts() {
+        let mut m = mk();
+        let task = Task { id: 0, items: vec!["a".into(), "b".into()] };
+        let routed = m.process_task(&task);
+        assert_eq!(routed.len(), 2);
+        assert_eq!(m.tasks_in, 1);
+    }
+}

@@ -1,0 +1,8 @@
+//! Metrics: the paper's skew metric `S` (§6.1.1), per-reducer counters and
+//! the run report produced by every pipeline execution.
+
+pub mod skew;
+pub mod report;
+
+pub use report::{LbEvent, RunReport};
+pub use skew::skew;

@@ -1,0 +1,184 @@
+//! Run reports: everything a pipeline execution measured, in one struct,
+//! with pretty-printing for the CLI / examples / benches.
+
+use std::time::Duration;
+
+use crate::hash::Strategy;
+use crate::util::table::{f2, Table};
+
+use super::skew::skew;
+
+/// One load-balancing event (a `redistribute(node)` call that changed the
+/// ring), recorded by the balancer.
+#[derive(Clone, Debug)]
+pub struct LbEvent {
+    /// Virtual time (sim driver) or elapsed µs (thread driver).
+    pub at: u64,
+    /// The overloaded reducer the event targeted.
+    pub target: u32,
+    /// Queue lengths observed when the predicate fired.
+    pub qlens: Vec<usize>,
+    /// Ring epoch after the update.
+    pub epoch: u64,
+    /// Strategy applied.
+    pub strategy: Strategy,
+}
+
+/// Full accounting of a pipeline run.
+#[derive(Clone, Debug, Default)]
+pub struct RunReport {
+    /// Messages *reduced* per reducer (the paper's `M_i`).
+    pub processed: Vec<u64>,
+    /// Messages each reducer forwarded onward after a repartition.
+    pub forwarded: Vec<u64>,
+    /// Records each mapper emitted.
+    pub mapped: Vec<u64>,
+    /// Load-balancing events in order.
+    pub lb_events: Vec<LbEvent>,
+    /// Final merged result (key, aggregate).
+    pub result: Vec<(String, i64)>,
+    /// Wall-clock duration of the run (threads driver; sim reports virtual
+    /// end time separately).
+    pub wall: Duration,
+    /// Virtual end time (sim driver), 0 for threads.
+    pub virtual_end: u64,
+    /// Peak queue length observed per reducer.
+    pub peak_qlen: Vec<usize>,
+    /// Total items of input consumed.
+    pub input_items: u64,
+}
+
+impl RunReport {
+    /// The paper's skew metric `S` over reduced-message counts.
+    pub fn skew(&self) -> f64 {
+        skew(&self.processed)
+    }
+
+    pub fn total_processed(&self) -> u64 {
+        self.processed.iter().sum()
+    }
+
+    pub fn total_forwarded(&self) -> u64 {
+        self.forwarded.iter().sum()
+    }
+
+    pub fn lb_rounds(&self) -> usize {
+        self.lb_events.len()
+    }
+
+    /// Throughput in reduced messages per wall second (threads driver).
+    pub fn throughput(&self) -> f64 {
+        let secs = self.wall.as_secs_f64();
+        if secs <= 0.0 {
+            return f64::NAN;
+        }
+        self.total_processed() as f64 / secs
+    }
+
+    /// Validate internal consistency; returns an error string on mismatch.
+    /// Every mapped record must be reduced exactly once (forwards do not
+    /// duplicate or drop messages) — the core correctness invariant of the
+    /// forwarding design.
+    pub fn check_conservation(&self) -> Result<(), String> {
+        let mapped: u64 = self.mapped.iter().sum();
+        let processed = self.total_processed();
+        if mapped != processed {
+            return Err(format!(
+                "conservation violated: {mapped} mapped records vs {processed} reduced"
+            ));
+        }
+        Ok(())
+    }
+
+    /// Render a human-readable summary.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "S = {:.4}   processed = {:?}   forwarded = {:?}   lb_events = {}\n",
+            self.skew(),
+            self.processed,
+            self.forwarded,
+            self.lb_events.len()
+        ));
+        if self.virtual_end > 0 {
+            out.push_str(&format!("virtual time = {}\n", self.virtual_end));
+        }
+        if !self.wall.is_zero() {
+            out.push_str(&format!(
+                "wall = {:?}  throughput = {:.0} msg/s\n",
+                self.wall,
+                self.throughput()
+            ));
+        }
+        let mut t = Table::new(["reducer", "processed", "forwarded", "peak qlen"]);
+        for i in 0..self.processed.len() {
+            t.row([
+                i.to_string(),
+                self.processed[i].to_string(),
+                self.forwarded.get(i).copied().unwrap_or(0).to_string(),
+                self.peak_qlen.get(i).copied().unwrap_or(0).to_string(),
+            ]);
+        }
+        out.push_str(&t.render());
+        for e in &self.lb_events {
+            out.push_str(&format!(
+                "LB@{} target={} strategy={} qlens={:?}\n",
+                e.at, e.target, e.strategy, e.qlens
+            ));
+        }
+        out
+    }
+
+    /// Short one-line summary (for sweeps).
+    pub fn one_line(&self) -> String {
+        format!(
+            "S={} events={} processed={:?}",
+            f2(self.skew()),
+            self.lb_events.len(),
+            self.processed
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RunReport {
+        RunReport {
+            processed: vec![85, 5, 5, 5],
+            forwarded: vec![0, 0, 0, 0],
+            mapped: vec![25, 25, 25, 25],
+            peak_qlen: vec![40, 5, 5, 5],
+            input_items: 100,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn skew_delegates_to_metric() {
+        assert!((sample().skew() - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn conservation_check() {
+        let r = sample();
+        assert!(r.check_conservation().is_ok());
+        let mut bad = sample();
+        bad.processed[0] -= 1;
+        assert!(bad.check_conservation().is_err());
+    }
+
+    #[test]
+    fn render_contains_table() {
+        let r = sample();
+        let s = r.render();
+        assert!(s.contains("S = 0.8000"));
+        assert!(s.contains("| reducer"));
+    }
+
+    #[test]
+    fn throughput_nan_without_wall() {
+        assert!(sample().throughput().is_nan());
+    }
+}

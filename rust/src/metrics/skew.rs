@@ -1,0 +1,96 @@
+//! The paper's skew metric (§6.1.1):
+//!
+//! Let `M_i` be the messages processed by reducer `i`, `M = Σ M_i`,
+//! `U = ceil(M / R)` the ideal per-reducer load and `W = max_i M_i`.
+//!
+//! ```text
+//! S = (W - U) / (M - U)
+//! ```
+//!
+//! `S = 0` means no skew, `S = 1` means all messages were processed by a
+//! single reducer. "Processed" counts messages actually *reduced*: a
+//! message forwarded by reducer A and reduced by reducer B counts once,
+//! at B.
+
+use crate::util::ceil_div;
+
+/// Compute `S` over per-reducer processed-message counts.
+///
+/// Degenerate cases: fewer than 2 reducers, zero messages, or `M == U`
+/// (e.g. M < R so one message per reducer is already "ideal") return 0.
+pub fn skew(processed: &[u64]) -> f64 {
+    let r = processed.len() as u64;
+    if r <= 1 {
+        return 0.0;
+    }
+    let m: u64 = processed.iter().sum();
+    if m == 0 {
+        return 0.0;
+    }
+    let u = ceil_div(m, r);
+    let w = *processed.iter().max().unwrap();
+    if m <= u {
+        return 0.0;
+    }
+    // W >= ceil(M/R) is guaranteed only when loads are integral and R | M;
+    // with U = ceil(M/R), W can be U-1... clamp into [0, 1].
+    let s = (w as f64 - u as f64) / (m as f64 - u as f64);
+    s.clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_is_zero() {
+        assert_eq!(skew(&[25, 25, 25, 25]), 0.0);
+    }
+
+    #[test]
+    fn single_reducer_takes_all_is_one() {
+        assert_eq!(skew(&[100, 0, 0, 0]), 1.0);
+    }
+
+    #[test]
+    fn paper_wl4_halving_value() {
+        // W = 85, M = 100, R = 4 -> U = 25, S = 60/75 = 0.8
+        let s = skew(&[85, 5, 5, 5]);
+        assert!((s - 0.8).abs() < 1e-12, "s = {s}");
+    }
+
+    #[test]
+    fn paper_wl5_halving_value() {
+        // W = 40 -> S = 15/75 = 0.2
+        let s = skew(&[40, 20, 20, 20]);
+        assert!((s - 0.2).abs() < 1e-12, "s = {s}");
+    }
+
+    #[test]
+    fn rounding_of_u_uses_ceiling() {
+        // M = 101, R = 4 -> U = 26
+        let s = skew(&[26, 25, 25, 25]);
+        assert_eq!(s, 0.0);
+    }
+
+    #[test]
+    fn degenerate_cases_are_zero() {
+        assert_eq!(skew(&[]), 0.0);
+        assert_eq!(skew(&[7]), 0.0);
+        assert_eq!(skew(&[0, 0, 0, 0]), 0.0);
+        assert_eq!(skew(&[1, 0, 0, 0]), 0.0); // M == U == 1
+    }
+
+    #[test]
+    fn range_is_clamped() {
+        for loads in [
+            vec![3u64, 3, 3, 1],
+            vec![10, 0, 0, 1],
+            vec![1, 1, 1, 1],
+            vec![99, 1, 0, 0],
+        ] {
+            let s = skew(&loads);
+            assert!((0.0..=1.0).contains(&s), "{loads:?} -> {s}");
+        }
+    }
+}

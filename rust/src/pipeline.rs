@@ -1,0 +1,452 @@
+//! The high-level pipeline API: configure once, run a workload, get a
+//! [`RunReport`]. This is the library's main entry point and what the CLI,
+//! examples and benches drive.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context};
+
+use crate::balancer::state_forward::ConsistencyMode;
+use crate::balancer::BalancerCore;
+use crate::config::Document;
+use crate::driver::{ThreadDriver, ThreadParams};
+use crate::exec::builtin::{Distinct, IdentityMap, KeyValueMap, TokenizeMap, TopK, WordCount};
+use crate::exec::{MapExecutor, ReduceFactory};
+use crate::hash::{Ring, SharedRing, Strategy};
+use crate::metrics::RunReport;
+use crate::sim::{SimCosts, SimDriver, SimParams};
+
+/// Which execution driver runs the actors.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DriverKind {
+    /// Deterministic discrete-event simulation (virtual time, seeded).
+    Sim,
+    /// Real OS threads (wall time, nondeterministic).
+    Threads,
+}
+
+impl std::str::FromStr for DriverKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "sim" | "des" => Ok(DriverKind::Sim),
+            "threads" | "thread" => Ok(DriverKind::Threads),
+            other => Err(format!("unknown driver '{other}' (expected sim|threads)")),
+        }
+    }
+}
+
+/// Builtin executor selection (CLI-facing; library users can pass custom
+/// executors via [`Pipeline::new`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecutorKind {
+    /// Count per-key occurrences of pre-split items (paper's workload).
+    WordCount,
+    /// Tokenize lines, then count words (e2e corpus pipeline).
+    TokenizedWordCount,
+    /// Parse `key:value` items and sum values per key.
+    KeyedSum,
+    /// Distinct keys.
+    Distinct,
+    /// Word count + top-k post-selection.
+    TopK(usize),
+}
+
+/// Everything a pipeline run needs. Defaults mirror the paper's
+/// evaluation setup: 4 mappers, 4 reducers, τ = 0.2, one LB round.
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    pub mappers: usize,
+    pub reducers: usize,
+    /// Token strategy ([`Strategy::None`] = the paper's "No LB" baseline).
+    pub strategy: Strategy,
+    /// Eq. 1 sensitivity threshold τ.
+    pub tau: f64,
+    /// Initial tokens/node for the halving layout (power of two, §4.2).
+    pub halving_init_tokens: u32,
+    /// Override the initial tokens/node regardless of strategy — used to
+    /// run the no-LB baseline on a specific method's initial layout.
+    pub initial_tokens: Option<u32>,
+    /// Max LB rounds per reducer (Experiment 2 sweeps this).
+    pub max_rounds: u32,
+    /// Absolute floor on `Q_max` before Eq. 1 may fire.
+    pub min_trigger_qlen: usize,
+    /// Min driver-time between LB events (sim: ticks; threads: µs).
+    pub cooldown: u64,
+    /// Load report every N handled messages.
+    pub report_interval: u64,
+    /// Items per coordinator task.
+    pub chunk_size: usize,
+    /// Per-reducer queue capacity (threads driver backpressure).
+    pub queue_capacity: usize,
+    pub driver: DriverKind,
+    /// Sim RNG seed (schedule jitter).
+    pub seed: u64,
+    pub sim_costs: SimCosts,
+    /// Threads driver: busy-work per mapped item / reduced record (µs).
+    pub map_delay_us: u64,
+    pub reduce_delay_us: u64,
+    /// Post-repartition consistency: merge-at-end (paper) or §7 state
+    /// forwarding (sim driver only).
+    pub mode: ConsistencyMode,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            mappers: 4,
+            reducers: 4,
+            strategy: Strategy::None,
+            tau: 0.2,
+            halving_init_tokens: 8,
+            initial_tokens: None,
+            max_rounds: 1,
+            min_trigger_qlen: 8,
+            cooldown: 50,
+            report_interval: 2,
+            chunk_size: 10,
+            queue_capacity: 1 << 16,
+            driver: DriverKind::Sim,
+            seed: 0,
+            sim_costs: SimCosts::default(),
+            map_delay_us: 0,
+            reduce_delay_us: 200,
+            mode: ConsistencyMode::MergeAtEnd,
+        }
+    }
+}
+
+impl PipelineConfig {
+    /// Load overrides from a TOML-subset document (see
+    /// [`crate::config::toml_lite`]). Unknown keys are rejected so typos
+    /// fail loudly.
+    pub fn apply_document(&mut self, doc: &Document) -> crate::Result<()> {
+        for key in doc.keys() {
+            match key {
+                "pipeline.mappers" => self.mappers = doc.get_int(key).context("mappers")? as usize,
+                "pipeline.reducers" => {
+                    self.reducers = doc.get_int(key).context("reducers")? as usize
+                }
+                "pipeline.chunk_size" => {
+                    self.chunk_size = doc.get_int(key).context("chunk_size")? as usize
+                }
+                "pipeline.queue_capacity" => {
+                    self.queue_capacity = doc.get_int(key).context("queue_capacity")? as usize
+                }
+                "pipeline.driver" => {
+                    self.driver = doc
+                        .get_str(key)
+                        .context("driver")?
+                        .parse()
+                        .map_err(anyhow::Error::msg)?
+                }
+                "pipeline.seed" => self.seed = doc.get_int(key).context("seed")? as u64,
+                "balancer.strategy" => {
+                    self.strategy = doc
+                        .get_str(key)
+                        .context("strategy")?
+                        .parse()
+                        .map_err(anyhow::Error::msg)?
+                }
+                "balancer.tau" => self.tau = doc.get_float(key).context("tau")?,
+                "balancer.max_rounds" => {
+                    self.max_rounds = doc.get_int(key).context("max_rounds")? as u32
+                }
+                "balancer.min_trigger_qlen" => {
+                    self.min_trigger_qlen = doc.get_int(key).context("min_trigger_qlen")? as usize
+                }
+                "balancer.cooldown" => self.cooldown = doc.get_int(key).context("cooldown")? as u64,
+                "balancer.report_interval" => {
+                    self.report_interval = doc.get_int(key).context("report_interval")? as u64
+                }
+                "balancer.halving_init_tokens" => {
+                    self.halving_init_tokens =
+                        doc.get_int(key).context("halving_init_tokens")? as u32
+                }
+                "sim.map_cost" => self.sim_costs.map_cost = doc.get_int(key).context("map_cost")? as u64,
+                "sim.reduce_cost" => {
+                    self.sim_costs.reduce_cost = doc.get_int(key).context("reduce_cost")? as u64
+                }
+                "sim.fetch_cost" => {
+                    self.sim_costs.fetch_cost = doc.get_int(key).context("fetch_cost")? as u64
+                }
+                "sim.forward_cost" => {
+                    self.sim_costs.forward_cost = doc.get_int(key).context("forward_cost")? as u64
+                }
+                "sim.poll_interval" => {
+                    self.sim_costs.poll_interval = doc.get_int(key).context("poll_interval")? as u64
+                }
+                "sim.cost_jitter" => {
+                    self.sim_costs.cost_jitter = doc.get_float(key).context("cost_jitter")?
+                }
+                "threads.map_delay_us" => {
+                    self.map_delay_us = doc.get_int(key).context("map_delay_us")? as u64
+                }
+                "threads.reduce_delay_us" => {
+                    self.reduce_delay_us = doc.get_int(key).context("reduce_delay_us")? as u64
+                }
+                other => bail!("unknown config key '{other}'"),
+            }
+        }
+        self.validate()
+    }
+
+    pub fn from_toml_file(path: &Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let doc = crate::config::parse(&text).map_err(anyhow::Error::msg)?;
+        let mut cfg = PipelineConfig::default();
+        cfg.apply_document(&doc)?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> crate::Result<()> {
+        if self.mappers == 0 || self.reducers == 0 {
+            bail!("need at least one mapper and one reducer");
+        }
+        if self.tau < 0.0 {
+            bail!("τ must be non-negative (§4.1)");
+        }
+        if !self.halving_init_tokens.is_power_of_two() {
+            bail!("halving_init_tokens must be a power of two (§4.2)");
+        }
+        if self.mode == ConsistencyMode::StateForward && self.driver == DriverKind::Threads {
+            bail!("state forwarding is implemented on the sim driver (deterministic staging)");
+        }
+        Ok(())
+    }
+
+    /// The ring this configuration starts from.
+    pub fn initial_ring(&self) -> Ring {
+        match self.initial_tokens {
+            Some(n) => Ring::new(self.reducers, n),
+            None => Ring::for_strategy(self.reducers, self.strategy, self.halving_init_tokens),
+        }
+    }
+}
+
+/// A configured pipeline, ready to run workloads.
+pub struct Pipeline {
+    cfg: PipelineConfig,
+    map_exec: Arc<dyn MapExecutor>,
+    reduce_factory: ReduceFactory,
+}
+
+impl Pipeline {
+    pub fn new(
+        cfg: PipelineConfig,
+        map_exec: Arc<dyn MapExecutor>,
+        reduce_factory: ReduceFactory,
+    ) -> Self {
+        Pipeline { cfg, map_exec, reduce_factory }
+    }
+
+    /// The paper's word-count pipeline over pre-split items.
+    pub fn wordcount(cfg: PipelineConfig) -> Self {
+        Self::new(cfg, Arc::new(IdentityMap), Arc::new(|_| Box::new(WordCount::new()) as _))
+    }
+
+    /// Pick a builtin executor pair.
+    pub fn builtin(cfg: PipelineConfig, kind: ExecutorKind) -> Self {
+        match kind {
+            ExecutorKind::WordCount => Self::wordcount(cfg),
+            ExecutorKind::TokenizedWordCount => Self::new(
+                cfg,
+                Arc::new(TokenizeMap),
+                Arc::new(|_| Box::new(WordCount::new()) as _),
+            ),
+            ExecutorKind::KeyedSum => Self::new(
+                cfg,
+                Arc::new(KeyValueMap),
+                Arc::new(|_| Box::new(WordCount::new()) as _),
+            ),
+            ExecutorKind::Distinct => Self::new(
+                cfg,
+                Arc::new(IdentityMap),
+                Arc::new(|_| Box::new(Distinct::new()) as _),
+            ),
+            ExecutorKind::TopK(k) => Self::new(
+                cfg,
+                Arc::new(IdentityMap),
+                Arc::new(move |_| Box::new(TopK::new(k)) as _),
+            ),
+        }
+    }
+
+    pub fn config(&self) -> &PipelineConfig {
+        &self.cfg
+    }
+
+    fn build_balancer(&self) -> BalancerCore {
+        let ring = SharedRing::new(self.cfg.initial_ring());
+        // `cooldown` is in driver time units: sim ticks for the DES, and
+        // milliseconds for the threads driver (whose balancer clock runs
+        // in µs) — 50 sim-ticks ≈ 10 reduce steps ≈ 50ms of real queue
+        // drainage, keeping the two drivers' trigger hygiene comparable.
+        let cooldown = match self.cfg.driver {
+            DriverKind::Sim => self.cfg.cooldown,
+            DriverKind::Threads => self.cfg.cooldown.saturating_mul(1000),
+        };
+        BalancerCore::new(
+            ring,
+            self.cfg.strategy,
+            self.cfg.tau,
+            self.cfg.min_trigger_qlen,
+            self.cfg.max_rounds,
+            cooldown,
+        )
+    }
+
+    /// Execute the pipeline over `items`.
+    pub fn run(&self, items: Vec<String>) -> crate::Result<RunReport> {
+        self.cfg.validate()?;
+        let balancer = self.build_balancer();
+        let report = match self.cfg.driver {
+            DriverKind::Sim => {
+                let driver = SimDriver::new(SimParams {
+                    costs: self.cfg.sim_costs.clone(),
+                    seed: self.cfg.seed,
+                    report_interval: self.cfg.report_interval,
+                    chunk_size: self.cfg.chunk_size,
+                    mode: self.cfg.mode,
+                });
+                driver.run(
+                    self.map_exec.clone(),
+                    &self.reduce_factory,
+                    self.cfg.mappers,
+                    balancer,
+                    items,
+                )
+            }
+            DriverKind::Threads => {
+                let driver = ThreadDriver::new(ThreadParams {
+                    report_interval: self.cfg.report_interval,
+                    chunk_size: self.cfg.chunk_size,
+                    queue_capacity: self.cfg.queue_capacity,
+                    map_delay_us: self.cfg.map_delay_us,
+                    reduce_delay_us: self.cfg.reduce_delay_us,
+                    pop_timeout: std::time::Duration::from_millis(2),
+                });
+                driver.run(
+                    self.map_exec.clone(),
+                    &self.reduce_factory,
+                    self.cfg.mappers,
+                    balancer,
+                    items,
+                )
+            }
+        };
+        report
+            .check_conservation()
+            .map_err(anyhow::Error::msg)
+            .context("message conservation check failed")?;
+        Ok(report)
+    }
+
+    /// Run the same workload over several seeds (sim driver) and return
+    /// all reports — the "3 runs, small variance" protocol of §6.1.
+    pub fn run_seeds(&self, items: &[String], seeds: &[u64]) -> crate::Result<Vec<RunReport>> {
+        let mut out = Vec::with_capacity(seeds.len());
+        for &seed in seeds {
+            let mut cfg = self.cfg.clone();
+            cfg.seed = seed;
+            let p = Pipeline {
+                cfg,
+                map_exec: self.map_exec.clone(),
+                reduce_factory: self.reduce_factory.clone(),
+            };
+            out.push(p.run(items.to_vec())?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_setup() {
+        let cfg = PipelineConfig::default();
+        assert_eq!(cfg.mappers, 4);
+        assert_eq!(cfg.reducers, 4);
+        assert!((cfg.tau - 0.2).abs() < 1e-12);
+        assert_eq!(cfg.max_rounds, 1);
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn config_document_roundtrip() {
+        let doc = crate::config::parse(
+            r#"
+[pipeline]
+mappers = 2
+reducers = 8
+driver = "sim"
+[balancer]
+strategy = "doubling"
+tau = 0.5
+max_rounds = 3
+"#,
+        )
+        .unwrap();
+        let mut cfg = PipelineConfig::default();
+        cfg.apply_document(&doc).unwrap();
+        assert_eq!(cfg.mappers, 2);
+        assert_eq!(cfg.reducers, 8);
+        assert_eq!(cfg.strategy, Strategy::Doubling);
+        assert_eq!(cfg.max_rounds, 3);
+        assert!((cfg.tau - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let doc = crate::config::parse("[pipeline]\nbogus = 1\n").unwrap();
+        let mut cfg = PipelineConfig::default();
+        assert!(cfg.apply_document(&doc).is_err());
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut cfg = PipelineConfig::default();
+        cfg.mappers = 0;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = PipelineConfig::default();
+        cfg.tau = -0.1;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = PipelineConfig::default();
+        cfg.halving_init_tokens = 6;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = PipelineConfig::default();
+        cfg.mode = ConsistencyMode::StateForward;
+        cfg.driver = DriverKind::Threads;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn initial_tokens_override() {
+        let mut cfg = PipelineConfig::default();
+        cfg.strategy = Strategy::None;
+        cfg.initial_tokens = Some(1);
+        assert_eq!(cfg.initial_ring().tokens_of(0), 1, "doubling-layout baseline");
+        cfg.initial_tokens = None;
+        assert_eq!(cfg.initial_ring().tokens_of(0), 8, "halving layout default");
+    }
+
+    #[test]
+    fn sim_wordcount_end_to_end() {
+        let cfg = PipelineConfig::default();
+        let items: Vec<String> = (0..60).map(|i| format!("w{}", i % 6)).collect();
+        let r = Pipeline::wordcount(cfg).run(items).unwrap();
+        assert_eq!(r.total_processed(), 60);
+        assert_eq!(r.result.len(), 6);
+        for (_, c) in &r.result {
+            assert_eq!(*c, 10);
+        }
+    }
+}

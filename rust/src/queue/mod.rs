@@ -1,0 +1,257 @@
+//! Per-reducer queues (§2.2).
+//!
+//! Each reducer consumes from its own queue; mappers (and forwarding
+//! reducers) are producers. Per-reducer queues eliminate the contention a
+//! single shared queue would create — the paper's stated motivation.
+//!
+//! [`DataQueue`] is the threads-driver implementation: a bounded
+//! `Mutex<VecDeque>` + condvars, with the current length mirrored in an
+//! `AtomicUsize` so the load balancer (and metrics) can read queue sizes
+//! without touching the lock — the "load state is just the queue size"
+//! signal of §3 made contention-free.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use crate::exec::Record;
+
+/// A bounded MPMC queue of records with lock-free length reads.
+pub struct DataQueue {
+    inner: Mutex<VecDeque<Record>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    len: AtomicUsize,
+    peak: AtomicUsize,
+    capacity: usize,
+}
+
+impl DataQueue {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        DataQueue {
+            inner: Mutex::new(VecDeque::new()),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            len: AtomicUsize::new(0),
+            peak: AtomicUsize::new(0),
+            capacity,
+        }
+    }
+
+    /// Current length — lock-free; the balancer's load signal.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len.load(Ordering::Relaxed)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Highest length ever observed (reported in [`RunReport::peak_qlen`]
+    /// (crate::metrics::RunReport::peak_qlen)).
+    pub fn peak(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    fn bump_len(&self, new_len: usize) {
+        self.len.store(new_len, Ordering::Relaxed);
+        self.peak.fetch_max(new_len, Ordering::Relaxed);
+    }
+
+    /// Blocking push — applies backpressure when the queue is full.
+    pub fn push(&self, rec: Record) {
+        let mut q = self.inner.lock().unwrap();
+        while q.len() >= self.capacity {
+            q = self.not_full.wait(q).unwrap();
+        }
+        q.push_back(rec);
+        self.bump_len(q.len());
+        drop(q);
+        self.not_empty.notify_one();
+    }
+
+    /// Blocking batch push: one lock acquisition for the whole batch
+    /// (§Perf iteration 3 — mappers enqueue a task's records per
+    /// destination in one go). Waits while the queue cannot take the
+    /// *entire* batch; batches larger than the capacity are pushed in
+    /// capacity-sized waves.
+    pub fn push_batch(&self, recs: Vec<Record>) {
+        let mut it = recs.into_iter().peekable();
+        while it.peek().is_some() {
+            let mut q = self.inner.lock().unwrap();
+            while q.len() >= self.capacity {
+                q = self.not_full.wait(q).unwrap();
+            }
+            let room = self.capacity - q.len();
+            for rec in it.by_ref().take(room) {
+                q.push_back(rec);
+            }
+            self.bump_len(q.len());
+            drop(q);
+            self.not_empty.notify_all();
+        }
+    }
+
+    /// Non-blocking push; returns the record back on a full queue.
+    pub fn try_push(&self, rec: Record) -> Result<(), Record> {
+        let mut q = self.inner.lock().unwrap();
+        if q.len() >= self.capacity {
+            return Err(rec);
+        }
+        q.push_back(rec);
+        self.bump_len(q.len());
+        drop(q);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Pop with timeout — reducers poll so they can also check shutdown
+    /// conditions while idle (§2.3: a reducer can never stop on its own).
+    pub fn pop_timeout(&self, timeout: Duration) -> Option<Record> {
+        let mut q = self.inner.lock().unwrap();
+        if q.is_empty() {
+            let (guard, res) = self.not_empty.wait_timeout(q, timeout).unwrap();
+            q = guard;
+            if res.timed_out() && q.is_empty() {
+                return None;
+            }
+            if q.is_empty() {
+                return None;
+            }
+        }
+        let rec = q.pop_front();
+        self.len.store(q.len(), Ordering::Relaxed);
+        drop(q);
+        self.not_full.notify_one();
+        rec
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<Record> {
+        let mut q = self.inner.lock().unwrap();
+        let rec = q.pop_front()?;
+        self.len.store(q.len(), Ordering::Relaxed);
+        drop(q);
+        self.not_full.notify_one();
+        Some(rec)
+    }
+
+    /// Drain everything (used by tests and the elastic example when
+    /// retiring a reducer).
+    pub fn drain(&self) -> Vec<Record> {
+        let mut q = self.inner.lock().unwrap();
+        let out: Vec<Record> = q.drain(..).collect();
+        self.len.store(0, Ordering::Relaxed);
+        drop(q);
+        self.not_full.notify_all();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order() {
+        let q = DataQueue::new(16);
+        for i in 0..5 {
+            q.push(Record::new(format!("k{i}"), i));
+        }
+        for i in 0..5 {
+            assert_eq!(q.try_pop().unwrap().value, i);
+        }
+        assert!(q.try_pop().is_none());
+    }
+
+    #[test]
+    fn len_and_peak_track() {
+        let q = DataQueue::new(16);
+        assert_eq!(q.len(), 0);
+        q.push(Record::new("a", 1));
+        q.push(Record::new("b", 1));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.peak(), 2);
+        q.try_pop();
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.peak(), 2, "peak is sticky");
+    }
+
+    #[test]
+    fn try_push_full_returns_record() {
+        let q = DataQueue::new(1);
+        q.push(Record::new("a", 1));
+        let rejected = q.try_push(Record::new("b", 2));
+        assert_eq!(rejected.unwrap_err().key, "b");
+    }
+
+    #[test]
+    fn pop_timeout_expires() {
+        let q = DataQueue::new(4);
+        let t0 = std::time::Instant::now();
+        assert!(q.pop_timeout(Duration::from_millis(20)).is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+    }
+
+    #[test]
+    fn backpressure_unblocks_producer() {
+        let q = Arc::new(DataQueue::new(1));
+        q.push(Record::new("first", 1));
+        let q2 = q.clone();
+        let producer = std::thread::spawn(move || {
+            q2.push(Record::new("second", 2)); // blocks until consumer pops
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(q.try_pop().unwrap().key, "first");
+        producer.join().unwrap();
+        assert_eq!(q.try_pop().unwrap().key, "second");
+    }
+
+    #[test]
+    fn concurrent_producers_consumers_conserve_records() {
+        let q = Arc::new(DataQueue::new(64));
+        let n_per = 500;
+        let mut producers = Vec::new();
+        for p in 0..4 {
+            let q = q.clone();
+            producers.push(std::thread::spawn(move || {
+                for i in 0..n_per {
+                    q.push(Record::new(format!("p{p}-{i}"), 1));
+                }
+            }));
+        }
+        let mut consumers = Vec::new();
+        for _ in 0..2 {
+            let q = q.clone();
+            consumers.push(std::thread::spawn(move || {
+                let mut got = 0u64;
+                while got < (4 * n_per / 2) as u64 {
+                    if q.pop_timeout(Duration::from_millis(50)).is_some() {
+                        got += 1;
+                    }
+                }
+                got
+            }));
+        }
+        for p in producers {
+            p.join().unwrap();
+        }
+        let total: u64 = consumers.into_iter().map(|c| c.join().unwrap()).sum();
+        assert_eq!(total, 4 * n_per as u64);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn drain_empties() {
+        let q = DataQueue::new(8);
+        q.push(Record::new("a", 1));
+        q.push(Record::new("b", 2));
+        let drained = q.drain();
+        assert_eq!(drained.len(), 2);
+        assert!(q.is_empty());
+    }
+}

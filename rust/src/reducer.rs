@@ -1,0 +1,213 @@
+//! Reducer core logic (§2.1, §3): stateful actors that poll their queue,
+//! verify ownership against the current partitioning before processing
+//! (forwarding records they no longer own), periodically report their load
+//! to the balancer, and surrender their state for the final merge.
+//!
+//! Both drivers run this same core; only the surrounding loop differs.
+
+use crate::exec::{Record, ReduceExecutor};
+use crate::hash::ring::RingCache;
+use crate::hash::SharedRing;
+
+/// Outcome of handling one dequeued record.
+#[derive(Debug)]
+pub enum Handled {
+    /// Folded into local state.
+    Reduced,
+    /// Reducer no longer owns the key: forward to this destination (§3:
+    /// "if it's not then the key is forwarded to the appropriate
+    /// reducer").
+    Forward(usize, Record),
+}
+
+/// Per-reducer state + the check-then-reduce step.
+pub struct ReducerCore {
+    pub id: usize,
+    pub exec: Box<dyn ReduceExecutor>,
+    ring: RingCache,
+    /// Messages reduced (the paper's `M_i`).
+    pub processed: u64,
+    /// Messages forwarded onward after a repartition.
+    pub forwarded: u64,
+    /// §7 state-forwarding: transfers absorbed / extracted.
+    pub state_absorbed: u64,
+    pub state_extracted: u64,
+    handled_since_report: u64,
+}
+
+impl ReducerCore {
+    pub fn new(id: usize, exec: Box<dyn ReduceExecutor>, ring: SharedRing) -> Self {
+        ReducerCore {
+            id,
+            exec,
+            ring: RingCache::new(ring),
+            processed: 0,
+            forwarded: 0,
+            state_absorbed: 0,
+            state_extracted: 0,
+            handled_since_report: 0,
+        }
+    }
+
+    /// Handle one data record: check the current partitioning first (§3:
+    /// "before it processes a piece of data, it checks the load balancer
+    /// to see if it is indeed assigned to this key").
+    pub fn handle(&mut self, rec: Record) -> Handled {
+        self.handled_since_report += 1;
+        // hash memoized at map time — the check costs one binary search
+        let owner = self.ring.lookup_hash(rec.hash());
+        if owner != self.id {
+            self.forwarded += 1;
+            Handled::Forward(owner, rec)
+        } else {
+            self.exec.reduce(rec);
+            self.processed += 1;
+            Handled::Reduced
+        }
+    }
+
+    /// Current owner of a key under the live partitioning.
+    pub fn owner_of(&mut self, key: &str) -> usize {
+        self.ring.lookup(key.as_bytes())
+    }
+
+    /// Should this reducer send a load report now? Counts handled
+    /// messages; fires every `interval` (§3: reducers "periodically"
+    /// update their load state).
+    pub fn due_report(&mut self, interval: u64) -> bool {
+        if self.handled_since_report >= interval.max(1) {
+            self.handled_since_report = 0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// §7 state forwarding — apply an incoming state transfer.
+    pub fn absorb_state(&mut self, rec: Record) {
+        self.state_absorbed += 1;
+        self.exec.absorb_key(&rec.key, rec.value);
+    }
+
+    /// §7 state forwarding, substage 1 — extract state for every key this
+    /// reducer no longer owns; returns `(new_owner, state_record)` pairs.
+    pub fn extract_disowned(&mut self) -> Vec<(usize, Record)> {
+        self.exec.flush();
+        let snapshot = self.exec.snapshot();
+        let mut out = Vec::new();
+        for (key, _) in snapshot {
+            let owner = self.ring.lookup(key.as_bytes());
+            if owner != self.id {
+                if let Some(v) = self.exec.extract_key(&key) {
+                    self.state_extracted += 1;
+                    out.push((owner, Record::new(key, v)));
+                }
+            }
+        }
+        out
+    }
+
+    /// Flush + snapshot state for the final merge.
+    pub fn final_snapshot(&mut self) -> Vec<(String, i64)> {
+        self.exec.flush();
+        self.exec.snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::builtin::WordCount;
+    use crate::hash::Ring;
+
+    fn owned_key(ring: &SharedRing, node: usize) -> String {
+        crate::workload::generators::key_pool()
+            .into_iter()
+            .find(|k| ring.lookup(k.as_bytes()) == node)
+            .expect("pool has a key for every node")
+    }
+
+    #[test]
+    fn reduces_owned_keys() {
+        let ring = SharedRing::new(Ring::new(4, 8));
+        let key = owned_key(&ring, 1);
+        let mut r = ReducerCore::new(1, Box::new(WordCount::new()), ring);
+        match r.handle(Record::new(key.clone(), 1)) {
+            Handled::Reduced => {}
+            h => panic!("expected Reduced, got {h:?}"),
+        }
+        assert_eq!(r.processed, 1);
+        assert_eq!(r.final_snapshot(), vec![(key, 1)]);
+    }
+
+    #[test]
+    fn forwards_disowned_keys() {
+        let ring = SharedRing::new(Ring::new(4, 8));
+        let key = owned_key(&ring, 2);
+        // reducer 0 receives a key owned by reducer 2 (stale routing)
+        let mut r = ReducerCore::new(0, Box::new(WordCount::new()), ring);
+        match r.handle(Record::new(key.clone(), 1)) {
+            Handled::Forward(dest, rec) => {
+                assert_eq!(dest, 2);
+                assert_eq!(rec.key, key);
+            }
+            h => panic!("expected Forward, got {h:?}"),
+        }
+        assert_eq!(r.forwarded, 1);
+        assert_eq!(r.processed, 0);
+        assert!(r.final_snapshot().is_empty());
+    }
+
+    #[test]
+    fn due_report_fires_on_interval() {
+        let ring = SharedRing::new(Ring::new(4, 8));
+        let key = owned_key(&ring, 0);
+        let mut r = ReducerCore::new(0, Box::new(WordCount::new()), ring);
+        let mut fired = 0;
+        for _ in 0..10 {
+            r.handle(Record::new(key.clone(), 1));
+            if r.due_report(5) {
+                fired += 1;
+            }
+        }
+        assert_eq!(fired, 2);
+    }
+
+    #[test]
+    fn extract_disowned_moves_state_after_repartition() {
+        let ring = SharedRing::new(Ring::new(4, 1));
+        let key = owned_key(&ring, 0);
+        let mut r = ReducerCore::new(0, Box::new(WordCount::new()), ring.clone());
+        r.handle(Record::new(key.clone(), 1));
+        r.handle(Record::new(key.clone(), 1));
+        assert_eq!(r.processed, 2);
+        // repartition until the key leaves node 0
+        let mut moved = false;
+        for _ in 0..7 {
+            ring.update(|rr| rr.double_others(0));
+            if ring.lookup(key.as_bytes()) != 0 {
+                moved = true;
+                break;
+            }
+        }
+        assert!(moved);
+        let transfers = r.extract_disowned();
+        assert_eq!(transfers.len(), 1);
+        let (dest, rec) = &transfers[0];
+        assert_eq!(*dest, ring.lookup(key.as_bytes()));
+        assert_eq!(rec.value, 2, "full count extracted");
+        assert!(r.final_snapshot().is_empty(), "state left the reducer");
+        assert_eq!(r.state_extracted, 1);
+    }
+
+    #[test]
+    fn absorb_state_merges() {
+        let ring = SharedRing::new(Ring::new(4, 8));
+        let key = owned_key(&ring, 3);
+        let mut r = ReducerCore::new(3, Box::new(WordCount::new()), ring);
+        r.handle(Record::new(key.clone(), 1));
+        r.absorb_state(Record::new(key.clone(), 5));
+        assert_eq!(r.final_snapshot(), vec![(key, 6)]);
+        assert_eq!(r.state_absorbed, 1);
+    }
+}

@@ -1,0 +1,124 @@
+//! Artifact discovery and the build manifest.
+//!
+//! `make artifacts` writes `artifacts/manifest.json` with the static
+//! shapes the XLA programs were lowered for; rust pads every batch to
+//! these. The manifest is flat JSON (`{"B": 256, ...}`) parsed with a
+//! tiny scanner (offline build: no serde).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context};
+
+/// Static shapes of the compiled programs (see DESIGN.md §Artifact
+/// contract).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Manifest {
+    /// Batch size of `route` / `hash_only` / `reduce_count`.
+    pub b: usize,
+    /// Key words (u32) per key: max key bytes = 4*W.
+    pub w: usize,
+    /// Ring capacity (max tokens) of `route`.
+    pub t: usize,
+    /// Vocab slots of `reduce_count` / `merge_state`.
+    pub v: usize,
+}
+
+impl Manifest {
+    /// Max key length in bytes the XLA hash path supports.
+    pub fn max_key_bytes(&self) -> usize {
+        self.w * 4
+    }
+
+    /// Parse flat JSON like `{"B": 256, "W": 8, "T": 512, "V": 4096}`.
+    pub fn parse(text: &str) -> crate::Result<Self> {
+        let map = parse_flat_json(text)?;
+        let get = |k: &str| -> crate::Result<usize> {
+            map.get(k)
+                .copied()
+                .with_context(|| format!("manifest missing key '{k}'"))
+                .map(|v| v as usize)
+        };
+        let m = Manifest { b: get("B")?, w: get("W")?, t: get("T")?, v: get("V")? };
+        if m.b == 0 || m.w == 0 || m.t == 0 || m.v == 0 {
+            bail!("manifest has zero-sized dimension: {m:?}");
+        }
+        Ok(m)
+    }
+
+    pub fn load(dir: &Path) -> crate::Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text)
+    }
+}
+
+/// Parse a flat `{"key": int, ...}` JSON object.
+fn parse_flat_json(text: &str) -> crate::Result<HashMap<String, i64>> {
+    let text = text.trim();
+    let inner = text
+        .strip_prefix('{')
+        .and_then(|t| t.strip_suffix('}'))
+        .context("manifest is not a JSON object")?;
+    let mut map = HashMap::new();
+    for part in inner.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (k, v) = part.split_once(':').context("expected \"key\": value")?;
+        let k = k.trim().trim_matches('"').to_string();
+        let v: i64 = v.trim().parse().context("manifest values must be integers")?;
+        map.insert(k, v);
+    }
+    Ok(map)
+}
+
+/// Locate the artifacts directory: `$DPA_ARTIFACTS`, else `artifacts/`
+/// relative to the current dir, the crate root, or their parents.
+pub fn default_artifacts_dir() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("DPA_ARTIFACTS") {
+        let p = PathBuf::from(p);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    let mut candidates: Vec<PathBuf> = vec![PathBuf::from("artifacts")];
+    // crate root (tests/benches run from target subdirs)
+    candidates.push(PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+    if let Ok(cwd) = std::env::current_dir() {
+        let mut d = cwd.as_path();
+        while let Some(parent) = d.parent() {
+            candidates.push(d.join("artifacts"));
+            d = parent;
+        }
+    }
+    candidates.into_iter().find(|p| p.join("manifest.json").exists())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_manifest() {
+        let m = Manifest::parse(r#"{"B": 256, "W": 8, "T": 512, "V": 4096}"#).unwrap();
+        assert_eq!(m, Manifest { b: 256, w: 8, t: 512, v: 4096 });
+        assert_eq!(m.max_key_bytes(), 32);
+    }
+
+    #[test]
+    fn parse_tolerates_whitespace_and_order() {
+        let m = Manifest::parse("{ \"V\":16,\n \"T\":4, \"W\": 2, \"B\": 8 }").unwrap();
+        assert_eq!(m.b, 8);
+        assert_eq!(m.v, 16);
+    }
+
+    #[test]
+    fn missing_key_errors() {
+        assert!(Manifest::parse(r#"{"B": 256}"#).is_err());
+        assert!(Manifest::parse("not json").is_err());
+        assert!(Manifest::parse(r#"{"B": 0, "W": 8, "T": 512, "V": 4096}"#).is_err());
+    }
+}

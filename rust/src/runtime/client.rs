@@ -1,0 +1,85 @@
+//! Thin wrapper around the `xla` crate's PJRT CPU client: HLO-text →
+//! compiled executable, with error context. One client per process;
+//! executables are compiled once and reused for every batch.
+
+use std::path::Path;
+
+use anyhow::Context;
+
+/// A PJRT client plus compile helpers.
+pub struct RuntimeClient {
+    client: xla::PjRtClient,
+}
+
+impl RuntimeClient {
+    /// CPU PJRT client (the only backend in this environment; TPU/GPU
+    /// plugins would slot in here).
+    pub fn cpu() -> crate::Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::info!(
+            "PJRT client up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(RuntimeClient { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// The underlying PJRT client (buffer creation etc.).
+    pub fn pjrt(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn compile_hlo_text(&self, path: &Path) -> crate::Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+
+    /// Execute with literal inputs; unwraps the 1-tuple convention
+    /// (`aot.py` lowers with `return_tuple=True`).
+    pub fn execute_tuple(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> crate::Result<Vec<xla::Literal>> {
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .context("executing compiled program")?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("device-to-host transfer")?;
+        lit.to_tuple().context("decomposing result tuple")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let c = RuntimeClient::cpu().expect("PJRT CPU client");
+        assert!(c.device_count() >= 1);
+        assert!(!c.platform().is_empty());
+    }
+
+    #[test]
+    fn compile_missing_file_errors() {
+        let c = RuntimeClient::cpu().unwrap();
+        assert!(c
+            .compile_hlo_text(Path::new("/nonexistent/x.hlo.txt"))
+            .is_err());
+    }
+}

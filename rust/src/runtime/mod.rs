@@ -1,0 +1,24 @@
+//! PJRT runtime: loads the AOT-compiled XLA programs (HLO text emitted by
+//! `python/compile/aot.py`) and executes them from the rust hot path.
+//!
+//! Python runs only at build time (`make artifacts`); this module is the
+//! entire request-path interface to the compiled data plane:
+//!
+//! - `hash_only`  — batched MurmurHash3 (the L1 Pallas kernel),
+//! - `route`      — hash + consistent-ring lookup (ring state passed as
+//!   runtime tensors, so one executable serves every repartition),
+//! - `reduce_count` — histogram update of a reducer's dense count state
+//!   (the L1 Pallas histogram kernel),
+//! - `merge_state`  — the §2 state-merge step over dense states.
+//!
+//! Interchange is HLO **text**: the image's xla_extension 0.5.1 rejects
+//! jax≥0.5 serialized protos (64-bit instruction ids); the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+pub mod artifacts;
+pub mod client;
+pub mod programs;
+
+pub use artifacts::{default_artifacts_dir, Manifest};
+pub use client::RuntimeClient;
+pub use programs::{pack_key, ring_tensors, Runtime};

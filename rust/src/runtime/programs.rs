@@ -1,0 +1,438 @@
+//! Typed wrappers over the four compiled programs, plus the host-side
+//! packing that must agree bit-for-bit with `python/compile/model.py`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context};
+
+use crate::hash::Ring;
+
+use super::artifacts::Manifest;
+use super::client::RuntimeClient;
+
+/// Pack a key's bytes into little-endian u32 words (zero padded) plus its
+/// byte length — the exact layout the murmur3 Pallas kernel consumes.
+/// Returns `None` for keys longer than `4*w` bytes (callers fall back to
+/// the native rust hash; see DESIGN.md).
+pub fn pack_key(key: &[u8], w: usize) -> Option<(Vec<u32>, i32)> {
+    if key.len() > w * 4 {
+        return None;
+    }
+    let mut words = vec![0u32; w];
+    for (i, chunk) in key.chunks(4).enumerate() {
+        let mut b = [0u8; 4];
+        b[..chunk.len()].copy_from_slice(chunk);
+        words[i] = u32::from_le_bytes(b);
+    }
+    Some((words, key.len() as i32))
+}
+
+/// Ring state as the padded tensors the `route` program takes: sorted
+/// token hashes (padded with `u32::MAX`), owners (padded with 0) and the
+/// live token count.
+pub fn ring_tensors(ring: &Ring, t: usize) -> crate::Result<(Vec<u32>, Vec<i32>, i32)> {
+    let tokens = ring.sorted_tokens();
+    if tokens.len() > t {
+        bail!(
+            "ring has {} tokens but the route program was compiled for T={t}",
+            tokens.len()
+        );
+    }
+    let mut hashes = vec![u32::MAX; t];
+    let mut owners = vec![0i32; t];
+    for (i, tok) in tokens.iter().enumerate() {
+        hashes[i] = tok.hash;
+        owners[i] = tok.node as i32;
+    }
+    Ok((hashes, owners, tokens.len() as i32))
+}
+
+/// Opaque handle to a device-resident reducer state (`u32[V]` counts
+/// buffer living in PJRT device memory). Created/updated/read through the
+/// runtime; the §Perf device-resident path keeps the state on device
+/// across batches so only the `B`-sized id batch crosses the host
+/// boundary per flush.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct CountsHandle(u64);
+
+/// The loaded + compiled data plane.
+pub struct Runtime {
+    client: RuntimeClient,
+    pub manifest: Manifest,
+    pub dir: PathBuf,
+    hash_only: xla::PjRtLoadedExecutable,
+    route: xla::PjRtLoadedExecutable,
+    reduce_count: xla::PjRtLoadedExecutable,
+    /// Untupled variant whose output buffer feeds back as the next
+    /// call's input (device-resident state path).
+    reduce_count_raw: xla::PjRtLoadedExecutable,
+    merge_state: xla::PjRtLoadedExecutable,
+    /// Live device-resident count states.
+    device_counts: std::collections::HashMap<u64, xla::PjRtBuffer>,
+    next_handle: u64,
+}
+
+impl Runtime {
+    /// Load all artifacts from `dir` and compile them on the CPU PJRT
+    /// client. Expensive (one-time); share the result via `Arc`.
+    pub fn load(dir: &Path) -> crate::Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = RuntimeClient::cpu()?;
+        let compile = |name: &str| client.compile_hlo_text(&dir.join(name));
+        Ok(Runtime {
+            hash_only: compile("hash_only.hlo.txt")?,
+            route: compile("route.hlo.txt")?,
+            reduce_count: compile("reduce_count.hlo.txt")?,
+            reduce_count_raw: compile("reduce_count_raw.hlo.txt")?,
+            merge_state: compile("merge_state.hlo.txt")?,
+            client,
+            manifest,
+            dir: dir.to_path_buf(),
+            device_counts: std::collections::HashMap::new(),
+            next_handle: 0,
+        })
+    }
+
+    /// Allocate a zeroed device-resident counts state.
+    pub fn counts_create(&mut self) -> crate::Result<CountsHandle> {
+        let zeros = vec![0u32; self.manifest.v];
+        self.counts_create_from(&zeros)
+    }
+
+    /// Allocate a device-resident counts state from host values.
+    pub fn counts_create_from(&mut self, values: &[u32]) -> crate::Result<CountsHandle> {
+        if values.len() != self.manifest.v {
+            bail!("counts length {} != V {}", values.len(), self.manifest.v);
+        }
+        let buf = self
+            .client
+            .pjrt()
+            .buffer_from_host_buffer(values, &[self.manifest.v], None)
+            .context("uploading counts state")?;
+        let h = CountsHandle(self.next_handle);
+        self.next_handle += 1;
+        self.device_counts.insert(h.0, buf);
+        Ok(h)
+    }
+
+    /// Fold a batch of ids into a device-resident state. Only the ids
+    /// cross the host boundary; the counts stay on device — the output
+    /// buffer of the untupled program becomes the new state.
+    pub fn counts_update(&mut self, h: CountsHandle, ids: &[i32]) -> crate::Result<()> {
+        let b = self.manifest.b;
+        if ids.len() > b {
+            bail!("batch of {} ids exceeds B {}", ids.len(), b);
+        }
+        let mut padded = vec![-1i32; b];
+        padded[..ids.len()].copy_from_slice(ids);
+        let ids_buf = self
+            .client
+            .pjrt()
+            .buffer_from_host_buffer(&padded, &[b], None)
+            .context("uploading id batch")?;
+        let counts_buf = self
+            .device_counts
+            .get(&h.0)
+            .context("counts handle already freed")?;
+        let outs = {
+            let args: [&xla::PjRtBuffer; 2] = [counts_buf, &ids_buf];
+            self.reduce_count_raw
+                .execute_b(&args)
+                .context("executing reduce_count_raw")?
+        };
+        let new_buf = outs
+            .into_iter()
+            .next()
+            .and_then(|mut replica| {
+                if replica.is_empty() {
+                    None
+                } else {
+                    Some(replica.remove(0))
+                }
+            })
+            .context("reduce_count_raw returned no output")?;
+        self.device_counts.insert(h.0, new_buf);
+        Ok(())
+    }
+
+    /// Read a device-resident state back to the host.
+    pub fn counts_read(&self, h: CountsHandle) -> crate::Result<Vec<u32>> {
+        let buf = self
+            .device_counts
+            .get(&h.0)
+            .context("counts handle already freed")?;
+        let lit = buf.to_literal_sync().context("device-to-host transfer")?;
+        Ok(lit.to_vec()?)
+    }
+
+    /// Overwrite a device-resident state with host values.
+    pub fn counts_write(&mut self, h: CountsHandle, values: &[u32]) -> crate::Result<()> {
+        if values.len() != self.manifest.v {
+            bail!("counts length {} != V {}", values.len(), self.manifest.v);
+        }
+        let buf = self
+            .client
+            .pjrt()
+            .buffer_from_host_buffer(values, &[self.manifest.v], None)
+            .context("uploading counts state")?;
+        self.device_counts.insert(h.0, buf);
+        Ok(())
+    }
+
+    /// Release a device-resident state.
+    pub fn counts_free(&mut self, h: CountsHandle) {
+        self.device_counts.remove(&h.0);
+    }
+
+    /// Load from the default artifacts location.
+    pub fn load_default() -> crate::Result<Self> {
+        let dir = super::artifacts::default_artifacts_dir()
+            .context("artifacts directory not found — run `make artifacts`")?;
+        Self::load(&dir)
+    }
+
+    /// MurmurHash3 of each key via the Pallas kernel, batched to `B`.
+    /// Keys longer than `4*W` bytes are hashed with the bit-identical
+    /// native implementation.
+    pub fn hash_batch(&self, keys: &[&[u8]]) -> crate::Result<Vec<u32>> {
+        let (b, w) = (self.manifest.b, self.manifest.w);
+        let mut out = Vec::with_capacity(keys.len());
+        for chunk in keys.chunks(b) {
+            let mut words = vec![0u32; b * w];
+            let mut lens = vec![0i32; b];
+            let mut native = vec![None; chunk.len()];
+            for (i, key) in chunk.iter().enumerate() {
+                match pack_key(key, w) {
+                    Some((kw, len)) => {
+                        words[i * w..(i + 1) * w].copy_from_slice(&kw);
+                        lens[i] = len;
+                    }
+                    None => native[i] = Some(crate::hash::murmur3_x86_32(key)),
+                }
+            }
+            let words_lit = xla::Literal::vec1(&words).reshape(&[b as i64, w as i64])?;
+            let lens_lit = xla::Literal::vec1(&lens);
+            let outs = self
+                .client
+                .execute_tuple(&self.hash_only, &[words_lit, lens_lit])?;
+            let hashes: Vec<u32> = outs[0].to_vec()?;
+            for (i, h) in hashes.iter().take(chunk.len()).enumerate() {
+                out.push(native[i].unwrap_or(*h));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Hash + ring lookup via the compiled route program. Returns
+    /// `(hash, owner)` per key.
+    pub fn route_batch(&self, keys: &[&[u8]], ring: &Ring) -> crate::Result<Vec<(u32, usize)>> {
+        let (b, w, t) = (self.manifest.b, self.manifest.w, self.manifest.t);
+        let (hashes, owners, len) = ring_tensors(ring, t)?;
+        let ring_h = xla::Literal::vec1(&hashes);
+        let ring_o = xla::Literal::vec1(&owners);
+        let ring_n = xla::Literal::scalar(len);
+
+        let mut out = Vec::with_capacity(keys.len());
+        for chunk in keys.chunks(b) {
+            let mut words = vec![0u32; b * w];
+            let mut lens = vec![0i32; b];
+            let mut native = vec![None; chunk.len()];
+            for (i, key) in chunk.iter().enumerate() {
+                match pack_key(key, w) {
+                    Some((kw, l)) => {
+                        words[i * w..(i + 1) * w].copy_from_slice(&kw);
+                        lens[i] = l;
+                    }
+                    None => {
+                        let h = crate::hash::murmur3_x86_32(key);
+                        native[i] = Some((h, ring.lookup_hash(h)));
+                    }
+                }
+            }
+            let words_lit = xla::Literal::vec1(&words).reshape(&[b as i64, w as i64])?;
+            let lens_lit = xla::Literal::vec1(&lens);
+            let outs = self.client.execute_tuple(
+                &self.route,
+                &[
+                    words_lit,
+                    lens_lit,
+                    ring_h.clone(),
+                    ring_o.clone(),
+                    ring_n.clone(),
+                ],
+            )?;
+            let hs: Vec<u32> = outs[0].to_vec()?;
+            let os: Vec<i32> = outs[1].to_vec()?;
+            for i in 0..chunk.len() {
+                out.push(native[i].unwrap_or((hs[i], os[i] as usize)));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Histogram-update `counts` with a batch of vocab ids (`-1` = skip).
+    /// `ids.len()` must be ≤ B; shorter batches are padded.
+    pub fn reduce_counts(&self, counts: &[u32], ids: &[i32]) -> crate::Result<Vec<u32>> {
+        let (b, v) = (self.manifest.b, self.manifest.v);
+        if counts.len() != v {
+            bail!("counts length {} != V {}", counts.len(), v);
+        }
+        if ids.len() > b {
+            bail!("batch of {} ids exceeds B {}", ids.len(), b);
+        }
+        let mut padded = vec![-1i32; b];
+        padded[..ids.len()].copy_from_slice(ids);
+        let counts_lit = xla::Literal::vec1(counts);
+        let ids_lit = xla::Literal::vec1(&padded);
+        let outs = self
+            .client
+            .execute_tuple(&self.reduce_count, &[counts_lit, ids_lit])?;
+        Ok(outs[0].to_vec()?)
+    }
+
+    /// The §2 state-merge step over two dense states.
+    pub fn merge_states(&self, a: &[u32], b: &[u32]) -> crate::Result<Vec<u32>> {
+        let v = self.manifest.v;
+        if a.len() != v || b.len() != v {
+            bail!("merge inputs must be length V={v}");
+        }
+        let outs = self.client.execute_tuple(
+            &self.merge_state,
+            &[xla::Literal::vec1(a), xla::Literal::vec1(b)],
+        )?;
+        Ok(outs[0].to_vec()?)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform()
+    }
+}
+
+/// Thread-shareable runtime handle.
+///
+/// The `xla` crate's `PjRtClient`/`PjRtLoadedExecutable` wrappers hold
+/// non-atomic `Rc` bookkeeping, so they are `!Send + !Sync` even though
+/// the underlying PJRT CPU client is thread-safe. `SharedRuntime` restores
+/// shareability by serializing *every* access behind one mutex: no two
+/// threads ever touch the wrappers (or their `Rc` counts) concurrently.
+/// Contention is acceptable because callers batch (one lock per `B=256`
+/// records, not per record).
+pub struct SharedRuntime {
+    inner: std::sync::Mutex<Runtime>,
+    manifest: Manifest,
+}
+
+// SAFETY: all access to the inner Runtime (and its Rc-based wrappers) is
+// serialized by the mutex; the raw PJRT objects themselves are documented
+// thread-safe in the PJRT C API.
+unsafe impl Send for SharedRuntime {}
+unsafe impl Sync for SharedRuntime {}
+
+impl SharedRuntime {
+    pub fn load(dir: &Path) -> crate::Result<std::sync::Arc<Self>> {
+        let rt = Runtime::load(dir)?;
+        Ok(std::sync::Arc::new(SharedRuntime {
+            manifest: rt.manifest,
+            inner: std::sync::Mutex::new(rt),
+        }))
+    }
+
+    pub fn load_default() -> crate::Result<std::sync::Arc<Self>> {
+        let dir = super::artifacts::default_artifacts_dir()
+            .context("artifacts directory not found — run `make artifacts`")?;
+        Self::load(&dir)
+    }
+
+    pub fn manifest(&self) -> Manifest {
+        self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.inner.lock().unwrap().platform()
+    }
+
+    pub fn hash_batch(&self, keys: &[&[u8]]) -> crate::Result<Vec<u32>> {
+        self.inner.lock().unwrap().hash_batch(keys)
+    }
+
+    pub fn route_batch(&self, keys: &[&[u8]], ring: &Ring) -> crate::Result<Vec<(u32, usize)>> {
+        self.inner.lock().unwrap().route_batch(keys, ring)
+    }
+
+    pub fn reduce_counts(&self, counts: &[u32], ids: &[i32]) -> crate::Result<Vec<u32>> {
+        self.inner.lock().unwrap().reduce_counts(counts, ids)
+    }
+
+    pub fn merge_states(&self, a: &[u32], b: &[u32]) -> crate::Result<Vec<u32>> {
+        self.inner.lock().unwrap().merge_states(a, b)
+    }
+
+    // -- device-resident counts states (§Perf iteration 2) ----------------
+
+    pub fn counts_create(&self) -> crate::Result<CountsHandle> {
+        self.inner.lock().unwrap().counts_create()
+    }
+
+    pub fn counts_create_from(&self, values: &[u32]) -> crate::Result<CountsHandle> {
+        self.inner.lock().unwrap().counts_create_from(values)
+    }
+
+    pub fn counts_update(&self, h: CountsHandle, ids: &[i32]) -> crate::Result<()> {
+        self.inner.lock().unwrap().counts_update(h, ids)
+    }
+
+    pub fn counts_read(&self, h: CountsHandle) -> crate::Result<Vec<u32>> {
+        self.inner.lock().unwrap().counts_read(h)
+    }
+
+    pub fn counts_write(&self, h: CountsHandle, values: &[u32]) -> crate::Result<()> {
+        self.inner.lock().unwrap().counts_write(h, values)
+    }
+
+    pub fn counts_free(&self, h: CountsHandle) {
+        self.inner.lock().unwrap().counts_free(h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_key_layout() {
+        let (words, len) = pack_key(b"abcdef", 8).unwrap();
+        assert_eq!(len, 6);
+        assert_eq!(words[0], u32::from_le_bytes(*b"abcd"));
+        assert_eq!(words[1], u32::from_le_bytes([b'e', b'f', 0, 0]));
+        assert!(words[2..].iter().all(|&w| w == 0));
+    }
+
+    #[test]
+    fn pack_key_empty_and_exact() {
+        let (words, len) = pack_key(b"", 2).unwrap();
+        assert_eq!(len, 0);
+        assert!(words.iter().all(|&w| w == 0));
+        let (_, len) = pack_key(b"12345678", 2).unwrap();
+        assert_eq!(len, 8);
+        assert!(pack_key(b"123456789", 2).is_none(), "too long");
+    }
+
+    #[test]
+    fn ring_tensor_layout() {
+        let ring = Ring::new(3, 2);
+        let (hashes, owners, len) = ring_tensors(&ring, 16).unwrap();
+        assert_eq!(len, 6);
+        // live prefix is sorted, padding is MAX
+        for i in 0..5 {
+            assert!(hashes[i] <= hashes[i + 1]);
+        }
+        assert!(hashes[6..].iter().all(|&h| h == u32::MAX));
+        assert!(owners[..6].iter().all(|&o| (0..3).contains(&o)));
+    }
+
+    #[test]
+    fn ring_too_big_errors() {
+        let ring = Ring::new(4, 8);
+        assert!(ring_tensors(&ring, 8).is_err());
+    }
+}

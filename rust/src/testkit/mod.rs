@@ -1,0 +1,160 @@
+//! A tiny property-testing toolkit (offline build: no proptest).
+//!
+//! [`forall`] runs a property over N seeded random cases; on failure it
+//! retries the failing case with progressively "smaller" regenerations
+//! (halved size parameter) to report a compact counterexample. Generators
+//! are plain functions over [`Gen`].
+
+use crate::util::prng::Xoshiro256;
+
+/// Random-input generator context: a seeded PRNG plus a size budget that
+/// shrinking reduces.
+pub struct Gen {
+    pub rng: Xoshiro256,
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Self {
+        Gen { rng: Xoshiro256::new(seed), size }
+    }
+
+    /// Uniform usize in `[lo, hi]`, clamped by the size budget.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        let hi = hi.min(lo + self.size);
+        lo + self.rng.index(hi - lo + 1)
+    }
+
+    pub fn u32(&mut self) -> u32 {
+        self.rng.next_u64() as u32
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        self.rng.next_f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Lowercase ASCII string of length in `[0, max_len]`.
+    pub fn string(&mut self, max_len: usize) -> String {
+        let len = self.usize_in(0, max_len);
+        (0..len)
+            .map(|_| (b'a' + self.rng.index(26) as u8) as char)
+            .collect()
+    }
+
+    /// Arbitrary bytes of length in `[0, max_len]`.
+    pub fn bytes(&mut self, max_len: usize) -> Vec<u8> {
+        let len = self.usize_in(0, max_len);
+        (0..len).map(|_| self.rng.next_u64() as u8).collect()
+    }
+
+    /// Vector built from a generator function.
+    pub fn vec_of<T>(&mut self, max_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let len = self.usize_in(0, max_len);
+        (0..len).map(|_| f(self)).collect()
+    }
+}
+
+/// Outcome of a property over one generated case.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` over `cases` seeded random cases. On failure, regenerate the
+/// failing seed at smaller sizes to find a more compact counterexample,
+/// then panic with seed + message (re-run with `forall_seeded` to debug).
+pub fn forall(name: &str, cases: usize, prop: impl Fn(&mut Gen) -> PropResult) {
+    let base_seed = 0xD9A_0000u64;
+    for case in 0..cases {
+        let seed = base_seed + case as u64;
+        let mut g = Gen::new(seed, 64);
+        if let Err(msg) = prop(&mut g) {
+            // shrink: same seed, smaller sizes
+            let mut best = (64usize, msg);
+            for size in [32usize, 16, 8, 4, 2, 1] {
+                let mut g = Gen::new(seed, size);
+                if let Err(m) = prop(&mut g) {
+                    best = (size, m);
+                }
+            }
+            panic!(
+                "property '{name}' failed (seed {seed:#x}, size {}): {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+/// Re-run a single case for debugging.
+pub fn forall_seeded(seed: u64, size: usize, prop: impl Fn(&mut Gen) -> PropResult) {
+    let mut g = Gen::new(seed, size);
+    if let Err(msg) = prop(&mut g) {
+        panic!("property failed (seed {seed:#x}, size {size}): {msg}");
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall("addition commutes", 50, |g| {
+            let a = g.u32() as u64;
+            let b = g.u32() as u64;
+            prop_assert!(a + b == b + a, "{a} + {b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        forall("always fails", 5, |g| {
+            let v = g.vec_of(10, |g| g.u32());
+            prop_assert!(v.len() == usize::MAX, "len {}", v.len());
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        forall("bounds", 100, |g| {
+            let x = g.usize_in(3, 10);
+            prop_assert!((3..=10).contains(&x), "x = {x}");
+            let s = g.string(12);
+            prop_assert!(s.len() <= 12, "len {}", s.len());
+            prop_assert!(s.bytes().all(|b| b.is_ascii_lowercase()), "{s}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn shrinking_reports_smaller_size() {
+        let result = std::panic::catch_unwind(|| {
+            forall("long vecs fail", 3, |g| {
+                let v = g.vec_of(64, |g| g.u32());
+                prop_assert!(v.len() < 2, "vec of len {}", v.len());
+                Ok(())
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // the shrink loop should have found a failure at a reduced size
+        assert!(msg.contains("size"), "{msg}");
+    }
+}

@@ -1,0 +1,76 @@
+//! Minimal `log` facade backend (the offline build has no `env_logger`).
+//!
+//! Level comes from `DPA_LOG` (error|warn|info|debug|trace), default
+//! `warn`. Install with [`init`] — idempotent, safe to call from tests,
+//! examples and the CLI alike.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Log, Metadata, Record};
+use once_cell::sync::Lazy;
+
+static START: Lazy<Instant> = Lazy::new(Instant::now);
+static INSTALLED: AtomicBool = AtomicBool::new(false);
+
+struct StderrLogger {
+    max: Level,
+}
+
+impl Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= self.max
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = START.elapsed();
+        let mut err = std::io::stderr().lock();
+        let _ = writeln!(
+            err,
+            "[{:>9.3}s {:5} {}] {}",
+            t.as_secs_f64(),
+            record.level(),
+            record.target(),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+fn level_from_env() -> Level {
+    match std::env::var("DPA_LOG").as_deref() {
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("info") => Level::Info,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Warn,
+    }
+}
+
+/// Install the stderr logger. Idempotent.
+pub fn init() {
+    if INSTALLED.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    let level = level_from_env();
+    let logger = Box::new(StderrLogger { max: level });
+    if log::set_boxed_logger(logger).is_ok() {
+        log::set_max_level(LevelFilter::from(level.to_level_filter()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::warn!("logger smoke test");
+    }
+}

@@ -1,0 +1,30 @@
+//! Small shared utilities: deterministic PRNG, logging, statistics and
+//! table formatting. These stand in for crates (rand, env_logger,
+//! statistical helpers) that are unavailable in the offline build.
+
+pub mod prng;
+pub mod logger;
+pub mod stats;
+pub mod table;
+
+/// Integer ceiling division: `ceil(a / b)` for non-negative integers.
+///
+/// Used by the paper's ideal-load term `U = ceil(M / R)`.
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basic() {
+        assert_eq!(ceil_div(100, 4), 25);
+        assert_eq!(ceil_div(101, 4), 26);
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 1), 1);
+        assert_eq!(ceil_div(7, 8), 1);
+    }
+}

@@ -1,0 +1,129 @@
+//! Summary statistics over `f64` samples — mean/variance/percentiles —
+//! used by the bench harness and by experiment reports (the paper reports
+//! 3-run means and notes "very small" variance; we compute it).
+
+/// Online + batch summary of a sample set.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_slice(xs: &[f64]) -> Self {
+        let mut s = Self::new();
+        for &x in xs {
+            s.push(x);
+        }
+        s
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.samples.push(x);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Unbiased sample variance (n-1 denominator); 0 for n < 2.
+    pub fn variance(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Linear-interpolated percentile, `p` in [0, 100].
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut xs = self.samples.clone();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = p / 100.0 * (xs.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            xs[lo]
+        } else {
+            let frac = rank - lo as f64;
+            xs[lo] * (1.0 - frac) + xs[hi] * frac
+        }
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_variance() {
+        let s = Summary::from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.variance() - 5.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_is_nan_mean() {
+        let s = Summary::new();
+        assert!(s.mean().is_nan());
+        assert_eq!(s.variance(), 0.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let s = Summary::from_slice(&[10.0, 20.0, 30.0, 40.0, 50.0]);
+        assert!((s.percentile(0.0) - 10.0).abs() < 1e-12);
+        assert!((s.percentile(100.0) - 50.0).abs() < 1e-12);
+        assert!((s.median() - 30.0).abs() < 1e-12);
+        assert!((s.percentile(25.0) - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn min_max() {
+        let s = Summary::from_slice(&[3.0, -1.0, 7.0]);
+        assert_eq!(s.min(), -1.0);
+        assert_eq!(s.max(), 7.0);
+    }
+
+    #[test]
+    fn single_sample() {
+        let s = Summary::from_slice(&[42.0]);
+        assert_eq!(s.mean(), 42.0);
+        assert_eq!(s.variance(), 0.0);
+        assert_eq!(s.median(), 42.0);
+    }
+}

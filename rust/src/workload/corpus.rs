@@ -1,0 +1,103 @@
+//! Synthetic text corpus for the end-to-end example: zipf-distributed
+//! words drawn from a fixed common-English word list, assembled into
+//! sentences. This stands in for the paper's "counting English words"
+//! motivating workload (no proprietary corpus needed — the rank-frequency
+//! shape is what matters and zipf is the standard model for it).
+
+use crate::util::prng::{Xoshiro256, Zipf};
+
+use super::Workload;
+
+/// 200 common English words, frequency-ranked (a standard head-of-Zipf
+/// list). Rank order matters: rank 0 is sampled most.
+pub const WORDS: [&str; 200] = [
+    "the", "be", "to", "of", "and", "a", "in", "that", "have", "i",
+    "it", "for", "not", "on", "with", "he", "as", "you", "do", "at",
+    "this", "but", "his", "by", "from", "they", "we", "say", "her", "she",
+    "or", "an", "will", "my", "one", "all", "would", "there", "their", "what",
+    "so", "up", "out", "if", "about", "who", "get", "which", "go", "me",
+    "when", "make", "can", "like", "time", "no", "just", "him", "know", "take",
+    "people", "into", "year", "your", "good", "some", "could", "them", "see", "other",
+    "than", "then", "now", "look", "only", "come", "its", "over", "think", "also",
+    "back", "after", "use", "two", "how", "our", "work", "first", "well", "way",
+    "even", "new", "want", "because", "any", "these", "give", "day", "most", "us",
+    "is", "was", "are", "been", "has", "had", "were", "said", "did", "having",
+    "may", "should", "each", "such", "where", "much", "before", "right", "too", "means",
+    "old", "same", "tell", "does", "set", "three", "must", "state", "never", "become",
+    "between", "high", "really", "something", "most", "another", "much", "family", "own", "leave",
+    "put", "old", "while", "mean", "keep", "student", "why", "let", "great", "same",
+    "big", "group", "begin", "seem", "country", "help", "talk", "where", "turn", "problem",
+    "every", "start", "hand", "might", "american", "show", "part", "against", "place", "such",
+    "again", "few", "case", "week", "company", "system", "each", "program", "question", "during",
+    "play", "government", "run", "small", "number", "off", "always", "move", "night", "live",
+    "point", "believe", "hold", "today", "bring", "happen", "next", "without", "before", "large",
+];
+
+/// Generate a corpus of `n_words` words with zipf exponent `s` (1.0 ≈
+/// natural language), as whitespace-joined sentences of 5–15 words.
+pub fn generate(n_words: usize, s: f64, seed: u64) -> String {
+    let dist = Zipf::new(WORDS.len(), s);
+    let mut rng = Xoshiro256::new(seed);
+    let mut out = String::with_capacity(n_words * 6);
+    let mut in_sentence = 0usize;
+    let mut sentence_len = 5 + rng.index(11);
+    for i in 0..n_words {
+        if i > 0 {
+            out.push(if in_sentence == 0 { '\n' } else { ' ' });
+        }
+        out.push_str(WORDS[dist.sample(&mut rng)]);
+        in_sentence += 1;
+        if in_sentence >= sentence_len {
+            in_sentence = 0;
+            sentence_len = 5 + rng.index(11);
+        }
+    }
+    out
+}
+
+/// A word-stream workload over the synthetic corpus: each item is a word
+/// (the e2e example's mapper splits lines instead; this is the pre-split
+/// form used by benches).
+pub fn workload(n_words: usize, s: f64, seed: u64) -> Workload {
+    let text = generate(n_words, s, seed);
+    let items: Vec<String> = text.split_whitespace().map(str::to_string).collect();
+    Workload::new(format!("corpus-{n_words}"), items)
+        .with_description(format!("synthetic zipf({s}) corpus, {n_words} words, seed {seed}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_has_requested_words() {
+        let w = workload(1000, 1.0, 1);
+        assert_eq!(w.len(), 1000);
+    }
+
+    #[test]
+    fn corpus_is_zipfian() {
+        let w = workload(20_000, 1.0, 2);
+        let mut counts = std::collections::HashMap::new();
+        for k in &w.items {
+            *counts.entry(k.as_str()).or_insert(0usize) += 1;
+        }
+        let the = counts.get("the").copied().unwrap_or(0);
+        // rank-0 word should dominate any tail word
+        let tail = counts.get("large").copied().unwrap_or(0);
+        assert!(the > tail * 3, "the={the} large={tail}");
+    }
+
+    #[test]
+    fn sentences_have_linebreaks() {
+        let text = generate(200, 1.0, 3);
+        assert!(text.contains('\n'));
+        assert!(!text.starts_with('\n'));
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(generate(100, 1.0, 9), generate(100, 1.0, 9));
+        assert_ne!(generate(100, 1.0, 9), generate(100, 1.0, 10));
+    }
+}

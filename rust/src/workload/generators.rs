@@ -1,0 +1,151 @@
+//! Generic workload generators: uniform, zipfian, hot-key and ring-aware
+//! adversarial streams. All are seeded and deterministic.
+
+use crate::hash::Ring;
+use crate::util::prng::{Xoshiro256, Zipf};
+
+use super::Workload;
+
+/// The key pool the generators (and the WL solver) draw from: `a`..`z`,
+/// then `aa`..`zz` — 702 short string keys, mirroring the paper's
+/// letter-counting workloads.
+pub fn key_pool() -> Vec<String> {
+    let mut pool = Vec::with_capacity(26 + 26 * 26);
+    for c in b'a'..=b'z' {
+        pool.push((c as char).to_string());
+    }
+    for c1 in b'a'..=b'z' {
+        for c2 in b'a'..=b'z' {
+            pool.push(format!("{}{}", c1 as char, c2 as char));
+        }
+    }
+    pool
+}
+
+/// `n_items` keys drawn uniformly from the first `n_keys` pool entries.
+pub fn uniform(n_items: usize, n_keys: usize, seed: u64) -> Workload {
+    let pool = key_pool();
+    let n_keys = n_keys.min(pool.len());
+    let mut rng = Xoshiro256::new(seed);
+    let items = (0..n_items)
+        .map(|_| pool[rng.index(n_keys)].clone())
+        .collect();
+    Workload::new(format!("uniform-{n_items}x{n_keys}"), items)
+        .with_description(format!("{n_items} items uniform over {n_keys} keys, seed {seed}"))
+}
+
+/// `n_items` keys drawn Zipf(`s`) over `n_keys` ranked keys — the
+/// canonical skewed stream ("h is a lot more common than z").
+pub fn zipf(n_items: usize, n_keys: usize, s: f64, seed: u64) -> Workload {
+    let pool = key_pool();
+    let n_keys = n_keys.min(pool.len());
+    let dist = Zipf::new(n_keys, s);
+    let mut rng = Xoshiro256::new(seed);
+    let items = (0..n_items)
+        .map(|_| pool[dist.sample(&mut rng)].clone())
+        .collect();
+    Workload::new(format!("zipf{s}-{n_items}x{n_keys}"), items)
+        .with_description(format!("{n_items} items zipf(s={s}) over {n_keys} keys, seed {seed}"))
+}
+
+/// A stream where a fraction `hot_frac` of items share one hot key and the
+/// rest are uniform over `n_cold_keys` cold keys.
+pub fn hot_key(n_items: usize, hot_frac: f64, n_cold_keys: usize, seed: u64) -> Workload {
+    assert!((0.0..=1.0).contains(&hot_frac));
+    let pool = key_pool();
+    let n_cold = n_cold_keys.min(pool.len() - 1);
+    let mut rng = Xoshiro256::new(seed);
+    let hot = pool[0].clone();
+    let mut items = Vec::with_capacity(n_items);
+    for _ in 0..n_items {
+        if rng.next_f64() < hot_frac {
+            items.push(hot.clone());
+        } else {
+            items.push(pool[1 + rng.index(n_cold)].clone());
+        }
+    }
+    Workload::new(format!("hotkey-{hot_frac}"), items).with_description(format!(
+        "{n_items} items, {:.0}% on one hot key, rest uniform over {n_cold} keys, seed {seed}",
+        hot_frac * 100.0
+    ))
+}
+
+/// Adversarial: every key in the stream is owned by `node` under `ring`
+/// (distinct keys, so repartitioning *can* split the load). Panics if the
+/// pool has fewer than `distinct` keys on that node.
+pub fn adversarial(ring: &Ring, node: usize, n_items: usize, distinct: usize, seed: u64) -> Workload {
+    let pool = key_pool();
+    let owned: Vec<String> = pool
+        .into_iter()
+        .filter(|k| ring.lookup(k.as_bytes()) == node)
+        .take(distinct)
+        .collect();
+    assert!(
+        owned.len() >= distinct,
+        "pool only has {} keys on node {node}, wanted {distinct}",
+        owned.len()
+    );
+    let mut rng = Xoshiro256::new(seed);
+    let items = (0..n_items)
+        .map(|_| owned[rng.index(owned.len())].clone())
+        .collect();
+    Workload::new(format!("adversarial-n{node}"), items).with_description(format!(
+        "{n_items} items over {distinct} distinct keys all owned by node {node}"
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::skew;
+
+    #[test]
+    fn pool_is_distinct() {
+        let pool = key_pool();
+        let mut dedup = pool.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(pool.len(), dedup.len());
+        assert_eq!(pool.len(), 26 + 676);
+    }
+
+    #[test]
+    fn uniform_has_low_static_skew() {
+        let w = uniform(10_000, 200, 1);
+        let ring = Ring::new(4, 64);
+        assert!(w.static_skew(&ring) < 0.15, "S = {}", w.static_skew(&ring));
+    }
+
+    #[test]
+    fn zipf_is_more_skewed_than_uniform() {
+        let ring = Ring::new(4, 8);
+        let u = uniform(5_000, 200, 2).static_skew(&ring);
+        let z = zipf(5_000, 200, 1.5, 2).static_skew(&ring);
+        assert!(z > u, "zipf {z} <= uniform {u}");
+    }
+
+    #[test]
+    fn hot_key_all_hot_is_max_skew() {
+        let w = hot_key(500, 1.0, 10, 3);
+        let ring = Ring::new(4, 8);
+        assert_eq!(w.static_skew(&ring), 1.0);
+    }
+
+    #[test]
+    fn adversarial_targets_one_node() {
+        let ring = Ring::new(4, 8);
+        for node in 0..4 {
+            let w = adversarial(&ring, node, 200, 5, 4);
+            let loads = w.static_loads(&ring);
+            assert_eq!(loads[node], 200, "loads {loads:?}");
+            assert_eq!(skew(&loads), 1.0);
+            assert!(w.distinct_keys().len() > 1);
+        }
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        assert_eq!(zipf(100, 50, 1.1, 7).items, zipf(100, 50, 1.1, 7).items);
+        assert_ne!(zipf(100, 50, 1.1, 7).items, zipf(100, 50, 1.1, 8).items);
+    }
+}

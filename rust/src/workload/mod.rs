@@ -1,0 +1,96 @@
+//! Workloads: the paper's contrived WL1–WL5 (§6.2), generic skew
+//! generators, a synthetic text corpus for the end-to-end example, and
+//! trace file I/O.
+//!
+//! The paper defines WL1–WL5 only by their designed no-LB skew under each
+//! initial token layout (e.g. WL1: `S = 0` for halving, `S = 1` for
+//! doubling). [`paperwl`] *solves* for key sets with those properties
+//! against the actual initial rings, so the "No LB" column of Table 1
+//! holds by construction.
+
+pub mod generators;
+pub mod paperwl;
+pub mod corpus;
+pub mod trace;
+
+/// A named input workload: a sequence of keys (the paper's "letters").
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub name: String,
+    pub items: Vec<String>,
+    /// Human description of how it was constructed.
+    pub description: String,
+}
+
+impl Workload {
+    pub fn new(name: impl Into<String>, items: Vec<String>) -> Self {
+        Workload {
+            name: name.into(),
+            items,
+            description: String::new(),
+        }
+    }
+
+    pub fn with_description(mut self, d: impl Into<String>) -> Self {
+        self.description = d.into();
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Distinct keys in first-appearance order.
+    pub fn distinct_keys(&self) -> Vec<&str> {
+        let mut seen = std::collections::HashSet::new();
+        let mut out = Vec::new();
+        for k in &self.items {
+            if seen.insert(k.as_str()) {
+                out.push(k.as_str());
+            }
+        }
+        out
+    }
+
+    /// Per-node message counts if routed with `ring` and never rebalanced
+    /// — the analytic "No LB" load vector.
+    pub fn static_loads(&self, ring: &crate::hash::Ring) -> Vec<u64> {
+        let mut loads = vec![0u64; ring.nodes()];
+        for k in &self.items {
+            loads[ring.lookup(k.as_bytes())] += 1;
+        }
+        loads
+    }
+
+    /// Analytic no-LB skew under `ring`.
+    pub fn static_skew(&self, ring: &crate::hash::Ring) -> f64 {
+        crate::metrics::skew(&self.static_loads(ring))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::Ring;
+
+    #[test]
+    fn distinct_keys_in_order() {
+        let w = Workload::new(
+            "t",
+            vec!["b".into(), "a".into(), "b".into(), "c".into()],
+        );
+        assert_eq!(w.distinct_keys(), vec!["b", "a", "c"]);
+    }
+
+    #[test]
+    fn static_loads_sum_to_len() {
+        let w = Workload::new("t", (0..50).map(|i| format!("k{i}")).collect());
+        let ring = Ring::new(4, 8);
+        let loads = w.static_loads(&ring);
+        assert_eq!(loads.iter().sum::<u64>(), 50);
+    }
+}

@@ -1,0 +1,371 @@
+//! The paper's five contrived workloads (§6.2), constructed by *solving*
+//! for key sets against the actual initial rings.
+//!
+//! The paper fixes 4 mappers + 4 reducers and 100 items and specifies each
+//! workload by its designed no-LB skew under the two methods' initial
+//! token layouts (halving: `N` tokens/node; doubling: 1 token/node):
+//!
+//! | WL  | halving S | doubling S | construction                          |
+//! |-----|-----------|------------|---------------------------------------|
+//! | WL1 | 0         | 1          | 4 keys uniform across halving ring, all on one doubling node |
+//! | WL2 | 0         | 0          | 4 keys uniform across both rings       |
+//! | WL3 | 1         | 1          | one key repeated 100×                  |
+//! | WL4 | 0.8       | (emergent) | loads (85,5,5,5) on the halving ring   |
+//! | WL5 | 0.2       | (emergent) | loads (40,20,20,20) on the halving ring|
+//!
+//! For WL4/WL5 the paper reports the *measured* doubling-layout skews
+//! (0.49 and 0.55); with our solver those values are emergent from the key
+//! choice and are reported as measured, not constructed.
+
+use std::collections::HashMap;
+
+use crate::hash::{Ring, Strategy};
+use crate::util::prng::Xoshiro256;
+
+use super::generators::key_pool;
+use super::Workload;
+
+/// Number of reducers fixed by the paper's evaluation.
+pub const PAPER_REDUCERS: usize = 4;
+/// Items per workload fixed by the paper's evaluation.
+pub const PAPER_ITEMS: usize = 100;
+/// Initial tokens per node for the halving method (a power of two, §4.2).
+pub const HALVING_INIT_TOKENS: u32 = 8;
+
+/// The two initial rings the workloads are constructed against.
+pub fn initial_rings() -> (Ring, Ring) {
+    (
+        Ring::for_strategy(PAPER_REDUCERS, Strategy::Halving, HALVING_INIT_TOKENS),
+        Ring::for_strategy(PAPER_REDUCERS, Strategy::Doubling, HALVING_INIT_TOKENS),
+    )
+}
+
+/// Group the key pool by `(halving_owner, doubling_owner)`.
+fn owner_index(ring_h: &Ring, ring_d: &Ring) -> HashMap<(usize, usize), Vec<String>> {
+    let mut idx: HashMap<(usize, usize), Vec<String>> = HashMap::new();
+    for k in key_pool() {
+        let h = ring_h.lookup(k.as_bytes());
+        let d = ring_d.lookup(k.as_bytes());
+        idx.entry((h, d)).or_default().push(k);
+    }
+    idx
+}
+
+/// Deterministically interleave per-key repetition counts into one stream
+/// so hot keys are spread through the input (round-robin by remaining
+/// count, seeded shuffle of ties).
+fn interleave(counts: &[(String, usize)], seed: u64) -> Vec<String> {
+    let mut remaining: Vec<(String, usize)> = counts.to_vec();
+    let mut rng = Xoshiro256::new(seed);
+    let total: usize = remaining.iter().map(|(_, c)| c).sum();
+    let mut out = Vec::with_capacity(total);
+    while out.len() < total {
+        // emit one pass over keys with remaining counts, in seeded order
+        let mut order: Vec<usize> = (0..remaining.len()).filter(|&i| remaining[i].1 > 0).collect();
+        rng.shuffle(&mut order);
+        for i in order {
+            if remaining[i].1 > 0 {
+                out.push(remaining[i].0.clone());
+                remaining[i].1 -= 1;
+            }
+        }
+    }
+    out
+}
+
+/// WL1 — skewless for halving (4 keys, one per halving node, 25 each) but
+/// perfectly skewed for doubling (all 4 keys on a single doubling node).
+pub fn wl1() -> Workload {
+    let (ring_h, ring_d) = initial_rings();
+    let idx = owner_index(&ring_h, &ring_d);
+    // find a doubling node that hosts keys covering all 4 halving nodes
+    for d in 0..PAPER_REDUCERS {
+        let mut pick: Vec<Option<&String>> = vec![None; PAPER_REDUCERS];
+        for h in 0..PAPER_REDUCERS {
+            if let Some(ks) = idx.get(&(h, d)) {
+                pick[h] = ks.first();
+            }
+        }
+        if pick.iter().all(Option::is_some) {
+            let counts: Vec<(String, usize)> = pick
+                .into_iter()
+                .map(|k| (k.unwrap().clone(), PAPER_ITEMS / PAPER_REDUCERS))
+                .collect();
+            return Workload::new("WL1", interleave(&counts, 0x571))
+                .with_description(format!(
+                    "S=0 halving / S=1 doubling: keys {:?} all on doubling node {d}",
+                    counts.iter().map(|(k, _)| k.clone()).collect::<Vec<_>>()
+                ));
+        }
+    }
+    panic!("WL1 solver: key pool cannot realize the WL1 spec (unexpected)");
+}
+
+/// WL2 — skewless for both methods: 4 keys whose halving owners are a
+/// permutation of nodes AND whose doubling owners are a permutation too.
+pub fn wl2() -> Workload {
+    let (ring_h, ring_d) = initial_rings();
+    let idx = owner_index(&ring_h, &ring_d);
+    // backtracking perfect matching: halving node h -> doubling node d
+    fn solve(
+        h: usize,
+        used_d: &mut [bool],
+        idx: &HashMap<(usize, usize), Vec<String>>,
+        picked: &mut Vec<String>,
+    ) -> bool {
+        if h == PAPER_REDUCERS {
+            return true;
+        }
+        for d in 0..PAPER_REDUCERS {
+            if used_d[d] {
+                continue;
+            }
+            if let Some(ks) = idx.get(&(h, d)) {
+                used_d[d] = true;
+                picked.push(ks[0].clone());
+                if solve(h + 1, used_d, idx, picked) {
+                    return true;
+                }
+                picked.pop();
+                used_d[d] = false;
+            }
+        }
+        false
+    }
+    let mut used_d = vec![false; PAPER_REDUCERS];
+    let mut picked = Vec::new();
+    assert!(
+        solve(0, &mut used_d, &idx, &mut picked),
+        "WL2 solver: no perfect matching in key pool (unexpected)"
+    );
+    let counts: Vec<(String, usize)> = picked
+        .into_iter()
+        .map(|k| (k, PAPER_ITEMS / PAPER_REDUCERS))
+        .collect();
+    Workload::new("WL2", interleave(&counts, 0x572)).with_description(format!(
+        "S=0 for both methods: keys {:?}",
+        counts.iter().map(|(k, _)| k.clone()).collect::<Vec<_>>()
+    ))
+}
+
+/// WL3 — the degenerate case: one key repeated 100 times (`S = 1` by
+/// design for both methods; no repartition can *split* a single key, at
+/// best it relocates mid-run).
+///
+/// Whether the key relocates after a redistribution is fully determined
+/// by the ring layout. The paper's run showed doubling relocating it
+/// (S dropped to 0.75); we therefore pick a key that one doubling event
+/// *would* move off its initial doubling-layout owner, so the same
+/// phenomenon is observable.
+pub fn wl3() -> Workload {
+    let (_, ring_d) = initial_rings();
+    let key = key_pool()
+        .into_iter()
+        .find(|k| {
+            let owner = ring_d.lookup(k.as_bytes());
+            let mut after = ring_d.clone();
+            after.double_others(owner);
+            after.lookup(k.as_bytes()) != owner
+        })
+        .unwrap_or_else(|| "a".to_string());
+    let counts = vec![(key.clone(), PAPER_ITEMS)];
+    Workload::new("WL3", interleave(&counts, 0x573))
+        .with_description(format!("S=1 by design: ['{key}'; 100]"))
+}
+
+/// Build a workload with target per-halving-node loads, using `spread`
+/// distinct keys on the hot node so LB can split it.
+///
+/// Key choice for the hot node is *doubling-aware*: among the pool keys
+/// owned by the hot halving-node, we prefer keys that (a) share one
+/// doubling-layout owner `d*` (so the doubling run's trigger targets a
+/// well-defined hot reducer) and (b) would relocate when
+/// `double_others(d*)` fires. The paper's WL4/WL5 are likewise *designed*
+/// sequences whose skew responds to both methods; which keys respond is a
+/// deterministic property of the hash ring, so we solve for it.
+fn targeted(name: &str, loads: [usize; 4], spread: usize, seed: u64) -> Workload {
+    let (ring_h, ring_d) = initial_rings();
+    // bucket pool keys by halving owner
+    let mut by_h: Vec<Vec<String>> = vec![Vec::new(); PAPER_REDUCERS];
+    for k in key_pool() {
+        by_h[ring_h.lookup(k.as_bytes())].push(k);
+    }
+    let hot = loads
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, &l)| l)
+        .unwrap()
+        .0;
+    // doubling-aware ordering of the hot node's candidates
+    let hot_candidates: Vec<String> = {
+        let cands = &by_h[hot];
+        // d* = doubling owner hosting the most candidates
+        let mut per_d: Vec<Vec<&String>> = vec![Vec::new(); PAPER_REDUCERS];
+        for k in cands {
+            per_d[ring_d.lookup(k.as_bytes())].push(k);
+        }
+        let d_star = (0..PAPER_REDUCERS)
+            .max_by_key(|&d| per_d[d].len())
+            .unwrap();
+        // destinations after one redistribution event per method: halving
+        // the hot halving-node / doubling around d*. A workload whose hot
+        // keys all land on ONE destination would merely migrate the
+        // bottleneck (the paper's own §4.2 caveat); the paper's designed
+        // workloads respond by *spreading*, so we greedily pick keys whose
+        // post-event destinations are diverse under both methods.
+        let mut after_d = ring_d.clone();
+        after_d.double_others(d_star);
+        let mut after_h = ring_h.clone();
+        after_h.halve(hot);
+        let mut remaining: Vec<&String> = per_d[d_star].clone();
+        let mut dest_h_count = vec![0usize; PAPER_REDUCERS];
+        let mut dest_d_count = vec![0usize; PAPER_REDUCERS];
+        let mut ordered: Vec<String> = Vec::new();
+        while !remaining.is_empty() {
+            let (best_idx, _) = remaining
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, k)| {
+                    let dh = after_h.lookup(k.as_bytes());
+                    let dd = after_d.lookup(k.as_bytes());
+                    // prefer unseen destinations; penalize "stays hot"
+                    dest_h_count[dh] * 2
+                        + dest_d_count[dd] * 2
+                        + usize::from(dh == hot)
+                        + usize::from(dd == d_star)
+                })
+                .unwrap();
+            let k = remaining.swap_remove(best_idx);
+            dest_h_count[after_h.lookup(k.as_bytes())] += 1;
+            dest_d_count[after_d.lookup(k.as_bytes())] += 1;
+            ordered.push(k.clone());
+        }
+        // backfill with keys from other doubling owners if d* runs dry
+        ordered.extend(
+            (0..PAPER_REDUCERS)
+                .filter(|&d| d != d_star)
+                .flat_map(|d| per_d[d].iter().map(|k| (*k).clone())),
+        );
+        ordered
+    };
+    let mut counts: Vec<(String, usize)> = Vec::new();
+    for (node, &load) in loads.iter().enumerate() {
+        if load == 0 {
+            continue;
+        }
+        let nkeys = if node == hot { spread } else { 2.min(load) };
+        let keys: &[String] = if node == hot { &hot_candidates } else { &by_h[node] };
+        assert!(
+            keys.len() >= nkeys,
+            "node {node} has only {} pool keys, wanted {nkeys}",
+            keys.len()
+        );
+        let base = load / nkeys;
+        let extra = load % nkeys;
+        for (i, k) in keys.iter().take(nkeys).enumerate() {
+            let c = base + usize::from(i < extra);
+            if c > 0 {
+                counts.push((k.clone(), c));
+            }
+        }
+    }
+    let total: usize = counts.iter().map(|(_, c)| c).sum();
+    assert_eq!(total, loads.iter().sum::<usize>());
+    Workload::new(name, interleave(&counts, seed)).with_description(format!(
+        "halving-node loads {loads:?} via {} distinct keys",
+        counts.len()
+    ))
+}
+
+/// WL4 — heavily skewed: halving-ring loads (85, 5, 5, 5) ⇒ `S = 0.8` for
+/// halving; the doubling-layout skew is emergent (paper measured 0.49).
+pub fn wl4() -> Workload {
+    targeted("WL4", [85, 5, 5, 5], 5, 0x574)
+}
+
+/// WL5 — mildly skewed: halving-ring loads (40, 20, 20, 20) ⇒ `S = 0.2`
+/// for halving; doubling-layout skew emergent (paper measured 0.55).
+pub fn wl5() -> Workload {
+    targeted("WL5", [40, 20, 20, 20], 4, 0x575)
+}
+
+/// All five paper workloads, in order.
+pub fn all() -> Vec<Workload> {
+    vec![wl1(), wl2(), wl3(), wl4(), wl5()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wl1_spec() {
+        let w = wl1();
+        let (rh, rd) = initial_rings();
+        assert_eq!(w.len(), PAPER_ITEMS);
+        assert_eq!(w.static_skew(&rh), 0.0, "halving no-LB skew");
+        assert_eq!(w.static_skew(&rd), 1.0, "doubling no-LB skew");
+        assert_eq!(w.distinct_keys().len(), 4);
+    }
+
+    #[test]
+    fn wl2_spec() {
+        let w = wl2();
+        let (rh, rd) = initial_rings();
+        assert_eq!(w.len(), PAPER_ITEMS);
+        assert_eq!(w.static_skew(&rh), 0.0);
+        assert_eq!(w.static_skew(&rd), 0.0);
+    }
+
+    #[test]
+    fn wl3_spec() {
+        let w = wl3();
+        let (rh, rd) = initial_rings();
+        assert_eq!(w.len(), PAPER_ITEMS);
+        assert_eq!(w.static_skew(&rh), 1.0);
+        assert_eq!(w.static_skew(&rd), 1.0);
+        assert_eq!(w.distinct_keys().len(), 1);
+    }
+
+    #[test]
+    fn wl4_spec() {
+        let w = wl4();
+        let (rh, _) = initial_rings();
+        let s = w.static_skew(&rh);
+        assert!((s - 0.8).abs() < 1e-12, "S = {s}");
+        // multiple distinct hot keys so LB can actually help
+        assert!(w.distinct_keys().len() >= 8);
+    }
+
+    #[test]
+    fn wl5_spec() {
+        let w = wl5();
+        let (rh, _) = initial_rings();
+        let s = w.static_skew(&rh);
+        assert!((s - 0.2).abs() < 1e-12, "S = {s}");
+    }
+
+    #[test]
+    fn wl4_wl5_doubling_layout_is_skewed() {
+        // not pinned by construction, but the heavy workloads should show
+        // nonzero doubling-layout skew for Table 1 to be interesting
+        let (_, rd) = initial_rings();
+        assert!(wl4().static_skew(&rd) > 0.05);
+        assert!(wl5().static_skew(&rd) > 0.05);
+    }
+
+    #[test]
+    fn workloads_are_deterministic() {
+        assert_eq!(wl1().items, wl1().items);
+        assert_eq!(wl4().items, wl4().items);
+    }
+
+    #[test]
+    fn all_returns_five() {
+        let ws = all();
+        assert_eq!(ws.len(), 5);
+        for w in &ws {
+            assert_eq!(w.len(), PAPER_ITEMS);
+        }
+    }
+}

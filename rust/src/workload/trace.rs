@@ -1,0 +1,90 @@
+//! Workload trace I/O: persist a workload as a plain text file (one key
+//! per line, `#` comments) so experiments can be replayed byte-for-byte
+//! and external traces can be fed to the pipeline.
+
+use std::fs;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Context;
+
+use super::Workload;
+
+/// Save a workload to `path`.
+pub fn save(w: &Workload, path: &Path) -> crate::Result<()> {
+    let mut f = fs::File::create(path)
+        .with_context(|| format!("creating trace file {}", path.display()))?;
+    writeln!(f, "# workload: {}", w.name)?;
+    if !w.description.is_empty() {
+        writeln!(f, "# {}", w.description)?;
+    }
+    for item in &w.items {
+        writeln!(f, "{item}")?;
+    }
+    Ok(())
+}
+
+/// Load a workload from `path`. The name is taken from a
+/// `# workload: <name>` header if present, else the file stem.
+pub fn load(path: &Path) -> crate::Result<Workload> {
+    let text = fs::read_to_string(path)
+        .with_context(|| format!("reading trace file {}", path.display()))?;
+    let mut name: Option<String> = None;
+    let mut items = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('#') {
+            let rest = rest.trim();
+            if let Some(n) = rest.strip_prefix("workload:") {
+                name = Some(n.trim().to_string());
+            }
+            continue;
+        }
+        items.push(line.to_string());
+    }
+    let name = name.unwrap_or_else(|| {
+        path.file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "trace".into())
+    });
+    Ok(Workload::new(name, items))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip() {
+        let dir = std::env::temp_dir().join("dpa-trace-test");
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("wl.txt");
+        let w = Workload::new("roundtrip", vec!["a".into(), "bb".into(), "a".into()])
+            .with_description("test");
+        save(&w, &path).unwrap();
+        let r = load(&path).unwrap();
+        assert_eq!(r.name, "roundtrip");
+        assert_eq!(r.items, w.items);
+        fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn load_missing_file_errors() {
+        assert!(load(Path::new("/nonexistent/definitely/not.txt")).is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_skipped() {
+        let dir = std::env::temp_dir().join("dpa-trace-test2");
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("wl2.txt");
+        fs::write(&path, "# comment\n\nx\n# another\ny\n").unwrap();
+        let r = load(&path).unwrap();
+        assert_eq!(r.items, vec!["x".to_string(), "y".to_string()]);
+        assert_eq!(r.name, "wl2");
+        fs::remove_file(&path).unwrap();
+    }
+}

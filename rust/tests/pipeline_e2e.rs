@@ -1,0 +1,196 @@
+//! End-to-end pipeline correctness across drivers, strategies, executors
+//! and consistency modes: the result must always equal the serial oracle,
+//! every mapped record must be reduced exactly once, and the system must
+//! terminate.
+
+use std::collections::HashMap;
+
+use dpa::balancer::state_forward::ConsistencyMode;
+use dpa::exec::builtin::TopK;
+use dpa::hash::Strategy;
+use dpa::metrics::RunReport;
+use dpa::pipeline::{DriverKind, ExecutorKind, Pipeline, PipelineConfig};
+use dpa::workload::{corpus, generators, paperwl};
+
+fn wordcount_oracle(items: &[String]) -> Vec<(String, i64)> {
+    let mut m: HashMap<String, i64> = HashMap::new();
+    for i in items {
+        *m.entry(i.clone()).or_insert(0) += 1;
+    }
+    let mut v: Vec<(String, i64)> = m.into_iter().collect();
+    v.sort();
+    v
+}
+
+fn check(report: &RunReport, items: &[String]) {
+    report.check_conservation().expect("conservation");
+    assert_eq!(report.result, wordcount_oracle(items), "result == oracle");
+}
+
+#[test]
+fn every_paper_workload_correct_under_every_strategy_sim() {
+    for w in paperwl::all() {
+        for strategy in Strategy::all() {
+            for seed in [0u64, 1, 2] {
+                let mut cfg = PipelineConfig::default();
+                cfg.strategy = strategy;
+                cfg.initial_tokens = Some(strategy.initial_tokens(8));
+                cfg.seed = seed;
+                cfg.max_rounds = 2;
+                let r = Pipeline::wordcount(cfg).run(w.items.clone()).unwrap();
+                check(&r, &w.items);
+            }
+        }
+    }
+}
+
+#[test]
+fn threads_driver_correct_under_lb() {
+    for strategy in [Strategy::Halving, Strategy::Doubling] {
+        let w = paperwl::wl4();
+        let mut cfg = PipelineConfig::default();
+        cfg.driver = DriverKind::Threads;
+        cfg.strategy = strategy;
+        cfg.initial_tokens = Some(strategy.initial_tokens(8));
+        cfg.reduce_delay_us = 300;
+        let r = Pipeline::wordcount(cfg).run(w.items.clone()).unwrap();
+        check(&r, &w.items);
+        assert!(r.wall > std::time::Duration::ZERO);
+    }
+}
+
+#[test]
+fn large_zipf_stream_sim() {
+    let w = generators::zipf(5000, 300, 1.1, 3);
+    let mut cfg = PipelineConfig::default();
+    cfg.strategy = Strategy::Doubling;
+    cfg.initial_tokens = Some(1);
+    cfg.max_rounds = 3;
+    let r = Pipeline::wordcount(cfg).run(w.items.clone()).unwrap();
+    check(&r, &w.items);
+    assert_eq!(r.total_processed(), 5000);
+}
+
+#[test]
+fn corpus_pipeline_tokenizing_mapper() {
+    // lines in, words counted: map emits multiple records per item
+    let text = corpus::generate(2000, 1.0, 5);
+    let lines: Vec<String> = text.lines().map(str::to_string).collect();
+    let words: Vec<String> = text.split_whitespace().map(str::to_string).collect();
+    let mut cfg = PipelineConfig::default();
+    cfg.strategy = Strategy::Doubling;
+    cfg.initial_tokens = Some(1);
+    let p = Pipeline::builtin(cfg, ExecutorKind::TokenizedWordCount);
+    let r = p.run(lines).unwrap();
+    assert_eq!(r.result, wordcount_oracle(&words));
+    assert_eq!(r.total_processed(), 2000);
+}
+
+#[test]
+fn keyed_sum_executor() {
+    let items: Vec<String> = (0..100).map(|i| format!("k{}:{}", i % 5, i)).collect();
+    let cfg = PipelineConfig::default();
+    let r = Pipeline::builtin(cfg, ExecutorKind::KeyedSum).run(items).unwrap();
+    // sum over i of each residue class
+    let mut expect: Vec<(String, i64)> = (0..5)
+        .map(|k| {
+            let s: i64 = (0..100).filter(|i| i % 5 == k).sum();
+            (format!("k{k}"), s)
+        })
+        .collect();
+    expect.sort();
+    assert_eq!(r.result, expect);
+}
+
+#[test]
+fn distinct_executor() {
+    let items: Vec<String> = (0..100).map(|i| format!("d{}", i % 7)).collect();
+    let cfg = PipelineConfig::default();
+    let r = Pipeline::builtin(cfg, ExecutorKind::Distinct).run(items).unwrap();
+    assert_eq!(r.result.len(), 7);
+    assert!(r.result.iter().all(|(_, v)| *v == 1));
+}
+
+#[test]
+fn topk_post_selection() {
+    let mut items = vec!["hot".to_string(); 50];
+    items.extend((0..50).map(|i| format!("cold{i}")));
+    let cfg = PipelineConfig::default();
+    let r = Pipeline::builtin(cfg, ExecutorKind::TopK(3)).run(items).unwrap();
+    let top = TopK::top(&r.result, 3);
+    assert_eq!(top[0], ("hot".to_string(), 50));
+    assert_eq!(top.len(), 3);
+}
+
+#[test]
+fn state_forwarding_equals_merge_at_end() {
+    // the two consistency modes must produce identical results
+    for w in [paperwl::wl1(), paperwl::wl4()] {
+        let mut base = PipelineConfig::default();
+        base.strategy = Strategy::Doubling;
+        base.initial_tokens = Some(1);
+        base.max_rounds = 2;
+
+        let mut sf = base.clone();
+        sf.mode = ConsistencyMode::StateForward;
+
+        let a = Pipeline::wordcount(base).run(w.items.clone()).unwrap();
+        let b = Pipeline::wordcount(sf).run(w.items.clone()).unwrap();
+        assert_eq!(a.result, b.result, "{}", w.name);
+        check(&b, &w.items);
+    }
+}
+
+#[test]
+fn sim_runs_are_deterministic_threads_are_correct_anyway() {
+    let w = paperwl::wl4();
+    let mut cfg = PipelineConfig::default();
+    cfg.strategy = Strategy::Halving;
+    let p = Pipeline::wordcount(cfg);
+    let a = p.run(w.items.clone()).unwrap();
+    let b = p.run(w.items.clone()).unwrap();
+    assert_eq!(a.processed, b.processed);
+    assert_eq!(a.virtual_end, b.virtual_end);
+    assert_eq!(
+        a.lb_events.iter().map(|e| (e.at, e.target)).collect::<Vec<_>>(),
+        b.lb_events.iter().map(|e| (e.at, e.target)).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn seed_sweep_reports_variance() {
+    let w = paperwl::wl4();
+    let mut cfg = PipelineConfig::default();
+    cfg.strategy = Strategy::Doubling;
+    cfg.initial_tokens = Some(1);
+    let p = Pipeline::wordcount(cfg);
+    let reports = p.run_seeds(&w.items, &[0, 1, 2]).unwrap();
+    assert_eq!(reports.len(), 3);
+    for r in &reports {
+        check(r, &w.items);
+    }
+}
+
+#[test]
+fn single_mapper_single_reducer_degenerate() {
+    let mut cfg = PipelineConfig::default();
+    cfg.mappers = 1;
+    cfg.reducers = 1;
+    let items: Vec<String> = (0..50).map(|i| format!("x{i}")).collect();
+    let r = Pipeline::wordcount(cfg).run(items.clone()).unwrap();
+    check(&r, &items);
+    assert_eq!(r.skew(), 0.0, "one reducer cannot be skewed");
+}
+
+#[test]
+fn many_reducers_sim() {
+    let mut cfg = PipelineConfig::default();
+    cfg.reducers = 16;
+    cfg.mappers = 8;
+    cfg.strategy = Strategy::Doubling;
+    cfg.initial_tokens = Some(1);
+    let w = generators::zipf(2000, 100, 1.3, 11);
+    let r = Pipeline::wordcount(cfg).run(w.items.clone()).unwrap();
+    check(&r, &w.items);
+    assert_eq!(r.processed.len(), 16);
+}

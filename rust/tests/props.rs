@@ -1,0 +1,258 @@
+//! Property-based tests (via the in-crate testkit) over the system's core
+//! invariants: ring behaviour under arbitrary redistribution sequences,
+//! skew-metric bounds, policy trigger semantics, queue conservation, and
+//! whole-pipeline correctness on random workloads.
+
+use dpa::balancer::policy::{LbPolicy, ThresholdPolicy};
+use dpa::hash::{murmur3_x86_32, Ring, Strategy};
+use dpa::metrics::skew;
+use dpa::pipeline::{Pipeline, PipelineConfig};
+use dpa::prop_assert;
+use dpa::testkit::{forall, Gen};
+use dpa::util::ceil_div;
+
+/// Apply a random sequence of redistributions/node-adds to a ring.
+fn random_ring(g: &mut Gen) -> Ring {
+    let nodes = g.usize_in(2, 8);
+    let tokens = 1 << g.usize_in(0, 4);
+    let mut ring = Ring::new(nodes, tokens as u32);
+    let ops = g.usize_in(0, 12);
+    for _ in 0..ops {
+        let node = g.usize_in(0, ring.nodes() - 1);
+        match g.usize_in(0, 9) {
+            0..=4 => {
+                ring.halve(node);
+            }
+            5..=8 => {
+                ring.double_others(node);
+            }
+            _ => {
+                if ring.nodes() < 12 {
+                    ring.add_node(1 + g.usize_in(0, 7) as u32);
+                }
+            }
+        }
+    }
+    ring
+}
+
+#[test]
+fn prop_ring_lookup_matches_linear_oracle() {
+    forall("ring lookup == linear scan", 60, |g| {
+        let ring = random_ring(g);
+        for _ in 0..50 {
+            let h = g.u32();
+            prop_assert!(
+                ring.lookup_hash(h) == ring.lookup_hash_linear(h),
+                "hash {h:#x} on ring with {} tokens",
+                ring.total_tokens()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_every_key_maps_to_live_node() {
+    forall("lookup returns a live node", 60, |g| {
+        let ring = random_ring(g);
+        let nodes = ring.nodes();
+        for _ in 0..30 {
+            let key = g.string(24);
+            let owner = ring.lookup(key.as_bytes());
+            prop_assert!(owner < nodes, "owner {owner} of '{key}' out of range");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_halving_never_moves_other_nodes_keys() {
+    forall("halving only sheds the target's keys", 40, |g| {
+        let mut ring = random_ring(g);
+        let keys: Vec<String> = (0..60).map(|_| g.string(16)).collect();
+        let before: Vec<usize> = keys.iter().map(|k| ring.lookup(k.as_bytes())).collect();
+        let target = g.usize_in(0, ring.nodes() - 1);
+        if !ring.halve(target) {
+            return Ok(()); // single token, nothing changed
+        }
+        for (k, &owner) in keys.iter().zip(&before) {
+            if owner != target {
+                prop_assert!(
+                    ring.lookup(k.as_bytes()) == owner,
+                    "'{k}' moved off untouched node {owner}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_doubling_preserves_target_tokens() {
+    forall("doubling leaves the target alone", 40, |g| {
+        let mut ring = random_ring(g);
+        let target = g.usize_in(0, ring.nodes() - 1);
+        let before: Vec<u32> = (0..ring.nodes()).map(|n| ring.tokens_of(n)).collect();
+        ring.double_others(target);
+        prop_assert!(
+            ring.tokens_of(target) == before[target],
+            "target token count changed"
+        );
+        for n in 0..ring.nodes() {
+            if n != target {
+                let expect = (before[n] * 2).min(dpa::hash::ring::MAX_TOKENS_PER_NODE);
+                prop_assert!(
+                    ring.tokens_of(n) == expect,
+                    "node {n}: {} != {expect}",
+                    ring.tokens_of(n)
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_arc_fractions_always_sum_to_one() {
+    forall("arc fractions partition the ring", 40, |g| {
+        let ring = random_ring(g);
+        let total: f64 = (0..ring.nodes()).map(|n| ring.arc_fraction(n)).sum();
+        prop_assert!((total - 1.0).abs() < 1e-9, "sum {total}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_murmur3_incremental_byte_change_changes_hash() {
+    // not a cryptographic property — just detects packing/indexing bugs
+    // where some byte positions are ignored
+    forall("every byte position affects the hash", 40, |g| {
+        let mut bytes = g.bytes(31);
+        bytes.push(g.u32() as u8);
+        let h0 = murmur3_x86_32(&bytes);
+        let pos = g.usize_in(0, bytes.len() - 1);
+        let old = bytes[pos];
+        bytes[pos] = old.wrapping_add(1 + (g.u32() % 255) as u8);
+        if bytes[pos] == old {
+            return Ok(());
+        }
+        prop_assert!(
+            murmur3_x86_32(&bytes) != h0,
+            "flipping byte {pos} of {} did not change the hash",
+            bytes.len()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_skew_bounds_and_extremes() {
+    forall("S in [0,1], 0 iff uniform-ish, 1 iff single", 100, |g| {
+        let r = g.usize_in(2, 12);
+        let loads: Vec<u64> = (0..r).map(|_| g.usize_in(0, 200) as u64).collect();
+        let s = skew(&loads);
+        prop_assert!((0.0..=1.0).contains(&s), "S = {s} for {loads:?}");
+        let m: u64 = loads.iter().sum();
+        if m > 1 {
+            // all on one reducer -> 1
+            let mut single = vec![0u64; r];
+            single[0] = m;
+            prop_assert!(skew(&single) == 1.0, "single-reducer S != 1");
+            // perfectly uniform and divisible -> 0
+            if m % r as u64 == 0 {
+                let uniform = vec![m / r as u64; r];
+                prop_assert!(skew(&uniform) == 0.0, "uniform S != 0");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_policy_fires_iff_eq1() {
+    forall("ThresholdPolicy == literal Eq.1", 100, |g| {
+        let tau = g.f64() * 2.0;
+        let policy = ThresholdPolicy::new(tau, 1);
+        let n = g.usize_in(2, 8);
+        let qlens: Vec<usize> = (0..n).map(|_| g.usize_in(0, 100)).collect();
+        // literal Eq. 1
+        let mut sorted = qlens.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        let (qmax, qs) = (sorted[0] as f64, sorted[1] as f64);
+        let fires = policy.pick_target(&qlens).is_some();
+        let should = qmax >= 1.0 && qmax > qs * (1.0 + tau);
+        prop_assert!(
+            fires == should,
+            "qlens {qlens:?} τ={tau:.3}: fires={fires} eq1={should}"
+        );
+        if let Some(t) = policy.pick_target(&qlens) {
+            prop_assert!(
+                qlens[t] == sorted[0],
+                "target {t} is not an argmax of {qlens:?}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ceil_div() {
+    forall("ceil_div is ceiling division", 200, |g| {
+        let a = g.u64() % 1_000_000;
+        let b = 1 + g.u64() % 1_000;
+        let c = ceil_div(a, b);
+        prop_assert!(c * b >= a, "{c}*{b} < {a}");
+        prop_assert!(c == 0 || (c - 1) * b < a, "not minimal");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pipeline_correct_on_random_workloads() {
+    forall("pipeline == serial oracle on random input", 12, |g| {
+        let n = g.usize_in(1, 300);
+        let keyspace = g.usize_in(1, 40);
+        let items: Vec<String> = (0..n)
+            .map(|_| format!("k{}", g.usize_in(0, keyspace)))
+            .collect();
+        let strategy = *[Strategy::None, Strategy::Halving, Strategy::Doubling]
+            .iter()
+            .nth(g.usize_in(0, 2))
+            .unwrap();
+        let mut cfg = PipelineConfig::default();
+        cfg.strategy = strategy;
+        cfg.initial_tokens = Some(strategy.initial_tokens(8));
+        cfg.seed = g.u64();
+        cfg.max_rounds = 1 + g.usize_in(0, 3) as u32;
+        let r = Pipeline::wordcount(cfg)
+            .run(items.clone())
+            .map_err(|e| format!("pipeline error: {e}"))?;
+        r.check_conservation()?;
+        let mut oracle = std::collections::HashMap::new();
+        for i in &items {
+            *oracle.entry(i.clone()).or_insert(0i64) += 1;
+        }
+        let mut expect: Vec<(String, i64)> = oracle.into_iter().collect();
+        expect.sort();
+        prop_assert!(r.result == expect, "result mismatch on {n} items");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_workload_generators_conserve_length() {
+    forall("generators emit requested item counts", 30, |g| {
+        let n = g.usize_in(0, 500);
+        let seed = g.u64();
+        prop_assert!(
+            dpa::workload::generators::uniform(n, 50, seed).len() == n,
+            "uniform"
+        );
+        prop_assert!(
+            dpa::workload::generators::zipf(n, 50, 1.1, seed).len() == n,
+            "zipf"
+        );
+        Ok(())
+    });
+}

@@ -1,0 +1,236 @@
+//! Cross-layer parity: the rust-native data plane (murmur3, ring lookup,
+//! wordcount) must agree bit-for-bit / count-for-count with the
+//! AOT-compiled XLA programs executed through PJRT.
+//!
+//! Requires `make artifacts`. The whole file is one `#[test]` family over
+//! a shared `Runtime` (compilation is the expensive part).
+
+use std::sync::Arc;
+
+use dpa::exec::builtin::{IdentityMap, WordCount};
+use dpa::exec::xla::{xla_wordcount_factory, Interner, XlaWordCount};
+use dpa::exec::{Record, ReduceExecutor};
+use dpa::hash::{murmur3_x86_32, Ring, Strategy};
+use dpa::pipeline::{Pipeline, PipelineConfig};
+use dpa::runtime::programs::SharedRuntime;
+use dpa::util::prng::Xoshiro256;
+
+fn runtime() -> Arc<SharedRuntime> {
+    SharedRuntime::load_default().expect("artifacts missing — run `make artifacts` first")
+}
+
+fn random_keys(n: usize, max_len: usize, seed: u64) -> Vec<Vec<u8>> {
+    let mut rng = Xoshiro256::new(seed);
+    (0..n)
+        .map(|_| {
+            let len = rng.index(max_len + 1);
+            (0..len).map(|_| rng.next_u64() as u8).collect()
+        })
+        .collect()
+}
+
+#[test]
+fn murmur3_parity_rust_vs_xla() {
+    let rt = runtime();
+    // fixed vectors + random byte strings across every length 0..=32
+    let mut keys: Vec<Vec<u8>> = vec![
+        b"".to_vec(),
+        b"a".to_vec(),
+        b"abc".to_vec(),
+        b"test".to_vec(),
+        b"hello".to_vec(),
+        b"Hello, world!".to_vec(),
+    ];
+    for len in 0..=32usize {
+        keys.push((0..len).map(|i| (i * 7 + len) as u8).collect());
+    }
+    keys.extend(random_keys(700, 32, 0xA11CE));
+    let refs: Vec<&[u8]> = keys.iter().map(Vec::as_slice).collect();
+    let got = rt.hash_batch(&refs).unwrap();
+    for (k, h) in keys.iter().zip(&got) {
+        assert_eq!(*h, murmur3_x86_32(k), "key {k:?}");
+    }
+}
+
+#[test]
+fn route_parity_rust_vs_xla_across_repartitions() {
+    let rt = runtime();
+    let keys = random_keys(300, 24, 0xB0B);
+    let refs: Vec<&[u8]> = keys.iter().map(Vec::as_slice).collect();
+
+    // exercise initial layouts AND post-redistribution rings
+    let mut rings = vec![Ring::new(4, 8), Ring::new(4, 1), Ring::new(7, 3)];
+    let mut r = Ring::new(4, 8);
+    r.halve(2);
+    r.halve(2);
+    rings.push(r);
+    let mut r = Ring::new(4, 1);
+    r.double_others(0);
+    r.double_others(1);
+    rings.push(r);
+
+    for ring in &rings {
+        let routed = rt.route_batch(&refs, ring).unwrap();
+        for (k, (h, owner)) in keys.iter().zip(&routed) {
+            assert_eq!(*h, murmur3_x86_32(k));
+            assert_eq!(
+                *owner,
+                ring.lookup(k),
+                "key {k:?} disagrees on ring with {} tokens",
+                ring.total_tokens()
+            );
+        }
+    }
+}
+
+#[test]
+fn oversized_keys_fall_back_to_native() {
+    let rt = runtime();
+    let long = vec![b'x'; 100];
+    let keys: Vec<&[u8]> = vec![b"short", long.as_slice()];
+    let got = rt.hash_batch(&keys).unwrap();
+    assert_eq!(got[0], murmur3_x86_32(b"short"));
+    assert_eq!(got[1], murmur3_x86_32(&long));
+}
+
+#[test]
+fn reduce_count_parity_with_hashmap() {
+    let rt = runtime();
+    let v = rt.manifest().v;
+    let mut rng = Xoshiro256::new(42);
+    let mut counts = vec![0u32; v];
+    let mut oracle = std::collections::HashMap::new();
+    for _ in 0..5 {
+        let ids: Vec<i32> = (0..200).map(|_| rng.index(500) as i32).collect();
+        for &id in &ids {
+            *oracle.entry(id).or_insert(0u32) += 1;
+        }
+        counts = rt.reduce_counts(&counts, &ids).unwrap();
+    }
+    for (id, expect) in oracle {
+        assert_eq!(counts[id as usize], expect, "id {id}");
+    }
+    assert_eq!(
+        counts.iter().map(|&c| c as u64).sum::<u64>(),
+        1000,
+        "total records conserved"
+    );
+}
+
+#[test]
+fn merge_state_is_elementwise_add() {
+    let rt = runtime();
+    let v = rt.manifest().v;
+    let mut rng = Xoshiro256::new(9);
+    let a: Vec<u32> = (0..v).map(|_| rng.index(1000) as u32).collect();
+    let b: Vec<u32> = (0..v).map(|_| rng.index(1000) as u32).collect();
+    let merged = rt.merge_states(&a, &b).unwrap();
+    for i in 0..v {
+        assert_eq!(merged[i], a[i] + b[i]);
+    }
+}
+
+#[test]
+fn xla_wordcount_executor_matches_native() {
+    let rt = runtime();
+    let interner = Arc::new(Interner::new(rt.manifest().v));
+    let mut xla = XlaWordCount::new(rt.clone(), interner);
+    let mut native = WordCount::new();
+    let mut rng = Xoshiro256::new(7);
+    let pool = dpa::workload::generators::key_pool();
+    for _ in 0..2000 {
+        let key = pool[rng.index(100)].clone();
+        xla.reduce(Record::new(key.clone(), 1));
+        native.reduce(Record::new(key, 1));
+    }
+    assert_eq!(xla.snapshot(), native.snapshot());
+    assert!(xla.dense_records > 0);
+    assert_eq!(xla.spill_records, 0);
+}
+
+#[test]
+fn xla_wordcount_extract_key_works() {
+    let rt = runtime();
+    let interner = Arc::new(Interner::new(rt.manifest().v));
+    let mut xla = XlaWordCount::new(rt, interner);
+    for _ in 0..5 {
+        xla.reduce(Record::new("foo", 1));
+    }
+    xla.reduce(Record::new("bar", 1));
+    assert_eq!(xla.extract_key("foo"), Some(5));
+    assert_eq!(xla.extract_key("foo"), None);
+    assert_eq!(xla.snapshot(), vec![("bar".to_string(), 1)]);
+}
+
+#[test]
+fn xla_wordcount_spill_lane_for_nonunit_values() {
+    let rt = runtime();
+    let interner = Arc::new(Interner::new(rt.manifest().v));
+    let mut xla = XlaWordCount::new(rt, interner);
+    xla.reduce(Record::new("k", 10)); // non-unit -> spill
+    xla.reduce(Record::new("k", 1)); // dense
+    assert_eq!(xla.snapshot(), vec![("k".to_string(), 11)]);
+    assert_eq!(xla.spill_records, 1);
+    assert_eq!(xla.dense_records, 1);
+}
+
+#[test]
+fn xla_dense_merge_runs_merge_program() {
+    let rt = runtime();
+    let interner = Arc::new(Interner::new(rt.manifest().v));
+    let mut a = XlaWordCount::new(rt.clone(), interner.clone());
+    let mut b = XlaWordCount::new(rt, interner);
+    for _ in 0..3 {
+        a.reduce(Record::new("foo", 1));
+    }
+    for _ in 0..4 {
+        b.reduce(Record::new("foo", 1));
+        b.reduce(Record::new("bar", 1));
+    }
+    let b_state = b.dense_state();
+    a.merge_dense_from(&b_state).unwrap();
+    let snap = a.snapshot();
+    assert_eq!(
+        snap,
+        vec![("bar".to_string(), 4), ("foo".to_string(), 7)],
+        "paper's state-merge example: counts add"
+    );
+}
+
+#[test]
+fn full_pipeline_on_xla_executors_sim_driver() {
+    let rt = runtime();
+    let factory = xla_wordcount_factory(rt);
+    let mut cfg = PipelineConfig::default();
+    cfg.strategy = Strategy::Doubling;
+    let w = dpa::workload::paperwl::wl1();
+    let pipeline = Pipeline::new(cfg, Arc::new(IdentityMap), factory);
+    let report = pipeline.run(w.items.clone()).unwrap();
+    // oracle
+    let mut oracle = std::collections::HashMap::new();
+    for i in &w.items {
+        *oracle.entry(i.clone()).or_insert(0i64) += 1;
+    }
+    let mut expect: Vec<(String, i64)> = oracle.into_iter().collect();
+    expect.sort();
+    assert_eq!(report.result, expect);
+    assert!(report.check_conservation().is_ok());
+}
+
+#[test]
+fn full_pipeline_on_xla_executors_thread_driver() {
+    let rt = runtime();
+    let factory = xla_wordcount_factory(rt);
+    let mut cfg = PipelineConfig::default();
+    cfg.driver = dpa::pipeline::DriverKind::Threads;
+    cfg.strategy = Strategy::Doubling;
+    cfg.reduce_delay_us = 0; // XLA batch execution is the cost
+    let items: Vec<String> = (0..600).map(|i| format!("w{}", i % 17)).collect();
+    let pipeline = Pipeline::new(cfg, Arc::new(IdentityMap), factory);
+    let report = pipeline.run(items).unwrap();
+    assert_eq!(report.total_processed(), 600);
+    assert_eq!(report.result.len(), 17);
+    for (_, c) in &report.result {
+        assert!(*c == 35 || *c == 36, "count {c}");
+    }
+}
