@@ -6,6 +6,7 @@
 //! cargo bench --bench pipeline
 //! ```
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use dpa::benchkit::{black_box, Bench};
@@ -29,7 +30,8 @@ fn main() {
     });
 
     // --- sim driver ------------------------------------------------------
-    let w = generators::zipf(10_000, 300, 1.2, 5);
+    // inputs are Arc-shared: re-running a pipeline costs zero input copies
+    let items: Arc<[String]> = generators::zipf(10_000, 300, 1.2, 5).items.into();
     for strategy in [Strategy::None, Strategy::Doubling] {
         let mut cfg = PipelineConfig::default();
         cfg.strategy = strategy;
@@ -38,12 +40,12 @@ fn main() {
         let p = Pipeline::wordcount(cfg);
         let name = format!("sim 10k items ({strategy})");
         bench.run(&name, Some(10_000), || {
-            black_box(p.run(w.items.clone()).unwrap());
+            black_box(p.run(items.clone()).unwrap());
         });
     }
 
     // --- threads driver: scaling in reducers ------------------------------
-    let w = generators::zipf(20_000, 300, 1.2, 6);
+    let items: Arc<[String]> = generators::zipf(20_000, 300, 1.2, 6).items.into();
     for reducers in [2usize, 4, 8] {
         let mut cfg = PipelineConfig::default();
         cfg.driver = DriverKind::Threads;
@@ -55,12 +57,35 @@ fn main() {
         let p = Pipeline::wordcount(cfg);
         let name = format!("threads 20k items, {reducers} reducers");
         bench.run(&name, Some(20_000), || {
-            black_box(p.run(w.items.clone()).unwrap());
+            black_box(p.run(items.clone()).unwrap());
+        });
+    }
+
+    // --- threads driver: report-heavy regime ------------------------------
+    // report_interval=1 sends a load report for every handled message —
+    // the worst case for the old Mutex<BalancerCore> design, now a
+    // lock-free channel drained by a dedicated balancer thread. Compare
+    // against the interval=2 default runs above: throughput must not
+    // regress when reporting saturates.
+    let items: Arc<[String]> = generators::zipf(20_000, 300, 1.2, 6).items.into();
+    for interval in [1u64, 2] {
+        let mut cfg = PipelineConfig::default();
+        cfg.driver = DriverKind::Threads;
+        cfg.reducers = 4;
+        cfg.mappers = 4;
+        cfg.strategy = Strategy::Doubling;
+        cfg.initial_tokens = Some(1);
+        cfg.reduce_delay_us = 0;
+        cfg.report_interval = interval;
+        let p = Pipeline::wordcount(cfg);
+        let name = format!("threads 20k items, report_interval={interval}");
+        bench.run(&name, Some(20_000), || {
+            black_box(p.run(items.clone()).unwrap());
         });
     }
 
     // --- threads driver: compute-heavy regime (the paper's target) --------
-    let w = generators::zipf(2_000, 300, 1.2, 7);
+    let items: Arc<[String]> = generators::zipf(2_000, 300, 1.2, 7).items.into();
     for (label, delay) in [("5µs", 5u64), ("50µs", 50)] {
         let mut cfg = PipelineConfig::default();
         cfg.driver = DriverKind::Threads;
@@ -70,12 +95,12 @@ fn main() {
         let p = Pipeline::wordcount(cfg);
         let name = format!("threads 2k items, reduce={label}");
         bench.run(&name, Some(2_000), || {
-            black_box(p.run(w.items.clone()).unwrap());
+            black_box(p.run(items.clone()).unwrap());
         });
     }
 
     // --- chunk-size ablation ----------------------------------------------
-    let w = generators::zipf(10_000, 300, 1.2, 8);
+    let items: Arc<[String]> = generators::zipf(10_000, 300, 1.2, 8).items.into();
     for chunk in [1usize, 10, 100] {
         let mut cfg = PipelineConfig::default();
         cfg.driver = DriverKind::Threads;
@@ -84,7 +109,7 @@ fn main() {
         let p = Pipeline::wordcount(cfg);
         let name = format!("threads 10k items, chunk={chunk}");
         bench.run(&name, Some(10_000), || {
-            black_box(p.run(w.items.clone()).unwrap());
+            black_box(p.run(items.clone()).unwrap());
         });
     }
 

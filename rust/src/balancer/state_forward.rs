@@ -20,10 +20,14 @@
 //! [`StageTracker`] implements the stage machinery: it counts outstanding
 //! state transfers for the current ring epoch and tells reducers whether
 //! the pipeline is `Synchronizing` (substage 1) or `Synchronized`
-//! (substage 2). The deterministic sim driver wires it in when
-//! [`ConsistencyMode::StateForward`] is selected; the invariant it buys —
-//! *at shutdown every key's state lives on exactly one reducer* — is
-//! asserted in `rust/tests/lb_behavior.rs`.
+//! (substage 2). It is **thread-safe**: all counters are atomics, so the
+//! threads driver's reducers consult and advance the protocol concurrently
+//! while the deterministic sim drives the very same type single-threaded.
+//! The invariant it buys — *at shutdown every key's state lives on exactly
+//! one reducer* — is asserted in `rust/tests/lb_behavior.rs` and exercised
+//! on both drivers by `rust/tests/driver_parity.rs`.
+
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, AtomicUsize, Ordering};
 
 /// How the pipeline keeps per-key state consistent across repartitions.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -50,34 +54,52 @@ pub enum Stage {
 }
 
 /// Tracks the state-forwarding protocol across a repartition.
+///
+/// Concurrency model: [`Self::begin_epoch`] is only ever called by the
+/// balancer's owner (the sim loop, or the threads driver's balancer
+/// thread) and only from `Synchronized` — the §7 "updates are very
+/// infrequent and atomic" rule, which the balancer enforces by gating
+/// rebalances on the stage. Reducers call `needs_extraction` /
+/// `extraction_done` / `transfer_landed` concurrently. `begin_epoch`
+/// publishes the pending epoch *last* (release), so a reducer that
+/// observes it also observes the reset extraction flags; `outstanding`
+/// may go transiently negative when a transfer lands before its sender's
+/// `extraction_done` increment, which is why completion additionally
+/// requires every reducer to have extracted.
 #[derive(Debug)]
 pub struct StageTracker {
     /// Ring epoch the reducers are synchronized to.
-    synced_epoch: u64,
+    synced_epoch: AtomicU64,
+    /// Epoch currently being synchronized to (0 = none; ring epochs start
+    /// at 1, so 0 is free as the sentinel).
+    pending_epoch: AtomicU64,
     /// Outstanding state-transfer messages for the in-progress epoch.
-    outstanding: u64,
+    /// Signed: a transfer may land at its destination before the sender
+    /// books it, so the count can dip below zero transiently.
+    outstanding: AtomicI64,
     /// Per-reducer flag: has it run its substage-1 extraction for the
     /// in-progress epoch?
-    extracted: Vec<bool>,
-    /// Epoch currently being synchronized to (if any).
-    pending_epoch: Option<u64>,
+    extracted: Vec<AtomicBool>,
+    /// How many reducers have extracted for the in-progress epoch.
+    extracted_count: AtomicUsize,
     /// Total state transfers performed (metrics).
-    pub transfers: u64,
+    transfers: AtomicU64,
 }
 
 impl StageTracker {
     pub fn new(reducers: usize, initial_epoch: u64) -> Self {
         StageTracker {
-            synced_epoch: initial_epoch,
-            outstanding: 0,
-            extracted: vec![true; reducers],
-            pending_epoch: None,
-            transfers: 0,
+            synced_epoch: AtomicU64::new(initial_epoch),
+            pending_epoch: AtomicU64::new(0),
+            outstanding: AtomicI64::new(0),
+            extracted: (0..reducers).map(|_| AtomicBool::new(true)).collect(),
+            extracted_count: AtomicUsize::new(reducers),
+            transfers: AtomicU64::new(0),
         }
     }
 
     pub fn stage(&self) -> Stage {
-        if self.pending_epoch.is_some() {
+        if self.pending_epoch.load(Ordering::SeqCst) != 0 {
             Stage::Synchronizing
         } else {
             Stage::Synchronized
@@ -85,7 +107,12 @@ impl StageTracker {
     }
 
     pub fn synced_epoch(&self) -> u64 {
-        self.synced_epoch
+        self.synced_epoch.load(Ordering::SeqCst)
+    }
+
+    /// Total state transfers performed so far (metrics).
+    pub fn transfers(&self) -> u64 {
+        self.transfers.load(Ordering::SeqCst)
     }
 
     /// The balancer published a new partitioning: enter substage 1. Every
@@ -93,56 +120,78 @@ impl StageTracker {
     ///
     /// The §7 algorithm assumes updates are "very infrequent and atomic";
     /// we enforce it — a new epoch may only start from `Synchronized`.
-    pub fn begin_epoch(&mut self, epoch: u64) {
+    pub fn begin_epoch(&self, epoch: u64) {
+        assert!(epoch != 0, "ring epochs are 1-based");
+        assert!(epoch > self.synced_epoch.load(Ordering::SeqCst));
+        // reset the extraction slate *before* publishing the epoch: a
+        // reducer that sees the pending epoch must also see its cleared
+        // flag, or it would skip its substage-1 duty
+        for e in &self.extracted {
+            e.store(false, Ordering::SeqCst);
+        }
+        self.extracted_count.store(0, Ordering::SeqCst);
+        let prev = self.pending_epoch.swap(epoch, Ordering::SeqCst);
         assert!(
-            self.pending_epoch.is_none(),
+            prev == 0,
             "repartition while still synchronizing (updates must be atomic + infrequent)"
         );
-        assert!(epoch > self.synced_epoch);
-        self.pending_epoch = Some(epoch);
-        self.extracted.iter_mut().for_each(|e| *e = false);
     }
 
     /// Reducer `i` finished extracting and sending its non-owned state,
     /// having emitted `sent` transfer messages.
-    pub fn extraction_done(&mut self, reducer: usize, sent: u64) {
-        assert!(self.pending_epoch.is_some());
-        assert!(!self.extracted[reducer], "double extraction");
-        self.extracted[reducer] = true;
-        self.outstanding += sent;
-        self.transfers += sent;
+    ///
+    /// Ordering matters: `outstanding` is credited *before* the reducer is
+    /// marked extracted, so no observer can see "everyone extracted" while
+    /// this reducer's transfers are still unbooked.
+    pub fn extraction_done(&self, reducer: usize, sent: u64) {
+        assert!(self.pending_epoch.load(Ordering::SeqCst) != 0);
+        self.outstanding.fetch_add(sent as i64, Ordering::SeqCst);
+        self.transfers.fetch_add(sent, Ordering::SeqCst);
+        let was = self.extracted[reducer].swap(true, Ordering::SeqCst);
+        assert!(!was, "double extraction");
+        self.extracted_count.fetch_add(1, Ordering::SeqCst);
         self.maybe_finish();
     }
 
     /// A state-transfer message was applied at its destination.
-    pub fn transfer_landed(&mut self) {
-        assert!(self.outstanding > 0, "transfer landed with none outstanding");
-        self.outstanding -= 1;
+    pub fn transfer_landed(&self) {
+        self.outstanding.fetch_sub(1, Ordering::SeqCst);
         self.maybe_finish();
     }
 
     /// True once every reducer extracted for the pending epoch.
     pub fn all_extracted(&self) -> bool {
-        self.extracted.iter().all(|&e| e)
+        self.extracted_count.load(Ordering::SeqCst) == self.extracted.len()
     }
 
-    fn maybe_finish(&mut self) {
-        if self.all_extracted() && self.outstanding == 0 {
-            if let Some(e) = self.pending_epoch.take() {
-                self.synced_epoch = e;
+    fn maybe_finish(&self) {
+        // once every reducer has extracted, `outstanding` only decreases;
+        // whichever thread performs the final operation observes the
+        // (all-extracted, zero-outstanding) state and retires the epoch
+        if self.all_extracted() && self.outstanding.load(Ordering::SeqCst) == 0 {
+            let e = self.pending_epoch.load(Ordering::SeqCst);
+            if e != 0
+                && self
+                    .pending_epoch
+                    .compare_exchange(e, 0, Ordering::SeqCst, Ordering::SeqCst)
+                    .is_ok()
+            {
+                self.synced_epoch.store(e, Ordering::SeqCst);
             }
         }
     }
 
     /// Does reducer `i` still owe its substage-1 extraction?
     pub fn needs_extraction(&self, reducer: usize) -> bool {
-        self.pending_epoch.is_some() && !self.extracted[reducer]
+        self.pending_epoch.load(Ordering::SeqCst) != 0
+            && !self.extracted[reducer].load(Ordering::SeqCst)
     }
 
     /// Grow tracking when a reducer is added at runtime (elastic §7).
     pub fn add_reducer(&mut self) {
         // a brand-new reducer has no state to extract
-        self.extracted.push(true);
+        self.extracted.push(AtomicBool::new(true));
+        self.extracted_count.fetch_add(1, Ordering::SeqCst);
     }
 }
 
@@ -152,7 +201,7 @@ mod tests {
 
     #[test]
     fn lifecycle() {
-        let mut t = StageTracker::new(4, 1);
+        let t = StageTracker::new(4, 1);
         assert_eq!(t.stage(), Stage::Synchronized);
 
         t.begin_epoch(2);
@@ -171,12 +220,12 @@ mod tests {
         t.transfer_landed();
         assert_eq!(t.stage(), Stage::Synchronized);
         assert_eq!(t.synced_epoch(), 2);
-        assert_eq!(t.transfers, 3);
+        assert_eq!(t.transfers(), 3);
     }
 
     #[test]
     fn zero_transfer_epoch_finishes_immediately() {
-        let mut t = StageTracker::new(2, 5);
+        let t = StageTracker::new(2, 5);
         t.begin_epoch(6);
         t.extraction_done(0, 0);
         assert_eq!(t.stage(), Stage::Synchronizing);
@@ -186,9 +235,25 @@ mod tests {
     }
 
     #[test]
+    fn transfer_landing_before_senders_bookkeeping_is_tolerated() {
+        // threads interleaving: the destination absorbs a state envelope
+        // before the sender calls extraction_done — outstanding dips
+        // negative but the epoch still retires exactly once
+        let t = StageTracker::new(2, 1);
+        t.begin_epoch(2);
+        t.transfer_landed(); // lands "early"
+        assert_eq!(t.stage(), Stage::Synchronizing);
+        t.extraction_done(0, 1);
+        assert_eq!(t.stage(), Stage::Synchronizing, "reducer 1 not extracted");
+        t.extraction_done(1, 0);
+        assert_eq!(t.stage(), Stage::Synchronized);
+        assert_eq!(t.synced_epoch(), 2);
+    }
+
+    #[test]
     #[should_panic(expected = "atomic")]
     fn overlapping_epochs_panic() {
-        let mut t = StageTracker::new(2, 1);
+        let t = StageTracker::new(2, 1);
         t.begin_epoch(2);
         t.begin_epoch(3);
     }
@@ -196,7 +261,7 @@ mod tests {
     #[test]
     #[should_panic(expected = "double extraction")]
     fn double_extraction_panics() {
-        let mut t = StageTracker::new(2, 1);
+        let t = StageTracker::new(2, 1);
         t.begin_epoch(2);
         t.extraction_done(0, 0);
         t.extraction_done(0, 0);
@@ -213,5 +278,32 @@ mod tests {
         assert_eq!(t.stage(), Stage::Synchronizing);
         t.extraction_done(2, 0);
         assert_eq!(t.stage(), Stage::Synchronized);
+    }
+
+    #[test]
+    fn concurrent_protocol_round_converges() {
+        use std::sync::Arc;
+        let n = 8usize;
+        let t = Arc::new(StageTracker::new(n, 1));
+        t.begin_epoch(2);
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                let t = t.clone();
+                std::thread::spawn(move || {
+                    // each reducer "sends" i transfers, then lands i
+                    // transfers on behalf of its peers
+                    t.extraction_done(i, i as u64);
+                    for _ in 0..i {
+                        t.transfer_landed();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(t.stage(), Stage::Synchronized);
+        assert_eq!(t.synced_epoch(), 2);
+        assert_eq!(t.transfers(), (0..n as u64).sum::<u64>());
     }
 }

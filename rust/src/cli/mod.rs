@@ -38,7 +38,7 @@ OPTIONS (run):
   --seed N          sim schedule seed                        [default: 0]
   --items N         generated workload size                  [default: 100]
   --executor E      wordcount|tokenized|sum|distinct|topk    [default: wordcount]
-  --state-forward   use §7 state forwarding (sim driver)
+  --state-forward   use §7 state forwarding (sim or threads driver)
   --config PATH     TOML config file (see configs/)
   --save-trace PATH write the workload to a trace file
   --quiet           one-line report

@@ -1,22 +1,28 @@
 //! Task management: the coordinator chunks the input into tasks and hands
 //! them to mappers on request (§3: "mapper actors fetch tasks or data
 //! items from the coordinator by means of a remote method call").
+//!
+//! The input lives in one shared `Arc<[String]>`; tasks are range views
+//! ([`TaskItems`]) into it, so chunking — and re-running the same input
+//! across seeds — never copies a string.
 
 use std::collections::VecDeque;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
-use crate::exec::Task;
+use crate::exec::{Task, TaskItems};
 
-/// Split input items into fixed-size tasks.
-pub fn chunk_items(items: Vec<String>, chunk_size: usize) -> Vec<Task> {
+/// Split input items into fixed-size tasks (range views, zero-copy).
+pub fn chunk_items(items: impl Into<Arc<[String]>>, chunk_size: usize) -> Vec<Task> {
     assert!(chunk_size > 0);
-    let mut tasks = Vec::with_capacity(items.len().div_ceil(chunk_size));
+    let src: Arc<[String]> = items.into();
+    let mut tasks = Vec::with_capacity(src.len().div_ceil(chunk_size));
     let mut id = 0u64;
-    let mut iter = items.into_iter().peekable();
-    while iter.peek().is_some() {
-        let chunk: Vec<String> = iter.by_ref().take(chunk_size).collect();
-        tasks.push(Task { id, items: chunk });
+    let mut start = 0usize;
+    while start < src.len() {
+        let end = (start + chunk_size).min(src.len());
+        tasks.push(Task { id, items: TaskItems::new(src.clone(), start, end) });
         id += 1;
+        start = end;
     }
     tasks
 }
@@ -38,7 +44,7 @@ impl TaskPool {
         }
     }
 
-    pub fn from_items(items: Vec<String>, chunk_size: usize) -> Self {
+    pub fn from_items(items: impl Into<Arc<[String]>>, chunk_size: usize) -> Self {
         Self::new(chunk_items(items, chunk_size))
     }
 
@@ -67,25 +73,33 @@ mod tests {
         assert_eq!(tasks.len(), 3);
         assert_eq!(tasks[0].items.len(), 10);
         assert_eq!(tasks[2].items.len(), 5);
-        let flat: Vec<String> = tasks.into_iter().flat_map(|t| t.items).collect();
+        let flat: Vec<String> = tasks.into_iter().flat_map(|t| t.items.to_vec()).collect();
         assert_eq!(flat, items);
     }
 
     #[test]
+    fn chunking_shares_the_input_allocation() {
+        let items: Arc<[String]> = (0..20).map(|i| format!("i{i}")).collect::<Vec<_>>().into();
+        let tasks = chunk_items(items.clone(), 8);
+        // zero-copy: task items point into the same allocation
+        assert!(std::ptr::eq(&items[8], &tasks[1].items[0]));
+    }
+
+    #[test]
     fn chunk_ids_are_sequential() {
-        let tasks = chunk_items((0..30).map(|i| i.to_string()).collect(), 7);
+        let tasks = chunk_items((0..30).map(|i| i.to_string()).collect::<Vec<_>>(), 7);
         let ids: Vec<u64> = tasks.iter().map(|t| t.id).collect();
         assert_eq!(ids, vec![0, 1, 2, 3, 4]);
     }
 
     #[test]
     fn empty_input_no_tasks() {
-        assert!(chunk_items(vec![], 10).is_empty());
+        assert!(chunk_items(Vec::<String>::new(), 10).is_empty());
     }
 
     #[test]
     fn pool_fetch_drains() {
-        let pool = TaskPool::from_items((0..5).map(|i| i.to_string()).collect(), 2);
+        let pool = TaskPool::from_items((0..5).map(|i| i.to_string()).collect::<Vec<_>>(), 2);
         assert_eq!(pool.total(), 3);
         let mut fetched = 0;
         while pool.fetch().is_some() {
@@ -99,7 +113,7 @@ mod tests {
     #[test]
     fn pool_is_thread_safe() {
         let pool = std::sync::Arc::new(TaskPool::from_items(
-            (0..100).map(|i| i.to_string()).collect(),
+            (0..100).map(|i| i.to_string()).collect::<Vec<_>>(),
             1,
         ));
         let mut handles = Vec::new();

@@ -1,23 +1,33 @@
-//! Threads driver: the deployment-shaped execution mode. Every mapper and
-//! reducer is an OS thread; queues are the bounded [`DataQueue`]s; the
-//! balancer is shared behind a mutex (reports are rare relative to data
-//! ops); routing goes through lock-free epoch-cached ring snapshots.
+//! Threads driver: the deployment-shaped execution mode, rebuilt as a thin
+//! *scheduler* over the shared [`ExecCore`] runtime. Every mapper and
+//! reducer is an OS thread stepping the same core state-machine the sim
+//! drives deterministically; queues are the bounded envelope
+//! [`DataQueue`](crate::queue::DataQueue)s whose priority lane carries §7
+//! state transfers; routing goes through lock-free epoch-cached ring
+//! snapshots.
+//!
+//! The balancer never sits on the reducer hot path: reducers emit
+//! [`LoadReport`]s into an mpsc channel and a dedicated balancer thread
+//! applies them, fires repartitions, opens §7 synchronization epochs, and
+//! — once the drain condition is globally stable — releases the reducers
+//! (coordinated stop closes the race between a late rebalance and an
+//! already-exited reducer that could strand un-forwarded state).
 //!
 //! Nondeterministic by nature — this is the mode that exhibits the paper's
 //! "indeterminate" behaviours (premature LB triggers, run-to-run
 //! variance). The deterministic counterpart is [`crate::sim`].
 
-use std::sync::{Arc, Mutex};
+use std::sync::mpsc::{self, RecvTimeoutError};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::actor::ShutdownMonitor;
+use crate::balancer::state_forward::ConsistencyMode;
 use crate::balancer::BalancerCore;
-use crate::coordinator::{merge_states, TaskPool};
 use crate::exec::{MapExecutor, ReduceFactory};
 use crate::mapper::MapperCore;
 use crate::metrics::RunReport;
-use crate::queue::DataQueue;
-use crate::reducer::{Handled, ReducerCore};
+use crate::reducer::ReducerCore;
+use crate::runtime::exec::{ExecCore, ExecParams, LoadReport, ReducerStep};
 
 /// Threads-driver parameters.
 #[derive(Clone, Debug)]
@@ -34,6 +44,9 @@ pub struct ThreadParams {
     pub reduce_delay_us: u64,
     /// Reducer queue-poll timeout.
     pub pop_timeout: Duration,
+    /// Post-repartition consistency: merge-at-end (§2) or state
+    /// forwarding (§7).
+    pub mode: ConsistencyMode,
 }
 
 impl Default for ThreadParams {
@@ -45,6 +58,7 @@ impl Default for ThreadParams {
             map_delay_us: 0,
             reduce_delay_us: 200,
             pop_timeout: Duration::from_millis(2),
+            mode: ConsistencyMode::MergeAtEnd,
         }
     }
 }
@@ -76,27 +90,33 @@ impl ThreadDriver {
         reduce_factory: &ReduceFactory,
         n_mappers: usize,
         balancer: BalancerCore,
-        items: Vec<String>,
+        items: impl Into<Arc<[String]>>,
     ) -> RunReport {
         let p = self.params.clone();
         let ring = balancer.ring().clone();
         let n_reducers = ring.nodes();
-        let input_items = items.len() as u64;
 
-        let pool = Arc::new(TaskPool::from_items(items, p.chunk_size));
-        let queues: Vec<Arc<DataQueue>> = (0..n_reducers)
-            .map(|_| Arc::new(DataQueue::new(p.queue_capacity)))
-            .collect();
-        let monitor = Arc::new(ShutdownMonitor::new(n_mappers));
-        let balancer = Arc::new(Mutex::new(balancer));
+        let core = Arc::new(ExecCore::build(
+            &ring,
+            n_mappers,
+            items,
+            ExecParams {
+                chunk_size: p.chunk_size,
+                queue_capacity: p.queue_capacity,
+                report_interval: p.report_interval,
+                mode: p.mode,
+                coordinated_stop: true,
+            },
+        ));
+        let (report_tx, report_rx) = mpsc::channel::<LoadReport>();
         let t0 = Instant::now();
 
-        // mappers: fetch → map → route → enqueue
+        // mappers: fetch → map → route → enqueue (staged per destination:
+        // one queue lock per task per destination instead of one per
+        // record)
         let mut mapper_handles = Vec::with_capacity(n_mappers);
         for i in 0..n_mappers {
-            let pool = pool.clone();
-            let queues = queues.clone();
-            let monitor = monitor.clone();
+            let core = core.clone();
             let exec = map_exec.clone();
             let ring = ring.clone();
             let map_delay = p.map_delay_us;
@@ -104,16 +124,12 @@ impl ThreadDriver {
                 std::thread::Builder::new()
                     .name(format!("dpa-mapper-{i}"))
                     .spawn(move || {
-                        let mut core = MapperCore::new(i, exec, ring);
-                        let n_queues = queues.len();
-                        // per-destination staging, reused across tasks
-                        // (§Perf iteration 3: one queue lock per task per
-                        // destination instead of one per record)
+                        let mut mc = MapperCore::new(i, exec, ring);
                         let mut staged: Vec<Vec<crate::exec::Record>> =
-                            (0..n_queues).map(|_| Vec::new()).collect();
-                        while let Some(task) = pool.fetch() {
-                            for item in &task.items {
-                                for (dest, rec) in core.process_item(item) {
+                            (0..core.queues.len()).map(|_| Vec::new()).collect();
+                        while let Some(task) = core.pool.fetch() {
+                            for item in task.items.iter() {
+                                for (dest, rec) in mc.process_item(item) {
                                     staged[dest].push(rec);
                                 }
                                 spin_us(map_delay);
@@ -122,72 +138,104 @@ impl ThreadDriver {
                                 if recs.is_empty() {
                                     continue;
                                 }
-                                // produced() strictly before push so
-                                // in_flight never undercounts
-                                monitor.produced(recs.len() as u64);
-                                queues[dest].push_batch(std::mem::take(recs));
+                                core.push_mapped_batch(dest, std::mem::take(recs));
                             }
                         }
-                        monitor.mapper_done();
-                        core
+                        core.monitor.mapper_done();
+                        mc
                     })
                     .expect("spawn mapper"),
             );
         }
 
-        // reducers: poll → ownership check → reduce / forward → report
+        // reducers: step the shared state-machine; reports go through the
+        // channel — the hot path takes no balancer lock
         let mut reducer_handles = Vec::with_capacity(n_reducers);
         for i in 0..n_reducers {
-            let queues = queues.clone();
-            let monitor = monitor.clone();
-            let balancer = balancer.clone();
+            let core = core.clone();
+            let tx = report_tx.clone();
             let ring = ring.clone();
             let exec = reduce_factory(i);
-            let report_interval = p.report_interval;
             let reduce_delay = p.reduce_delay_us;
             let pop_timeout = p.pop_timeout;
             reducer_handles.push(
                 std::thread::Builder::new()
                     .name(format!("dpa-reducer-{i}"))
                     .spawn(move || {
-                        let mut core = ReducerCore::new(i, exec, ring);
+                        let mut rc = ReducerCore::new(i, exec, ring);
                         loop {
-                            match queues[i].pop_timeout(pop_timeout) {
-                                Some(rec) => {
-                                    match core.handle(rec) {
-                                        Handled::Reduced => {
-                                            spin_us(reduce_delay);
-                                            monitor.consumed();
-                                        }
-                                        Handled::Forward(dest, rec) => {
-                                            queues[dest].push(rec);
-                                        }
+                            let step =
+                                core.reducer_step(&mut rc, i, |q| q.pop_timeout(pop_timeout));
+                            match step {
+                                ReducerStep::Reduced | ReducerStep::Forwarded => {
+                                    if matches!(step, ReducerStep::Reduced) {
+                                        spin_us(reduce_delay);
                                     }
-                                    if core.due_report(report_interval) {
-                                        let now_us = t0.elapsed().as_micros() as u64;
-                                        balancer.lock().unwrap().report(
-                                            i,
-                                            queues[i].len(),
-                                            now_us,
-                                        );
+                                    if rc.due_report(core.report_interval) {
+                                        let _ = tx.send(LoadReport {
+                                            reducer: i,
+                                            qlen: core.queues[i].len(),
+                                            at: t0.elapsed().as_micros() as u64,
+                                            evaluate: true,
+                                        });
                                     }
                                 }
-                                None => {
-                                    balancer.lock().unwrap().observe(i, 0);
-                                    // §2.3: a reducer can never stop on its
-                                    // own — only when the coordinator-level
-                                    // drain condition holds
-                                    if monitor.drained() && queues[i].is_empty() {
+                                ReducerStep::StateExtracted { .. }
+                                | ReducerStep::StateAbsorbed => {}
+                                ReducerStep::Deferred => {
+                                    // substage 1: nothing to do but wait
+                                    // for the slowest extractor
+                                    std::thread::yield_now();
+                                }
+                                ReducerStep::Idle { stop } => {
+                                    let _ = tx.send(LoadReport {
+                                        reducer: i,
+                                        qlen: 0,
+                                        at: t0.elapsed().as_micros() as u64,
+                                        evaluate: false,
+                                    });
+                                    if stop {
                                         break;
                                     }
                                 }
                             }
                         }
-                        core
+                        rc
                     })
                     .expect("spawn reducer"),
             );
         }
+        drop(report_tx);
+
+        // balancer thread: owns the BalancerCore outright — no mutex.
+        // Applies reports, fires repartitions, and (once the pipeline is
+        // drained, synchronized and every queue empty) issues the
+        // coordinated stop. Because the same thread both rebalances and
+        // stops, no repartition can start after a reducer was released.
+        let bal_core = core.clone();
+        let balancer_handle = std::thread::Builder::new()
+            .name("dpa-balancer".into())
+            .spawn(move || {
+                let mut balancer = balancer;
+                loop {
+                    match report_rx.recv_timeout(Duration::from_micros(500)) {
+                        Ok(r) => {
+                            bal_core.apply_report(&mut balancer, r);
+                        }
+                        Err(RecvTimeoutError::Timeout) => {}
+                        Err(RecvTimeoutError::Disconnected) => break,
+                    }
+                    if bal_core.monitor.drained()
+                        && bal_core.synced()
+                        && bal_core.all_queues_empty()
+                    {
+                        bal_core.request_stop();
+                        break;
+                    }
+                }
+                balancer
+            })
+            .expect("spawn balancer");
 
         let mappers: Vec<MapperCore> = mapper_handles
             .into_iter()
@@ -197,29 +245,10 @@ impl ThreadDriver {
             .into_iter()
             .map(|h| h.join().expect("reducer panicked"))
             .collect();
+        let mut balancer = balancer_handle.join().expect("balancer panicked");
         let wall = t0.elapsed();
 
-        // final state merge (§2)
-        let snaps: Vec<Vec<(String, i64)>> =
-            reducers.iter_mut().map(|r| r.final_snapshot()).collect();
-        let op = reduce_factory(0).merge_op();
-        let result = merge_states(snaps, op, false);
-
-        let mut balancer = Arc::try_unwrap(balancer)
-            .map(|m| m.into_inner().unwrap())
-            .unwrap_or_else(|_| panic!("balancer still shared after join"));
-
-        RunReport {
-            processed: reducers.iter().map(|r| r.processed).collect(),
-            forwarded: reducers.iter().map(|r| r.forwarded).collect(),
-            mapped: mappers.iter().map(|m| m.emitted).collect(),
-            lb_events: balancer.take_events(),
-            result,
-            wall,
-            virtual_end: 0,
-            peak_qlen: queues.iter().map(|q| q.peak()).collect(),
-            input_items,
-        }
+        core.finish(&mappers, &mut reducers, &mut balancer, reduce_factory, wall, 0)
     }
 }
 
@@ -287,6 +316,27 @@ mod tests {
     }
 
     #[test]
+    fn threaded_state_forwarding_stays_exact_and_disjoint() {
+        // §7 on real threads: merge_states() inside finish() asserts the
+        // key-disjoint snapshot invariant whenever mode = StateForward
+        let w = crate::workload::paperwl::wl1();
+        let d = ThreadDriver::new(ThreadParams {
+            reduce_delay_us: 400, // queues build → LB can fire mid-run
+            mode: ConsistencyMode::StateForward,
+            ..Default::default()
+        });
+        let r = d.run(
+            Arc::new(IdentityMap),
+            &wordcount_factory(),
+            4,
+            balancer(Strategy::Doubling),
+            w.items.clone(),
+        );
+        assert!(r.check_conservation().is_ok());
+        assert_eq!(r.result, oracle(&w.items));
+    }
+
+    #[test]
     fn empty_input_terminates_quickly() {
         let d = ThreadDriver::new(ThreadParams::default());
         let r = d.run(
@@ -294,7 +344,7 @@ mod tests {
             &wordcount_factory(),
             2,
             balancer(Strategy::None),
-            vec![],
+            Vec::<String>::new(),
         );
         assert_eq!(r.total_processed(), 0);
     }

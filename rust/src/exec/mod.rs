@@ -67,12 +67,48 @@ impl PartialEq for Record {
 
 impl Eq for Record {}
 
+/// A zero-copy view of a contiguous chunk of the shared input.
+///
+/// The coordinator chunks one `Arc<[String]>` into tasks by range instead
+/// of cloning strings, so seed sweeps and benches re-run the same input
+/// without paying an O(n) copy per run. Derefs to `[String]`, so task
+/// items read like a plain slice.
+#[derive(Clone, Debug)]
+pub struct TaskItems {
+    src: std::sync::Arc<[String]>,
+    start: usize,
+    end: usize,
+}
+
+impl TaskItems {
+    pub fn new(src: std::sync::Arc<[String]>, start: usize, end: usize) -> Self {
+        assert!(start <= end && end <= src.len());
+        TaskItems { src, start, end }
+    }
+}
+
+impl std::ops::Deref for TaskItems {
+    type Target = [String];
+
+    fn deref(&self) -> &[String] {
+        &self.src[self.start..self.end]
+    }
+}
+
+impl From<Vec<String>> for TaskItems {
+    fn from(v: Vec<String>) -> Self {
+        let src: std::sync::Arc<[String]> = v.into();
+        let end = src.len();
+        TaskItems { src, start: 0, end }
+    }
+}
+
 /// A unit of input handed to a mapper by the coordinator (§3: "mapper
 /// actors fetch tasks or data items from the coordinator").
 #[derive(Clone, Debug)]
 pub struct Task {
     pub id: u64,
-    pub items: Vec<String>,
+    pub items: TaskItems,
 }
 
 /// How two values for the same key combine during the final state merge

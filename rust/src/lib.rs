@@ -18,8 +18,11 @@
 //! ## Layers
 //!
 //! - **L3 (this crate)** — coordinator, mappers, reducers, queues, load
-//!   balancer, metrics, CLI. Two drivers: a deterministic discrete-event
-//!   simulator ([`sim`]) and real OS threads ([`driver`]).
+//!   balancer, metrics, CLI. One shared execution core
+//!   ([`runtime::exec`]) owns the pipeline semantics; two thin
+//!   schedulers drive it: a deterministic discrete-event simulator
+//!   ([`sim`]) and real OS threads ([`driver`]). See
+//!   `docs/ARCHITECTURE.md` for the layer diagram.
 //! - **L2/L1 (python, build-time only)** — the batched data-plane (murmur3
 //!   hashing, ring lookup, count aggregation, state merge) authored in
 //!   JAX + Pallas and AOT-lowered to HLO text under `artifacts/`.

@@ -55,7 +55,7 @@ impl MapperCore {
     pub fn process_task(&mut self, task: &Task) -> Vec<(usize, Record)> {
         self.tasks_in += 1;
         let mut out = Vec::with_capacity(task.items.len());
-        for item in &task.items {
+        for item in task.items.iter() {
             out.extend(self.process_item(item));
         }
         out
@@ -112,7 +112,7 @@ mod tests {
     #[test]
     fn task_processing_counts() {
         let mut m = mk();
-        let task = Task { id: 0, items: vec!["a".into(), "b".into()] };
+        let task = Task { id: 0, items: vec!["a".to_string(), "b".to_string()].into() };
         let routed = m.process_task(&task);
         assert_eq!(routed.len(), 2);
         assert_eq!(m.tasks_in, 1);

@@ -88,8 +88,12 @@ pub struct PipelineConfig {
     /// Threads driver: busy-work per mapped item / reduced record (µs).
     pub map_delay_us: u64,
     pub reduce_delay_us: u64,
+    /// Threads driver: reducer queue-poll timeout (ms). Bounds how long an
+    /// idle reducer waits before re-checking shutdown / §7 extraction
+    /// duties.
+    pub pop_timeout_ms: u64,
     /// Post-repartition consistency: merge-at-end (paper) or §7 state
-    /// forwarding (sim driver only).
+    /// forwarding (either driver).
     pub mode: ConsistencyMode,
 }
 
@@ -113,6 +117,7 @@ impl Default for PipelineConfig {
             sim_costs: SimCosts::default(),
             map_delay_us: 0,
             reduce_delay_us: 200,
+            pop_timeout_ms: 2,
             mode: ConsistencyMode::MergeAtEnd,
         }
     }
@@ -187,6 +192,9 @@ impl PipelineConfig {
                 "threads.reduce_delay_us" => {
                     self.reduce_delay_us = doc.get_int(key).context("reduce_delay_us")? as u64
                 }
+                "threads.pop_timeout_ms" => {
+                    self.pop_timeout_ms = doc.get_int(key).context("pop_timeout_ms")? as u64
+                }
                 other => bail!("unknown config key '{other}'"),
             }
         }
@@ -212,8 +220,8 @@ impl PipelineConfig {
         if !self.halving_init_tokens.is_power_of_two() {
             bail!("halving_init_tokens must be a power of two (§4.2)");
         }
-        if self.mode == ConsistencyMode::StateForward && self.driver == DriverKind::Threads {
-            bail!("state forwarding is implemented on the sim driver (deterministic staging)");
+        if self.pop_timeout_ms == 0 {
+            bail!("threads.pop_timeout_ms must be at least 1 (idle reducers would busy-spin)");
         }
         Ok(())
     }
@@ -299,8 +307,14 @@ impl Pipeline {
         )
     }
 
-    /// Execute the pipeline over `items`.
-    pub fn run(&self, items: Vec<String>) -> crate::Result<RunReport> {
+    /// Execute the pipeline over `items`. Accepts anything convertible to
+    /// a shared `Arc<[String]>` (a `Vec<String>` converts in place); pass
+    /// an `Arc` clone to re-run the same input with zero copying.
+    pub fn run(&self, items: impl Into<Arc<[String]>>) -> crate::Result<RunReport> {
+        self.run_shared(items.into())
+    }
+
+    fn run_shared(&self, items: Arc<[String]>) -> crate::Result<RunReport> {
         self.cfg.validate()?;
         let balancer = self.build_balancer();
         let report = match self.cfg.driver {
@@ -327,7 +341,8 @@ impl Pipeline {
                     queue_capacity: self.cfg.queue_capacity,
                     map_delay_us: self.cfg.map_delay_us,
                     reduce_delay_us: self.cfg.reduce_delay_us,
-                    pop_timeout: std::time::Duration::from_millis(2),
+                    pop_timeout: std::time::Duration::from_millis(self.cfg.pop_timeout_ms),
+                    mode: self.cfg.mode,
                 });
                 driver.run(
                     self.map_exec.clone(),
@@ -346,8 +361,10 @@ impl Pipeline {
     }
 
     /// Run the same workload over several seeds (sim driver) and return
-    /// all reports — the "3 runs, small variance" protocol of §6.1.
+    /// all reports — the "3 runs, small variance" protocol of §6.1. The
+    /// input is shared across runs (one copy total, not one per seed).
     pub fn run_seeds(&self, items: &[String], seeds: &[u64]) -> crate::Result<Vec<RunReport>> {
+        let shared: Arc<[String]> = items.into();
         let mut out = Vec::with_capacity(seeds.len());
         for &seed in seeds {
             let mut cfg = self.cfg.clone();
@@ -357,7 +374,7 @@ impl Pipeline {
                 map_exec: self.map_exec.clone(),
                 reduce_factory: self.reduce_factory.clone(),
             };
-            out.push(p.run(items.to_vec())?);
+            out.push(p.run_shared(shared.clone())?);
         }
         Ok(out)
     }
@@ -423,9 +440,27 @@ max_rounds = 3
         assert!(cfg.validate().is_err());
 
         let mut cfg = PipelineConfig::default();
+        cfg.pop_timeout_ms = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn state_forwarding_valid_on_both_drivers() {
+        // the unified runtime lifted the old threads-driver ban
+        let mut cfg = PipelineConfig::default();
         cfg.mode = ConsistencyMode::StateForward;
         cfg.driver = DriverKind::Threads;
-        assert!(cfg.validate().is_err());
+        assert!(cfg.validate().is_ok());
+        cfg.driver = DriverKind::Sim;
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn pop_timeout_config_key_applies() {
+        let doc = crate::config::parse("[threads]\npop_timeout_ms = 7\n").unwrap();
+        let mut cfg = PipelineConfig::default();
+        cfg.apply_document(&doc).unwrap();
+        assert_eq!(cfg.pop_timeout_ms, 7);
     }
 
     #[test]

@@ -4,22 +4,44 @@
 //! reducers) are producers. Per-reducer queues eliminate the contention a
 //! single shared queue would create — the paper's stated motivation.
 //!
-//! [`DataQueue`] is the threads-driver implementation: a bounded
-//! `Mutex<VecDeque>` + condvars, with the current length mirrored in an
-//! `AtomicUsize` so the load balancer (and metrics) can read queue sizes
-//! without touching the lock — the "load state is just the queue size"
-//! signal of §3 made contention-free.
+//! [`DataQueue<T>`] is the shared-runtime implementation: a bounded
+//! two-lane `Mutex<VecDeque>` + condvars, with the current length mirrored
+//! in an `AtomicUsize` so the load balancer (and metrics) can read queue
+//! sizes without touching the lock — the "load state is just the queue
+//! size" signal of §3 made contention-free.
+//!
+//! The **priority lane** carries §7 state-forwarding transfers: it is
+//! consumed before the data lane (state must be applied before any data
+//! processing at the new owner) and is exempt from the capacity bound so a
+//! repartition can never deadlock against data backpressure. This mirrors
+//! the sim driver's historical `push_front` semantics on one queue type
+//! that both drivers now share.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use crate::exec::Record;
+struct Lanes<T> {
+    /// State-transfer lane: popped first, never bounded.
+    priority: VecDeque<T>,
+    /// Data lane: FIFO, bounded by `capacity`.
+    data: VecDeque<T>,
+}
 
-/// A bounded MPMC queue of records with lock-free length reads.
-pub struct DataQueue {
-    inner: Mutex<VecDeque<Record>>,
+impl<T> Lanes<T> {
+    fn len(&self) -> usize {
+        self.priority.len() + self.data.len()
+    }
+
+    fn pop(&mut self) -> Option<T> {
+        self.priority.pop_front().or_else(|| self.data.pop_front())
+    }
+}
+
+/// A bounded MPMC queue with lock-free length reads and a priority lane.
+pub struct DataQueue<T> {
+    inner: Mutex<Lanes<T>>,
     not_empty: Condvar,
     not_full: Condvar,
     len: AtomicUsize,
@@ -27,11 +49,11 @@ pub struct DataQueue {
     capacity: usize,
 }
 
-impl DataQueue {
+impl<T> DataQueue<T> {
     pub fn new(capacity: usize) -> Self {
         assert!(capacity > 0);
         DataQueue {
-            inner: Mutex::new(VecDeque::new()),
+            inner: Mutex::new(Lanes { priority: VecDeque::new(), data: VecDeque::new() }),
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
             len: AtomicUsize::new(0),
@@ -40,7 +62,7 @@ impl DataQueue {
         }
     }
 
-    /// Current length — lock-free; the balancer's load signal.
+    /// Current length (both lanes) — lock-free; the balancer's load signal.
     #[inline]
     pub fn len(&self) -> usize {
         self.len.load(Ordering::Relaxed)
@@ -61,13 +83,13 @@ impl DataQueue {
         self.peak.fetch_max(new_len, Ordering::Relaxed);
     }
 
-    /// Blocking push — applies backpressure when the queue is full.
-    pub fn push(&self, rec: Record) {
+    /// Blocking push — applies backpressure when the data lane is full.
+    pub fn push(&self, item: T) {
         let mut q = self.inner.lock().unwrap();
-        while q.len() >= self.capacity {
+        while q.data.len() >= self.capacity {
             q = self.not_full.wait(q).unwrap();
         }
-        q.push_back(rec);
+        q.data.push_back(item);
         self.bump_len(q.len());
         drop(q);
         self.not_empty.notify_one();
@@ -75,19 +97,19 @@ impl DataQueue {
 
     /// Blocking batch push: one lock acquisition for the whole batch
     /// (§Perf iteration 3 — mappers enqueue a task's records per
-    /// destination in one go). Waits while the queue cannot take the
+    /// destination in one go). Waits while the data lane cannot take the
     /// *entire* batch; batches larger than the capacity are pushed in
     /// capacity-sized waves.
-    pub fn push_batch(&self, recs: Vec<Record>) {
-        let mut it = recs.into_iter().peekable();
+    pub fn push_batch(&self, items: Vec<T>) {
+        let mut it = items.into_iter().peekable();
         while it.peek().is_some() {
             let mut q = self.inner.lock().unwrap();
-            while q.len() >= self.capacity {
+            while q.data.len() >= self.capacity {
                 q = self.not_full.wait(q).unwrap();
             }
-            let room = self.capacity - q.len();
-            for rec in it.by_ref().take(room) {
-                q.push_back(rec);
+            let room = self.capacity - q.data.len();
+            for item in it.by_ref().take(room) {
+                q.data.push_back(item);
             }
             self.bump_len(q.len());
             drop(q);
@@ -95,55 +117,84 @@ impl DataQueue {
         }
     }
 
-    /// Non-blocking push; returns the record back on a full queue.
-    pub fn try_push(&self, rec: Record) -> Result<(), Record> {
+    /// Non-blocking push; returns the item back on a full data lane.
+    pub fn try_push(&self, item: T) -> Result<(), T> {
         let mut q = self.inner.lock().unwrap();
-        if q.len() >= self.capacity {
-            return Err(rec);
+        if q.data.len() >= self.capacity {
+            return Err(item);
         }
-        q.push_back(rec);
+        q.data.push_back(item);
         self.bump_len(q.len());
         drop(q);
         self.not_empty.notify_one();
         Ok(())
     }
 
+    /// Push to the priority lane: consumed before any data, exempt from
+    /// the capacity bound (a state transfer must never block behind the
+    /// very data backpressure it is trying to resolve).
+    pub fn push_priority(&self, item: T) {
+        let mut q = self.inner.lock().unwrap();
+        q.priority.push_back(item);
+        self.bump_len(q.len());
+        drop(q);
+        self.not_empty.notify_one();
+    }
+
+    /// Put an item back at the *front* of the data lane without waiting on
+    /// capacity — used by reducers deferring data during a §7 substage-1
+    /// synchronization window. Never blocks: the caller just popped, and a
+    /// blocking re-queue against a producer that raced into the freed slot
+    /// would deadlock the queue's own consumer.
+    pub fn requeue_front(&self, item: T) {
+        let mut q = self.inner.lock().unwrap();
+        q.data.push_front(item);
+        self.bump_len(q.len());
+        drop(q);
+        self.not_empty.notify_one();
+    }
+
     /// Pop with timeout — reducers poll so they can also check shutdown
     /// conditions while idle (§2.3: a reducer can never stop on its own).
-    pub fn pop_timeout(&self, timeout: Duration) -> Option<Record> {
+    ///
+    /// Deadline-loop implementation: every wakeup (signal, spurious, or
+    /// timeout) re-attempts the pop first, so a push landing right at the
+    /// timeout boundary is returned instead of dropped on the floor.
+    pub fn pop_timeout(&self, timeout: Duration) -> Option<T> {
+        let deadline = Instant::now() + timeout;
         let mut q = self.inner.lock().unwrap();
-        if q.is_empty() {
-            let (guard, res) = self.not_empty.wait_timeout(q, timeout).unwrap();
+        loop {
+            if let Some(item) = q.pop() {
+                self.len.store(q.len(), Ordering::Relaxed);
+                drop(q);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _res) = self.not_empty.wait_timeout(q, deadline - now).unwrap();
             q = guard;
-            if res.timed_out() && q.is_empty() {
-                return None;
-            }
-            if q.is_empty() {
-                return None;
-            }
         }
-        let rec = q.pop_front();
-        self.len.store(q.len(), Ordering::Relaxed);
-        drop(q);
-        self.not_full.notify_one();
-        rec
     }
 
     /// Non-blocking pop.
-    pub fn try_pop(&self) -> Option<Record> {
+    pub fn try_pop(&self) -> Option<T> {
         let mut q = self.inner.lock().unwrap();
-        let rec = q.pop_front()?;
+        let item = q.pop()?;
         self.len.store(q.len(), Ordering::Relaxed);
         drop(q);
         self.not_full.notify_one();
-        Some(rec)
+        Some(item)
     }
 
-    /// Drain everything (used by tests and the elastic example when
-    /// retiring a reducer).
-    pub fn drain(&self) -> Vec<Record> {
+    /// Drain everything, priority lane first (used by tests and the
+    /// elastic example when retiring a reducer).
+    pub fn drain(&self) -> Vec<T> {
         let mut q = self.inner.lock().unwrap();
-        let out: Vec<Record> = q.drain(..).collect();
+        let mut out: Vec<T> = q.priority.drain(..).collect();
+        out.extend(q.data.drain(..));
         self.len.store(0, Ordering::Relaxed);
         drop(q);
         self.not_full.notify_all();
@@ -154,6 +205,7 @@ impl DataQueue {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::exec::Record;
     use std::sync::Arc;
 
     #[test]
@@ -166,6 +218,42 @@ mod tests {
             assert_eq!(q.try_pop().unwrap().value, i);
         }
         assert!(q.try_pop().is_none());
+    }
+
+    #[test]
+    fn priority_lane_pops_first() {
+        let q = DataQueue::new(16);
+        q.push(Record::new("data1", 1));
+        q.push(Record::new("data2", 2));
+        q.push_priority(Record::new("state", 99));
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.try_pop().unwrap().key, "state");
+        assert_eq!(q.try_pop().unwrap().key, "data1");
+        assert_eq!(q.try_pop().unwrap().key, "data2");
+    }
+
+    #[test]
+    fn priority_lane_ignores_capacity() {
+        let q = DataQueue::new(1);
+        q.push(Record::new("data", 1));
+        // data lane full; state must still get through without blocking
+        q.push_priority(Record::new("state", 2));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.try_pop().unwrap().key, "state");
+    }
+
+    #[test]
+    fn requeue_front_goes_before_queued_data() {
+        let q = DataQueue::new(2);
+        q.push(Record::new("a", 1));
+        q.push(Record::new("b", 2));
+        let a = q.try_pop().unwrap();
+        // deferred: put it back without waiting even if the lane refilled
+        q.push(Record::new("c", 3));
+        q.requeue_front(a);
+        assert_eq!(q.try_pop().unwrap().key, "a");
+        assert_eq!(q.try_pop().unwrap().key, "b");
+        assert_eq!(q.try_pop().unwrap().key, "c");
     }
 
     #[test]
@@ -191,10 +279,25 @@ mod tests {
 
     #[test]
     fn pop_timeout_expires() {
-        let q = DataQueue::new(4);
+        let q: DataQueue<Record> = DataQueue::new(4);
         let t0 = std::time::Instant::now();
         assert!(q.pop_timeout(Duration::from_millis(20)).is_none());
         assert!(t0.elapsed() >= Duration::from_millis(15));
+    }
+
+    #[test]
+    fn pop_timeout_catches_late_push() {
+        // regression: a push racing the tail end of a pop wait must be
+        // delivered, not lost to an early empty-queue return
+        let q = Arc::new(DataQueue::new(4));
+        let q2 = q.clone();
+        let popper =
+            std::thread::spawn(move || q2.pop_timeout(Duration::from_millis(500)));
+        std::thread::sleep(Duration::from_millis(40));
+        q.push(Record::new("late", 7));
+        let got = popper.join().unwrap();
+        assert_eq!(got.expect("late push must be seen").key, "late");
+        assert!(q.is_empty());
     }
 
     #[test]
@@ -246,12 +349,14 @@ mod tests {
     }
 
     #[test]
-    fn drain_empties() {
+    fn drain_empties_priority_first() {
         let q = DataQueue::new(8);
         q.push(Record::new("a", 1));
         q.push(Record::new("b", 2));
+        q.push_priority(Record::new("s", 3));
         let drained = q.drain();
-        assert_eq!(drained.len(), 2);
+        assert_eq!(drained.len(), 3);
+        assert_eq!(drained[0].key, "s");
         assert!(q.is_empty());
     }
 }

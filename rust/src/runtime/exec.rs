@@ -1,0 +1,473 @@
+//! The shared execution runtime both drivers schedule over.
+//!
+//! Historically [`crate::sim`] and [`crate::driver`] were two independent
+//! ~300-line reimplementations of the same pipeline: topology construction
+//! (task pool, per-reducer queues, actor cores), the reducer step
+//! state-machine (ownership check → reduce / forward / state-extract /
+//! state-absorb, staged by [`StageTracker`]), the drain/termination
+//! condition, and the final snapshot → [`merge_states`] → [`RunReport`]
+//! assembly — and only the sim's queues carried the §7 `Envelope` protocol,
+//! so `ConsistencyMode::StateForward` was banned on real threads.
+//!
+//! [`ExecCore`] now owns all of that once. A driver contributes only its
+//! *scheduler*: the DES supplies virtual time and a deterministic event
+//! heap and calls [`ExecCore::reducer_step`] with a non-blocking pop; the
+//! threads driver supplies OS threads and calls the same step with a
+//! timeout pop. Load reports flow through [`LoadReport`] values — applied
+//! inline by the sim, shipped over a lock-free channel to a dedicated
+//! balancer thread by the threads driver, so the reducer hot path never
+//! takes a global balancer lock.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::actor::{Envelope, ShutdownMonitor};
+use crate::balancer::state_forward::{ConsistencyMode, Stage, StageTracker};
+use crate::balancer::BalancerCore;
+use crate::coordinator::{merge_states, TaskPool};
+use crate::exec::{Record, ReduceFactory};
+use crate::hash::SharedRing;
+use crate::mapper::MapperCore;
+use crate::metrics::{LbEvent, RunReport};
+use crate::queue::DataQueue;
+use crate::reducer::{Handled, ReducerCore};
+
+/// Driver-agnostic knobs for one pipeline execution.
+#[derive(Clone, Debug)]
+pub struct ExecParams {
+    /// Items per coordinator task.
+    pub chunk_size: usize,
+    /// Per-reducer data-lane capacity (`usize::MAX` for the sim: a
+    /// single-threaded scheduler must never block on backpressure).
+    pub queue_capacity: usize,
+    /// Load report every N handled messages (§3 "periodically").
+    pub report_interval: u64,
+    /// Merge-at-end (§2) or state forwarding (§7).
+    pub mode: ConsistencyMode,
+    /// `true` = reducers stop only when [`ExecCore::request_stop`] is
+    /// called (threads driver: the balancer thread confirms global drain,
+    /// closing the race between a late rebalance and an exiting reducer).
+    /// `false` = reducers stop themselves on drained + synchronized (sim:
+    /// the single-threaded schedule makes the condition stable).
+    pub coordinated_stop: bool,
+}
+
+/// One load report flowing from a reducer to the balancer's owner.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadReport {
+    pub reducer: usize,
+    pub qlen: usize,
+    /// Driver timestamp: virtual ticks (sim) or elapsed µs (threads).
+    pub at: u64,
+    /// `true` = periodic report (evaluate the LB policy), `false` = idle
+    /// observation (record load only).
+    pub evaluate: bool,
+}
+
+/// What one reducer step did — the scheduler charges costs / delays off
+/// this, never re-implementing the decision logic itself.
+#[derive(Debug)]
+pub enum ReducerStep {
+    /// §7 substage 1: extracted disowned state, `sent` transfers shipped.
+    StateExtracted { sent: usize },
+    /// Applied an incoming state transfer.
+    StateAbsorbed,
+    /// Folded one data record into local state.
+    Reduced,
+    /// Forwarded a stale-routed record to its current owner.
+    Forwarded,
+    /// Data deferred (re-queued locally) during a synchronization window.
+    Deferred,
+    /// Queue empty; `stop` = the termination condition held.
+    Idle { stop: bool },
+}
+
+/// Everything the two drivers used to duplicate, built once per run.
+pub struct ExecCore {
+    pub pool: TaskPool,
+    pub queues: Vec<DataQueue<Envelope>>,
+    pub monitor: ShutdownMonitor,
+    pub tracker: StageTracker,
+    pub mode: ConsistencyMode,
+    pub report_interval: u64,
+    input_items: u64,
+    coordinated_stop: bool,
+    stop: AtomicBool,
+}
+
+impl ExecCore {
+    /// Build the run topology: chunk the shared input into the task pool,
+    /// one envelope queue per reducer, shutdown accounting for `n_mappers`
+    /// and a stage tracker pinned to the ring's current epoch.
+    pub fn build(
+        ring: &SharedRing,
+        n_mappers: usize,
+        items: impl Into<Arc<[String]>>,
+        params: ExecParams,
+    ) -> Self {
+        let items: Arc<[String]> = items.into();
+        let n_reducers = ring.nodes();
+        let input_items = items.len() as u64;
+        ExecCore {
+            pool: TaskPool::from_items(items, params.chunk_size),
+            queues: (0..n_reducers)
+                .map(|_| DataQueue::new(params.queue_capacity))
+                .collect(),
+            monitor: ShutdownMonitor::new(n_mappers),
+            tracker: StageTracker::new(n_reducers, ring.epoch()),
+            mode: params.mode,
+            report_interval: params.report_interval,
+            input_items,
+            coordinated_stop: params.coordinated_stop,
+            stop: AtomicBool::new(false),
+        }
+    }
+
+    /// Is the §7 protocol (if active) in substage 2? Always `true` under
+    /// merge-at-end.
+    pub fn synced(&self) -> bool {
+        self.mode != ConsistencyMode::StateForward || self.tracker.stage() == Stage::Synchronized
+    }
+
+    /// Route one mapped record: in-flight accounting strictly before the
+    /// push so the drain condition never undercounts.
+    pub fn push_mapped(&self, dest: usize, rec: Record) {
+        self.monitor.produced(1);
+        self.queues[dest].push(Envelope::Data(rec));
+    }
+
+    /// Batch variant (threads driver: one queue lock per task per
+    /// destination instead of one per record).
+    pub fn push_mapped_batch(&self, dest: usize, recs: Vec<Record>) {
+        if recs.is_empty() {
+            return;
+        }
+        self.monitor.produced(recs.len() as u64);
+        self.queues[dest]
+            .push_batch(recs.into_iter().map(Envelope::Data).collect());
+    }
+
+    /// The reducer step state-machine (§3 + §7) both drivers share.
+    ///
+    /// `pop` is the only driver-specific ingredient: the sim passes a
+    /// non-blocking [`DataQueue::try_pop`], the threads driver a
+    /// [`DataQueue::pop_timeout`].
+    pub fn reducer_step<F>(&self, rc: &mut ReducerCore, i: usize, pop: F) -> ReducerStep
+    where
+        F: FnOnce(&DataQueue<Envelope>) -> Option<Envelope>,
+    {
+        // §7 substage 1: extract before touching any data
+        if self.mode == ConsistencyMode::StateForward && self.tracker.needs_extraction(i) {
+            let transfers = rc.extract_disowned();
+            let sent = transfers.len();
+            for (dest, rec) in transfers {
+                // state rides the priority lane: destinations apply it
+                // before any queued data
+                self.queues[dest].push_priority(Envelope::State(rec));
+            }
+            self.tracker.extraction_done(i, sent as u64);
+            return ReducerStep::StateExtracted { sent };
+        }
+
+        match pop(&self.queues[i]) {
+            Some(Envelope::State(rec)) => {
+                rc.absorb_state(rec);
+                self.tracker.transfer_landed();
+                ReducerStep::StateAbsorbed
+            }
+            Some(Envelope::Data(rec)) => {
+                if self.mode == ConsistencyMode::StateForward
+                    && self.tracker.stage() == Stage::Synchronizing
+                {
+                    // substage 1: no data processing — put it back (paper:
+                    // "any data that need to be forwarded gets put back
+                    // into the queue")
+                    self.queues[i].requeue_front(Envelope::Data(rec));
+                    return ReducerStep::Deferred;
+                }
+                match rc.handle(rec) {
+                    Handled::Reduced => {
+                        self.monitor.consumed();
+                        ReducerStep::Reduced
+                    }
+                    Handled::Forward(dest, rec) => {
+                        self.queues[dest].push(Envelope::Data(rec));
+                        ReducerStep::Forwarded
+                    }
+                }
+            }
+            None => ReducerStep::Idle { stop: self.reducer_can_stop(i) },
+        }
+    }
+
+    /// §2.3: a reducer can never stop on its own — only when the global
+    /// drain condition holds (and, under §7, no synchronization is in
+    /// flight that could still route state or deferred data to it).
+    fn reducer_can_stop(&self, i: usize) -> bool {
+        if self.coordinated_stop {
+            self.stop.load(Ordering::Acquire) && self.queues[i].is_empty()
+        } else {
+            self.monitor.drained() && self.synced() && self.queues[i].is_empty()
+        }
+    }
+
+    /// Threads driver: the balancer thread confirms global drain and
+    /// releases the reducers.
+    pub fn request_stop(&self) {
+        self.stop.store(true, Ordering::Release);
+    }
+
+    pub fn all_queues_empty(&self) -> bool {
+        self.queues.iter().all(|q| q.is_empty())
+    }
+
+    /// Apply one load report to the balancer, honouring the §7 gating: no
+    /// repartition may start while a previous one is still synchronizing
+    /// ("updates must be atomic and infrequent"), and a repartition that
+    /// does fire immediately opens the new epoch's synchronization window.
+    pub fn apply_report(&self, balancer: &mut BalancerCore, r: LoadReport) -> Option<LbEvent> {
+        if !r.evaluate || !self.synced() {
+            balancer.observe(r.reducer, r.qlen);
+            return None;
+        }
+        let event = balancer.report(r.reducer, r.qlen, r.at);
+        if let Some(e) = &event {
+            if self.mode == ConsistencyMode::StateForward {
+                self.tracker.begin_epoch(e.epoch);
+            }
+        }
+        event
+    }
+
+    /// Final-snapshot → state-merge → report assembly (§2), identical for
+    /// every driver. Under §7 with a pure-state executor the snapshots
+    /// must be key-disjoint and [`merge_states`] asserts it.
+    pub fn finish(
+        &self,
+        mappers: &[MapperCore],
+        reducers: &mut [ReducerCore],
+        balancer: &mut BalancerCore,
+        reduce_factory: &ReduceFactory,
+        wall: Duration,
+        virtual_end: u64,
+    ) -> RunReport {
+        let snaps: Vec<Vec<(String, i64)>> =
+            reducers.iter_mut().map(|r| r.final_snapshot()).collect();
+        let probe = reduce_factory(0);
+        let op = probe.merge_op();
+        let expect_disjoint =
+            self.mode == ConsistencyMode::StateForward && probe.snapshot_is_state();
+        let result = merge_states(snaps, op, expect_disjoint);
+
+        RunReport {
+            processed: reducers.iter().map(|r| r.processed).collect(),
+            forwarded: reducers.iter().map(|r| r.forwarded).collect(),
+            mapped: mappers.iter().map(|m| m.emitted).collect(),
+            lb_events: balancer.take_events(),
+            result,
+            wall,
+            virtual_end,
+            peak_qlen: self.queues.iter().map(|q| q.peak()).collect(),
+            input_items: self.input_items,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::builtin::WordCount;
+    use crate::hash::{Ring, Strategy};
+
+    fn core(mode: ConsistencyMode, ring: &SharedRing, items: Vec<String>) -> ExecCore {
+        ExecCore::build(
+            ring,
+            1,
+            items,
+            ExecParams {
+                chunk_size: 10,
+                queue_capacity: usize::MAX,
+                report_interval: 2,
+                mode,
+                coordinated_stop: false,
+            },
+        )
+    }
+
+    fn owned_key(ring: &SharedRing, node: usize) -> String {
+        crate::workload::generators::key_pool()
+            .into_iter()
+            .find(|k| ring.lookup(k.as_bytes()) == node)
+            .expect("pool has a key for every node")
+    }
+
+    #[test]
+    fn topology_matches_ring() {
+        let ring = SharedRing::new(Ring::new(4, 8));
+        let c = core(ConsistencyMode::MergeAtEnd, &ring, vec!["a".into(); 25]);
+        assert_eq!(c.queues.len(), 4);
+        assert_eq!(c.pool.total(), 3);
+        assert!(c.synced());
+    }
+
+    #[test]
+    fn step_reduces_owned_and_forwards_disowned() {
+        let ring = SharedRing::new(Ring::new(4, 8));
+        let c = core(ConsistencyMode::MergeAtEnd, &ring, vec![]);
+        let key = owned_key(&ring, 1);
+        let other = owned_key(&ring, 2);
+        let mut rc = ReducerCore::new(1, Box::new(WordCount::new()), ring.clone());
+
+        c.push_mapped(1, Record::new(key, 1));
+        c.push_mapped(1, Record::new(other, 1)); // stale-routed
+        assert!(matches!(
+            c.reducer_step(&mut rc, 1, |q| q.try_pop()),
+            ReducerStep::Reduced
+        ));
+        assert!(matches!(
+            c.reducer_step(&mut rc, 1, |q| q.try_pop()),
+            ReducerStep::Forwarded
+        ));
+        assert_eq!(c.queues[2].len(), 1, "forward landed at the owner");
+        // one record reduced, one still in flight (forwarded)
+        assert_eq!(c.monitor.in_flight(), 1);
+    }
+
+    #[test]
+    fn idle_stop_requires_drain_and_sync() {
+        let ring = SharedRing::new(Ring::new(2, 8));
+        let c = core(ConsistencyMode::MergeAtEnd, &ring, vec![]);
+        let mut rc = ReducerCore::new(0, Box::new(WordCount::new()), ring.clone());
+        // mapper still running → no stop
+        match c.reducer_step(&mut rc, 0, |q| q.try_pop()) {
+            ReducerStep::Idle { stop } => assert!(!stop),
+            s => panic!("expected Idle, got {s:?}"),
+        }
+        c.monitor.mapper_done();
+        match c.reducer_step(&mut rc, 0, |q| q.try_pop()) {
+            ReducerStep::Idle { stop } => assert!(stop),
+            s => panic!("expected Idle, got {s:?}"),
+        }
+    }
+
+    #[test]
+    fn coordinated_stop_waits_for_request() {
+        let ring = SharedRing::new(Ring::new(2, 8));
+        let mut c = core(ConsistencyMode::MergeAtEnd, &ring, vec![]);
+        c.coordinated_stop = true;
+        c.monitor.mapper_done();
+        let mut rc = ReducerCore::new(0, Box::new(WordCount::new()), ring.clone());
+        match c.reducer_step(&mut rc, 0, |q| q.try_pop()) {
+            ReducerStep::Idle { stop } => assert!(!stop, "no stop before request"),
+            s => panic!("expected Idle, got {s:?}"),
+        }
+        c.request_stop();
+        match c.reducer_step(&mut rc, 0, |q| q.try_pop()) {
+            ReducerStep::Idle { stop } => assert!(stop),
+            s => panic!("expected Idle, got {s:?}"),
+        }
+    }
+
+    #[test]
+    fn state_forward_round_trip_through_core() {
+        // repartition → extraction ships state on the priority lane →
+        // destination absorbs → synchronized again
+        let ring = SharedRing::new(Ring::new(4, 1));
+        let c = core(ConsistencyMode::StateForward, &ring, vec![]);
+        let key = owned_key(&ring, 0);
+        let mut r0 = ReducerCore::new(0, Box::new(WordCount::new()), ring.clone());
+        let mut others: Vec<ReducerCore> = (1..4)
+            .map(|i| ReducerCore::new(i, Box::new(WordCount::new()), ring.clone()))
+            .collect();
+
+        c.push_mapped(0, Record::new(key.clone(), 1));
+        c.push_mapped(0, Record::new(key.clone(), 1));
+        assert!(matches!(c.reducer_step(&mut r0, 0, |q| q.try_pop()), ReducerStep::Reduced));
+        assert!(matches!(c.reducer_step(&mut r0, 0, |q| q.try_pop()), ReducerStep::Reduced));
+
+        // move the key off node 0, then open the epoch like apply_report
+        let mut moved = false;
+        for _ in 0..7 {
+            ring.update(|rr| {
+                rr.double_others(0);
+            });
+            if ring.lookup(key.as_bytes()) != 0 {
+                moved = true;
+                break;
+            }
+        }
+        assert!(moved);
+        c.tracker.begin_epoch(ring.epoch());
+
+        // every reducer runs substage 1; node 0 ships its count
+        match c.reducer_step(&mut r0, 0, |q| q.try_pop()) {
+            ReducerStep::StateExtracted { sent } => assert_eq!(sent, 1),
+            s => panic!("expected extraction, got {s:?}"),
+        }
+        for rc in others.iter_mut() {
+            let id = rc.id;
+            match c.reducer_step(rc, id, |q| q.try_pop()) {
+                ReducerStep::StateExtracted { sent } => assert_eq!(sent, 0),
+                s => panic!("expected extraction, got {s:?}"),
+            }
+        }
+        assert!(!c.synced(), "transfer still in flight");
+
+        // new owner absorbs the state from its priority lane
+        let owner = ring.lookup(key.as_bytes());
+        let rc = others.iter_mut().find(|r| r.id == owner).unwrap();
+        assert!(matches!(
+            c.reducer_step(rc, owner, |q| q.try_pop()),
+            ReducerStep::StateAbsorbed
+        ));
+        assert!(c.synced());
+        assert_eq!(rc.final_snapshot(), vec![(key, 2)], "state arrived whole");
+        assert!(r0.final_snapshot().is_empty(), "state left the old owner");
+    }
+
+    #[test]
+    fn synchronizing_defers_data() {
+        let ring = SharedRing::new(Ring::new(2, 1));
+        let c = core(ConsistencyMode::StateForward, &ring, vec![]);
+        let key = owned_key(&ring, 0);
+        let mut r0 = ReducerCore::new(0, Box::new(WordCount::new()), ring.clone());
+        c.push_mapped(0, Record::new(key, 1));
+        ring.update(|rr| {
+            rr.double_others(1);
+        });
+        c.tracker.begin_epoch(ring.epoch());
+        // extraction first (empty state), then the queued data defers
+        // until the OTHER reducer also extracts
+        assert!(matches!(
+            c.reducer_step(&mut r0, 0, |q| q.try_pop()),
+            ReducerStep::StateExtracted { sent: 0 }
+        ));
+        assert!(matches!(c.reducer_step(&mut r0, 0, |q| q.try_pop()), ReducerStep::Deferred));
+        assert_eq!(c.queues[0].len(), 1, "deferred data stays local");
+    }
+
+    #[test]
+    fn report_gating_follows_stage() {
+        let ring = SharedRing::new(Ring::for_strategy(4, Strategy::Doubling, 8));
+        let c = core(ConsistencyMode::StateForward, &ring, vec![]);
+        let mut balancer =
+            BalancerCore::new(ring.clone(), Strategy::Doubling, 0.2, 4, 2, 0).without_warmup();
+        // skewed report fires and opens a synchronization window
+        let e = c
+            .apply_report(
+                &mut balancer,
+                LoadReport { reducer: 0, qlen: 50, at: 0, evaluate: true },
+            )
+            .expect("policy fires");
+        assert_eq!(c.tracker.stage(), Stage::Synchronizing);
+        // while synchronizing, an even more skewed report must NOT fire
+        assert!(c
+            .apply_report(
+                &mut balancer,
+                LoadReport { reducer: 0, qlen: 500, at: 100, evaluate: true },
+            )
+            .is_none());
+        assert!(e.epoch > 1);
+    }
+}

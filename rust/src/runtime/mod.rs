@@ -1,5 +1,7 @@
-//! PJRT runtime: loads the AOT-compiled XLA programs (HLO text emitted by
-//! `python/compile/aot.py`) and executes them from the rust hot path.
+//! Runtime layer: the shared execution core every driver schedules over
+//! ([`exec`]), plus the PJRT runtime that loads the AOT-compiled XLA
+//! programs (HLO text emitted by `python/compile/aot.py`) and executes
+//! them from the rust hot path.
 //!
 //! Python runs only at build time (`make artifacts`); this module is the
 //! entire request-path interface to the compiled data plane:
@@ -17,6 +19,7 @@
 
 pub mod artifacts;
 pub mod client;
+pub mod exec;
 pub mod programs;
 
 pub use artifacts::{default_artifacts_dir, Manifest};

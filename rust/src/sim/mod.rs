@@ -1,11 +1,13 @@
 //! Deterministic discrete-event simulation driver.
 //!
-//! Runs the full DPA pipeline — coordinator task pool, mappers, per-reducer
-//! queues, reducers with forwarding, the load balancer — under a virtual
-//! clock with seeded cost jitter. Same seed ⇒ identical schedule, identical
-//! `S`, identical LB events; seed sweeps reproduce the run-to-run
-//! variation the paper attributes to "the indeterminate nature of our
-//! distributed systems".
+//! A thin *scheduler* over the shared [`ExecCore`] runtime: the core owns
+//! the topology (task pool, envelope queues, actor cores' step logic), the
+//! reducer state-machine, the drain condition and the final merge; this
+//! module contributes only virtual time — a seeded event heap that decides
+//! *when* each actor steps and charges per-step costs with jitter. Same
+//! seed ⇒ identical schedule, identical `S`, identical LB events; seed
+//! sweeps reproduce the run-to-run variation the paper attributes to "the
+//! indeterminate nature of our distributed systems".
 //!
 //! Cost model (virtual ticks): fetching a task, mapping an item, reducing
 //! a record, forwarding a record and idle re-polls each cost a configurable
@@ -14,17 +16,16 @@
 //! regime whose queue buildup the balancer watches.
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::BinaryHeap;
 use std::sync::Arc;
 
-use crate::actor::Envelope;
-use crate::balancer::state_forward::{ConsistencyMode, Stage, StageTracker};
+use crate::balancer::state_forward::ConsistencyMode;
 use crate::balancer::BalancerCore;
-use crate::coordinator::{merge_states, TaskPool};
 use crate::exec::{MapExecutor, ReduceFactory, Task};
 use crate::mapper::MapperCore;
 use crate::metrics::RunReport;
-use crate::reducer::{Handled, ReducerCore};
+use crate::reducer::ReducerCore;
+use crate::runtime::exec::{ExecCore, ExecParams, LoadReport, ReducerStep};
 use crate::util::prng::Xoshiro256;
 
 /// Virtual-time costs for the simulation.
@@ -112,32 +113,37 @@ impl SimDriver {
         reduce_factory: &ReduceFactory,
         n_mappers: usize,
         mut balancer: BalancerCore,
-        items: Vec<String>,
+        items: impl Into<Arc<[String]>>,
     ) -> RunReport {
         let p = &self.params;
         let ring = balancer.ring().clone();
         let n_reducers = ring.nodes();
-        let input_items = items.len() as u64;
 
-        let pool = TaskPool::from_items(items, p.chunk_size);
+        let core = ExecCore::build(
+            &ring,
+            n_mappers,
+            items,
+            ExecParams {
+                chunk_size: p.chunk_size,
+                // a single-threaded scheduler must never block on
+                // backpressure
+                queue_capacity: usize::MAX,
+                report_interval: p.report_interval,
+                mode: p.mode,
+                coordinated_stop: false,
+            },
+        );
         let mut rng = Xoshiro256::new(p.seed);
 
         // actors
         let mut mappers: Vec<MapperCore> = (0..n_mappers)
             .map(|i| MapperCore::new(i, map_exec.clone(), ring.clone()))
             .collect();
-        let mut mapper_task: Vec<Option<VecDeque<String>>> = vec![None; n_mappers];
+        let mut mapper_task: Vec<Option<(Task, usize)>> = vec![None; n_mappers];
         let mut mapper_done: Vec<bool> = vec![false; n_mappers];
         let mut reducers: Vec<ReducerCore> = (0..n_reducers)
             .map(|i| ReducerCore::new(i, reduce_factory(i), ring.clone()))
             .collect();
-        let mut queues: Vec<VecDeque<Envelope>> = (0..n_reducers).map(|_| VecDeque::new()).collect();
-        let mut peak_qlen = vec![0usize; n_reducers];
-        let mut tracker = StageTracker::new(n_reducers, ring.epoch());
-
-        // bookkeeping
-        let mut in_flight: u64 = 0;
-        let mut mappers_running = n_mappers;
         let mut reducers_running = n_reducers;
 
         // event heap: (time, seq, actor) — seq breaks ties deterministically
@@ -173,24 +179,24 @@ impl SimDriver {
                     match &mut mapper_task[i] {
                         None => {
                             // fetch a task from the coordinator
-                            match pool.fetch() {
-                                Some(Task { items, .. }) => {
-                                    mapper_task[i] = Some(items.into());
+                            match core.pool.fetch() {
+                                Some(task) => {
+                                    mapper_task[i] = Some((task, 0));
                                     let c = jitter(&mut rng, p.costs.fetch_cost, p.costs.cost_jitter);
                                     push(&mut heap, &mut seq, now + c, actor);
                                 }
                                 None => {
                                     mapper_done[i] = true;
-                                    mappers_running -= 1;
+                                    core.monitor.mapper_done();
                                 }
                             }
                         }
-                        Some(task) => {
-                            if let Some(item) = task.pop_front() {
-                                for (dest, rec) in mappers[i].process_item(&item) {
-                                    queues[dest].push_back(Envelope::Data(rec));
-                                    peak_qlen[dest] = peak_qlen[dest].max(queues[dest].len());
-                                    in_flight += 1;
+                        Some((task, cursor)) => {
+                            if *cursor < task.items.len() {
+                                let routed = mappers[i].process_item(&task.items[*cursor]);
+                                *cursor += 1;
+                                for (dest, rec) in routed {
+                                    core.push_mapped(dest, rec);
                                 }
                                 let c = jitter(&mut rng, p.costs.map_cost, p.costs.cost_jitter);
                                 push(&mut heap, &mut seq, now + c, actor);
@@ -202,79 +208,40 @@ impl SimDriver {
                     }
                 }
                 ActorId::Reducer(i) => {
-                    // §7 state forwarding, substage 1: extract before
-                    // touching any data
-                    if p.mode == ConsistencyMode::StateForward && tracker.needs_extraction(i) {
-                        let transfers = reducers[i].extract_disowned();
-                        let sent = transfers.len() as u64;
-                        for (dest, rec) in transfers {
-                            // state goes to the FRONT: destinations apply
-                            // it before any queued data
-                            queues[dest].push_front(Envelope::State(rec));
-                            peak_qlen[dest] = peak_qlen[dest].max(queues[dest].len());
-                        }
-                        tracker.extraction_done(i, sent);
-                        let c = jitter(&mut rng, p.costs.forward_cost, p.costs.cost_jitter);
-                        push(&mut heap, &mut seq, now + c, actor);
-                        continue;
-                    }
-
-                    match queues[i].pop_front() {
-                        Some(Envelope::State(rec)) => {
-                            reducers[i].absorb_state(rec);
-                            tracker.transfer_landed();
+                    match core.reducer_step(&mut reducers[i], i, |q| q.try_pop()) {
+                        ReducerStep::StateExtracted { .. } | ReducerStep::StateAbsorbed => {
                             let c = jitter(&mut rng, p.costs.forward_cost, p.costs.cost_jitter);
                             push(&mut heap, &mut seq, now + c, actor);
                         }
-                        Some(Envelope::Data(rec)) => {
-                            if p.mode == ConsistencyMode::StateForward
-                                && tracker.stage() == Stage::Synchronizing
-                            {
-                                // substage 1: no data processing — put it
-                                // back (paper: "any data that need to be
-                                // forwarded gets put back into the queue")
-                                queues[i].push_back(Envelope::Data(rec));
-                                push(&mut heap, &mut seq, now + 1, actor);
-                                continue;
-                            }
-                            match reducers[i].handle(rec) {
-                                Handled::Reduced => {
-                                    in_flight -= 1;
-                                    let c = jitter(&mut rng, p.costs.reduce_cost, p.costs.cost_jitter);
-                                    push(&mut heap, &mut seq, now + c, actor);
-                                }
-                                Handled::Forward(dest, rec) => {
-                                    queues[dest].push_back(Envelope::Data(rec));
-                                    peak_qlen[dest] = peak_qlen[dest].max(queues[dest].len());
-                                    let c = jitter(&mut rng, p.costs.forward_cost, p.costs.cost_jitter);
-                                    push(&mut heap, &mut seq, now + c, actor);
-                                }
-                            }
-                            // periodic load report (§3)
+                        ReducerStep::Deferred => {
+                            push(&mut heap, &mut seq, now + 1, actor);
+                        }
+                        step @ (ReducerStep::Reduced | ReducerStep::Forwarded) => {
+                            let base = match step {
+                                ReducerStep::Reduced => p.costs.reduce_cost,
+                                _ => p.costs.forward_cost,
+                            };
+                            let c = jitter(&mut rng, base, p.costs.cost_jitter);
+                            push(&mut heap, &mut seq, now + c, actor);
+                            // periodic load report (§3), applied inline —
+                            // the sim IS the balancer's owner
                             if reducers[i].due_report(p.report_interval) {
-                                let can_rebalance = p.mode != ConsistencyMode::StateForward
-                                    || tracker.stage() == Stage::Synchronized;
-                                let qlen = queues[i].len();
-                                let event = if can_rebalance {
-                                    balancer.report(i, qlen, now)
-                                } else {
-                                    balancer.observe(i, qlen);
-                                    None
-                                };
-                                if let Some(_e) = event {
-                                    if p.mode == ConsistencyMode::StateForward {
-                                        tracker.begin_epoch(ring.epoch());
-                                    }
-                                }
+                                core.apply_report(
+                                    &mut balancer,
+                                    LoadReport {
+                                        reducer: i,
+                                        qlen: core.queues[i].len(),
+                                        at: now,
+                                        evaluate: true,
+                                    },
+                                );
                             }
                         }
-                        None => {
+                        ReducerStep::Idle { stop } => {
                             // idle: report emptiness, then either stop (if
-                            // globally drained) or re-poll
+                            // globally drained + synchronized) or re-poll
                             balancer.observe(i, 0);
-                            let synced = p.mode != ConsistencyMode::StateForward
-                                || tracker.stage() == Stage::Synchronized;
-                            if mappers_running == 0 && in_flight == 0 && synced {
+                            if stop {
                                 reducers_running -= 1;
                                 // stopped: no reschedule
                             } else {
@@ -286,30 +253,17 @@ impl SimDriver {
             }
         }
 
-        debug_assert_eq!(mappers_running, 0);
         debug_assert_eq!(reducers_running, 0);
-        debug_assert_eq!(in_flight, 0);
+        debug_assert!(core.monitor.drained());
 
-        // final state merge (§2)
-        let snaps: Vec<Vec<(String, i64)>> =
-            reducers.iter_mut().map(|r| r.final_snapshot()).collect();
-        let probe = reduce_factory(0);
-        let op = probe.merge_op();
-        let expect_disjoint =
-            p.mode == ConsistencyMode::StateForward && probe.snapshot_is_state();
-        let result = merge_states(snaps, op, expect_disjoint);
-
-        RunReport {
-            processed: reducers.iter().map(|r| r.processed).collect(),
-            forwarded: reducers.iter().map(|r| r.forwarded).collect(),
-            mapped: mappers.iter().map(|m| m.emitted).collect(),
-            lb_events: balancer.take_events(),
-            result,
-            wall: std::time::Duration::ZERO,
-            virtual_end: now,
-            peak_qlen,
-            input_items,
-        }
+        core.finish(
+            &mappers,
+            &mut reducers,
+            &mut balancer,
+            reduce_factory,
+            std::time::Duration::ZERO,
+            now,
+        )
     }
 }
 

@@ -1,11 +1,67 @@
-//! A tiny property-testing toolkit (offline build: no proptest).
+//! A tiny property-testing toolkit (offline build: no proptest), plus
+//! cross-driver parity helpers.
 //!
 //! [`forall`] runs a property over N seeded random cases; on failure it
 //! retries the failing case with progressively "smaller" regenerations
 //! (halved size parameter) to report a compact counterexample. Generators
 //! are plain functions over [`Gen`].
+//!
+//! [`assert_driver_parity`] is the unified-runtime contract check: the
+//! deterministic sim and the threads driver must produce identical merged
+//! results (both equal to the serial word-count oracle) for the same
+//! workload × strategy × consistency mode.
 
+use crate::balancer::state_forward::ConsistencyMode;
+use crate::hash::Strategy;
+use crate::pipeline::{DriverKind, Pipeline, PipelineConfig};
 use crate::util::prng::Xoshiro256;
+
+/// Serial word-count oracle: what any driver must compute.
+pub fn wordcount_oracle(items: &[String]) -> Vec<(String, i64)> {
+    let mut m = std::collections::HashMap::new();
+    for i in items {
+        *m.entry(i.clone()).or_insert(0i64) += 1;
+    }
+    let mut v: Vec<(String, i64)> = m.into_iter().collect();
+    v.sort();
+    v
+}
+
+/// Run the word-count pipeline on `items` under both drivers and assert
+/// that each result matches the serial oracle (hence each other), that
+/// message conservation holds, and — when `mode` is
+/// [`ConsistencyMode::StateForward`] — that the key-disjoint snapshot
+/// invariant (asserted inside the shared runtime's merge) survives real
+/// concurrency. `label` names the workload in failure messages.
+pub fn assert_driver_parity(
+    label: &str,
+    items: &[String],
+    strategy: Strategy,
+    mode: ConsistencyMode,
+) {
+    let oracle = wordcount_oracle(items);
+    let shared: std::sync::Arc<[String]> = items.into();
+    for driver in [DriverKind::Sim, DriverKind::Threads] {
+        let mut cfg = PipelineConfig::default();
+        cfg.driver = driver;
+        cfg.strategy = strategy;
+        cfg.initial_tokens = Some(strategy.initial_tokens(cfg.halving_init_tokens));
+        cfg.mode = mode;
+        cfg.max_rounds = 2;
+        // keep the threads runs fast; LB firing is workload-dependent and
+        // parity must hold either way
+        cfg.reduce_delay_us = 50;
+        let r = Pipeline::wordcount(cfg)
+            .run(shared.clone())
+            .unwrap_or_else(|e| panic!("{label}/{strategy}/{mode:?}/{driver:?}: {e}"));
+        r.check_conservation()
+            .unwrap_or_else(|e| panic!("{label}/{strategy}/{mode:?}/{driver:?}: {e}"));
+        assert_eq!(
+            r.result, oracle,
+            "{label}/{strategy}/{mode:?}/{driver:?}: result != oracle"
+        );
+    }
+}
 
 /// Random-input generator context: a seeded PRNG plus a size budget that
 /// shrinking reduces.

@@ -1,0 +1,66 @@
+//! Cross-driver parity: the deterministic sim and the threads driver are
+//! thin schedulers over one shared runtime (`runtime::exec`), so for every
+//! paper workload × strategy × consistency mode they must produce the same
+//! merged result — equal to the serial word-count oracle. This includes §7
+//! state forwarding on real threads, which the pre-unification code base
+//! rejected outright.
+
+use dpa::balancer::state_forward::ConsistencyMode;
+use dpa::hash::Strategy;
+use dpa::pipeline::{DriverKind, Pipeline, PipelineConfig};
+use dpa::testkit::{assert_driver_parity, wordcount_oracle};
+use dpa::workload::paperwl;
+
+#[test]
+fn paper_workloads_parity_merge_at_end() {
+    for w in paperwl::all() {
+        for strategy in Strategy::all() {
+            assert_driver_parity(&w.name, &w.items, strategy, ConsistencyMode::MergeAtEnd);
+        }
+    }
+}
+
+#[test]
+fn paper_workloads_parity_state_forward() {
+    for w in paperwl::all() {
+        for strategy in Strategy::methods() {
+            assert_driver_parity(&w.name, &w.items, strategy, ConsistencyMode::StateForward);
+        }
+    }
+}
+
+#[test]
+fn state_forward_on_threads_wl1_skewed() {
+    // the acceptance case: WL1 (all load on one doubling node) on real
+    // threads with §7 state forwarding. Compute-heavy reducers make the
+    // hot queue build so the balancer genuinely repartitions mid-run; the
+    // shared runtime's merge then asserts the key-disjoint snapshot
+    // invariant, and the answer must still be exact.
+    let w = paperwl::wl1();
+    let mut cfg = PipelineConfig::default();
+    cfg.driver = DriverKind::Threads;
+    cfg.strategy = Strategy::Doubling;
+    cfg.initial_tokens = Some(Strategy::Doubling.initial_tokens(cfg.halving_init_tokens));
+    cfg.mode = ConsistencyMode::StateForward;
+    cfg.max_rounds = 2;
+    cfg.reduce_delay_us = 500;
+    let r = Pipeline::wordcount(cfg).run(w.items.clone()).unwrap();
+    r.check_conservation().unwrap();
+    assert_eq!(r.result, wordcount_oracle(&w.items));
+    assert_eq!(r.total_processed(), w.items.len() as u64);
+}
+
+#[test]
+fn shared_input_runs_do_not_clone_per_seed() {
+    // run_seeds shares one Arc'd input across seeds; results stay exact
+    let w = paperwl::wl4();
+    let mut cfg = PipelineConfig::default();
+    cfg.strategy = Strategy::Doubling;
+    cfg.initial_tokens = Some(1);
+    let p = Pipeline::wordcount(cfg);
+    let reports = p.run_seeds(&w.items, &[0, 1, 2, 3]).unwrap();
+    let oracle = wordcount_oracle(&w.items);
+    for r in &reports {
+        assert_eq!(r.result, oracle);
+    }
+}
