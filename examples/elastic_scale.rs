@@ -20,7 +20,7 @@ use std::sync::Arc;
 use dpa::coordinator::merge_states;
 use dpa::exec::builtin::{IdentityMap, WordCount};
 use dpa::exec::{MapExecutor, MergeOp, Record};
-use dpa::hash::{Ring, SharedRing};
+use dpa::hash::{Ring, RingOp, RouterHandle};
 use dpa::mapper::MapperCore;
 use dpa::reducer::{Handled, ReducerCore};
 use dpa::workload::generators;
@@ -40,11 +40,13 @@ fn main() -> dpa::Result<()> {
         v
     };
 
-    // start with 4 reducers, 8 tokens each
-    let ring = SharedRing::new(Ring::new(4, 8));
-    let mut mapper = MapperCore::new(0, Arc::new(IdentityMap) as Arc<dyn MapExecutor>, ring.clone());
+    // start with 4 reducers, 8 tokens each (token ring behind the Router
+    // trait; the elastic extension claims tokens through the escape hatch)
+    let router = RouterHandle::token_ring(Ring::new(4, 8), RingOp::NoOp);
+    let mut mapper =
+        MapperCore::new(0, Arc::new(IdentityMap) as Arc<dyn MapExecutor>, router.clone());
     let mut reducers: Vec<ReducerCore> = (0..4)
-        .map(|i| ReducerCore::new(i, Box::new(WordCount::new()), ring.clone()))
+        .map(|i| ReducerCore::new(i, Box::new(WordCount::new()), router.clone()))
         .collect();
     let mut queues: Vec<VecDeque<Record>> = (0..4).map(|_| VecDeque::new()).collect();
 
@@ -78,9 +80,12 @@ fn main() -> dpa::Result<()> {
     }
 
     // phase 2: ELASTIC JOIN — reducer 4 claims 8 tokens on the live ring
-    let new_id = ring.update(|r| r.add_node(8));
-    println!("\nreducer {new_id} joined: ring now has {} tokens", ring.total_tokens());
-    reducers.push(ReducerCore::new(new_id, Box::new(WordCount::new()), ring.clone()));
+    let new_id = router.update_ring(|r| r.add_node(8)).expect("token-ring router");
+    println!(
+        "\nreducer {new_id} joined: ring now has {} tokens",
+        router.with_ring(|r| r.total_tokens()).unwrap()
+    );
+    reducers.push(ReducerCore::new(new_id, Box::new(WordCount::new()), router.clone()));
     queues.push(VecDeque::new());
 
     // phase 3: route the second half (mappers see the new ring instantly)

@@ -27,7 +27,7 @@ fn main() -> dpa::Result<()> {
     }
 
     println!();
-    print!("{}", dpa::cli::table1(3)?);
+    print!("{}", dpa::cli::table1(3, &dpa::hash::Strategy::methods())?);
     println!();
     print!("{}", dpa::cli::fig3(4)?);
 

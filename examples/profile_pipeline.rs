@@ -1,3 +1,7 @@
+
+// experiment configs override one default knob at a time (see lib.rs)
+#![allow(clippy::field_reassign_with_default)]
+
 use dpa::hash::Strategy;
 use dpa::pipeline::{DriverKind, Pipeline, PipelineConfig};
 use dpa::workload::generators;

@@ -5,6 +5,10 @@
 //! cargo run --release --example quickstart
 //! ```
 
+// experiment configs override one default knob at a time (see lib.rs)
+#![allow(clippy::field_reassign_with_default)]
+
+
 use dpa::hash::Strategy;
 use dpa::pipeline::{Pipeline, PipelineConfig};
 use dpa::workload::generators;

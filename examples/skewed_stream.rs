@@ -6,6 +6,10 @@
 //! cargo run --release --example skewed_stream
 //! ```
 
+// experiment configs override one default knob at a time (see lib.rs)
+#![allow(clippy::field_reassign_with_default)]
+
+
 use dpa::hash::Strategy;
 use dpa::pipeline::{Pipeline, PipelineConfig};
 use dpa::util::table::{delta2, f2, Table};

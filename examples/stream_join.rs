@@ -12,6 +12,10 @@
 //! cargo run --release --example stream_join
 //! ```
 
+// experiment configs override one default knob at a time (see lib.rs)
+#![allow(clippy::field_reassign_with_default)]
+
+
 use std::sync::Arc;
 
 use dpa::balancer::state_forward::ConsistencyMode;

@@ -13,11 +13,15 @@
 //! cargo bench --bench ablation
 //! ```
 
+// experiment configs override one default knob at a time (see lib.rs)
+#![allow(clippy::field_reassign_with_default)]
+
+
 use dpa::balancer::policy::{MeanRatioPolicy, NeverPolicy, ThresholdPolicy};
 use dpa::balancer::state_forward::ConsistencyMode;
 use dpa::balancer::BalancerCore;
 use dpa::exec::builtin::{IdentityMap, WordCount};
-use dpa::hash::{Ring, SharedRing, Strategy};
+use dpa::hash::{RouterHandle, Strategy};
 use dpa::pipeline::{Pipeline, PipelineConfig};
 use dpa::sim::{SimDriver, SimParams};
 use dpa::util::stats::Summary;
@@ -52,7 +56,7 @@ fn main() {
         ("eq1 (paper)", Box::new(|| Box::new(ThresholdPolicy::new(0.2, 8)))),
         (
             "mean-ratio",
-            Box::new(|| Box::new(MeanRatioPolicy { tau: 0.2, min_trigger_qlen: 8 })),
+            Box::new(|| Box::new(MeanRatioPolicy::new(0.2, 8))),
         ),
         ("never", Box::new(|| Box::new(NeverPolicy))),
     ];
@@ -60,8 +64,8 @@ fn main() {
         let mut skews = Summary::new();
         let mut events = Summary::new();
         for &seed in &seeds {
-            let ring = SharedRing::new(Ring::new(4, 1));
-            let balancer = BalancerCore::new(ring, Strategy::Doubling, 0.2, 8, 2, 50)
+            let router = RouterHandle::new(Strategy::Doubling.build_router(4, 8, None));
+            let balancer = BalancerCore::new(router, Strategy::Doubling, 0.2, 8, 2, 50)
                 .with_policy(ctor());
             let driver = SimDriver::new(SimParams { seed, ..Default::default() });
             let factory: dpa::exec::ReduceFactory =

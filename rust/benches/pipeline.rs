@@ -6,6 +6,10 @@
 //! cargo bench --bench pipeline
 //! ```
 
+// experiment configs override one default knob at a time (see lib.rs)
+#![allow(clippy::field_reassign_with_default)]
+
+
 use std::sync::Arc;
 use std::time::Duration;
 

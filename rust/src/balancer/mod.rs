@@ -1,25 +1,28 @@
 //! The load balancer — "the heart of the system" (§2.4).
 //!
-//! It owns the consistent-hashing object, maintains the last-reported load
-//! state (queue size) of every reducer, and repartitions the keyspace when
-//! the §4.1 policy fires. [`policy`] holds the trigger predicate,
-//! [`BalancerCore`] the actor state shared by both drivers, and
-//! [`state_forward`] the §7 staged state-forwarding extension.
+//! It owns the routing/redistribution layer (a boxed
+//! [`Router`](crate::hash::Router) behind a shared
+//! [`RouterHandle`]), maintains the last-reported load state (queue size)
+//! of every reducer, and repartitions the keyspace when the §4.1 policy
+//! fires. [`policy`] holds the trigger predicate, [`BalancerCore`] the
+//! actor state shared by both drivers, and [`state_forward`] the §7
+//! staged state-forwarding extension.
 
 pub mod policy;
 pub mod state_forward;
 
-use crate::hash::{SharedRing, Strategy};
+use crate::hash::{RouterHandle, StrategySpec};
 use crate::metrics::LbEvent;
 
 use policy::{LbPolicy, ThresholdPolicy};
 
-/// Balancer actor state. Thread driver wraps it in a `Mutex`; the sim
-/// driver calls it directly. Reducers report load via [`Self::report`];
-/// mappers/reducers route via the [`SharedRing`] it updates.
+/// Balancer actor state. The threads driver gives it to a dedicated
+/// balancer thread; the sim driver calls it directly. Reducers report
+/// load via [`Self::report`]; mappers/reducers route via the
+/// [`RouterHandle`] it updates.
 pub struct BalancerCore {
-    ring: SharedRing,
-    strategy: Strategy,
+    router: RouterHandle,
+    spec: StrategySpec,
     policy: Box<dyn LbPolicy + Send>,
     /// Last reported queue length per reducer.
     qlens: Vec<usize>,
@@ -45,17 +48,17 @@ pub struct BalancerCore {
 
 impl BalancerCore {
     pub fn new(
-        ring: SharedRing,
-        strategy: Strategy,
+        router: RouterHandle,
+        spec: StrategySpec,
         tau: f64,
         min_trigger_qlen: usize,
         max_rounds: u32,
         cooldown: u64,
     ) -> Self {
-        let reducers = ring.nodes();
+        let reducers = router.nodes();
         BalancerCore {
-            ring,
-            strategy,
+            router,
+            spec,
             policy: Box::new(ThresholdPolicy::new(tau, min_trigger_qlen)),
             qlens: vec![0; reducers],
             reported: vec![false; reducers],
@@ -80,8 +83,13 @@ impl BalancerCore {
         self
     }
 
-    pub fn ring(&self) -> &SharedRing {
-        &self.ring
+    /// The shared routing layer this balancer updates.
+    pub fn router(&self) -> &RouterHandle {
+        &self.router
+    }
+
+    pub fn spec(&self) -> StrategySpec {
+        self.spec
     }
 
     pub fn events(&self) -> &[LbEvent] {
@@ -100,7 +108,7 @@ impl BalancerCore {
     /// length (§3: reducers "periodically call a remote method on the load
     /// balancer to update their current load state"). The balancer checks
     /// the policy on every report and repartitions if it fires. Returns
-    /// the event if the ring changed.
+    /// the event if the routing changed.
     pub fn report(&mut self, reducer: usize, qlen: usize, now: u64) -> Option<LbEvent> {
         self.observe(reducer, qlen);
         self.maybe_rebalance(now)
@@ -108,7 +116,9 @@ impl BalancerCore {
 
     /// Update the load state *without* evaluating the policy — used while
     /// the §7 state-forwarding protocol is mid-stage (updates must be
-    /// atomic and infrequent) and by idle-poll reports.
+    /// atomic and infrequent) and by idle-poll reports. Also publishes
+    /// the load to the router's shared [`Loads`](crate::hash::Loads)
+    /// view, which load-aware routers consult at route time.
     pub fn observe(&mut self, reducer: usize, qlen: usize) {
         if reducer >= self.qlens.len() {
             // a reducer added at runtime (elastic extension)
@@ -118,12 +128,13 @@ impl BalancerCore {
         }
         self.qlens[reducer] = qlen;
         self.reported[reducer] = true;
+        self.router.loads().set(reducer, qlen as u64);
     }
 
     /// Evaluate the policy over the current load vector and apply the
-    /// strategy if it fires.
+    /// router's redistribution if it fires.
     pub fn maybe_rebalance(&mut self, now: u64) -> Option<LbEvent> {
-        if self.strategy == Strategy::None {
+        if self.spec == StrategySpec::None {
             return None;
         }
         if !self.reported.iter().all(|&r| r) {
@@ -138,10 +149,19 @@ impl BalancerCore {
         if self.rounds[target] >= self.max_rounds {
             return None;
         }
-        let changed = self.ring.update(|r| r.redistribute(target, self.strategy));
-        if !changed {
-            // e.g. halving exhausted — count the round so we stop retrying
-            self.rounds[target] = self.max_rounds;
+        let delta = self.router.redistribute(target);
+        if !delta.changed {
+            if self.spec.is_token_ring() {
+                // halving exhausted / doubling saturated — permanent for
+                // the token ops: burn the rounds so we stop retrying
+                self.rounds[target] = self.max_rounds;
+            } else {
+                // probe routers: a no-op redistribute is transient (loads
+                // froze unchanged, or nothing was movable right now) —
+                // rate-limit the retry with the normal cooldown instead of
+                // disabling LB for this node for the rest of the run
+                self.last_event_at = Some(now);
+            }
             return None;
         }
         self.rounds[target] += 1;
@@ -150,13 +170,14 @@ impl BalancerCore {
             at: now,
             target: target as u32,
             qlens: self.qlens.clone(),
-            epoch: self.ring.epoch(),
-            strategy: self.strategy,
+            epoch: self.router.epoch(),
+            strategy: self.spec,
+            delta,
         };
         log::info!(
             "LB fired at {now}: target reducer {target}, qlens {:?}, strategy {}",
             event.qlens,
-            self.strategy
+            self.spec
         );
         self.events.push(event.clone());
         Some(event)
@@ -166,13 +187,13 @@ impl BalancerCore {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::hash::Ring;
+    use crate::hash::Strategy;
 
     fn mk(strategy: Strategy, max_rounds: u32) -> BalancerCore {
-        let ring = SharedRing::new(Ring::for_strategy(4, strategy, 8));
+        let router = RouterHandle::new(strategy.build_router(4, 8, None));
         // tests drive reports for a subset of reducers; disable warm-up
         // gating except where it is the behaviour under test
-        BalancerCore::new(ring, strategy, 0.2, 4, max_rounds, 10).without_warmup()
+        BalancerCore::new(router, strategy, 0.2, 4, max_rounds, 10).without_warmup()
     }
 
     #[test]
@@ -183,6 +204,8 @@ mod tests {
         let e = b.report(0, 20, 2).expect("should fire");
         assert_eq!(e.target, 0);
         assert_eq!(b.rounds()[0], 1);
+        assert!(e.delta.changed);
+        assert_eq!(e.delta.tokens_added, 3, "doubling grew the other 3 nodes");
     }
 
     #[test]
@@ -242,8 +265,8 @@ mod tests {
 
     #[test]
     fn warmup_gates_until_all_reported() {
-        let ring = SharedRing::new(Ring::for_strategy(4, Strategy::Doubling, 8));
-        let mut b = BalancerCore::new(ring, Strategy::Doubling, 0.2, 4, 1, 10);
+        let router = RouterHandle::new(Strategy::Doubling.build_router(4, 8, None));
+        let mut b = BalancerCore::new(router, Strategy::Doubling, 0.2, 4, 1, 10);
         assert!(b.report(0, 100, 0).is_none(), "3 reducers still unheard");
         b.observe(1, 0);
         b.observe(2, 0);
@@ -255,9 +278,9 @@ mod tests {
     #[test]
     fn halving_exhaustion_burns_rounds() {
         // node with 1 token cannot halve: the balancer must not spin
-        let ring = SharedRing::new(Ring::new(4, 1));
+        let router = RouterHandle::new(Strategy::Halving.build_router(4, 8, Some(1)));
         let mut b =
-            BalancerCore::new(ring, Strategy::Halving, 0.2, 4, 4, 0).without_warmup();
+            BalancerCore::new(router, Strategy::Halving, 0.2, 4, 4, 0).without_warmup();
         assert!(b.report(2, 100, 0).is_none(), "halving impossible");
         assert_eq!(b.rounds()[2], 4, "rounds burned to stop retry loop");
     }
@@ -265,11 +288,66 @@ mod tests {
     #[test]
     fn ring_actually_changes_on_event() {
         let mut b = mk(Strategy::Doubling, 1);
-        let tokens_before: Vec<u32> = (0..4).map(|n| b.ring().tokens_of(n)).collect();
+        let tokens_of =
+            |b: &BalancerCore, n: usize| b.router().with_ring(|r| r.tokens_of(n)).unwrap();
+        let tokens_before: Vec<u32> = (0..4).map(|n| tokens_of(&b, n)).collect();
         b.report(3, 50, 0).unwrap();
-        assert_eq!(b.ring().tokens_of(3), tokens_before[3]);
+        assert_eq!(tokens_of(&b, 3), tokens_before[3]);
         for n in 0..3 {
-            assert_eq!(b.ring().tokens_of(n), tokens_before[n] * 2);
+            assert_eq!(tokens_of(&b, n), tokens_before[n] * 2);
         }
+    }
+
+    #[test]
+    fn multiprobe_event_has_zero_token_churn() {
+        let mut b = mk(Strategy::MultiProbe { probes: 5 }, 1);
+        b.observe(1, 1);
+        b.observe(2, 1);
+        b.observe(3, 1);
+        let e = b.report(0, 50, 0).expect("skew fires on multi-probe too");
+        assert!(e.delta.changed);
+        assert!(e.delta.zero_token_churn());
+        assert_eq!(e.delta.keys_reassigned, 0);
+    }
+
+    #[test]
+    fn two_choices_event_reassigns_keys() {
+        let mut b = mk(Strategy::TwoChoices, 1);
+        // pin some keys by routing them, with reducer 0 the cold choice
+        for i in 0..200u32 {
+            b.router().route_key(format!("k{i}").as_bytes());
+        }
+        let e = b.report(0, 50, 0).expect("two-choices redistribute fires");
+        assert!(e.delta.changed);
+        assert!(e.delta.zero_token_churn());
+        assert!(e.delta.keys_reassigned > 0, "keys were re-homed");
+    }
+
+    #[test]
+    fn probe_router_noop_redistribute_is_not_exhaustion() {
+        // a no-op redistribute means "nothing to re-freeze right now",
+        // not "this node can never be relieved" — unlike halving
+        // exhaustion it must not burn the round budget
+        let mut b = mk(Strategy::MultiProbe { probes: 5 }, 4);
+        b.observe(1, 1);
+        b.observe(2, 1);
+        b.observe(3, 1);
+        assert!(b.report(0, 50, 0).is_some(), "first freeze fires");
+        // identical loads past the cooldown: redistribute is a no-op
+        assert!(b.report(0, 50, 20).is_none());
+        assert_eq!(b.rounds()[0], 1, "no-op must not exhaust the target");
+        // the shed set changes (a different node overloads) and the no-op
+        // armed the cooldown: LB resumes instead of staying disabled
+        assert!(b.report(1, 90, 40).is_some());
+    }
+
+    #[test]
+    fn observe_publishes_loads_to_router() {
+        let b = {
+            let mut b = mk(Strategy::TwoChoices, 1);
+            b.observe(2, 17);
+            b
+        };
+        assert_eq!(b.router().loads().get(2), 17);
     }
 }

@@ -75,10 +75,25 @@ impl LbPolicy for ThresholdPolicy {
 
 /// Ablation: trigger when `Q_max` exceeds the *mean* of the other queues
 /// by factor `(1 + τ)` — less sensitive to a single other busy reducer.
+///
+/// Construct via [`MeanRatioPolicy::new`], which validates like
+/// [`ThresholdPolicy::new`]: τ ≥ 0 and a floor of at least 1 on
+/// `min_trigger_qlen`, enforced once at construction instead of ad hoc
+/// per evaluation.
 #[derive(Clone, Debug)]
 pub struct MeanRatioPolicy {
-    pub tau: f64,
-    pub min_trigger_qlen: usize,
+    tau: f64,
+    min_trigger_qlen: usize,
+}
+
+impl MeanRatioPolicy {
+    pub fn new(tau: f64, min_trigger_qlen: usize) -> Self {
+        assert!(tau >= 0.0, "τ must be non-negative (§4.1)");
+        MeanRatioPolicy {
+            tau,
+            min_trigger_qlen: min_trigger_qlen.max(1),
+        }
+    }
 }
 
 impl LbPolicy for MeanRatioPolicy {
@@ -87,7 +102,7 @@ impl LbPolicy for MeanRatioPolicy {
             return None;
         }
         let x = (0..qlens.len()).max_by_key(|&i| qlens[i])?;
-        if qlens[x] < self.min_trigger_qlen.max(1) {
+        if qlens[x] < self.min_trigger_qlen {
             return None;
         }
         let rest: f64 = qlens
@@ -171,10 +186,24 @@ mod tests {
         // second-max 10 suppresses eq1; mean of others (10+2+0)/3 = 4
         // lets mean-ratio fire
         let eq1 = ThresholdPolicy::new(0.2, 1);
-        let mr = MeanRatioPolicy { tau: 0.2, min_trigger_qlen: 1 };
+        let mr = MeanRatioPolicy::new(0.2, 1);
         let q = [11, 10, 2, 0];
         assert_eq!(eq1.pick_target(&q), None);
         assert_eq!(mr.pick_target(&q), Some(0));
+    }
+
+    #[test]
+    fn mean_ratio_constructor_validates() {
+        // zero floor is clamped to 1 at construction, not per evaluation
+        let mr = MeanRatioPolicy::new(0.2, 0);
+        assert_eq!(mr.pick_target(&[0, 0, 0, 0]), None, "empty queues never fire");
+        assert_eq!(mr.pick_target(&[1, 0, 0, 0]), Some(0), "floor behaves as 1");
+    }
+
+    #[test]
+    #[should_panic(expected = "non-negative")]
+    fn mean_ratio_rejects_negative_tau() {
+        MeanRatioPolicy::new(-0.1, 1);
     }
 
     #[test]

@@ -22,15 +22,24 @@ dpa — DPA Load Balancer (paper reproduction)
 
 USAGE:
   dpa run [--workload WL] [--strategy S] [--rounds N] [--tau F] [options]
-  dpa table1 [--seeds N]         reproduce Table 1 (Experiment 1)
+  dpa table1 [--seeds N] [--strategies a,b,c]
+                                 reproduce Table 1 (Experiment 1) on both
+                                 drivers, with forwarded-message counts
   dpa fig3 [--max-rounds N]      reproduce Figure 3 (Experiment 2)
   dpa workloads                  describe the five paper workloads
   dpa help
 
+OPTIONS (table1):
+  --seeds N         runs per cell (mean)                     [default: 3]
+  --strategies L    comma list of strategies to compare
+                    (halving|doubling|multiprobe[:K]|twochoices)
+                                                  [default: halving,doubling]
+
 OPTIONS (run):
   --workload WL     wl1|wl2|wl3|wl4|wl5|zipf|uniform|corpus|hot or a trace
                     file path                                [default: wl4]
-  --strategy S      none|halving|doubling                    [default: doubling]
+  --strategy S      none|halving|doubling|multiprobe[:K]|twochoices
+                                                             [default: doubling]
   --rounds N        max LB rounds per reducer                [default: 1]
   --tau F           Eq.1 threshold τ                         [default: 0.2]
   --mappers N / --reducers N                                 [default: 4/4]
@@ -47,7 +56,7 @@ OPTIONS (run):
 /// Parsed top-level command.
 pub enum Command {
     Run(Box<RunOpts>),
-    Table1 { seeds: usize },
+    Table1 { seeds: usize, strategies: Vec<Strategy> },
     Fig3 { max_rounds: u32 },
     Workloads,
     Help,
@@ -72,8 +81,15 @@ pub fn parse(argv: &[String]) -> crate::Result<Command> {
         "workloads" => Ok(Command::Workloads),
         "table1" => {
             let seeds = args.take_opt_parse("seeds")?.unwrap_or(3usize);
+            let strategies = match args.take_opt("strategies") {
+                Some(list) => Strategy::parse_list(&list).map_err(anyhow::Error::msg)?,
+                None => Strategy::methods().to_vec(),
+            };
+            if strategies.is_empty() {
+                bail!("--strategies needs at least one strategy");
+            }
             args.finish()?;
-            Ok(Command::Table1 { seeds })
+            Ok(Command::Table1 { seeds, strategies })
         }
         "fig3" => {
             let max_rounds = args.take_opt_parse("max-rounds")?.unwrap_or(4u32);
@@ -201,8 +217,8 @@ pub fn execute(cmd: Command) -> crate::Result<i32> {
             }
             Ok(0)
         }
-        Command::Table1 { seeds } => {
-            print!("{}", table1(seeds)?);
+        Command::Table1 { seeds, strategies } => {
+            print!("{}", table1(seeds, &strategies)?);
             Ok(0)
         }
         Command::Fig3 { max_rounds } => {
@@ -212,8 +228,41 @@ pub fn execute(cmd: Command) -> crate::Result<i32> {
     }
 }
 
-/// Mean skew of a workload under a strategy / rounds cap over `seeds`
-/// seeded sim runs (the paper's 3-run protocol).
+/// One experiment cell's configuration under `strategy` on `driver`.
+/// `lb = false` runs the *same router* with the trigger disabled
+/// (`max_rounds = 0`). For token-ring and multi-probe routers a
+/// never-firing policy leaves routing untouched, so the no-LB column is
+/// the fixed-layout baseline (identical to the old
+/// `Strategy::None`-on-the-method's-layout runs). Two-choices is
+/// different by design: its route-time less-loaded-candidate placement
+/// is intrinsic to the router and still active (reducers keep publishing
+/// loads), so its "No LB" column measures the router *without
+/// redistribution* — the Δ column isolates `redistribute`'s marginal
+/// contribution, not the whole balancing mechanism.
+fn cell_cfg(strategy: Strategy, driver: DriverKind, lb: bool, max_rounds: u32) -> PipelineConfig {
+    let mut cfg = PipelineConfig::default();
+    cfg.driver = driver;
+    cfg.strategy = strategy;
+    if strategy.is_token_ring() {
+        cfg.initial_tokens = Some(strategy.initial_tokens(cfg.halving_init_tokens));
+    }
+    cfg.max_rounds = if lb { max_rounds } else { 0 };
+    if driver == DriverKind::Threads {
+        // compute-heavy enough that skewed queues build and LB can fire,
+        // light enough that a full table stays interactive
+        cfg.reduce_delay_us = 150;
+    }
+    cfg
+}
+
+/// Run one cell over seeds `0..seeds` (the paper's 3-run protocol).
+fn seed_sweep(cfg: PipelineConfig, items: &[String], seeds: usize) -> crate::Result<Vec<RunReport>> {
+    let seed_list: Vec<u64> = (0..seeds as u64).collect();
+    Pipeline::wordcount(cfg).run_seeds(items, &seed_list)
+}
+
+/// Mean skew (and variance) of a workload under a strategy / rounds cap
+/// over `seeds` seeded sim runs.
 pub fn mean_skew(
     w: &Workload,
     strategy: Strategy,
@@ -221,34 +270,56 @@ pub fn mean_skew(
     max_rounds: u32,
     seeds: usize,
 ) -> crate::Result<(f64, f64)> {
-    let mut cfg = PipelineConfig::default();
-    // the no-LB baseline runs on the *same initial layout* as the method
-    cfg.initial_tokens = Some(strategy.initial_tokens(cfg.halving_init_tokens));
-    cfg.strategy = if lb { strategy } else { Strategy::None };
-    cfg.max_rounds = max_rounds;
-    let pipeline = Pipeline::wordcount(cfg);
-    let seed_list: Vec<u64> = (0..seeds as u64).collect();
-    let reports = pipeline.run_seeds(&w.items, &seed_list)?;
+    let cfg = cell_cfg(strategy, DriverKind::Sim, lb, max_rounds);
+    let reports = seed_sweep(cfg, &w.items, seeds)?;
     let s = Summary::from_slice(&reports.iter().map(RunReport::skew).collect::<Vec<_>>());
     Ok((s.mean(), s.variance()))
 }
 
+/// One table1 cell: mean skew plus mean forwarded-message count.
+pub fn strategy_stats(
+    w: &Workload,
+    strategy: Strategy,
+    driver: DriverKind,
+    lb: bool,
+    max_rounds: u32,
+    seeds: usize,
+) -> crate::Result<(f64, f64)> {
+    let reports = seed_sweep(cell_cfg(strategy, driver, lb, max_rounds), &w.items, seeds)?;
+    let s = Summary::from_slice(&reports.iter().map(RunReport::skew).collect::<Vec<_>>());
+    let fwd = reports.iter().map(|r| r.total_forwarded() as f64).sum::<f64>()
+        / reports.len().max(1) as f64;
+    Ok((s.mean(), fwd))
+}
+
 /// Reproduce Table 1 (Experiment 1): S with/without LB for WL1–WL5 ×
-/// {halving, doubling}, ≤ 1 LB round, mean over seeds.
-pub fn table1(seeds: usize) -> crate::Result<String> {
-    let mut out = String::from("Experiment 1 (Table 1): skew S, no-LB vs LB (≤1 round/reducer)\n");
-    let mut t = Table::new(["Workload", "Method", "No LB", "With LB", "Δ"]);
+/// the selected strategies × both drivers, ≤ 1 LB round, mean over
+/// seeds, with the mean forwarded-message count of the LB runs (the
+/// consistency cost the ROADMAP asks to compare across router families).
+pub fn table1(seeds: usize, strategies: &[Strategy]) -> crate::Result<String> {
+    let mut out = String::from(
+        "Experiment 1 (Table 1): skew S and forwarded messages, no-LB vs LB \
+         (≤1 round/reducer)\n",
+    );
+    let mut t = Table::new(["Workload", "Method", "Driver", "No LB", "With LB", "Δ", "fwd (LB)"]);
     for w in paperwl::all() {
-        for strategy in Strategy::methods() {
-            let (s_nolb, _) = mean_skew(&w, strategy, false, 1, seeds)?;
-            let (s_lb, _) = mean_skew(&w, strategy, true, 1, seeds)?;
-            t.row([
-                w.name.clone(),
-                strategy.to_string(),
-                f2(s_nolb),
-                f2(s_lb),
-                delta2(s_nolb - s_lb),
-            ]);
+        for &strategy in strategies {
+            for driver in [DriverKind::Sim, DriverKind::Threads] {
+                let (s_nolb, _) = strategy_stats(&w, strategy, driver, false, 1, seeds)?;
+                let (s_lb, fwd_lb) = strategy_stats(&w, strategy, driver, true, 1, seeds)?;
+                t.row([
+                    w.name.clone(),
+                    strategy.to_string(),
+                    match driver {
+                        DriverKind::Sim => "sim".to_string(),
+                        DriverKind::Threads => "threads".to_string(),
+                    },
+                    f2(s_nolb),
+                    f2(s_lb),
+                    delta2(s_nolb - s_lb),
+                    format!("{fwd_lb:.1}"),
+                ]);
+            }
         }
     }
     out.push_str(&t.render());
@@ -325,6 +396,41 @@ mod tests {
     #[test]
     fn parse_rejects_unknown_flag() {
         assert!(parse(&sv(&["run", "--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn parse_table1_strategies_filter() {
+        let cmd = parse(&sv(&["table1", "--strategies", "halving,doubling,multiprobe"])).unwrap();
+        match cmd {
+            Command::Table1 { seeds, strategies } => {
+                assert_eq!(seeds, 3);
+                assert_eq!(
+                    strategies,
+                    vec![
+                        Strategy::Halving,
+                        Strategy::Doubling,
+                        Strategy::MultiProbe { probes: crate::hash::DEFAULT_PROBES },
+                    ]
+                );
+            }
+            _ => panic!("expected Table1"),
+        }
+        // default: the paper's two methods
+        match parse(&sv(&["table1"])).unwrap() {
+            Command::Table1 { strategies, .. } => {
+                assert_eq!(strategies, Strategy::methods().to_vec());
+            }
+            _ => panic!("expected Table1"),
+        }
+        assert!(parse(&sv(&["table1", "--strategies", "bogus"])).is_err());
+    }
+
+    #[test]
+    fn parse_run_probe_strategy() {
+        match parse(&sv(&["run", "--strategy", "twochoices", "--quiet"])).unwrap() {
+            Command::Run(o) => assert_eq!(o.cfg.strategy, Strategy::TwoChoices),
+            _ => panic!("expected Run"),
+        }
     }
 
     #[test]

@@ -93,11 +93,11 @@ impl ThreadDriver {
         items: impl Into<Arc<[String]>>,
     ) -> RunReport {
         let p = self.params.clone();
-        let ring = balancer.ring().clone();
-        let n_reducers = ring.nodes();
+        let router = balancer.router().clone();
+        let n_reducers = router.nodes();
 
         let core = Arc::new(ExecCore::build(
-            &ring,
+            &router,
             n_mappers,
             items,
             ExecParams {
@@ -118,13 +118,13 @@ impl ThreadDriver {
         for i in 0..n_mappers {
             let core = core.clone();
             let exec = map_exec.clone();
-            let ring = ring.clone();
+            let router = router.clone();
             let map_delay = p.map_delay_us;
             mapper_handles.push(
                 std::thread::Builder::new()
                     .name(format!("dpa-mapper-{i}"))
                     .spawn(move || {
-                        let mut mc = MapperCore::new(i, exec, ring);
+                        let mut mc = MapperCore::new(i, exec, router);
                         let mut staged: Vec<Vec<crate::exec::Record>> =
                             (0..core.queues.len()).map(|_| Vec::new()).collect();
                         while let Some(task) = core.pool.fetch() {
@@ -154,7 +154,7 @@ impl ThreadDriver {
         for i in 0..n_reducers {
             let core = core.clone();
             let tx = report_tx.clone();
-            let ring = ring.clone();
+            let router = router.clone();
             let exec = reduce_factory(i);
             let reduce_delay = p.reduce_delay_us;
             let pop_timeout = p.pop_timeout;
@@ -162,7 +162,7 @@ impl ThreadDriver {
                 std::thread::Builder::new()
                     .name(format!("dpa-reducer-{i}"))
                     .spawn(move || {
-                        let mut rc = ReducerCore::new(i, exec, ring);
+                        let mut rc = ReducerCore::new(i, exec, router);
                         loop {
                             let step =
                                 core.reducer_step(&mut rc, i, |q| q.pop_timeout(pop_timeout));
@@ -220,7 +220,7 @@ impl ThreadDriver {
                 loop {
                     match report_rx.recv_timeout(Duration::from_micros(500)) {
                         Ok(r) => {
-                            bal_core.apply_report(&mut balancer, r);
+                            let _ = bal_core.apply_report(&mut balancer, r);
                         }
                         Err(RecvTimeoutError::Timeout) => {}
                         Err(RecvTimeoutError::Disconnected) => break,
@@ -256,15 +256,15 @@ impl ThreadDriver {
 mod tests {
     use super::*;
     use crate::exec::builtin::{IdentityMap, WordCount};
-    use crate::hash::{Ring, SharedRing, Strategy};
+    use crate::hash::{RouterHandle, Strategy};
 
     fn wordcount_factory() -> ReduceFactory {
         Arc::new(|_| Box::new(WordCount::new()) as Box<dyn crate::exec::ReduceExecutor>)
     }
 
     fn balancer(strategy: Strategy) -> BalancerCore {
-        let ring = SharedRing::new(Ring::for_strategy(4, strategy, 8));
-        BalancerCore::new(ring, strategy, 0.2, 8, 1, 20_000)
+        let router = RouterHandle::new(strategy.build_router(4, 8, None));
+        BalancerCore::new(router, strategy, 0.2, 8, 1, 20_000)
     }
 
     fn oracle(items: &[String]) -> Vec<(String, i64)> {

@@ -9,11 +9,23 @@
 //! The identical MurmurHash3_x86_32 is implemented in the Pallas kernel
 //! (`python/compile/kernels/murmur3.py`); `rust/tests/xla_parity.rs`
 //! asserts bit-exact agreement so routing decisions match across layers.
+//!
+//! [`router`] lifts the routing/redistribution surface into the pluggable
+//! [`Router`] trait: the token ring is one implementation
+//! ([`TokenRingRouter`]) next to multi-probe hashing
+//! ([`MultiProbeRouter`]) and power-of-two-choices
+//! ([`TwoChoicesRouter`]); [`strategy`] holds the parsed specs that
+//! construct them.
 
 pub mod murmur3;
 pub mod ring;
+pub mod router;
 pub mod strategy;
 
 pub use murmur3::murmur3_x86_32;
 pub use ring::{Ring, SharedRing, Token};
-pub use strategy::Strategy;
+pub use router::{
+    Loads, MultiProbeRouter, RingOp, RouteDelta, RouteSnapshot, Router, RouterCache,
+    RouterHandle, TokenRingRouter, TwoChoicesRouter,
+};
+pub use strategy::{Strategy, StrategySpec, DEFAULT_PROBES};

@@ -23,6 +23,22 @@ use super::strategy::Strategy;
 /// redistributions; this cap also bounds the XLA route program's `T`).
 pub const MAX_TOKENS_PER_NODE: u32 = 128;
 
+/// Clockwise-successor index in a ring-ordered slice: the first element
+/// whose hash (per `hash_of`) is `>= h`, wrapping to index 0 past the
+/// end. The single implementation of the ring-walk shared by
+/// [`Ring::lookup_hash`], the multi-probe router's position lookup and
+/// the runtime's snapshot-fallback lookup — one tie/wrap semantics
+/// everywhere, so the XLA parity contract cannot silently drift.
+#[inline]
+pub fn clockwise_successor_by<T>(items: &[T], h: u32, hash_of: impl Fn(&T) -> u32) -> usize {
+    let i = items.partition_point(|t| hash_of(t) < h);
+    if i == items.len() {
+        0
+    } else {
+        i
+    }
+}
+
 /// One token on the ring.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Token {
@@ -130,10 +146,7 @@ impl Ring {
     /// `token.hash >= h`, wrapping to the first token.
     #[inline]
     pub fn lookup_hash(&self, h: u32) -> usize {
-        // partition_point = first index with hash >= h
-        let i = self.hashes.partition_point(|&th| th < h);
-        let i = if i == self.hashes.len() { 0 } else { i };
-        self.tokens[i].node as usize
+        self.tokens[clockwise_successor_by(&self.hashes, h, |&th| th)].node as usize
     }
 
     /// Map a key (its bytes) to its owning node.
@@ -186,19 +199,22 @@ impl Ring {
     }
 
     /// Apply the given strategy's redistribution for an overloaded node.
-    /// Returns `true` if the ring changed.
+    /// Returns `true` if the ring changed. Probe-based strategies do not
+    /// manipulate tokens — their redistribution lives in their
+    /// [`Router`](super::router::Router) implementations.
     pub fn redistribute(&mut self, node: usize, strategy: Strategy) -> bool {
         match strategy {
             Strategy::None => false,
             Strategy::Halving => self.halve(node),
             Strategy::Doubling => self.double_others(node),
+            Strategy::MultiProbe { .. } | Strategy::TwoChoices => false,
         }
     }
 
     /// §7 extension — add a brand-new node claiming `tokens` tokens.
     /// Returns its node id.
     pub fn add_node(&mut self, tokens: u32) -> usize {
-        assert!(tokens >= 1 && tokens <= MAX_TOKENS_PER_NODE);
+        assert!((1..=MAX_TOKENS_PER_NODE).contains(&tokens));
         let node = self.node_tokens.len();
         self.node_tokens.push((0..tokens).collect());
         self.rebuild();

@@ -1,0 +1,999 @@
+//! The pluggable routing/redistribution layer.
+//!
+//! The paper's §4.2 strategies (token halving / doubling) used to be a
+//! closed enum whose semantics lived inside `Ring::halve` /
+//! `Ring::double_others`; everything above — balancer, runtime, drivers,
+//! pipeline — was welded to the token ring. [`Router`] turns that surface
+//! into a first-class trait so redistribution families that are *not*
+//! token surgery can plug in at the same seam:
+//!
+//! * [`TokenRingRouter`] — the paper's consistent-hash ring, bit-for-bit
+//!   identical routing to the pre-trait code (same [`Ring`], same sorted
+//!   `(hash, node, idx)` tie order the XLA route program relies on).
+//!   `redistribute` applies halving or doubling per its [`RingOp`].
+//! * [`MultiProbeRouter`] — multi-probe consistent hashing (Appleton &
+//!   O'Reilly, arXiv:1505.00062; cf. farazdagi/mpchash): one position per
+//!   node, `k` independent probes per key, owner chosen among the probes'
+//!   owners. `redistribute` moves **zero tokens** — it re-freezes the
+//!   per-node load weights the probe choice consults, so load shifts at
+//!   probe (route) time only. Routing is a pure function of
+//!   `(hash, epoch)`, which keeps the forwarding ownership check stable.
+//! * [`TwoChoicesRouter`] — per-key power of two choices ("The Power of
+//!   Both Choices", Nasir et al.): two candidate nodes per key, the
+//!   less-loaded one wins at first sight. The choice is *sticky* (a
+//!   shared assignment table) — the key-splitting guard that keeps a
+//!   key's state on exactly one reducer so the §7 StateForward path (and
+//!   the merge disjointness assertion) stay correct. `redistribute`
+//!   re-homes about half of the overloaded node's keys to their alternate
+//!   candidates.
+//!
+//! Concurrency mirrors the old `SharedRing`/`RingCache` split:
+//! [`RouterHandle`] is the shared, epoch-versioned writer handle the
+//! balancer mutates; [`RouterCache`] gives mappers/reducers a lock-free
+//! local clone refreshed only when the published epoch moves.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use super::murmur3::{murmur3_x86_32, murmur3_x86_32_seed};
+use super::ring::{Ring, Token};
+
+/// Live per-node load view (last reported queue lengths), shared between
+/// the balancer (writer) and load-aware routers (readers). Lock-free.
+#[derive(Clone, Debug)]
+pub struct Loads {
+    inner: Arc<Vec<AtomicU64>>,
+}
+
+impl Loads {
+    pub fn new(nodes: usize) -> Self {
+        Loads {
+            inner: Arc::new((0..nodes).map(|_| AtomicU64::new(0)).collect()),
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.inner.len()
+    }
+
+    /// Record node load. Out-of-range nodes (elastic scale-out beyond the
+    /// initial topology) are ignored — token routing never consults loads.
+    pub fn set(&self, node: usize, qlen: u64) {
+        if let Some(a) = self.inner.get(node) {
+            a.store(qlen, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self, node: usize) -> u64 {
+        self.inner.get(node).map_or(0, |a| a.load(Ordering::Relaxed))
+    }
+
+    pub fn to_vec(&self) -> Vec<u64> {
+        self.inner.iter().map(|a| a.load(Ordering::Relaxed)).collect()
+    }
+}
+
+/// What one `redistribute` call changed — the routers' common currency
+/// for events, metrics and the zero-churn property tests.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RouteDelta {
+    /// Did the routing function change at all?
+    pub changed: bool,
+    /// Tokens created on the ring (doubling family).
+    pub tokens_added: u32,
+    /// Tokens removed from the ring (halving family).
+    pub tokens_removed: u32,
+    /// Keys explicitly re-homed (two-choices family).
+    pub keys_reassigned: u64,
+}
+
+impl RouteDelta {
+    pub fn unchanged() -> Self {
+        RouteDelta::default()
+    }
+
+    /// No tokens were created or destroyed (the multi-probe guarantee).
+    pub fn zero_token_churn(&self) -> bool {
+        self.tokens_added == 0 && self.tokens_removed == 0
+    }
+}
+
+/// A router's externally visible state: what the XLA route program and
+/// the §7 state-forwarding key-ownership diff consume.
+#[derive(Clone, Debug)]
+pub struct RouteSnapshot {
+    pub router: &'static str,
+    pub epoch: u64,
+    pub nodes: usize,
+    /// Token-ring family: the sorted token table (the exact arrays the
+    /// compiled XLA `route` program takes; see
+    /// [`crate::runtime::programs::snapshot_tensors`]).
+    pub tokens: Option<Vec<Token>>,
+    /// Two-choices: the sticky `(key_hash, owner)` assignments — the
+    /// basis of an ownership diff across a repartition.
+    pub assignments: Option<Vec<(u32, u32)>>,
+    /// Multi-probe: the frozen per-node load weights routing consults.
+    pub weights: Option<Vec<u64>>,
+}
+
+/// The redistribution layer's trait. Implementations must route
+/// deterministically for a fixed `(hash, epoch)` — reducers re-check
+/// ownership on every dequeue and forward on mismatch, so an owner that
+/// drifted *between* redistributions would make records ping-pong.
+pub trait Router: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Number of routable nodes.
+    fn nodes(&self) -> usize;
+
+    /// Monotone mutation counter (1-based; bumped by `redistribute`).
+    fn epoch(&self) -> u64;
+
+    /// Map a raw 32-bit key hash to its owning node.
+    fn route(&self, hash: u32, loads: &Loads) -> usize;
+
+    /// Relieve an overloaded node. Returns what changed.
+    fn redistribute(&mut self, target: usize, loads: &Loads) -> RouteDelta;
+
+    /// Externally visible routing state.
+    fn snapshot(&self) -> RouteSnapshot;
+
+    /// Clone into an independent (or internally shared, for sticky
+    /// assignment tables) instance for per-actor route caches.
+    fn clone_router(&self) -> Box<dyn Router>;
+
+    /// Does `route` consult shared mutable state behind a lock (e.g. a
+    /// sticky assignment table)? When `true`, [`RouterCache`] memoizes
+    /// `(hash → owner)` per epoch — sound because routing is a pure
+    /// function of `(hash, epoch)` — so the steady-state hot path stays
+    /// lock-free for every router family.
+    fn route_is_shared(&self) -> bool {
+        false
+    }
+
+    /// Token-ring escape hatch (elastic scale-out claims tokens directly;
+    /// the XLA parity harness feeds raw rings). `None` for probe routers.
+    fn as_token_ring(&self) -> Option<&Ring> {
+        None
+    }
+
+    fn as_token_ring_mut(&mut self) -> Option<&mut Ring> {
+        None
+    }
+}
+
+/// Which §4.2 token operation a [`TokenRingRouter`] applies on
+/// `redistribute`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RingOp {
+    /// Load balancing disabled (the paper's "No LB" baseline).
+    NoOp,
+    /// Remove half of the overloaded node's tokens.
+    Halve,
+    /// Double the token count of every *other* node.
+    DoubleOthers,
+}
+
+/// The paper's consistent-hash token ring behind the [`Router`] trait.
+/// Routing delegates to the very same [`Ring::lookup_hash`] binary search
+/// as before the trait existed — bit-for-bit identical decisions.
+#[derive(Clone)]
+pub struct TokenRingRouter {
+    ring: Ring,
+    op: RingOp,
+}
+
+impl TokenRingRouter {
+    pub fn new(ring: Ring, op: RingOp) -> Self {
+        TokenRingRouter { ring, op }
+    }
+}
+
+impl Router for TokenRingRouter {
+    fn name(&self) -> &'static str {
+        "token-ring"
+    }
+
+    fn nodes(&self) -> usize {
+        self.ring.nodes()
+    }
+
+    fn epoch(&self) -> u64 {
+        self.ring.epoch()
+    }
+
+    fn route(&self, hash: u32, _loads: &Loads) -> usize {
+        self.ring.lookup_hash(hash)
+    }
+
+    fn redistribute(&mut self, target: usize, _loads: &Loads) -> RouteDelta {
+        match self.op {
+            RingOp::NoOp => RouteDelta::unchanged(),
+            RingOp::Halve => {
+                let before = self.ring.tokens_of(target);
+                if self.ring.halve(target) {
+                    RouteDelta {
+                        changed: true,
+                        tokens_removed: before - self.ring.tokens_of(target),
+                        ..RouteDelta::default()
+                    }
+                } else {
+                    RouteDelta::unchanged()
+                }
+            }
+            RingOp::DoubleOthers => {
+                let before = self.ring.total_tokens();
+                if self.ring.double_others(target) {
+                    RouteDelta {
+                        changed: true,
+                        tokens_added: (self.ring.total_tokens() - before) as u32,
+                        ..RouteDelta::default()
+                    }
+                } else {
+                    RouteDelta::unchanged()
+                }
+            }
+        }
+    }
+
+    fn snapshot(&self) -> RouteSnapshot {
+        RouteSnapshot {
+            router: self.name(),
+            epoch: self.ring.epoch(),
+            nodes: self.ring.nodes(),
+            tokens: Some(self.ring.sorted_tokens().to_vec()),
+            assignments: None,
+            weights: None,
+        }
+    }
+
+    fn clone_router(&self) -> Box<dyn Router> {
+        Box::new(self.clone())
+    }
+
+    fn as_token_ring(&self) -> Option<&Ring> {
+        Some(&self.ring)
+    }
+
+    fn as_token_ring_mut(&mut self) -> Option<&mut Ring> {
+        Some(&mut self.ring)
+    }
+}
+
+/// Multi-probe consistent hashing: one ring position per node (no virtual
+/// nodes), `k` seeded probes per key; the key goes to the *closest* probe
+/// owner (classic MPCH), except that owners marked **overloaded** at the
+/// last redistribute are avoided when any non-overloaded probe owner
+/// exists. The overload flag — not the raw load — is the routing input:
+/// ordering candidates by raw frozen load would herd virtually the whole
+/// keyspace onto the single least-loaded node (any probe reaching it
+/// would win), which is worse than no balancing at all. A binary
+/// shed-from-the-hot-nodes classification keeps the classic MPCH
+/// distance spread among the acceptable candidates.
+///
+/// `redistribute` moves **zero tokens**: it re-freezes the weight vector
+/// from the live load view and re-derives the overload flags (load
+/// strictly above the mean). Freezing (rather than consulting live loads
+/// per route) keeps ownership a pure function of the epoch — the
+/// forwarding check and the §7 ownership diff stay stable between LB
+/// events.
+#[derive(Clone)]
+pub struct MultiProbeRouter {
+    /// Node positions sorted by `(hash, node)`.
+    position_hashes: Vec<u32>,
+    position_nodes: Vec<u32>,
+    probes: u32,
+    /// Per-node load weights frozen at the last redistribute (snapshot /
+    /// diagnostics; routing consults only the derived flags).
+    weights: Vec<u64>,
+    /// Frozen per-node overload flags (`load > mean(loads)`).
+    overloaded: Vec<bool>,
+    epoch: u64,
+}
+
+impl MultiProbeRouter {
+    pub fn new(nodes: usize, probes: u32) -> Self {
+        assert!(nodes > 0, "multi-probe router needs at least one node");
+        assert!(probes >= 1, "need at least one probe");
+        let mut positions: Vec<(u32, u32)> = (0..nodes as u32)
+            .map(|n| (murmur3_x86_32(format!("node-{n}").as_bytes()), n))
+            .collect();
+        positions.sort_unstable();
+        MultiProbeRouter {
+            position_hashes: positions.iter().map(|p| p.0).collect(),
+            position_nodes: positions.iter().map(|p| p.1).collect(),
+            probes,
+            weights: vec![0; nodes],
+            overloaded: vec![false; nodes],
+            epoch: 1,
+        }
+    }
+
+    /// Clockwise owner of ring point `p` (first position ≥ p, wrapping).
+    #[inline]
+    fn successor(&self, p: u32) -> (u32, usize) {
+        let i = super::ring::clockwise_successor_by(&self.position_hashes, p, |&h| h);
+        (self.position_hashes[i], self.position_nodes[i] as usize)
+    }
+
+    /// Nodes whose load sits strictly above the mean of `loads`.
+    fn overload_flags(loads: &[u64]) -> Vec<bool> {
+        let n = loads.len().max(1) as u128;
+        let sum: u128 = loads.iter().map(|&l| l as u128).sum();
+        // load > mean  ⇔  load * n > sum  (exact, no float rounding)
+        loads.iter().map(|&l| (l as u128) * n > sum).collect()
+    }
+}
+
+impl Router for MultiProbeRouter {
+    fn name(&self) -> &'static str {
+        "multi-probe"
+    }
+
+    fn nodes(&self) -> usize {
+        self.weights.len()
+    }
+
+    fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    fn route(&self, hash: u32, _loads: &Loads) -> usize {
+        // lexicographic (overloaded?, distance, node): classic MPCH among
+        // acceptable owners, falling back to pure distance when every
+        // probe lands on an overloaded node
+        let mut best: Option<(bool, u32, usize)> = None;
+        for j in 0..self.probes {
+            let p = murmur3_x86_32_seed(&hash.to_le_bytes(), j);
+            let (pos, node) = self.successor(p);
+            let cand = (self.overloaded[node], pos.wrapping_sub(p), node);
+            let better = match best {
+                None => true,
+                Some(b) => cand < b,
+            };
+            if better {
+                best = Some(cand);
+            }
+        }
+        best.expect("probes >= 1").2
+    }
+
+    fn redistribute(&mut self, _target: usize, loads: &Loads) -> RouteDelta {
+        let mut fresh = loads.to_vec();
+        fresh.resize(self.weights.len(), 0);
+        let flags = Self::overload_flags(&fresh);
+        if flags == self.overloaded {
+            // same shed set ⇒ identical routing: a no-op, not a new epoch
+            return RouteDelta::unchanged();
+        }
+        self.weights = fresh;
+        self.overloaded = flags;
+        self.epoch += 1;
+        // zero token churn, zero explicit key moves: ownership shifts only
+        // through the overload-aware probe choice
+        RouteDelta { changed: true, ..RouteDelta::default() }
+    }
+
+    fn snapshot(&self) -> RouteSnapshot {
+        RouteSnapshot {
+            router: self.name(),
+            epoch: self.epoch,
+            nodes: self.weights.len(),
+            tokens: None,
+            assignments: None,
+            weights: Some(self.weights.clone()),
+        }
+    }
+
+    fn clone_router(&self) -> Box<dyn Router> {
+        Box::new(self.clone())
+    }
+}
+
+/// Seeds for the two candidate hash functions (arbitrary odd constants).
+const TWO_CHOICES_SEEDS: [u32; 2] = [0x517c_c1b7, 0x9e37_79b9];
+
+/// Per-key power of two choices with a sticky assignment table.
+///
+/// Each key hash has two candidate nodes; the first route of a key picks
+/// the currently less-loaded candidate and *records* it. Every later
+/// route — including the reducer's ownership check and the §7 ownership
+/// diff — returns the recorded owner, so a key's state never splits
+/// across nodes (the merge-correctness guard). `redistribute` re-homes
+/// roughly every other key of the overloaded node to its alternate
+/// candidate; under StateForward the normal epoch machinery then ships
+/// the moved keys' state.
+///
+/// The table is shared (`Arc`) across [`Router::clone_router`] clones, so
+/// per-actor route caches all see one consistent assignment.
+#[derive(Clone)]
+pub struct TwoChoicesRouter {
+    nodes: usize,
+    assignments: Arc<RwLock<BTreeMap<u32, u32>>>,
+    epoch: Arc<AtomicU64>,
+}
+
+impl TwoChoicesRouter {
+    pub fn new(nodes: usize) -> Self {
+        assert!(nodes > 0, "two-choices router needs at least one node");
+        TwoChoicesRouter {
+            nodes,
+            assignments: Arc::new(RwLock::new(BTreeMap::new())),
+            epoch: Arc::new(AtomicU64::new(1)),
+        }
+    }
+
+    #[inline]
+    fn candidates(&self, hash: u32) -> (usize, usize) {
+        let b = hash.to_le_bytes();
+        (
+            murmur3_x86_32_seed(&b, TWO_CHOICES_SEEDS[0]) as usize % self.nodes,
+            murmur3_x86_32_seed(&b, TWO_CHOICES_SEEDS[1]) as usize % self.nodes,
+        )
+    }
+
+    /// Number of keys currently pinned to `node`.
+    pub fn assigned_to(&self, node: usize) -> usize {
+        self.assignments
+            .read()
+            .unwrap()
+            .values()
+            .filter(|&&n| n as usize == node)
+            .count()
+    }
+}
+
+impl Router for TwoChoicesRouter {
+    fn name(&self) -> &'static str {
+        "two-choices"
+    }
+
+    fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    fn route(&self, hash: u32, loads: &Loads) -> usize {
+        if let Some(&n) = self.assignments.read().unwrap().get(&hash) {
+            return n as usize;
+        }
+        let (c1, c2) = self.candidates(hash);
+        let mut map = self.assignments.write().unwrap();
+        // entry(): a racing first-router wins; we adopt its choice
+        let n = *map.entry(hash).or_insert_with(|| {
+            if loads.get(c2) < loads.get(c1) {
+                c2 as u32
+            } else {
+                c1 as u32
+            }
+        });
+        n as usize
+    }
+
+    fn redistribute(&mut self, target: usize, _loads: &Loads) -> RouteDelta {
+        let mut map = self.assignments.write().unwrap();
+        let pinned: Vec<u32> = map
+            .iter()
+            .filter(|&(_, &n)| n as usize == target)
+            .map(|(&k, _)| k)
+            .collect();
+        let mut moved = 0u64;
+        for (i, k) in pinned.iter().enumerate() {
+            // re-home every other key: relieve ~half the load, like halving
+            if i % 2 != 0 {
+                continue;
+            }
+            let (c1, c2) = self.candidates(*k);
+            let alt = if c1 == target { c2 } else { c1 };
+            if alt == target {
+                continue; // both candidates collide on the target
+            }
+            map.insert(*k, alt as u32);
+            moved += 1;
+        }
+        drop(map);
+        if moved == 0 {
+            return RouteDelta::unchanged();
+        }
+        self.epoch.fetch_add(1, Ordering::AcqRel);
+        RouteDelta {
+            changed: true,
+            keys_reassigned: moved,
+            ..RouteDelta::default()
+        }
+    }
+
+    fn snapshot(&self) -> RouteSnapshot {
+        RouteSnapshot {
+            router: self.name(),
+            epoch: self.epoch(),
+            nodes: self.nodes,
+            tokens: None,
+            assignments: Some(
+                self.assignments
+                    .read()
+                    .unwrap()
+                    .iter()
+                    .map(|(&k, &n)| (k, n))
+                    .collect(),
+            ),
+            weights: None,
+        }
+    }
+
+    fn clone_router(&self) -> Box<dyn Router> {
+        Box::new(self.clone())
+    }
+
+    fn route_is_shared(&self) -> bool {
+        true // the sticky assignment table sits behind an RwLock
+    }
+}
+
+/// Shared, epoch-versioned router handle — the trait-layer successor of
+/// `SharedRing`. The balancer is the only redistribute caller; mappers
+/// and reducers read through [`RouterCache`] clones.
+#[derive(Clone)]
+pub struct RouterHandle {
+    inner: Arc<RwLock<Box<dyn Router>>>,
+    epoch: Arc<AtomicU64>,
+    loads: Loads,
+}
+
+impl RouterHandle {
+    pub fn new(router: Box<dyn Router>) -> Self {
+        let epoch = router.epoch();
+        let loads = Loads::new(router.nodes());
+        RouterHandle {
+            inner: Arc::new(RwLock::new(router)),
+            epoch: Arc::new(AtomicU64::new(epoch)),
+            loads,
+        }
+    }
+
+    /// Convenience: a token-ring router over `ring` applying `op`.
+    pub fn token_ring(ring: Ring, op: RingOp) -> Self {
+        Self::new(Box::new(TokenRingRouter::new(ring, op)))
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.inner.read().unwrap().name()
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.inner.read().unwrap().nodes()
+    }
+
+    /// Published epoch without taking the lock.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// The live load view routers consult (the balancer writes it).
+    pub fn loads(&self) -> &Loads {
+        &self.loads
+    }
+
+    /// Route a raw key hash (locks; hot paths use [`RouterCache`]).
+    pub fn route_hash(&self, h: u32) -> usize {
+        self.inner.read().unwrap().route(h, &self.loads)
+    }
+
+    /// Route a key's bytes.
+    pub fn route_key(&self, key: &[u8]) -> usize {
+        self.route_hash(murmur3_x86_32(key))
+    }
+
+    pub fn snapshot(&self) -> RouteSnapshot {
+        self.inner.read().unwrap().snapshot()
+    }
+
+    /// Apply the router's redistribution for an overloaded node and
+    /// publish the new epoch.
+    pub fn redistribute(&self, target: usize) -> RouteDelta {
+        let mut g = self.inner.write().unwrap();
+        let delta = g.redistribute(target, &self.loads);
+        self.epoch.store(g.epoch(), Ordering::Release);
+        delta
+    }
+
+    /// Mutate the underlying token ring directly (elastic scale-out, test
+    /// surgery). `None` when the router is not ring-based.
+    pub fn update_ring<R>(&self, f: impl FnOnce(&mut Ring) -> R) -> Option<R> {
+        let mut g = self.inner.write().unwrap();
+        let out = g.as_token_ring_mut().map(f);
+        self.epoch.store(g.epoch(), Ordering::Release);
+        out
+    }
+
+    /// Read the underlying token ring. `None` when not ring-based.
+    pub fn with_ring<R>(&self, f: impl FnOnce(&Ring) -> R) -> Option<R> {
+        self.inner.read().unwrap().as_token_ring().map(f)
+    }
+
+    /// Clone the current router state for a local cache.
+    pub fn clone_router(&self) -> Box<dyn Router> {
+        self.inner.read().unwrap().clone_router()
+    }
+
+    /// A per-actor epoch-validated cache over this handle.
+    pub fn cache(&self) -> RouterCache {
+        RouterCache::new(self.clone())
+    }
+}
+
+/// Epoch-validated local router snapshot — the trait-layer successor of
+/// `RingCache`. Routing hot paths (mappers route every record; reducers
+/// check ownership on every dequeue) re-clone only when the published
+/// epoch moves; between LB events lookups run on a local router with no
+/// shared lock. For routers whose `route` itself takes a shared lock
+/// (sticky assignment tables), the cache additionally memoizes
+/// `(hash → owner)` for the current epoch — routing is a pure function
+/// of `(hash, epoch)`, so repeat lookups of hot keys bypass the lock.
+pub struct RouterCache {
+    handle: RouterHandle,
+    local: Box<dyn Router>,
+    epoch: u64,
+    memo: std::collections::HashMap<u32, usize>,
+    memoize: bool,
+}
+
+impl RouterCache {
+    pub fn new(handle: RouterHandle) -> Self {
+        let local = handle.clone_router();
+        let epoch = handle.epoch();
+        let memoize = local.route_is_shared();
+        RouterCache {
+            handle,
+            local,
+            epoch,
+            memo: std::collections::HashMap::new(),
+            memoize,
+        }
+    }
+
+    #[inline]
+    fn refresh(&mut self) {
+        let e = self.handle.epoch();
+        if e != self.epoch {
+            self.local = self.handle.clone_router();
+            self.memoize = self.local.route_is_shared();
+            self.memo.clear();
+            self.epoch = e;
+        }
+    }
+
+    #[inline]
+    pub fn route_hash(&mut self, h: u32) -> usize {
+        self.refresh();
+        if self.memoize {
+            if let Some(&n) = self.memo.get(&h) {
+                return n;
+            }
+            let n = self.local.route(h, self.handle.loads());
+            self.memo.insert(h, n);
+            n
+        } else {
+            self.local.route(h, self.handle.loads())
+        }
+    }
+
+    #[inline]
+    pub fn route_key(&mut self, key: &[u8]) -> usize {
+        self.route_hash(murmur3_x86_32(key))
+    }
+
+    /// Refreshed snapshot (e.g. to feed the XLA route program).
+    pub fn snapshot(&mut self) -> RouteSnapshot {
+        self.refresh();
+        self.local.snapshot()
+    }
+
+    pub fn handle(&self) -> &RouterHandle {
+        &self.handle
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn keys(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("key-{i}")).collect()
+    }
+
+    #[test]
+    fn token_ring_router_routes_identically_to_raw_ring() {
+        let ring = Ring::new(4, 8);
+        let router = TokenRingRouter::new(ring.clone(), RingOp::Halve);
+        let loads = Loads::new(4);
+        for k in keys(500) {
+            let h = murmur3_x86_32(k.as_bytes());
+            assert_eq!(router.route(h, &loads), ring.lookup_hash(h), "key {k}");
+        }
+    }
+
+    #[test]
+    fn token_ring_redistribute_matches_ring_ops() {
+        let loads = Loads::new(4);
+        let mut halver = TokenRingRouter::new(Ring::new(4, 8), RingOp::Halve);
+        let d = halver.redistribute(1, &loads);
+        assert!(d.changed);
+        assert_eq!(d.tokens_removed, 4);
+        assert_eq!(d.tokens_added, 0);
+        assert_eq!(halver.as_token_ring().unwrap().tokens_of(1), 4);
+
+        let mut doubler = TokenRingRouter::new(Ring::new(4, 1), RingOp::DoubleOthers);
+        let d = doubler.redistribute(0, &loads);
+        assert!(d.changed);
+        assert_eq!(d.tokens_added, 3);
+        assert!(d.tokens_removed == 0);
+
+        let mut noop = TokenRingRouter::new(Ring::new(4, 8), RingOp::NoOp);
+        assert!(!noop.redistribute(0, &loads).changed);
+    }
+
+    #[test]
+    fn token_ring_halving_exhaustion_reports_unchanged() {
+        let loads = Loads::new(2);
+        let mut r = TokenRingRouter::new(Ring::new(2, 1), RingOp::Halve);
+        assert!(!r.redistribute(0, &loads).changed);
+    }
+
+    #[test]
+    fn multi_probe_routes_every_key_to_live_node_and_spreads() {
+        let router = MultiProbeRouter::new(4, 5);
+        let loads = Loads::new(4);
+        let mut counts = [0usize; 4];
+        for k in keys(4000) {
+            let n = router.route(murmur3_x86_32(k.as_bytes()), &loads);
+            assert!(n < 4);
+            counts[n] += 1;
+        }
+        for c in counts {
+            assert!(c > 400, "multi-probe badly skewed: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn multi_probe_redistribute_is_zero_token_churn_and_shifts_load() {
+        let mut router = MultiProbeRouter::new(4, 5);
+        let loads = Loads::new(4);
+        let ks = keys(2000);
+        let before: Vec<usize> = ks
+            .iter()
+            .map(|k| router.route(murmur3_x86_32(k.as_bytes()), &loads))
+            .collect();
+        // find the busiest node under uniform weights and overload it
+        let mut counts = [0usize; 4];
+        for &n in &before {
+            counts[n] += 1;
+        }
+        let hot = (0..4).max_by_key(|&n| counts[n]).unwrap();
+        for n in 0..4 {
+            loads.set(n, if n == hot { 100 } else { 1 });
+        }
+        let e0 = router.epoch();
+        let d = router.redistribute(hot, &loads);
+        assert!(d.changed);
+        assert!(d.zero_token_churn());
+        assert_eq!(d.keys_reassigned, 0);
+        assert!(router.epoch() > e0);
+        // load shifted away from the hot node at probe time
+        let mut lost = 0usize;
+        let mut gained_elsewhere = 0usize;
+        for (k, &b) in ks.iter().zip(&before) {
+            let now = router.route(murmur3_x86_32(k.as_bytes()), &loads);
+            if b == hot && now != hot {
+                lost += 1;
+            }
+            if b != hot && now == hot {
+                gained_elsewhere += 1;
+            }
+        }
+        assert!(lost > 0, "no key left the overloaded node");
+        assert_eq!(gained_elsewhere, 0, "keys moved ONTO the overloaded node");
+    }
+
+    #[test]
+    fn multi_probe_distinct_loads_do_not_herd_onto_coldest() {
+        // regression: ordering candidates by raw frozen load would send
+        // every key with a probe reaching the least-loaded node there,
+        // starving the mid-loaded nodes; the overload-flag design must
+        // shed only the above-mean node and keep the distance spread
+        let mut router = MultiProbeRouter::new(4, 5);
+        let loads = Loads::new(4);
+        let ks = keys(4000);
+        let mut before = [0usize; 4];
+        for k in &ks {
+            before[router.route(murmur3_x86_32(k.as_bytes()), &loads)] += 1;
+        }
+        for (n, l) in [(0, 40u64), (1, 7), (2, 6), (3, 5)] {
+            loads.set(n, l);
+        }
+        let d = router.redistribute(0, &loads);
+        assert!(d.changed);
+        assert!(d.zero_token_churn());
+        let mut after = [0usize; 4];
+        for k in &ks {
+            after[router.route(murmur3_x86_32(k.as_bytes()), &loads)] += 1;
+        }
+        assert!(
+            after[0] < before[0] / 2,
+            "overloaded node did not shed: {before:?} -> {after:?}"
+        );
+        for n in 1..4 {
+            assert!(
+                after[n] >= before[n],
+                "non-overloaded node {n} lost keys: {before:?} -> {after:?}"
+            );
+            assert!(
+                after[n] > 300,
+                "node {n} starved — keyspace herded by load ordering: {after:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn multi_probe_routing_is_stable_within_an_epoch() {
+        let router = MultiProbeRouter::new(6, 3);
+        let loads = Loads::new(6);
+        for k in keys(200) {
+            let h = murmur3_x86_32(k.as_bytes());
+            let a = router.route(h, &loads);
+            // live loads changing must NOT change routing between epochs
+            loads.set(a, 999);
+            assert_eq!(router.route(h, &loads), a);
+            loads.set(a, 0);
+        }
+    }
+
+    #[test]
+    fn two_choices_is_sticky_and_balances() {
+        let router = TwoChoicesRouter::new(4);
+        let loads = Loads::new(4);
+        for k in keys(1000) {
+            let h = murmur3_x86_32(k.as_bytes());
+            let first = router.route(h, &loads);
+            // loads swing wildly; the recorded choice must hold
+            loads.set(first, 10_000);
+            assert_eq!(router.route(h, &loads), first, "assignment not sticky");
+            loads.set(first, 0);
+        }
+        let total: usize = (0..4).map(|n| router.assigned_to(n)).sum();
+        assert!(total <= 1000, "at most one assignment per distinct hash");
+        for n in 0..4 {
+            assert!(router.assigned_to(n) > 0, "node {n} starved");
+        }
+    }
+
+    #[test]
+    fn two_choices_prefers_less_loaded_candidate() {
+        let router = TwoChoicesRouter::new(2);
+        let loads = Loads::new(2);
+        loads.set(0, 50);
+        loads.set(1, 0);
+        // any key whose candidates differ must land on node 1
+        let mut differing = 0;
+        for k in keys(200) {
+            let h = murmur3_x86_32(k.as_bytes());
+            let (c1, c2) = router.candidates(h);
+            if c1 != c2 {
+                differing += 1;
+                assert_eq!(router.route(h, &loads), 1);
+            }
+        }
+        assert!(differing > 50, "hash functions collapsed");
+    }
+
+    #[test]
+    fn two_choices_redistribute_rehomes_about_half() {
+        let router_master = TwoChoicesRouter::new(4);
+        let loads = Loads::new(4);
+        let ks = keys(800);
+        for k in &ks {
+            router_master.route(murmur3_x86_32(k.as_bytes()), &loads);
+        }
+        let target = (0..4).max_by_key(|&n| router_master.assigned_to(n)).unwrap();
+        let before = router_master.assigned_to(target);
+        let mut router = router_master.clone();
+        let d = router.redistribute(target, &loads);
+        assert!(d.changed);
+        assert!(d.zero_token_churn());
+        assert!(d.keys_reassigned > 0);
+        let after = router_master.assigned_to(target); // shared table
+        assert_eq!(before - after, d.keys_reassigned as usize);
+        assert!(after < before, "target not relieved");
+        assert!(
+            after >= before / 2 - before / 8,
+            "moved far more than ~half: {before} -> {after}"
+        );
+    }
+
+    #[test]
+    fn two_choices_clones_share_assignments() {
+        let a = TwoChoicesRouter::new(4);
+        let b = a.clone_router();
+        let loads = Loads::new(4);
+        let h = murmur3_x86_32(b"shared-key");
+        let owner = a.route(h, &loads);
+        loads.set(owner, 10_000);
+        assert_eq!(b.route(h, &loads), owner, "clone ignored the shared table");
+    }
+
+    #[test]
+    fn two_choices_cache_memo_tracks_epochs() {
+        let handle = RouterHandle::new(Box::new(TwoChoicesRouter::new(4)));
+        let mut cache = handle.cache();
+        let ks = keys(100);
+        let before: Vec<usize> = ks.iter().map(|k| cache.route_key(k.as_bytes())).collect();
+        // memo hit path returns the recorded owners
+        for (k, &b) in ks.iter().zip(&before) {
+            assert_eq!(cache.route_key(k.as_bytes()), b);
+        }
+        let target = before[0];
+        let d = handle.redistribute(target);
+        assert!(d.changed);
+        // epoch bump clears the memo: the cache agrees with the shared table
+        for k in &ks {
+            assert_eq!(
+                cache.route_key(k.as_bytes()),
+                handle.route_key(k.as_bytes()),
+                "stale memo after redistribute"
+            );
+        }
+    }
+
+    #[test]
+    fn handle_publishes_epoch_and_caches_refresh() {
+        let handle = RouterHandle::token_ring(Ring::new(4, 8), RingOp::Halve);
+        let mut cache = handle.cache();
+        let key = b"hello";
+        assert_eq!(cache.route_key(key), handle.route_key(key));
+        let owner = handle.route_key(key);
+        let e0 = handle.epoch();
+        let d = handle.redistribute(owner);
+        assert!(d.changed);
+        assert!(handle.epoch() > e0);
+        assert_eq!(cache.route_key(key), handle.route_key(key), "cache refreshed");
+    }
+
+    #[test]
+    fn handle_ring_escape_hatch() {
+        let handle = RouterHandle::token_ring(Ring::new(4, 8), RingOp::NoOp);
+        assert_eq!(handle.with_ring(|r| r.total_tokens()), Some(32));
+        let e0 = handle.epoch();
+        let new = handle.update_ring(|r| r.add_node(8)).unwrap();
+        assert_eq!(new, 4);
+        assert_eq!(handle.nodes(), 5);
+        assert!(handle.epoch() > e0, "ring surgery published a new epoch");
+
+        let probing = RouterHandle::new(Box::new(MultiProbeRouter::new(4, 3)));
+        assert!(probing.with_ring(|r| r.total_tokens()).is_none());
+        assert!(probing.update_ring(|r| r.add_node(1)).is_none());
+    }
+
+    #[test]
+    fn snapshots_expose_family_specific_state() {
+        let ring = RouterHandle::token_ring(Ring::new(3, 2), RingOp::NoOp);
+        let snap = ring.snapshot();
+        assert_eq!(snap.router, "token-ring");
+        assert_eq!(snap.tokens.as_ref().map(Vec::len), Some(6));
+
+        let mp = RouterHandle::new(Box::new(MultiProbeRouter::new(3, 7)));
+        let snap = mp.snapshot();
+        assert_eq!(snap.router, "multi-probe");
+        assert!(snap.tokens.is_none());
+        assert_eq!(snap.weights.as_ref().map(Vec::len), Some(3));
+
+        let tc = RouterHandle::new(Box::new(TwoChoicesRouter::new(3)));
+        tc.route_key(b"k");
+        let snap = tc.snapshot();
+        assert_eq!(snap.router, "two-choices");
+        assert_eq!(snap.assignments.as_ref().map(Vec::len), Some(1));
+    }
+}

@@ -1,77 +1,182 @@
-//! Keyspace-redistribution strategies from §4.2 of the paper.
+//! Keyspace-redistribution strategy *specs*.
+//!
+//! [`StrategySpec`] is what config/CLI parsing produces: a plain value
+//! naming a redistribution family plus its parameters. It is **not** the
+//! mechanism — [`StrategySpec::build_router`] constructs the boxed
+//! [`Router`](super::router::Router) that actually routes and
+//! redistributes, and everything above the trait depends only on that.
+//!
+//! * [`StrategySpec::None`] — load balancing disabled (the paper's
+//!   "No LB" baseline column in Table 1); token-ring routing.
+//! * [`StrategySpec::Halving`] — §4.2: every node starts with `N = 2^k`
+//!   tokens; a redistribution removes half of the overloaded node's
+//!   tokens. Gentle, but you can "run out of halving" at one token.
+//! * [`StrategySpec::Doubling`] — §4.2: every node starts with one token;
+//!   a redistribution doubles every *other* node's token count.
+//! * [`StrategySpec::MultiProbe`] — multi-probe consistent hashing:
+//!   `probes` independent probes per key, closest probe owner wins,
+//!   avoiding owners frozen as overloaded; redistribution is
+//!   zero-token-churn.
+//! * [`StrategySpec::TwoChoices`] — per-key power of two choices with a
+//!   sticky assignment table (the key-splitting guard).
+//!
+//! `Strategy` remains as an alias — the spec is the same value that used
+//! to be the closed strategy enum, so TOML/CLI round-trips and existing
+//! call sites keep working.
 
 use std::fmt;
 use std::str::FromStr;
 
-/// Which token-manipulation strategy `redistribute(node_id)` applies.
-///
-/// * [`Strategy::None`] — load balancing disabled (the paper's "No LB"
-///   baseline column in Table 1).
-/// * [`Strategy::Halving`] — every node starts with `N = 2^k` tokens; a
-///   redistribution removes half of the overloaded node's tokens. Gentle,
-///   only the target node's keys move, but you can "run out of halving"
-///   once a node is down to one token.
-/// * [`Strategy::Doubling`] — every node starts with one token; a
-///   redistribution doubles the token count of every *other* node.
-///   Aggressive: non-problematic nodes' keys reshuffle too.
+use super::ring::Ring;
+use super::router::{MultiProbeRouter, RingOp, Router, TokenRingRouter, TwoChoicesRouter};
+
+/// Default probe count for [`StrategySpec::MultiProbe`]. The MPCH paper
+/// suggests ~21 probes for a 1.05 peak-to-average ratio on large
+/// clusters; for the paper's 4-reducer topology a handful suffices.
+pub const DEFAULT_PROBES: u32 = 5;
+
+/// Parsed redistribution-strategy specification.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub enum Strategy {
+pub enum StrategySpec {
     None,
     Halving,
     Doubling,
+    MultiProbe { probes: u32 },
+    TwoChoices,
 }
 
-impl Strategy {
-    /// Initial tokens per node for this strategy. `halving_init` must be a
-    /// power of two (§4.2: "N initial tokens where N is a power of 2").
+/// Historical name: the spec used to be the closed strategy enum.
+pub type Strategy = StrategySpec;
+
+impl StrategySpec {
+    /// Initial tokens per node for the ring-based layouts. `halving_init`
+    /// must be a power of two (§4.2: "N initial tokens where N is a power
+    /// of 2"). Probe-based strategies have one position per node.
     pub fn initial_tokens(&self, halving_init: u32) -> u32 {
         match self {
             // The no-LB baseline in the paper is the same runtime with the
             // trigger disabled; its initial partition matches whichever
             // method it is compared against, so the caller picks. We default
             // to the halving layout for standalone use.
-            Strategy::None => halving_init,
-            Strategy::Halving => {
+            StrategySpec::None => halving_init,
+            StrategySpec::Halving => {
                 assert!(
                     halving_init.is_power_of_two(),
                     "halving initial token count must be a power of two, got {halving_init}"
                 );
                 halving_init
             }
-            Strategy::Doubling => 1,
+            StrategySpec::Doubling => 1,
+            StrategySpec::MultiProbe { .. } | StrategySpec::TwoChoices => 1,
         }
     }
 
-    pub fn all() -> [Strategy; 3] {
-        [Strategy::None, Strategy::Halving, Strategy::Doubling]
+    /// Is this a token-ring-family spec (where `initial_tokens` /
+    /// `initial_tokens` overrides are meaningful)?
+    pub fn is_token_ring(&self) -> bool {
+        matches!(
+            self,
+            StrategySpec::None | StrategySpec::Halving | StrategySpec::Doubling
+        )
+    }
+
+    /// Construct the router this spec describes. `initial_tokens`
+    /// overrides the ring layout (used to run the no-LB baseline on a
+    /// specific method's initial layout); probe routers ignore it.
+    pub fn build_router(
+        &self,
+        nodes: usize,
+        halving_init: u32,
+        initial_tokens: Option<u32>,
+    ) -> Box<dyn Router> {
+        match self {
+            StrategySpec::None | StrategySpec::Halving | StrategySpec::Doubling => {
+                let tokens = initial_tokens.unwrap_or_else(|| self.initial_tokens(halving_init));
+                let op = match self {
+                    StrategySpec::None => RingOp::NoOp,
+                    StrategySpec::Halving => RingOp::Halve,
+                    _ => RingOp::DoubleOthers,
+                };
+                Box::new(TokenRingRouter::new(Ring::new(nodes, tokens), op))
+            }
+            StrategySpec::MultiProbe { probes } => {
+                Box::new(MultiProbeRouter::new(nodes, *probes))
+            }
+            StrategySpec::TwoChoices => Box::new(TwoChoicesRouter::new(nodes)),
+        }
+    }
+
+    /// Every spec (one representative per family parameterization).
+    pub fn all() -> [StrategySpec; 5] {
+        [
+            StrategySpec::None,
+            StrategySpec::Halving,
+            StrategySpec::Doubling,
+            StrategySpec::MultiProbe { probes: DEFAULT_PROBES },
+            StrategySpec::TwoChoices,
+        ]
     }
 
     /// The two active methods compared in the paper's evaluation.
-    pub fn methods() -> [Strategy; 2] {
-        [Strategy::Halving, Strategy::Doubling]
+    pub fn methods() -> [StrategySpec; 2] {
+        [StrategySpec::Halving, StrategySpec::Doubling]
+    }
+
+    /// Parse a comma-separated strategy list (the `--strategies` filter).
+    pub fn parse_list(s: &str) -> Result<Vec<StrategySpec>, String> {
+        s.split(',')
+            .map(str::trim)
+            .filter(|p| !p.is_empty())
+            .map(str::parse)
+            .collect()
     }
 }
 
-impl fmt::Display for Strategy {
+impl fmt::Display for StrategySpec {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
-            Strategy::None => write!(f, "none"),
-            Strategy::Halving => write!(f, "halving"),
-            Strategy::Doubling => write!(f, "doubling"),
+            StrategySpec::None => write!(f, "none"),
+            StrategySpec::Halving => write!(f, "halving"),
+            StrategySpec::Doubling => write!(f, "doubling"),
+            StrategySpec::MultiProbe { probes } if *probes == DEFAULT_PROBES => {
+                write!(f, "multiprobe")
+            }
+            StrategySpec::MultiProbe { probes } => write!(f, "multiprobe:{probes}"),
+            StrategySpec::TwoChoices => write!(f, "twochoices"),
         }
     }
 }
 
-impl FromStr for Strategy {
+impl FromStr for StrategySpec {
     type Err = String;
 
     fn from_str(s: &str) -> Result<Self, Self::Err> {
-        match s.to_ascii_lowercase().as_str() {
-            "none" | "nolb" | "no-lb" | "off" => Ok(Strategy::None),
-            "halving" | "halve" => Ok(Strategy::Halving),
-            "doubling" | "double" => Ok(Strategy::Doubling),
+        let lower = s.to_ascii_lowercase();
+        if let Some((name, arg)) = lower.split_once(':') {
+            return match name {
+                "multiprobe" | "multi-probe" | "mpch" => {
+                    let probes: u32 = arg
+                        .parse()
+                        .map_err(|e| format!("invalid probe count '{arg}': {e}"))?;
+                    if probes == 0 {
+                        return Err("probe count must be at least 1".into());
+                    }
+                    Ok(StrategySpec::MultiProbe { probes })
+                }
+                other => Err(format!("strategy '{other}' takes no ':' parameter")),
+            };
+        }
+        match lower.as_str() {
+            "none" | "nolb" | "no-lb" | "off" => Ok(StrategySpec::None),
+            "halving" | "halve" => Ok(StrategySpec::Halving),
+            "doubling" | "double" => Ok(StrategySpec::Doubling),
+            "multiprobe" | "multi-probe" | "mpch" => {
+                Ok(StrategySpec::MultiProbe { probes: DEFAULT_PROBES })
+            }
+            "twochoices" | "two-choices" | "2choices" => Ok(StrategySpec::TwoChoices),
             other => Err(format!(
-                "unknown strategy '{other}' (expected none|halving|doubling)"
+                "unknown strategy '{other}' \
+                 (expected none|halving|doubling|multiprobe[:K]|twochoices)"
             )),
         }
     }
@@ -83,23 +188,61 @@ mod tests {
 
     #[test]
     fn parse_round_trip() {
-        for s in Strategy::all() {
-            assert_eq!(s.to_string().parse::<Strategy>().unwrap(), s);
+        for s in StrategySpec::all() {
+            assert_eq!(s.to_string().parse::<StrategySpec>().unwrap(), s);
         }
-        assert_eq!("no-lb".parse::<Strategy>().unwrap(), Strategy::None);
-        assert!("bogus".parse::<Strategy>().is_err());
+        assert_eq!("no-lb".parse::<StrategySpec>().unwrap(), StrategySpec::None);
+        assert_eq!(
+            "multiprobe:9".parse::<StrategySpec>().unwrap(),
+            StrategySpec::MultiProbe { probes: 9 }
+        );
+        assert_eq!(
+            StrategySpec::MultiProbe { probes: 9 }.to_string(),
+            "multiprobe:9"
+        );
+        assert!("bogus".parse::<StrategySpec>().is_err());
+        assert!("multiprobe:0".parse::<StrategySpec>().is_err());
+        assert!("halving:2".parse::<StrategySpec>().is_err());
+    }
+
+    #[test]
+    fn parse_strategy_lists() {
+        assert_eq!(
+            StrategySpec::parse_list("halving, doubling,multiprobe").unwrap(),
+            vec![
+                StrategySpec::Halving,
+                StrategySpec::Doubling,
+                StrategySpec::MultiProbe { probes: DEFAULT_PROBES },
+            ]
+        );
+        assert!(StrategySpec::parse_list("halving,bogus").is_err());
     }
 
     #[test]
     fn initial_tokens_per_method() {
-        assert_eq!(Strategy::Halving.initial_tokens(8), 8);
-        assert_eq!(Strategy::Doubling.initial_tokens(8), 1);
-        assert_eq!(Strategy::None.initial_tokens(8), 8);
+        assert_eq!(StrategySpec::Halving.initial_tokens(8), 8);
+        assert_eq!(StrategySpec::Doubling.initial_tokens(8), 1);
+        assert_eq!(StrategySpec::None.initial_tokens(8), 8);
+        assert_eq!(StrategySpec::TwoChoices.initial_tokens(8), 1);
+        assert_eq!(StrategySpec::MultiProbe { probes: 3 }.initial_tokens(8), 1);
     }
 
     #[test]
     #[should_panic]
     fn halving_requires_power_of_two() {
-        Strategy::Halving.initial_tokens(6);
+        StrategySpec::Halving.initial_tokens(6);
+    }
+
+    #[test]
+    fn build_router_families() {
+        for spec in StrategySpec::all() {
+            let r = spec.build_router(4, 8, None);
+            assert_eq!(r.nodes(), 4, "{spec}");
+            let is_ring = r.as_token_ring().is_some();
+            assert_eq!(is_ring, spec.is_token_ring(), "{spec}");
+        }
+        // the no-LB baseline can borrow a method's initial layout
+        let r = StrategySpec::None.build_router(4, 8, Some(1));
+        assert_eq!(r.as_token_ring().unwrap().tokens_of(0), 1);
     }
 }

@@ -6,14 +6,16 @@
 //!
 //! The library implements a streaming map-reduce runtime built from
 //! stateful actors in which input skew across hash-partitioned reducers is
-//! corrected **at runtime** — no coordinated global rollback. The keyspace
-//! is partitioned with a MurmurHash3 consistent-hash token ring
-//! ([`hash::ring`]); a load-balancer actor ([`balancer`]) watches
-//! per-reducer queue lengths and repartitions via *token halving* or
-//! *token doubling* when the paper's Eq. 1 predicate
-//! `Q_max > Q_s * (1 + tau)` fires. Records enqueued under an old
-//! partition scheme are *forwarded* by the dequeuing reducer, and reducer
-//! states are *merged* at the end of the run.
+//! corrected **at runtime** — no coordinated global rollback. Keyspace
+//! routing/redistribution is a pluggable trait layer ([`hash::router`]):
+//! the paper's MurmurHash3 consistent-hash token ring ([`hash::ring`])
+//! with *token halving* / *token doubling* is one implementation, next to
+//! multi-probe consistent hashing (zero token churn) and per-key
+//! power-of-two-choices. A load-balancer actor ([`balancer`]) watches
+//! per-reducer queue lengths and calls the router's redistribution when
+//! the paper's Eq. 1 predicate `Q_max > Q_s * (1 + tau)` fires. Records
+//! enqueued under an old partition scheme are *forwarded* by the dequeuing
+//! reducer, and reducer states are *merged* at the end of the run.
 //!
 //! ## Layers
 //!
@@ -43,6 +45,12 @@
 //! let report = Pipeline::wordcount(cfg).run(input).unwrap();
 //! println!("skew S = {:.2}", report.skew());
 //! ```
+
+// The `let mut cfg = PipelineConfig::default(); cfg.field = …` pattern is
+// the crate's idiom for building experiment configs (mirroring how the
+// paper's sweeps override one knob at a time); rewriting every site into
+// struct-update syntax would obscure which knob each experiment varies.
+#![allow(clippy::field_reassign_with_default)]
 
 pub mod util;
 pub mod hash;

@@ -1,21 +1,21 @@
 //! Mapper core logic (§2.1): stateless actors that fetch tasks from the
 //! coordinator, apply the map executor to each input element and push the
 //! resulting records to the owning reducer's queue — owner resolved
-//! through the (shared) consistent-hashing object.
+//! through the shared routing layer ([`RouterHandle`] /
+//! [`RouterCache`]).
 //!
 //! Both drivers run this same core; only the surrounding loop differs.
 
 use std::sync::Arc;
 
 use crate::exec::{MapExecutor, Record, Task};
-use crate::hash::ring::RingCache;
-use crate::hash::SharedRing;
+use crate::hash::{RouterCache, RouterHandle};
 
 /// Per-mapper state + the map-and-route step.
 pub struct MapperCore {
     pub id: usize,
     exec: Arc<dyn MapExecutor>,
-    ring: RingCache,
+    router: RouterCache,
     /// Records emitted (the run report's `mapped[i]`).
     pub emitted: u64,
     /// Input items consumed.
@@ -25,11 +25,11 @@ pub struct MapperCore {
 }
 
 impl MapperCore {
-    pub fn new(id: usize, exec: Arc<dyn MapExecutor>, ring: SharedRing) -> Self {
+    pub fn new(id: usize, exec: Arc<dyn MapExecutor>, router: RouterHandle) -> Self {
         MapperCore {
             id,
             exec,
-            ring: RingCache::new(ring),
+            router: router.cache(),
             emitted: 0,
             items_in: 0,
             tasks_in: 0,
@@ -45,7 +45,7 @@ impl MapperCore {
         recs.into_iter()
             .map(|r| {
                 // memoized hash: the reducer's ownership check reuses it
-                let dest = self.ring.lookup_hash(r.hash());
+                let dest = self.router.route_hash(r.hash());
                 (dest, r)
             })
             .collect()
@@ -66,20 +66,24 @@ impl MapperCore {
 mod tests {
     use super::*;
     use crate::exec::builtin::IdentityMap;
-    use crate::hash::Ring;
+    use crate::hash::{Ring, RingOp};
 
     fn mk() -> MapperCore {
-        MapperCore::new(0, Arc::new(IdentityMap), SharedRing::new(Ring::new(4, 8)))
+        MapperCore::new(
+            0,
+            Arc::new(IdentityMap),
+            RouterHandle::token_ring(Ring::new(4, 8), RingOp::NoOp),
+        )
     }
 
     #[test]
-    fn routes_consistently_with_ring() {
-        let ring = SharedRing::new(Ring::new(4, 8));
-        let mut m = MapperCore::new(0, Arc::new(IdentityMap), ring.clone());
+    fn routes_consistently_with_router() {
+        let router = RouterHandle::token_ring(Ring::new(4, 8), RingOp::NoOp);
+        let mut m = MapperCore::new(0, Arc::new(IdentityMap), router.clone());
         for key in ["a", "hello", "zz"] {
             let routed = m.process_item(key);
             assert_eq!(routed.len(), 1);
-            assert_eq!(routed[0].0, ring.lookup(key.as_bytes()));
+            assert_eq!(routed[0].0, router.route_key(key.as_bytes()));
             assert_eq!(routed[0].1.key, key);
         }
         assert_eq!(m.emitted, 3);
@@ -87,20 +91,20 @@ mod tests {
     }
 
     #[test]
-    fn observes_ring_updates() {
-        let ring = SharedRing::new(Ring::new(4, 1));
-        let mut m = MapperCore::new(0, Arc::new(IdentityMap), ring.clone());
+    fn observes_router_updates() {
+        let router = RouterHandle::token_ring(Ring::new(4, 1), RingOp::NoOp);
+        let mut m = MapperCore::new(0, Arc::new(IdentityMap), router.clone());
         // find a key owned by node 0, then double others until it moves
         let pool = crate::workload::generators::key_pool();
         let key = pool
             .iter()
-            .find(|k| ring.lookup(k.as_bytes()) == 0)
+            .find(|k| router.route_key(k.as_bytes()) == 0)
             .unwrap()
             .clone();
         assert_eq!(m.process_item(&key)[0].0, 0);
         let mut moved = false;
         for _ in 0..7 {
-            ring.update(|r| r.double_others(0));
+            router.update_ring(|r| r.double_others(0)).unwrap();
             if m.process_item(&key)[0].0 != 0 {
                 moved = true;
                 break;
@@ -116,5 +120,17 @@ mod tests {
         let routed = m.process_task(&task);
         assert_eq!(routed.len(), 2);
         assert_eq!(m.tasks_in, 1);
+    }
+
+    #[test]
+    fn routes_through_probe_routers_too() {
+        let router =
+            RouterHandle::new(crate::hash::StrategySpec::TwoChoices.build_router(4, 8, None));
+        let mut m = MapperCore::new(0, Arc::new(IdentityMap), router.clone());
+        let dest = m.process_item("some-key")[0].0;
+        assert!(dest < 4);
+        // sticky: re-mapping the same key lands on the same reducer
+        assert_eq!(m.process_item("some-key")[0].0, dest);
+        assert_eq!(router.route_key(b"some-key"), dest);
     }
 }

@@ -3,13 +3,13 @@
 
 use std::time::Duration;
 
-use crate::hash::Strategy;
+use crate::hash::{RouteDelta, Strategy};
 use crate::util::table::{f2, Table};
 
 use super::skew::skew;
 
 /// One load-balancing event (a `redistribute(node)` call that changed the
-/// ring), recorded by the balancer.
+/// routing), recorded by the balancer.
 #[derive(Clone, Debug)]
 pub struct LbEvent {
     /// Virtual time (sim driver) or elapsed µs (thread driver).
@@ -18,10 +18,13 @@ pub struct LbEvent {
     pub target: u32,
     /// Queue lengths observed when the predicate fired.
     pub qlens: Vec<usize>,
-    /// Ring epoch after the update.
+    /// Router epoch after the update.
     pub epoch: u64,
-    /// Strategy applied.
+    /// Strategy spec applied.
     pub strategy: Strategy,
+    /// What the router's redistribution changed (token churn / key
+    /// re-homes; empty-churn for multi-probe).
+    pub delta: RouteDelta,
 }
 
 /// Full accounting of a pipeline run.
@@ -122,8 +125,15 @@ impl RunReport {
         out.push_str(&t.render());
         for e in &self.lb_events {
             out.push_str(&format!(
-                "LB@{} target={} strategy={} qlens={:?}\n",
-                e.at, e.target, e.strategy, e.qlens
+                "LB@{} target={} strategy={} qlens={:?} \
+                 (+{} / -{} tokens, {} keys re-homed)\n",
+                e.at,
+                e.target,
+                e.strategy,
+                e.qlens,
+                e.delta.tokens_added,
+                e.delta.tokens_removed,
+                e.delta.keys_reassigned
             ));
         }
         out

@@ -13,7 +13,7 @@ use crate::config::Document;
 use crate::driver::{ThreadDriver, ThreadParams};
 use crate::exec::builtin::{Distinct, IdentityMap, KeyValueMap, TokenizeMap, TopK, WordCount};
 use crate::exec::{MapExecutor, ReduceFactory};
-use crate::hash::{Ring, SharedRing, Strategy};
+use crate::hash::{Ring, RouterHandle, Strategy};
 use crate::metrics::RunReport;
 use crate::sim::{SimCosts, SimDriver, SimParams};
 
@@ -60,7 +60,9 @@ pub enum ExecutorKind {
 pub struct PipelineConfig {
     pub mappers: usize,
     pub reducers: usize,
-    /// Token strategy ([`Strategy::None`] = the paper's "No LB" baseline).
+    /// Redistribution strategy spec ([`Strategy::None`] = the paper's
+    /// "No LB" baseline; `multiprobe[:K]` and `twochoices` select the
+    /// probe-based routers).
     pub strategy: Strategy,
     /// Eq. 1 sensitivity threshold τ.
     pub tau: f64,
@@ -226,12 +228,22 @@ impl PipelineConfig {
         Ok(())
     }
 
-    /// The ring this configuration starts from.
+    /// The ring this configuration starts from (token-ring strategies;
+    /// probe routers have no token layout).
     pub fn initial_ring(&self) -> Ring {
         match self.initial_tokens {
             Some(n) => Ring::new(self.reducers, n),
             None => Ring::for_strategy(self.reducers, self.strategy, self.halving_init_tokens),
         }
+    }
+
+    /// Construct the routing layer this configuration describes.
+    pub fn build_router(&self) -> RouterHandle {
+        RouterHandle::new(self.strategy.build_router(
+            self.reducers,
+            self.halving_init_tokens,
+            self.initial_tokens,
+        ))
     }
 }
 
@@ -288,7 +300,7 @@ impl Pipeline {
     }
 
     fn build_balancer(&self) -> BalancerCore {
-        let ring = SharedRing::new(self.cfg.initial_ring());
+        let router = self.cfg.build_router();
         // `cooldown` is in driver time units: sim ticks for the DES, and
         // milliseconds for the threads driver (whose balancer clock runs
         // in µs) — 50 sim-ticks ≈ 10 reduce steps ≈ 50ms of real queue
@@ -298,7 +310,7 @@ impl Pipeline {
             DriverKind::Threads => self.cfg.cooldown.saturating_mul(1000),
         };
         BalancerCore::new(
-            ring,
+            router,
             self.cfg.strategy,
             self.cfg.tau,
             self.cfg.min_trigger_qlen,
@@ -483,5 +495,24 @@ max_rounds = 3
         for (_, c) in &r.result {
             assert_eq!(*c, 10);
         }
+    }
+
+    #[test]
+    fn probe_strategies_config_round_trip_and_run() {
+        let doc = crate::config::parse(
+            "[balancer]\nstrategy = \"multiprobe:3\"\n",
+        )
+        .unwrap();
+        let mut cfg = PipelineConfig::default();
+        cfg.apply_document(&doc).unwrap();
+        assert_eq!(cfg.strategy, Strategy::MultiProbe { probes: 3 });
+        assert_eq!(cfg.build_router().name(), "multi-probe");
+
+        cfg.strategy = Strategy::TwoChoices;
+        assert_eq!(cfg.build_router().name(), "two-choices");
+        let items: Vec<String> = (0..60).map(|i| format!("w{}", i % 6)).collect();
+        let r = Pipeline::wordcount(cfg).run(items).unwrap();
+        assert_eq!(r.total_processed(), 60);
+        assert_eq!(r.result.len(), 6);
     }
 }

@@ -3,11 +3,12 @@
 //! (forwarding records they no longer own), periodically report their load
 //! to the balancer, and surrender their state for the final merge.
 //!
-//! Both drivers run this same core; only the surrounding loop differs.
+//! Ownership questions go through the pluggable routing layer
+//! ([`RouterCache`]); both drivers run this same core — only the
+//! surrounding loop differs.
 
 use crate::exec::{Record, ReduceExecutor};
-use crate::hash::ring::RingCache;
-use crate::hash::SharedRing;
+use crate::hash::{RouterCache, RouterHandle};
 
 /// Outcome of handling one dequeued record.
 #[derive(Debug)]
@@ -24,7 +25,7 @@ pub enum Handled {
 pub struct ReducerCore {
     pub id: usize,
     pub exec: Box<dyn ReduceExecutor>,
-    ring: RingCache,
+    router: RouterCache,
     /// Messages reduced (the paper's `M_i`).
     pub processed: u64,
     /// Messages forwarded onward after a repartition.
@@ -36,11 +37,11 @@ pub struct ReducerCore {
 }
 
 impl ReducerCore {
-    pub fn new(id: usize, exec: Box<dyn ReduceExecutor>, ring: SharedRing) -> Self {
+    pub fn new(id: usize, exec: Box<dyn ReduceExecutor>, router: RouterHandle) -> Self {
         ReducerCore {
             id,
             exec,
-            ring: RingCache::new(ring),
+            router: router.cache(),
             processed: 0,
             forwarded: 0,
             state_absorbed: 0,
@@ -54,8 +55,8 @@ impl ReducerCore {
     /// to see if it is indeed assigned to this key").
     pub fn handle(&mut self, rec: Record) -> Handled {
         self.handled_since_report += 1;
-        // hash memoized at map time — the check costs one binary search
-        let owner = self.ring.lookup_hash(rec.hash());
+        // hash memoized at map time — the check costs one route lookup
+        let owner = self.router.route_hash(rec.hash());
         if owner != self.id {
             self.forwarded += 1;
             Handled::Forward(owner, rec)
@@ -68,7 +69,7 @@ impl ReducerCore {
 
     /// Current owner of a key under the live partitioning.
     pub fn owner_of(&mut self, key: &str) -> usize {
-        self.ring.lookup(key.as_bytes())
+        self.router.route_key(key.as_bytes())
     }
 
     /// Should this reducer send a load report now? Counts handled
@@ -90,13 +91,14 @@ impl ReducerCore {
     }
 
     /// §7 state forwarding, substage 1 — extract state for every key this
-    /// reducer no longer owns; returns `(new_owner, state_record)` pairs.
+    /// reducer no longer owns (the snapshot-vs-router ownership diff);
+    /// returns `(new_owner, state_record)` pairs.
     pub fn extract_disowned(&mut self) -> Vec<(usize, Record)> {
         self.exec.flush();
         let snapshot = self.exec.snapshot();
         let mut out = Vec::new();
         for (key, _) in snapshot {
-            let owner = self.ring.lookup(key.as_bytes());
+            let owner = self.router.route_key(key.as_bytes());
             if owner != self.id {
                 if let Some(v) = self.exec.extract_key(&key) {
                     self.state_extracted += 1;
@@ -118,20 +120,20 @@ impl ReducerCore {
 mod tests {
     use super::*;
     use crate::exec::builtin::WordCount;
-    use crate::hash::Ring;
+    use crate::hash::{Ring, RingOp};
 
-    fn owned_key(ring: &SharedRing, node: usize) -> String {
+    fn owned_key(router: &RouterHandle, node: usize) -> String {
         crate::workload::generators::key_pool()
             .into_iter()
-            .find(|k| ring.lookup(k.as_bytes()) == node)
+            .find(|k| router.route_key(k.as_bytes()) == node)
             .expect("pool has a key for every node")
     }
 
     #[test]
     fn reduces_owned_keys() {
-        let ring = SharedRing::new(Ring::new(4, 8));
-        let key = owned_key(&ring, 1);
-        let mut r = ReducerCore::new(1, Box::new(WordCount::new()), ring);
+        let router = RouterHandle::token_ring(Ring::new(4, 8), RingOp::NoOp);
+        let key = owned_key(&router, 1);
+        let mut r = ReducerCore::new(1, Box::new(WordCount::new()), router);
         match r.handle(Record::new(key.clone(), 1)) {
             Handled::Reduced => {}
             h => panic!("expected Reduced, got {h:?}"),
@@ -142,10 +144,10 @@ mod tests {
 
     #[test]
     fn forwards_disowned_keys() {
-        let ring = SharedRing::new(Ring::new(4, 8));
-        let key = owned_key(&ring, 2);
+        let router = RouterHandle::token_ring(Ring::new(4, 8), RingOp::NoOp);
+        let key = owned_key(&router, 2);
         // reducer 0 receives a key owned by reducer 2 (stale routing)
-        let mut r = ReducerCore::new(0, Box::new(WordCount::new()), ring);
+        let mut r = ReducerCore::new(0, Box::new(WordCount::new()), router);
         match r.handle(Record::new(key.clone(), 1)) {
             Handled::Forward(dest, rec) => {
                 assert_eq!(dest, 2);
@@ -160,9 +162,9 @@ mod tests {
 
     #[test]
     fn due_report_fires_on_interval() {
-        let ring = SharedRing::new(Ring::new(4, 8));
-        let key = owned_key(&ring, 0);
-        let mut r = ReducerCore::new(0, Box::new(WordCount::new()), ring);
+        let router = RouterHandle::token_ring(Ring::new(4, 8), RingOp::NoOp);
+        let key = owned_key(&router, 0);
+        let mut r = ReducerCore::new(0, Box::new(WordCount::new()), router);
         let mut fired = 0;
         for _ in 0..10 {
             r.handle(Record::new(key.clone(), 1));
@@ -175,17 +177,17 @@ mod tests {
 
     #[test]
     fn extract_disowned_moves_state_after_repartition() {
-        let ring = SharedRing::new(Ring::new(4, 1));
-        let key = owned_key(&ring, 0);
-        let mut r = ReducerCore::new(0, Box::new(WordCount::new()), ring.clone());
+        let router = RouterHandle::token_ring(Ring::new(4, 1), RingOp::NoOp);
+        let key = owned_key(&router, 0);
+        let mut r = ReducerCore::new(0, Box::new(WordCount::new()), router.clone());
         r.handle(Record::new(key.clone(), 1));
         r.handle(Record::new(key.clone(), 1));
         assert_eq!(r.processed, 2);
         // repartition until the key leaves node 0
         let mut moved = false;
         for _ in 0..7 {
-            ring.update(|rr| rr.double_others(0));
-            if ring.lookup(key.as_bytes()) != 0 {
+            router.update_ring(|rr| rr.double_others(0)).unwrap();
+            if router.route_key(key.as_bytes()) != 0 {
                 moved = true;
                 break;
             }
@@ -194,7 +196,7 @@ mod tests {
         let transfers = r.extract_disowned();
         assert_eq!(transfers.len(), 1);
         let (dest, rec) = &transfers[0];
-        assert_eq!(*dest, ring.lookup(key.as_bytes()));
+        assert_eq!(*dest, router.route_key(key.as_bytes()));
         assert_eq!(rec.value, 2, "full count extracted");
         assert!(r.final_snapshot().is_empty(), "state left the reducer");
         assert_eq!(r.state_extracted, 1);
@@ -202,12 +204,39 @@ mod tests {
 
     #[test]
     fn absorb_state_merges() {
-        let ring = SharedRing::new(Ring::new(4, 8));
-        let key = owned_key(&ring, 3);
-        let mut r = ReducerCore::new(3, Box::new(WordCount::new()), ring);
+        let router = RouterHandle::token_ring(Ring::new(4, 8), RingOp::NoOp);
+        let key = owned_key(&router, 3);
+        let mut r = ReducerCore::new(3, Box::new(WordCount::new()), router);
         r.handle(Record::new(key.clone(), 1));
         r.absorb_state(Record::new(key.clone(), 5));
         assert_eq!(r.final_snapshot(), vec![(key, 6)]);
         assert_eq!(r.state_absorbed, 1);
+    }
+
+    #[test]
+    fn extract_disowned_after_two_choices_rehoming() {
+        // the §7 ownership diff works for probe routers too: redistribute
+        // re-homes keys, extraction ships exactly the moved keys' state
+        let router =
+            RouterHandle::new(crate::hash::StrategySpec::TwoChoices.build_router(4, 8, None));
+        let keys: Vec<String> = (0..40).map(|i| format!("tck-{i}")).collect();
+        let owner0 = router.route_key(keys[0].as_bytes());
+        let mut r = ReducerCore::new(owner0, Box::new(WordCount::new()), router.clone());
+        let mine: Vec<&String> = keys
+            .iter()
+            .filter(|k| router.route_key(k.as_bytes()) == owner0)
+            .collect();
+        for k in &mine {
+            r.handle(Record::new((*k).clone(), 1));
+        }
+        assert_eq!(r.processed as usize, mine.len());
+        let delta = router.redistribute(owner0);
+        assert!(delta.keys_reassigned > 0);
+        let transfers = r.extract_disowned();
+        assert_eq!(transfers.len() as u64, delta.keys_reassigned);
+        for (dest, rec) in &transfers {
+            assert_eq!(*dest, router.route_key(rec.key.as_bytes()));
+            assert_ne!(*dest, owner0);
+        }
     }
 }

@@ -27,7 +27,7 @@ use crate::balancer::state_forward::{ConsistencyMode, Stage, StageTracker};
 use crate::balancer::BalancerCore;
 use crate::coordinator::{merge_states, TaskPool};
 use crate::exec::{Record, ReduceFactory};
-use crate::hash::SharedRing;
+use crate::hash::RouterHandle;
 use crate::mapper::MapperCore;
 use crate::metrics::{LbEvent, RunReport};
 use crate::queue::DataQueue;
@@ -99,15 +99,15 @@ pub struct ExecCore {
 impl ExecCore {
     /// Build the run topology: chunk the shared input into the task pool,
     /// one envelope queue per reducer, shutdown accounting for `n_mappers`
-    /// and a stage tracker pinned to the ring's current epoch.
+    /// and a stage tracker pinned to the router's current epoch.
     pub fn build(
-        ring: &SharedRing,
+        router: &RouterHandle,
         n_mappers: usize,
         items: impl Into<Arc<[String]>>,
         params: ExecParams,
     ) -> Self {
         let items: Arc<[String]> = items.into();
-        let n_reducers = ring.nodes();
+        let n_reducers = router.nodes();
         let input_items = items.len() as u64;
         ExecCore {
             pool: TaskPool::from_items(items, params.chunk_size),
@@ -115,7 +115,7 @@ impl ExecCore {
                 .map(|_| DataQueue::new(params.queue_capacity))
                 .collect(),
             monitor: ShutdownMonitor::new(n_mappers),
-            tracker: StageTracker::new(n_reducers, ring.epoch()),
+            tracker: StageTracker::new(n_reducers, router.epoch()),
             mode: params.mode,
             report_interval: params.report_interval,
             input_items,
@@ -278,11 +278,11 @@ impl ExecCore {
 mod tests {
     use super::*;
     use crate::exec::builtin::WordCount;
-    use crate::hash::{Ring, Strategy};
+    use crate::hash::{Ring, RingOp, Strategy};
 
-    fn core(mode: ConsistencyMode, ring: &SharedRing, items: Vec<String>) -> ExecCore {
+    fn core(mode: ConsistencyMode, router: &RouterHandle, items: Vec<String>) -> ExecCore {
         ExecCore::build(
-            ring,
+            router,
             1,
             items,
             ExecParams {
@@ -295,17 +295,17 @@ mod tests {
         )
     }
 
-    fn owned_key(ring: &SharedRing, node: usize) -> String {
+    fn owned_key(router: &RouterHandle, node: usize) -> String {
         crate::workload::generators::key_pool()
             .into_iter()
-            .find(|k| ring.lookup(k.as_bytes()) == node)
+            .find(|k| router.route_key(k.as_bytes()) == node)
             .expect("pool has a key for every node")
     }
 
     #[test]
-    fn topology_matches_ring() {
-        let ring = SharedRing::new(Ring::new(4, 8));
-        let c = core(ConsistencyMode::MergeAtEnd, &ring, vec!["a".into(); 25]);
+    fn topology_matches_router() {
+        let router = RouterHandle::token_ring(Ring::new(4, 8), RingOp::NoOp);
+        let c = core(ConsistencyMode::MergeAtEnd, &router, vec!["a".into(); 25]);
         assert_eq!(c.queues.len(), 4);
         assert_eq!(c.pool.total(), 3);
         assert!(c.synced());
@@ -313,11 +313,11 @@ mod tests {
 
     #[test]
     fn step_reduces_owned_and_forwards_disowned() {
-        let ring = SharedRing::new(Ring::new(4, 8));
-        let c = core(ConsistencyMode::MergeAtEnd, &ring, vec![]);
-        let key = owned_key(&ring, 1);
-        let other = owned_key(&ring, 2);
-        let mut rc = ReducerCore::new(1, Box::new(WordCount::new()), ring.clone());
+        let router = RouterHandle::token_ring(Ring::new(4, 8), RingOp::NoOp);
+        let c = core(ConsistencyMode::MergeAtEnd, &router, vec![]);
+        let key = owned_key(&router, 1);
+        let other = owned_key(&router, 2);
+        let mut rc = ReducerCore::new(1, Box::new(WordCount::new()), router.clone());
 
         c.push_mapped(1, Record::new(key, 1));
         c.push_mapped(1, Record::new(other, 1)); // stale-routed
@@ -336,9 +336,9 @@ mod tests {
 
     #[test]
     fn idle_stop_requires_drain_and_sync() {
-        let ring = SharedRing::new(Ring::new(2, 8));
-        let c = core(ConsistencyMode::MergeAtEnd, &ring, vec![]);
-        let mut rc = ReducerCore::new(0, Box::new(WordCount::new()), ring.clone());
+        let router = RouterHandle::token_ring(Ring::new(2, 8), RingOp::NoOp);
+        let c = core(ConsistencyMode::MergeAtEnd, &router, vec![]);
+        let mut rc = ReducerCore::new(0, Box::new(WordCount::new()), router.clone());
         // mapper still running → no stop
         match c.reducer_step(&mut rc, 0, |q| q.try_pop()) {
             ReducerStep::Idle { stop } => assert!(!stop),
@@ -353,11 +353,11 @@ mod tests {
 
     #[test]
     fn coordinated_stop_waits_for_request() {
-        let ring = SharedRing::new(Ring::new(2, 8));
-        let mut c = core(ConsistencyMode::MergeAtEnd, &ring, vec![]);
+        let router = RouterHandle::token_ring(Ring::new(2, 8), RingOp::NoOp);
+        let mut c = core(ConsistencyMode::MergeAtEnd, &router, vec![]);
         c.coordinated_stop = true;
         c.monitor.mapper_done();
-        let mut rc = ReducerCore::new(0, Box::new(WordCount::new()), ring.clone());
+        let mut rc = ReducerCore::new(0, Box::new(WordCount::new()), router.clone());
         match c.reducer_step(&mut rc, 0, |q| q.try_pop()) {
             ReducerStep::Idle { stop } => assert!(!stop, "no stop before request"),
             s => panic!("expected Idle, got {s:?}"),
@@ -373,12 +373,12 @@ mod tests {
     fn state_forward_round_trip_through_core() {
         // repartition → extraction ships state on the priority lane →
         // destination absorbs → synchronized again
-        let ring = SharedRing::new(Ring::new(4, 1));
-        let c = core(ConsistencyMode::StateForward, &ring, vec![]);
-        let key = owned_key(&ring, 0);
-        let mut r0 = ReducerCore::new(0, Box::new(WordCount::new()), ring.clone());
+        let router = RouterHandle::token_ring(Ring::new(4, 1), RingOp::NoOp);
+        let c = core(ConsistencyMode::StateForward, &router, vec![]);
+        let key = owned_key(&router, 0);
+        let mut r0 = ReducerCore::new(0, Box::new(WordCount::new()), router.clone());
         let mut others: Vec<ReducerCore> = (1..4)
-            .map(|i| ReducerCore::new(i, Box::new(WordCount::new()), ring.clone()))
+            .map(|i| ReducerCore::new(i, Box::new(WordCount::new()), router.clone()))
             .collect();
 
         c.push_mapped(0, Record::new(key.clone(), 1));
@@ -389,16 +389,14 @@ mod tests {
         // move the key off node 0, then open the epoch like apply_report
         let mut moved = false;
         for _ in 0..7 {
-            ring.update(|rr| {
-                rr.double_others(0);
-            });
-            if ring.lookup(key.as_bytes()) != 0 {
+            router.update_ring(|rr| rr.double_others(0)).unwrap();
+            if router.route_key(key.as_bytes()) != 0 {
                 moved = true;
                 break;
             }
         }
         assert!(moved);
-        c.tracker.begin_epoch(ring.epoch());
+        c.tracker.begin_epoch(router.epoch());
 
         // every reducer runs substage 1; node 0 ships its count
         match c.reducer_step(&mut r0, 0, |q| q.try_pop()) {
@@ -415,7 +413,7 @@ mod tests {
         assert!(!c.synced(), "transfer still in flight");
 
         // new owner absorbs the state from its priority lane
-        let owner = ring.lookup(key.as_bytes());
+        let owner = router.route_key(key.as_bytes());
         let rc = others.iter_mut().find(|r| r.id == owner).unwrap();
         assert!(matches!(
             c.reducer_step(rc, owner, |q| q.try_pop()),
@@ -428,15 +426,13 @@ mod tests {
 
     #[test]
     fn synchronizing_defers_data() {
-        let ring = SharedRing::new(Ring::new(2, 1));
-        let c = core(ConsistencyMode::StateForward, &ring, vec![]);
-        let key = owned_key(&ring, 0);
-        let mut r0 = ReducerCore::new(0, Box::new(WordCount::new()), ring.clone());
+        let router = RouterHandle::token_ring(Ring::new(2, 1), RingOp::NoOp);
+        let c = core(ConsistencyMode::StateForward, &router, vec![]);
+        let key = owned_key(&router, 0);
+        let mut r0 = ReducerCore::new(0, Box::new(WordCount::new()), router.clone());
         c.push_mapped(0, Record::new(key, 1));
-        ring.update(|rr| {
-            rr.double_others(1);
-        });
-        c.tracker.begin_epoch(ring.epoch());
+        router.update_ring(|rr| rr.double_others(1)).unwrap();
+        c.tracker.begin_epoch(router.epoch());
         // extraction first (empty state), then the queued data defers
         // until the OTHER reducer also extracts
         assert!(matches!(
@@ -449,10 +445,10 @@ mod tests {
 
     #[test]
     fn report_gating_follows_stage() {
-        let ring = SharedRing::new(Ring::for_strategy(4, Strategy::Doubling, 8));
-        let c = core(ConsistencyMode::StateForward, &ring, vec![]);
+        let router = RouterHandle::new(Strategy::Doubling.build_router(4, 8, None));
+        let c = core(ConsistencyMode::StateForward, &router, vec![]);
         let mut balancer =
-            BalancerCore::new(ring.clone(), Strategy::Doubling, 0.2, 4, 2, 0).without_warmup();
+            BalancerCore::new(router.clone(), Strategy::Doubling, 0.2, 4, 2, 0).without_warmup();
         // skewed report fires and opens a synchronization window
         let e = c
             .apply_report(

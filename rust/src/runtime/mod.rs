@@ -24,4 +24,4 @@ pub mod programs;
 
 pub use artifacts::{default_artifacts_dir, Manifest};
 pub use client::RuntimeClient;
-pub use programs::{pack_key, ring_tensors, Runtime};
+pub use programs::{pack_key, ring_tensors, snapshot_tensors, Runtime};

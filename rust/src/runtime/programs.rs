@@ -5,7 +5,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context};
 
-use crate::hash::Ring;
+use crate::hash::{Ring, RouteSnapshot, Token};
 
 use super::artifacts::Manifest;
 use super::client::RuntimeClient;
@@ -27,11 +27,10 @@ pub fn pack_key(key: &[u8], w: usize) -> Option<(Vec<u32>, i32)> {
     Some((words, key.len() as i32))
 }
 
-/// Ring state as the padded tensors the `route` program takes: sorted
+/// Token table as the padded tensors the `route` program takes: sorted
 /// token hashes (padded with `u32::MAX`), owners (padded with 0) and the
 /// live token count.
-pub fn ring_tensors(ring: &Ring, t: usize) -> crate::Result<(Vec<u32>, Vec<i32>, i32)> {
-    let tokens = ring.sorted_tokens();
+fn token_tensors(tokens: &[Token], t: usize) -> crate::Result<(Vec<u32>, Vec<i32>, i32)> {
     if tokens.len() > t {
         bail!(
             "ring has {} tokens but the route program was compiled for T={t}",
@@ -45,6 +44,37 @@ pub fn ring_tensors(ring: &Ring, t: usize) -> crate::Result<(Vec<u32>, Vec<i32>,
         owners[i] = tok.node as i32;
     }
     Ok((hashes, owners, tokens.len() as i32))
+}
+
+/// Ring state as the padded `route`-program tensors.
+pub fn ring_tensors(ring: &Ring, t: usize) -> crate::Result<(Vec<u32>, Vec<i32>, i32)> {
+    token_tensors(ring.sorted_tokens(), t)
+}
+
+/// Host-side clockwise lookup over a snapshot's token table — the native
+/// fallback for keys the compiled program cannot take. Delegates to the
+/// same successor walk as `Ring::lookup_hash` (the table is sorted by
+/// `(hash, node, idx)`), so the two paths cannot drift.
+fn lookup_token_table(tokens: &[Token], h: u32) -> usize {
+    tokens[crate::hash::ring::clockwise_successor_by(tokens, h, |t| t.hash)].node as usize
+}
+
+/// Router-snapshot state as the padded `route`-program tensors. Only the
+/// token-ring family has a token table the compiled program can consume;
+/// probe routers (multi-probe, two-choices) fail here and must route
+/// host-side.
+pub fn snapshot_tensors(
+    snap: &RouteSnapshot,
+    t: usize,
+) -> crate::Result<(Vec<u32>, Vec<i32>, i32)> {
+    let tokens = snap.tokens.as_ref().with_context(|| {
+        format!(
+            "router '{}' has no token table; the XLA route program only serves \
+             token-ring routers",
+            snap.router
+        )
+    })?;
+    token_tensors(tokens, t)
 }
 
 /// Opaque handle to a device-resident reducer state (`u32[V]` counts
@@ -226,8 +256,35 @@ impl Runtime {
     /// Hash + ring lookup via the compiled route program. Returns
     /// `(hash, owner)` per key.
     pub fn route_batch(&self, keys: &[&[u8]], ring: &Ring) -> crate::Result<Vec<(u32, usize)>> {
-        let (b, w, t) = (self.manifest.b, self.manifest.w, self.manifest.t);
-        let (hashes, owners, len) = ring_tensors(ring, t)?;
+        let tensors = ring_tensors(ring, self.manifest.t)?;
+        self.route_batch_with(keys, tensors, &|h| ring.lookup_hash(h))
+    }
+
+    /// Hash + lookup via the compiled route program, driven by a router
+    /// [`RouteSnapshot`] instead of a raw ring — the trait-layer entry
+    /// point ([`crate::hash::RouterCache::snapshot`] feeds it). Fails for
+    /// probe routers, which have no token table the program can consume.
+    pub fn route_batch_snapshot(
+        &self,
+        keys: &[&[u8]],
+        snap: &RouteSnapshot,
+    ) -> crate::Result<Vec<(u32, usize)>> {
+        let tensors = snapshot_tensors(snap, self.manifest.t)?;
+        let tokens = snap.tokens.as_ref().expect("snapshot_tensors checked");
+        self.route_batch_with(keys, tensors, &|h| lookup_token_table(tokens, h))
+    }
+
+    /// Shared body of the two `route_batch` entry points: `tensors` are
+    /// the padded route-program inputs, `native_lookup` resolves keys too
+    /// long for the kernel (host-side fallback, bit-identical semantics).
+    fn route_batch_with(
+        &self,
+        keys: &[&[u8]],
+        tensors: (Vec<u32>, Vec<i32>, i32),
+        native_lookup: &dyn Fn(u32) -> usize,
+    ) -> crate::Result<Vec<(u32, usize)>> {
+        let (b, w) = (self.manifest.b, self.manifest.w);
+        let (hashes, owners, len) = tensors;
         let ring_h = xla::Literal::vec1(&hashes);
         let ring_o = xla::Literal::vec1(&owners);
         let ring_n = xla::Literal::scalar(len);
@@ -245,7 +302,7 @@ impl Runtime {
                     }
                     None => {
                         let h = crate::hash::murmur3_x86_32(key);
-                        native[i] = Some((h, ring.lookup_hash(h)));
+                        native[i] = Some((h, native_lookup(h)));
                     }
                 }
             }
@@ -359,6 +416,14 @@ impl SharedRuntime {
         self.inner.lock().unwrap().route_batch(keys, ring)
     }
 
+    pub fn route_batch_snapshot(
+        &self,
+        keys: &[&[u8]],
+        snap: &RouteSnapshot,
+    ) -> crate::Result<Vec<(u32, usize)>> {
+        self.inner.lock().unwrap().route_batch_snapshot(keys, snap)
+    }
+
     pub fn reduce_counts(&self, counts: &[u32], ids: &[i32]) -> crate::Result<Vec<u32>> {
         self.inner.lock().unwrap().reduce_counts(counts, ids)
     }
@@ -434,5 +499,34 @@ mod tests {
     fn ring_too_big_errors() {
         let ring = Ring::new(4, 8);
         assert!(ring_tensors(&ring, 8).is_err());
+    }
+
+    #[test]
+    fn token_table_lookup_matches_ring() {
+        let mut ring = Ring::new(4, 8);
+        ring.halve(2);
+        let tokens = ring.sorted_tokens();
+        for i in 0..4096u32 {
+            let h = i.wrapping_mul(0x9E37_79B9);
+            assert_eq!(lookup_token_table(tokens, h), ring.lookup_hash(h), "h={h:#x}");
+        }
+        for t in tokens.to_vec() {
+            for h in [t.hash.wrapping_sub(1), t.hash, t.hash.wrapping_add(1)] {
+                assert_eq!(lookup_token_table(ring.sorted_tokens(), h), ring.lookup_hash(h));
+            }
+        }
+    }
+
+    #[test]
+    fn snapshot_tensors_serve_token_ring_only() {
+        use crate::hash::{RingOp, RouterHandle, StrategySpec};
+        let handle = RouterHandle::token_ring(Ring::new(3, 2), RingOp::NoOp);
+        let (hashes, owners, len) = snapshot_tensors(&handle.snapshot(), 16).unwrap();
+        let (rh, ro, rl) = handle.with_ring(|r| ring_tensors(r, 16)).unwrap().unwrap();
+        assert_eq!((hashes, owners, len), (rh, ro, rl), "same packing as ring_tensors");
+
+        let probing =
+            RouterHandle::new(StrategySpec::MultiProbe { probes: 3 }.build_router(3, 8, None));
+        assert!(snapshot_tensors(&probing.snapshot(), 16).is_err());
     }
 }

@@ -105,8 +105,8 @@ impl SimDriver {
     }
 
     /// Run the pipeline: `items` through `n_mappers` mappers and
-    /// `balancer.ring().nodes()` reducers. The balancer carries the
-    /// strategy/policy/ring; executors come from the factories.
+    /// `balancer.router().nodes()` reducers. The balancer carries the
+    /// strategy/policy/router; executors come from the factories.
     pub fn run(
         &self,
         map_exec: Arc<dyn MapExecutor>,
@@ -116,11 +116,11 @@ impl SimDriver {
         items: impl Into<Arc<[String]>>,
     ) -> RunReport {
         let p = &self.params;
-        let ring = balancer.ring().clone();
-        let n_reducers = ring.nodes();
+        let router = balancer.router().clone();
+        let n_reducers = router.nodes();
 
         let core = ExecCore::build(
-            &ring,
+            &router,
             n_mappers,
             items,
             ExecParams {
@@ -137,12 +137,12 @@ impl SimDriver {
 
         // actors
         let mut mappers: Vec<MapperCore> = (0..n_mappers)
-            .map(|i| MapperCore::new(i, map_exec.clone(), ring.clone()))
+            .map(|i| MapperCore::new(i, map_exec.clone(), router.clone()))
             .collect();
         let mut mapper_task: Vec<Option<(Task, usize)>> = vec![None; n_mappers];
         let mut mapper_done: Vec<bool> = vec![false; n_mappers];
         let mut reducers: Vec<ReducerCore> = (0..n_reducers)
-            .map(|i| ReducerCore::new(i, reduce_factory(i), ring.clone()))
+            .map(|i| ReducerCore::new(i, reduce_factory(i), router.clone()))
             .collect();
         let mut reducers_running = n_reducers;
 
@@ -226,7 +226,7 @@ impl SimDriver {
                             // periodic load report (§3), applied inline —
                             // the sim IS the balancer's owner
                             if reducers[i].due_report(p.report_interval) {
-                                core.apply_report(
+                                let _ = core.apply_report(
                                     &mut balancer,
                                     LoadReport {
                                         reducer: i,
@@ -271,15 +271,15 @@ impl SimDriver {
 mod tests {
     use super::*;
     use crate::exec::builtin::{IdentityMap, WordCount};
-    use crate::hash::{Ring, SharedRing, Strategy};
+    use crate::hash::{RouterHandle, Strategy};
 
     fn wordcount_factory() -> ReduceFactory {
         Arc::new(|_| Box::new(WordCount::new()) as Box<dyn crate::exec::ReduceExecutor>)
     }
 
     fn balancer(strategy: Strategy, max_rounds: u32) -> BalancerCore {
-        let ring = SharedRing::new(Ring::for_strategy(4, strategy, 8));
-        BalancerCore::new(ring, strategy, 0.2, 8, max_rounds, 50)
+        let router = RouterHandle::new(strategy.build_router(4, 8, None));
+        BalancerCore::new(router, strategy, 0.2, 8, max_rounds, 50)
     }
 
     fn run(items: Vec<String>, strategy: Strategy, seed: u64) -> RunReport {
@@ -372,6 +372,23 @@ mod tests {
         let r = run(vec![], Strategy::Doubling, 5);
         assert_eq!(r.total_processed(), 0);
         assert!(r.result.is_empty());
+    }
+
+    #[test]
+    fn probe_routers_are_correct_and_deterministic() {
+        let w = crate::workload::paperwl::wl4();
+        for strategy in [Strategy::MultiProbe { probes: 5 }, Strategy::TwoChoices] {
+            let a = run(w.items.clone(), strategy, 7);
+            let b = run(w.items.clone(), strategy, 7);
+            assert!(a.check_conservation().is_ok(), "{strategy}");
+            assert_eq!(a.result, wordcount_oracle(&w.items), "{strategy}");
+            assert_eq!(a.processed, b.processed, "{strategy}: sim not deterministic");
+            assert_eq!(a.virtual_end, b.virtual_end, "{strategy}");
+            // any event a probe router fires moves zero tokens
+            for e in &a.lb_events {
+                assert!(e.delta.zero_token_churn(), "{strategy}");
+            }
+        }
     }
 
     #[test]

@@ -45,7 +45,9 @@ pub fn assert_driver_parity(
         let mut cfg = PipelineConfig::default();
         cfg.driver = driver;
         cfg.strategy = strategy;
-        cfg.initial_tokens = Some(strategy.initial_tokens(cfg.halving_init_tokens));
+        if strategy.is_token_ring() {
+            cfg.initial_tokens = Some(strategy.initial_tokens(cfg.halving_init_tokens));
+        }
         cfg.mode = mode;
         cfg.max_rounds = 2;
         // keep the threads runs fast; LB firing is workload-dependent and

@@ -5,6 +5,10 @@
 //! state forwarding on real threads, which the pre-unification code base
 //! rejected outright.
 
+// experiment configs override one default knob at a time (see lib.rs)
+#![allow(clippy::field_reassign_with_default)]
+
+
 use dpa::balancer::state_forward::ConsistencyMode;
 use dpa::hash::Strategy;
 use dpa::pipeline::{DriverKind, Pipeline, PipelineConfig};
@@ -25,6 +29,29 @@ fn paper_workloads_parity_state_forward() {
     for w in paperwl::all() {
         for strategy in Strategy::methods() {
             assert_driver_parity(&w.name, &w.items, strategy, ConsistencyMode::StateForward);
+        }
+    }
+}
+
+#[test]
+fn multiprobe_parity_both_modes() {
+    // zero-token-churn router: sim and threads must still agree with the
+    // serial oracle under plain forwarding AND §7 state forwarding
+    let strategy = Strategy::MultiProbe { probes: 5 };
+    for w in paperwl::all() {
+        for mode in [ConsistencyMode::MergeAtEnd, ConsistencyMode::StateForward] {
+            assert_driver_parity(&w.name, &w.items, strategy, mode);
+        }
+    }
+}
+
+#[test]
+fn twochoices_parity_both_modes() {
+    // sticky-assignment router: the key-splitting guard must hold on real
+    // threads too — StateForward's disjoint-merge assertion checks it
+    for w in paperwl::all() {
+        for mode in [ConsistencyMode::MergeAtEnd, ConsistencyMode::StateForward] {
+            assert_driver_parity(&w.name, &w.items, Strategy::TwoChoices, mode);
         }
     }
 }

@@ -2,6 +2,10 @@
 //! it fires, what it changes, how rounds/τ interact, and the §7
 //! extensions (state forwarding, elastic scale-out).
 
+// experiment configs override one default knob at a time (see lib.rs)
+#![allow(clippy::field_reassign_with_default)]
+
+
 use dpa::balancer::state_forward::ConsistencyMode;
 use dpa::hash::{Ring, SharedRing, Strategy};
 use dpa::metrics::skew;

@@ -3,6 +3,9 @@
 //! every mapped record must be reduced exactly once, and the system must
 //! terminate.
 
+// experiment configs override one default knob at a time (see lib.rs)
+#![allow(clippy::field_reassign_with_default)]
+
 use std::collections::HashMap;
 
 use dpa::balancer::state_forward::ConsistencyMode;

@@ -3,8 +3,12 @@
 //! skew-metric bounds, policy trigger semantics, queue conservation, and
 //! whole-pipeline correctness on random workloads.
 
+// experiment configs override one default knob at a time (see lib.rs)
+#![allow(clippy::field_reassign_with_default)]
+
+
 use dpa::balancer::policy::{LbPolicy, ThresholdPolicy};
-use dpa::hash::{murmur3_x86_32, Ring, Strategy};
+use dpa::hash::{murmur3_x86_32, Ring, RingOp, RouterHandle, Strategy, StrategySpec};
 use dpa::metrics::skew;
 use dpa::pipeline::{Pipeline, PipelineConfig};
 use dpa::prop_assert;
@@ -204,6 +208,102 @@ fn prop_ceil_div() {
         let c = ceil_div(a, b);
         prop_assert!(c * b >= a, "{c}*{b} < {a}");
         prop_assert!(c == 0 || (c - 1) * b < a, "not minimal");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_multiprobe_redistribute_is_empty_delta_zero_churn() {
+    // ISSUE 2 satellite: multi-probe `redistribute` must produce an empty
+    // RouteDelta (no token churn, no explicit key moves) — ownership only
+    // shifts through the weight-aware probe choice, and stays a pure
+    // function of the epoch (live-load changes between redistributions
+    // must not move keys).
+    forall("multi-probe redistribute = empty RouteDelta", 30, |g| {
+        let nodes = g.usize_in(2, 10);
+        let probes = 1 + g.usize_in(0, 7) as u32;
+        let handle =
+            RouterHandle::new(StrategySpec::MultiProbe { probes }.build_router(nodes, 8, None));
+        for n in 0..nodes {
+            handle.loads().set(n, g.usize_in(0, 200) as u64);
+        }
+        let keys: Vec<String> = (0..60).map(|_| g.string(16)).collect();
+        let target = g.usize_in(0, nodes - 1);
+        let delta = handle.redistribute(target);
+        prop_assert!(delta.zero_token_churn(), "token churn: {delta:?}");
+        prop_assert!(delta.keys_reassigned == 0, "explicit key moves: {delta:?}");
+        prop_assert!(
+            handle.snapshot().tokens.is_none(),
+            "multi-probe grew a token table"
+        );
+        let after: Vec<usize> = keys.iter().map(|k| handle.route_key(k.as_bytes())).collect();
+        // scramble the live loads: only a redistribute may shift ownership
+        for n in 0..nodes {
+            handle.loads().set(n, g.usize_in(0, 200) as u64);
+        }
+        for (k, &owner) in keys.iter().zip(&after) {
+            prop_assert!(owner < nodes, "owner {owner} of '{k}' out of range");
+            prop_assert!(
+                handle.route_key(k.as_bytes()) == owner,
+                "'{k}' moved without a redistribute (load-shift must be probe-time only)"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_token_ring_redistribute_moves_only_affected_keys() {
+    // ISSUE 2 satellite: behind the Router trait, halving still moves only
+    // keys owned by the target's removed tokens, and doubling only moves
+    // keys onto nodes that gained tokens.
+    forall("token-ring redistribute moves only affected keys", 30, |g| {
+        let nodes = g.usize_in(2, 8);
+        let tokens = 1u32 << g.usize_in(0, 4);
+        let halving = g.bool();
+        let op = if halving { RingOp::Halve } else { RingOp::DoubleOthers };
+        let handle = RouterHandle::token_ring(Ring::new(nodes, tokens), op);
+        let keys: Vec<String> = (0..80).map(|_| g.string(16)).collect();
+        let before: Vec<usize> = keys.iter().map(|k| handle.route_key(k.as_bytes())).collect();
+        let tokens_before: Vec<u32> = (0..nodes)
+            .map(|n| handle.with_ring(|r| r.tokens_of(n)).unwrap())
+            .collect();
+        let target = g.usize_in(0, nodes - 1);
+        let delta = handle.redistribute(target);
+        if !delta.changed {
+            return Ok(()); // halving exhausted / doubling saturated
+        }
+        let tokens_after: Vec<u32> = (0..nodes)
+            .map(|n| handle.with_ring(|r| r.tokens_of(n)).unwrap())
+            .collect();
+        if halving {
+            prop_assert!(
+                delta.tokens_removed > 0 && delta.tokens_added == 0,
+                "halving delta: {delta:?}"
+            );
+            for (k, &b) in keys.iter().zip(&before) {
+                if b != target {
+                    prop_assert!(
+                        handle.route_key(k.as_bytes()) == b,
+                        "'{k}' moved although node {b} lost no tokens"
+                    );
+                }
+            }
+        } else {
+            prop_assert!(
+                delta.tokens_added > 0 && delta.tokens_removed == 0,
+                "doubling delta: {delta:?}"
+            );
+            for (k, &b) in keys.iter().zip(&before) {
+                let now = handle.route_key(k.as_bytes());
+                if now != b {
+                    prop_assert!(
+                        tokens_after[now] > tokens_before[now],
+                        "'{k}' moved to node {now} which gained no tokens"
+                    );
+                }
+            }
+        }
         Ok(())
     });
 }

@@ -5,6 +5,10 @@
 //! Requires `make artifacts`. The whole file is one `#[test]` family over
 //! a shared `Runtime` (compilation is the expensive part).
 
+// experiment configs override one default knob at a time (see lib.rs)
+#![allow(clippy::field_reassign_with_default)]
+
+
 use std::sync::Arc;
 
 use dpa::exec::builtin::{IdentityMap, WordCount};
@@ -80,6 +84,12 @@ fn route_parity_rust_vs_xla_across_repartitions() {
                 ring.total_tokens()
             );
         }
+        // the router-snapshot entry point must agree bit-for-bit with the
+        // raw-ring path (same token table, same padding, same fallback)
+        let handle =
+            dpa::hash::RouterHandle::token_ring(ring.clone(), dpa::hash::RingOp::NoOp);
+        let snap_routed = rt.route_batch_snapshot(&refs, &handle.snapshot()).unwrap();
+        assert_eq!(routed, snap_routed, "snapshot path diverged from ring path");
     }
 }
 
