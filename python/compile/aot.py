@@ -4,9 +4,9 @@ Run once at build time (``make artifacts``):
 
     cd python && python -m compile.aot --out ../artifacts
 
-Emits ``hash_only.hlo.txt``, ``route.hlo.txt``, ``reduce_count.hlo.txt``,
-``merge_state.hlo.txt`` and ``manifest.json`` (the static shapes rust pads
-batches to).
+Emits ``hash_only.hlo.txt``, ``route.hlo.txt``, ``route_probe.hlo.txt``,
+``route_assign.hlo.txt``, ``reduce_count.hlo.txt``, ``merge_state.hlo.txt``
+and ``manifest.json`` (the static shapes rust pads batches to).
 
 HLO **text**, not ``.serialize()``: jax >= 0.5 emits HloModuleProto with
 64-bit instruction ids which the image's xla_extension 0.5.1 rejects
@@ -29,6 +29,9 @@ B = 256   # route/hash/reduce batch size
 W = 8     # u32 words per key (max 32-byte keys on the XLA path)
 T = 512   # ring capacity (max tokens)
 V = 4096  # vocab slots per reducer
+P = 64    # node/position capacity (route_probe tables, route_assign loads)
+K = 8     # probe capacity (route_probe unrolls this many seeded probes)
+A = 4096  # sticky-assignment table capacity (route_assign)
 
 
 def to_hlo_text(lowered, return_tuple=True) -> str:
@@ -65,6 +68,30 @@ def programs():
                 spec((), i32),
             ),
         ),
+        "route_probe": (
+            lambda *a: model.route_probe(*a, max_probes=K),
+            (
+                spec((B, W), u32),
+                spec((B,), i32),
+                spec((P,), u32),
+                spec((P,), i32),
+                spec((), i32),
+                spec((P,), i32),
+                spec((), i32),
+            ),
+        ),
+        "route_assign": (
+            model.route_assign,
+            (
+                spec((B, W), u32),
+                spec((B,), i32),
+                spec((A,), u32),
+                spec((A,), i32),
+                spec((), i32),
+                spec((P,), u32),
+                spec((), i32),
+            ),
+        ),
         "reduce_count": (model.reduce_count, (spec((V,), u32), spec((B,), i32))),
         "merge_state": (model.merge_state, (spec((V,), u32), spec((V,), u32))),
     }
@@ -98,7 +125,7 @@ def main() -> None:
         f.write(text)
     print(f"wrote {path} ({len(text)} chars)")
 
-    manifest = {"B": B, "W": W, "T": T, "V": V}
+    manifest = {"B": B, "W": W, "T": T, "V": V, "P": P, "K": K, "A": A}
     mpath = os.path.join(args.out, "manifest.json")
     with open(mpath, "w") as f:
         json.dump(manifest, f)

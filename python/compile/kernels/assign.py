@@ -1,0 +1,109 @@
+"""L1 Pallas kernel: sticky-assignment table lookup (two-choices router).
+
+The rust `TwoChoicesRouter` (`rust/src/hash/router.rs`) pins each key
+hash to one of its two candidate nodes in a shared sticky table — the
+key-splitting guard that keeps per-key state on exactly one reducer.
+This kernel is the batched, compiled lookup over a frozen snapshot of
+that table: known keys return their recorded owner; misses resolve to
+the two-choices first-sight rule — ``c2 if loads[c2] < loads[c1] else
+c1`` — against the loads frozen into the snapshot, so the compiled
+decision is a pure function of the snapshot (bit-identical to what the
+scalar router records when routing the same key under the same loads;
+`rust/tests/xla_parity.rs` pins the two against each other).
+
+Contract (shared with `rust/src/runtime/programs.rs::snapshot_tensors`):
+
+- ``keys``/``owners``: the assignment table sorted ascending by key
+  hash, padded to ``A`` with ``0xFFFFFFFF``/``0``; ``live`` is the entry
+  count. Lookup is a compare-and-count searchsorted (`#{keys < h}` over
+  the live prefix) plus an exact-match check — no scatter, the same
+  trick the histogram kernel uses.
+- ``loads``: per-node queue lengths frozen at snapshot time, padded to
+  ``P`` (u32-saturated on the rust side).
+- ``nodes``: live node count; candidate ``i`` of a key hash is
+  ``murmur3(hash LE bytes, seed CAND_SEEDS[i]) % nodes``.
+
+TPU shape notes: a ``(TB, A)`` compare + row-sum (VPU lanes, the
+histogram formulation) and three ``(TB,)`` gathers. ``interpret=True``:
+the CPU PJRT plugin cannot execute Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .murmur3 import murmur3_u32x1_seeded
+
+# candidate hash seeds — must equal rust's TWO_CHOICES_SEEDS
+CAND_SEEDS = (0x517CC1B7, 0x9E3779B9)
+
+
+def two_choices_candidates(h, nodes):
+    """The two candidate nodes of a key hash (vectorized)."""
+    n = jnp.asarray(nodes, jnp.uint32)
+    c1 = murmur3_u32x1_seeded(h, CAND_SEEDS[0]) % n
+    c2 = murmur3_u32x1_seeded(h, CAND_SEEDS[1]) % n
+    return c1.astype(jnp.int32), c2.astype(jnp.int32)
+
+
+def _kernel(hash_ref, key_ref, owner_ref, live_ref, load_ref, nodes_ref,
+            out_ref):
+    h = hash_ref[...]                       # (TB,) uint32 key hashes
+    keys = key_ref[...]                     # (A,)  uint32 sorted table keys
+    owners = owner_ref[...]                 # (A,)  int32 recorded owners
+    loads = load_ref[...]                   # (P,)  uint32 frozen loads
+    live = live_ref[0]                      # int32 table entries
+    nodes = nodes_ref[0]                    # int32 node count
+    a_cap = keys.shape[0]
+    in_table = jax.lax.broadcasted_iota(jnp.int32, (1, a_cap), 1) < live
+
+    # searchsorted(side='left') as compare-and-count over the live prefix
+    idx = jnp.sum(
+        (in_table & (keys[None, :] < h[:, None])).astype(jnp.int32), axis=1
+    )
+    idx_c = jnp.minimum(idx, a_cap - 1)
+    hit = (idx < live) & (keys[idx_c] == h)
+
+    c1, c2 = two_choices_candidates(h, nodes)
+    fresh = jnp.where(loads[c2] < loads[c1], c2, c1)
+    out_ref[...] = jnp.where(hit, owners[idx_c], fresh)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def assign_kernel(hashes, keys, owners, live, loads, nodes, *, block_b=64):
+    """Batched sticky-table owner lookup via ``pl.pallas_call``.
+
+    ``hashes``: (B,) uint32; ``keys``/``owners``: (A,) padded sorted
+    table; ``loads``: (P,) frozen per-node loads; ``live``, ``nodes``:
+    scalar i32. B must be a multiple of ``block_b``.
+    """
+    (b,) = hashes.shape
+    assert b % block_b == 0, f"batch {b} not a multiple of block {block_b}"
+    a_cap = keys.shape[0]
+    p_cap = loads.shape[0]
+    grid = (b // block_b,)
+    full = lambda i: (0,)  # noqa: E731 — whole-table blocks, every step
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((a_cap,), full),
+            pl.BlockSpec((a_cap,), full),
+            pl.BlockSpec((1,), full),
+            pl.BlockSpec((p_cap,), full),
+            pl.BlockSpec((1,), full),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(
+        hashes,
+        keys,
+        jnp.asarray(owners, jnp.int32),
+        jnp.reshape(jnp.asarray(live, jnp.int32), (1,)),
+        jnp.asarray(loads, jnp.uint32),
+        jnp.reshape(jnp.asarray(nodes, jnp.int32), (1,)),
+    )

@@ -1,0 +1,123 @@
+"""L1 Pallas kernel: k-probe consistent-hash routing (multi-probe router).
+
+The rust `MultiProbeRouter` (`rust/src/hash/router.rs`) places one
+position per node on the 32-bit ring and probes `k` seeded points per
+key; the key goes to the probe successor minimizing the lexicographic
+candidate `(overloaded[node], clockwise_distance, node)` — classic MPCH
+distance choice among non-overloaded owners, falling back to pure
+distance when every probe lands on a shed node. This kernel is the
+batched, compiled form of that exact decision and must agree bit-for-bit
+with the scalar implementation (`rust/tests/xla_parity.rs` pins the two
+against each other through the AOT artifact).
+
+Contract (shared with `rust/src/runtime/programs.rs::snapshot_tensors`):
+
+- ``pos_hashes``/``pos_nodes``: node ring positions sorted by
+  ``(hash, node)``, padded to ``P`` with ``0xFFFFFFFF``/``0``; ``pos_len``
+  is the live count. The clockwise successor of a probe point ``p`` is
+  the live position minimizing ``pos_hash - p`` in wrapping u32
+  arithmetic — for equal hashes the first (lowest-index) wins, matching
+  ``clockwise_successor_by``'s first-of-equals semantics because argmin
+  returns the first occurrence and the table is pre-sorted.
+- ``overloaded``: per-**node** 0/1 shed flags (indexed by node id, padded
+  to ``P``), frozen at the last redistribute.
+- ``probes``: live probe count (≤ the static ``max_probes`` the program
+  was lowered for); probe ``j`` hashes the key hash's 4 LE bytes with
+  murmur3 seed ``j``.
+
+TPU shape notes (§Hardware-Adaptation in DESIGN.md): per probe this is a
+``(TB, P)`` wrapped-subtract + argmin — VPU lane work with a
+VMEM-resident working set (TB=64, P=64 → 16 KiB) — plus two tiny
+``(TB,)`` gathers (positions table, flag table). ``interpret=True``: the
+CPU PJRT plugin cannot execute Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .murmur3 import murmur3_u32x1_seeded
+
+UMAX = 0xFFFFFFFF
+
+
+def _kernel(hash_ref, pos_hash_ref, pos_node_ref, pos_len_ref, over_ref,
+            probes_ref, out_ref, *, max_probes: int):
+    h = hash_ref[...]                       # (TB,) uint32 key hashes
+    pos_h = pos_hash_ref[...]               # (P,)  uint32 sorted positions
+    pos_n = pos_node_ref[...]               # (P,)  int32 owners
+    over = over_ref[...]                    # (P,)  int32 per-node shed flags
+    n_pos = pos_len_ref[0]                  # int32 live positions
+    k = probes_ref[0]                       # int32 live probes
+    p_cap = pos_h.shape[0]
+    live = jax.lax.broadcasted_iota(jnp.int32, (1, p_cap), 1) < n_pos
+
+    # running lexicographic best (overloaded, distance, node); the
+    # sentinel flag 2 loses to any real candidate (flags are 0/1), so
+    # probe 0 always seeds the best — mirroring rust's `Option` fold
+    best_ov = jnp.full(h.shape, 2, jnp.int32)
+    best_dist = jnp.full(h.shape, UMAX, jnp.uint32)
+    best_node = jnp.zeros(h.shape, jnp.int32)
+
+    for j in range(max_probes):
+        p = murmur3_u32x1_seeded(h, j)      # (TB,) probe points
+        # clockwise successor: min wrapping distance over live positions;
+        # padding is masked to the max distance and sits at the highest
+        # indices, so a live tie always wins argmin's first-occurrence
+        dist = jnp.where(live, pos_h[None, :] - p[:, None], jnp.uint32(UMAX))
+        idx = jnp.argmin(dist, axis=1).astype(jnp.int32)
+        d = jnp.min(dist, axis=1)
+        node = pos_n[idx]
+        ov = over[node]
+        better = (ov < best_ov) | (
+            (ov == best_ov)
+            & ((d < best_dist) | ((d == best_dist) & (node < best_node)))
+        )
+        upd = better & (j < k)
+        best_ov = jnp.where(upd, ov, best_ov)
+        best_dist = jnp.where(upd, d, best_dist)
+        best_node = jnp.where(upd, node, best_node)
+
+    out_ref[...] = best_node
+
+
+@functools.partial(jax.jit, static_argnames=("max_probes", "block_b"))
+def kprobe_kernel(hashes, pos_hashes, pos_nodes, pos_len, overloaded, probes,
+                  *, max_probes=8, block_b=64):
+    """Batched k-probe owner lookup via ``pl.pallas_call``.
+
+    ``hashes``: (B,) uint32 key hashes; ``pos_hashes``/``pos_nodes``/
+    ``overloaded``: (P,) padded position/flag tables; ``pos_len``,
+    ``probes``: scalar i32 live counts. B must be a multiple of
+    ``block_b``; ``probes`` must be ≤ ``max_probes`` (rust checks against
+    the manifest's K before calling).
+    """
+    (b,) = hashes.shape
+    assert b % block_b == 0, f"batch {b} not a multiple of block {block_b}"
+    p_cap = pos_hashes.shape[0]
+    grid = (b // block_b,)
+    full = lambda i: (0,)  # noqa: E731 — whole-table blocks, every step
+    return pl.pallas_call(
+        functools.partial(_kernel, max_probes=max_probes),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((p_cap,), full),
+            pl.BlockSpec((p_cap,), full),
+            pl.BlockSpec((1,), full),
+            pl.BlockSpec((p_cap,), full),
+            pl.BlockSpec((1,), full),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(
+        hashes,
+        pos_hashes,
+        jnp.asarray(pos_nodes, jnp.int32),
+        jnp.reshape(jnp.asarray(pos_len, jnp.int32), (1,)),
+        jnp.asarray(overloaded, jnp.int32),
+        jnp.reshape(jnp.asarray(probes, jnp.int32), (1,)),
+    )

@@ -112,6 +112,20 @@ def murmur3_kernel(words, lens, *, block_b=64):
     )(words, lens)
 
 
+def murmur3_u32x1_seeded(x, seed):
+    """MurmurHash3_x86_32 of a single u32 (4 LE bytes) under ``seed``.
+
+    The closed form of the full hash for exactly one 4-byte block and no
+    tail: the probe-point hash of the k-probe router
+    (``rust/src/hash/murmur3.rs::murmur3_x86_32_seed(&hash.to_le_bytes(),
+    seed)``) and the candidate hashes of the two-choices router. ``x`` is
+    a uint32 array; ``seed`` is a uint32 array or python int.
+    """
+    h = jnp.asarray(seed, jnp.uint32) ^ _mix_k1(jnp.asarray(x, jnp.uint32))
+    h = _rotl32(h, 13) * jnp.uint32(M5) + jnp.uint32(N1)
+    return _fmix32(h ^ jnp.uint32(4))
+
+
 def pack_key(data: bytes, w: int):
     """Host-side packing (python mirror of rust ``pack_key``), for tests."""
     assert len(data) <= 4 * w, f"key of {len(data)} bytes exceeds {4*w}"

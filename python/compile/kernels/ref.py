@@ -66,6 +66,56 @@ def histogram_ref(counts, ids):
     return counts + add
 
 
+def kprobe_ref(hashes, pos_hashes, pos_nodes, pos_len, overloaded, probes):
+    """Plain-python k-probe routing — a transcription of rust's
+    ``MultiProbeRouter::route`` (lexicographic ``(overloaded, clockwise
+    distance, node)`` over ``probes`` seeded probe points)."""
+    import numpy as np
+
+    pos_h = [int(x) for x in np.asarray(pos_hashes)[: int(pos_len)]]
+    pos_n = [int(x) for x in np.asarray(pos_nodes)[: int(pos_len)]]
+    over = [int(x) for x in np.asarray(overloaded)]
+    out = []
+    for h in np.asarray(hashes):
+        h = int(h)
+        best = None
+        for j in range(int(probes)):
+            p = murmur3_py(h.to_bytes(4, "little"), seed=j)
+            # clockwise successor: first position >= p, wrapping to 0
+            ge = [i for i, ph in enumerate(pos_h) if ph >= p]
+            i = ge[0] if ge else 0
+            cand = (over[pos_n[i]], (pos_h[i] - p) & MASK, pos_n[i])
+            if best is None or cand < best:
+                best = cand
+        out.append(best[2])
+    return np.array(out, dtype=np.int32)
+
+
+def assign_ref(hashes, keys, owners, live, loads, nodes):
+    """Plain-python sticky-table lookup with the two-choices first-sight
+    fallback on frozen loads — mirrors rust's snapshot routing for
+    ``TwoChoicesRouter``."""
+    import numpy as np
+
+    from .assign import CAND_SEEDS
+
+    table = {
+        int(k): int(o)
+        for k, o in zip(np.asarray(keys)[: int(live)], np.asarray(owners))
+    }
+    loads = [int(x) for x in np.asarray(loads)]
+    out = []
+    for h in np.asarray(hashes):
+        h = int(h)
+        if h in table:
+            out.append(table[h])
+            continue
+        c1 = murmur3_py(h.to_bytes(4, "little"), seed=CAND_SEEDS[0]) % int(nodes)
+        c2 = murmur3_py(h.to_bytes(4, "little"), seed=CAND_SEEDS[1]) % int(nodes)
+        out.append(c2 if loads[c2] < loads[c1] else c1)
+    return np.array(out, dtype=np.int32)
+
+
 def ring_lookup_ref(hashes, ring_hashes, ring_owners, ring_len):
     """Linear-scan consistent-ring lookup (oracle for searchsorted)."""
     import numpy as np

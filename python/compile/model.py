@@ -1,28 +1,39 @@
 """L2: the JAX data-plane programs lowered to the rust runtime.
 
-Four programs (shapes fixed at AOT time, see ``aot.py``):
+Six programs (shapes fixed at AOT time, see ``aot.py``):
 
 - ``hash_only(words, lens)``                      -> (hashes,)
 - ``route(words, lens, ring_hashes, ring_owners, ring_len)``
                                                   -> (hashes, owners)
+- ``route_probe(words, lens, pos_hashes, pos_nodes, pos_len, overloaded,
+  probes)``                                       -> (hashes, owners)
+- ``route_assign(words, lens, keys, owners, live, loads, nodes)``
+                                                  -> (hashes, owners)
 - ``reduce_count(counts, ids)``                   -> (counts',)
 - ``merge_state(a, b)``                           -> (a + b,)
 
-``route`` composes the L1 murmur3 Pallas kernel with a consistent-ring
-lookup. The ring is a *runtime input* (sorted token hashes padded with
-``0xFFFFFFFF``, owners, live length) so one compiled executable serves
-every repartition the load balancer makes — the rust side just feeds the
-current ring tensors.
+The three ``route*`` programs compose the L1 murmur3 Pallas kernel with
+one lookup per router family (`rust/src/hash/router.rs`): ``route``
+serves the token-ring family, ``route_probe`` the multi-probe family
+(`kernels/kprobe.py`), ``route_assign`` the two-choices sticky table
+(`kernels/assign.py`). In each case the routing state is a *runtime
+input* — padded tables plus live lengths — so one compiled executable
+serves every epoch the load balancer publishes; the rust side
+(`runtime::programs::snapshot_tensors`) just feeds the current
+snapshot's tensors.
 
 Tie/wraparound contract (must match ``rust/src/hash/ring.rs``): tokens are
 pre-sorted by ``(hash, node, idx)`` on the rust side; lookup returns the
 owner at the first index with ``token_hash >= key_hash`` (``searchsorted
-side='left'``), wrapping to index 0 past the live end.
+side='left'``), wrapping to index 0 past the live end. The probe kernel
+obeys the same successor semantics through its wrapped-distance argmin.
 """
 
 import jax.numpy as jnp
 
+from .kernels.assign import assign_kernel
 from .kernels.histogram import histogram_kernel
+from .kernels.kprobe import kprobe_kernel
 from .kernels.murmur3 import murmur3_kernel
 
 
@@ -48,6 +59,24 @@ def route(words, lens, ring_hashes, ring_owners, ring_len):
     hashes = murmur3_kernel(words, lens)
     owners = ring_lookup(hashes, ring_hashes, ring_owners, ring_len)
     return hashes, owners
+
+
+def route_probe(words, lens, pos_hashes, pos_nodes, pos_len, overloaded,
+                probes, *, max_probes=8):
+    """Hash + k-probe lookup: the multi-probe router's decision, batched."""
+    hashes = murmur3_kernel(words, lens)
+    owners = kprobe_kernel(
+        hashes, pos_hashes, pos_nodes, pos_len, overloaded, probes,
+        max_probes=max_probes,
+    )
+    return hashes, owners
+
+
+def route_assign(words, lens, keys, owners, live, loads, nodes):
+    """Hash + sticky-table lookup: the two-choices decision, batched."""
+    hashes = murmur3_kernel(words, lens)
+    out = assign_kernel(hashes, keys, owners, live, loads, nodes)
+    return hashes, out
 
 
 def reduce_count(counts, ids):

@@ -1,0 +1,104 @@
+"""Assignment-table kernel vs the plain-python transcription of the
+two-choices snapshot routing: sticky hits, frozen-loads fallback on
+misses, and the edge cases (empty table, boundary keys, load ties)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.assign import CAND_SEEDS, assign_kernel
+from compile.kernels.ref import assign_ref, murmur3_py
+
+A_CAP = 32
+P_CAP = 8
+BLOCK = 64
+
+
+def run(hashes, table, loads, nodes):
+    """``table``: {key_hash: owner}. Pads to kernel shapes, runs one batch."""
+    items = sorted(table.items())
+    keys = np.full(A_CAP, 0xFFFFFFFF, np.uint32)
+    owners = np.zeros(A_CAP, np.int32)
+    for i, (k, o) in enumerate(items):
+        keys[i], owners[i] = k, o
+    lv = np.zeros(P_CAP, np.uint32)
+    lv[: len(loads)] = np.asarray(loads, np.uint32)
+    b = max(BLOCK, -(-len(hashes) // BLOCK) * BLOCK)
+    hs = np.zeros(b, np.uint32)
+    hs[: len(hashes)] = np.asarray(hashes, np.uint32)
+    got = assign_kernel(
+        jnp.asarray(hs), jnp.asarray(keys), jnp.asarray(owners),
+        jnp.int32(len(items)), jnp.asarray(lv), jnp.int32(nodes),
+    )
+    ref = assign_ref(hs, keys, owners, len(items), lv, nodes)
+    return np.array(got)[: len(hashes)], ref[: len(hashes)]
+
+
+def candidates(h, nodes):
+    c1 = murmur3_py(int(h).to_bytes(4, "little"), seed=CAND_SEEDS[0]) % nodes
+    c2 = murmur3_py(int(h).to_bytes(4, "little"), seed=CAND_SEEDS[1]) % nodes
+    return c1, c2
+
+
+def test_recorded_owners_win_over_loads():
+    hashes = [murmur3_py(f"key-{i}".encode()) for i in range(20)]
+    table = {h: i % 3 for i, h in enumerate(hashes)}
+    # loads wildly skewed: sticky assignments must still be returned
+    got, ref = run(hashes, table, [10_000, 0, 10_000, 0], nodes=4)
+    np.testing.assert_array_equal(got, ref)
+    np.testing.assert_array_equal(got, np.array([i % 3 for i in range(20)]))
+
+
+def test_empty_table_uses_two_choices_on_frozen_loads():
+    hashes = [murmur3_py(f"key-{i}".encode()) for i in range(100)]
+    got, ref = run(hashes, {}, [50, 0], nodes=2)
+    np.testing.assert_array_equal(got, ref)
+    # any key whose candidates differ must land on the unloaded node 1
+    for h, o in zip(hashes, got):
+        c1, c2 = candidates(h, 2)
+        if c1 != c2:
+            assert o == 1, f"hash {h:#x} ignored the frozen loads"
+
+
+def test_load_tie_keeps_first_candidate():
+    # rust: `if loads[c2] < loads[c1] { c2 } else { c1 }` — ties pick c1
+    hashes = [murmur3_py(f"key-{i}".encode()) for i in range(50)]
+    got, ref = run(hashes, {}, [7, 7, 7], nodes=3)
+    np.testing.assert_array_equal(got, ref)
+    for h, o in zip(hashes, got):
+        assert o == candidates(h, 3)[0]
+
+
+def test_miss_next_to_hit_and_boundary_keys():
+    # exact-match discipline: a miss adjacent to a live key must not
+    # alias onto it, and the 0x00000000 / 0xFFFFFFFF extremes work
+    table = {100: 2, 0: 1, 0xFFFFFFFF: 3}
+    hashes = [99, 100, 101, 0, 1, 0xFFFFFFFF, 0xFFFFFFFE]
+    got, ref = run(hashes, table, [0, 0, 0, 0], nodes=4)
+    np.testing.assert_array_equal(got, ref)
+    assert got[1] == 2 and got[3] == 1 and got[5] == 3
+    for h, o in zip([99, 101, 1, 0xFFFFFFFE], got[[0, 2, 4, 6]]):
+        assert o == candidates(h, 4)[0], "miss must use the fallback"
+
+
+def test_single_node_everything_lands_on_it():
+    hashes = [murmur3_py(f"key-{i}".encode()) for i in range(30)]
+    got, ref = run(hashes, {hashes[0]: 0}, [9], nodes=1)
+    np.testing.assert_array_equal(got, ref)
+    assert (got == 0).all()
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_matches_reference_random(seed):
+    rng = np.random.default_rng(seed)
+    entries = int(rng.integers(0, A_CAP + 1))
+    nodes = int(rng.integers(1, P_CAP + 1))
+    table_keys = rng.choice(2**32, size=entries, replace=False)
+    table = {int(k): int(rng.integers(0, nodes)) for k in table_keys}
+    loads = rng.integers(0, 100, nodes)
+    # half fresh hashes, half table hits (when the table is non-empty)
+    hashes = list(rng.integers(0, 2**32, BLOCK // 2).astype(np.uint32))
+    if entries:
+        hashes += list(rng.choice(table_keys, size=BLOCK - len(hashes)))
+    got, ref = run(hashes, table, loads, nodes)
+    np.testing.assert_array_equal(got, ref)

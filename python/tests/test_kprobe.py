@@ -1,0 +1,122 @@
+"""k-probe kernel vs the plain-python transcription of rust's
+``MultiProbeRouter::route``: seeded-probe points, successor/tie
+semantics, overload shedding, and the edge cases (all owners frozen,
+k > node count)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.kprobe import kprobe_kernel
+from compile.kernels.murmur3 import murmur3_u32x1_seeded
+from compile.kernels.ref import kprobe_ref, murmur3_py
+
+P_CAP = 16
+BLOCK = 64
+
+
+def run(hashes, pos_hashes, pos_nodes, overloaded, probes, max_probes=8):
+    """Pad inputs to kernel shapes and run one batch."""
+    n = len(pos_hashes)
+    ph = np.full(P_CAP, 0xFFFFFFFF, np.uint32)
+    pn = np.zeros(P_CAP, np.int32)
+    ov = np.zeros(P_CAP, np.int32)
+    # rust pre-sorts positions by (hash, node)
+    order = np.lexsort((np.asarray(pos_nodes), np.asarray(pos_hashes, np.uint32)))
+    ph[:n] = np.asarray(pos_hashes, np.uint32)[order]
+    pn[:n] = np.asarray(pos_nodes, np.int32)[order]
+    ov[: len(overloaded)] = np.asarray(overloaded, np.int32)
+    b = max(BLOCK, -(-len(hashes) // BLOCK) * BLOCK)
+    hs = np.zeros(b, np.uint32)
+    hs[: len(hashes)] = np.asarray(hashes, np.uint32)
+    got = kprobe_kernel(
+        jnp.asarray(hs), jnp.asarray(ph), jnp.asarray(pn), jnp.int32(n),
+        jnp.asarray(ov), jnp.int32(probes), max_probes=max_probes,
+    )
+    ref = kprobe_ref(hs, ph, pn, n, ov, probes)
+    return np.array(got)[: len(hashes)], ref[: len(hashes)]
+
+
+def node_positions(nodes):
+    """Rust's position placement: murmur3(\"node-{n}\") per node."""
+    return [murmur3_py(f"node-{n}".encode()) for n in range(nodes)]
+
+
+def test_seeded_u32_hash_matches_reference():
+    for x in [0, 1, 0xDEADBEEF, 0xFFFFFFFF, 12345]:
+        for seed in [0, 1, 7, 0x9E3779B9]:
+            got = int(murmur3_u32x1_seeded(jnp.uint32(x), seed))
+            assert got == murmur3_py(x.to_bytes(4, "little"), seed=seed), (
+                f"x={x:#x} seed={seed:#x}"
+            )
+
+
+def test_matches_reference_uniform_flags():
+    pos = node_positions(4)
+    hashes = [murmur3_py(f"key-{i}".encode()) for i in range(60)]
+    got, ref = run(hashes, pos, list(range(4)), [0, 0, 0, 0], probes=5)
+    np.testing.assert_array_equal(got, ref)
+    assert len(set(got.tolist())) > 1, "probe routing collapsed to one node"
+
+
+def test_overloaded_owner_is_avoided():
+    pos = node_positions(4)
+    hashes = [murmur3_py(f"key-{i}".encode()) for i in range(200)]
+    base, _ = run(hashes, pos, list(range(4)), [0, 0, 0, 0], probes=5)
+    hot = int(np.bincount(base, minlength=4).argmax())
+    flags = [1 if n == hot else 0 for n in range(4)]
+    got, ref = run(hashes, pos, list(range(4)), flags, probes=5)
+    np.testing.assert_array_equal(got, ref)
+    # keys with any non-overloaded probe owner must shed the hot node
+    assert np.sum(got == hot) < np.sum(base == hot)
+    # and nobody moved ONTO the hot node
+    assert not np.any((base != hot) & (got == hot))
+
+
+def test_all_owners_frozen_falls_back_to_distance():
+    # every node overloaded: the lexicographic choice degenerates to the
+    # classic closest-probe pick, identical to the no-flags route
+    pos = node_positions(5)
+    hashes = [murmur3_py(f"key-{i}".encode()) for i in range(100)]
+    none_over, _ = run(hashes, pos, list(range(5)), [0] * 5, probes=4)
+    all_over, ref = run(hashes, pos, list(range(5)), [1] * 5, probes=4)
+    np.testing.assert_array_equal(all_over, ref)
+    np.testing.assert_array_equal(all_over, none_over)
+
+
+def test_more_probes_than_nodes():
+    # k > node count: probes collide on the few nodes; still valid + exact
+    pos = node_positions(2)
+    hashes = [murmur3_py(f"key-{i}".encode()) for i in range(50)]
+    got, ref = run(hashes, pos, [0, 1], [0, 0], probes=8)
+    np.testing.assert_array_equal(got, ref)
+    assert set(got.tolist()) <= {0, 1}
+
+
+def test_single_probe_is_plain_consistent_hashing():
+    pos = node_positions(6)
+    hashes = [murmur3_py(f"key-{i}".encode()) for i in range(64)]
+    got, ref = run(hashes, pos, list(range(6)), [0] * 6, probes=1)
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_probe_count_masking():
+    # probes beyond the live count must not contribute: k=2 under
+    # max_probes=8 equals k=2 under max_probes=2
+    pos = node_positions(4)
+    hashes = [murmur3_py(f"key-{i}".encode()) for i in range(40)]
+    a, _ = run(hashes, pos, list(range(4)), [0] * 4, probes=2, max_probes=8)
+    b, _ = run(hashes, pos, list(range(4)), [0] * 4, probes=2, max_probes=2)
+    np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_matches_reference_random(seed):
+    rng = np.random.default_rng(seed)
+    nodes = int(rng.integers(1, 13))
+    probes = int(rng.integers(1, 9))
+    pos = rng.choice(2**32, size=nodes, replace=False).astype(np.uint32)
+    flags = rng.integers(0, 2, nodes).astype(np.int32)
+    hashes = rng.integers(0, 2**32, BLOCK).astype(np.uint32)
+    got, ref = run(hashes, pos, list(range(nodes)), flags, probes=probes)
+    np.testing.assert_array_equal(got, ref)

@@ -9,7 +9,7 @@ import numpy as np
 
 from compile import aot, model
 from compile.kernels.murmur3 import pack_batch
-from compile.kernels.ref import murmur3_py, ring_lookup_ref
+from compile.kernels.ref import assign_ref, kprobe_ref, murmur3_py, ring_lookup_ref
 
 
 def mini_ring(n_tokens, t, seed=7):
@@ -37,6 +37,50 @@ def test_route_composes_hash_and_lookup():
     np.testing.assert_array_equal(owners[: len(keys)], ref_owners)
 
 
+def test_route_probe_composes_hash_and_kprobe():
+    keys = [f"word-{i}".encode() for i in range(40)]
+    b, w = 64, 8
+    words, lens = pack_batch(keys, b, w)
+    rng = np.random.default_rng(3)
+    ph = np.full(aot.P, 0xFFFFFFFF, np.uint32)
+    pn = np.zeros(aot.P, np.int32)
+    raw = np.sort(rng.choice(2**32, size=6, replace=False).astype(np.uint32))
+    ph[:6] = raw
+    pn[:6] = np.arange(6)
+    over = np.zeros(aot.P, np.int32)
+    over[2] = 1
+    hashes, owners = model.route_probe(
+        words, lens, jnp.asarray(ph), jnp.asarray(pn), jnp.int32(6),
+        jnp.asarray(over), jnp.int32(4), max_probes=aot.K,
+    )
+    hashes, owners = np.array(hashes), np.array(owners)
+    for i, k in enumerate(keys):
+        assert int(hashes[i]) == murmur3_py(k)
+    ref = kprobe_ref(hashes[: len(keys)], ph, pn, 6, over, 4)
+    np.testing.assert_array_equal(owners[: len(keys)], ref)
+
+
+def test_route_assign_composes_hash_and_table():
+    keys = [f"word-{i}".encode() for i in range(40)]
+    b, w = 64, 8
+    words, lens = pack_batch(keys, b, w)
+    tk = np.full(aot.A, 0xFFFFFFFF, np.uint32)
+    to = np.zeros(aot.A, np.int32)
+    # pin half of the keys in the table
+    pinned = sorted(murmur3_py(k) for k in keys[:20])
+    tk[:20] = np.asarray(pinned, np.uint32)
+    to[:20] = np.arange(20) % 3
+    loads = np.zeros(aot.P, np.uint32)
+    loads[0] = 50
+    hashes, owners = model.route_assign(
+        words, lens, jnp.asarray(tk), jnp.asarray(to), jnp.int32(20),
+        jnp.asarray(loads), jnp.int32(4),
+    )
+    hashes, owners = np.array(hashes), np.array(owners)
+    ref = assign_ref(hashes[: len(keys)], tk, to, 20, loads, 4)
+    np.testing.assert_array_equal(owners[: len(keys)], ref)
+
+
 def test_reduce_count_and_merge_agree_with_semantics():
     counts = jnp.zeros(aot.V, jnp.uint32)
     ids = jnp.asarray([1, 1, 2, -1] + [-1] * 12, jnp.int32)
@@ -53,9 +97,9 @@ def test_program_specs_lower_and_emit_hlo_text():
         text = aot.to_hlo_text(lowered)
         assert text.startswith("HloModule"), name
         assert len(text) > 100, name
-        # route must expose 2 outputs, others 1 (tuple convention)
+        # route programs expose 2 outputs, others 1 (tuple convention)
         n_out = len(jax.eval_shape(fn, *arg_specs))
-        assert n_out == (2 if name == "route" else 1)
+        assert n_out == (2 if name.startswith("route") else 1)
 
 
 def test_aot_writes_artifacts(tmp_path):
@@ -70,11 +114,13 @@ def test_aot_writes_artifacts(tmp_path):
         text=True,
     )
     assert r.returncode == 0, r.stderr
-    for f in ["hash_only.hlo.txt", "route.hlo.txt", "reduce_count.hlo.txt",
+    for f in ["hash_only.hlo.txt", "route.hlo.txt", "route_probe.hlo.txt",
+              "route_assign.hlo.txt", "reduce_count.hlo.txt",
               "merge_state.hlo.txt", "manifest.json"]:
         assert (out / f).exists(), f
     manifest = (out / "manifest.json").read_text()
     assert '"B": 256' in manifest and '"V": 4096' in manifest
+    assert '"P": 64' in manifest and '"K": 8' in manifest and '"A": 4096' in manifest
 
 
 def test_manifest_constants_are_consistent():

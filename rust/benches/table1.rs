@@ -6,6 +6,22 @@
 //! ```sh
 //! cargo bench --bench table1
 //! ```
+//!
+//! CI smoke knobs (all via environment, used by the `bench-smoke` job):
+//!
+//! - `DPA_BENCH_SEEDS=N`     — seeded runs per cell (default 3; CI uses 1)
+//! - `DPA_BENCH_JSON=PATH`   — write the S values as flat JSON
+//!   (`"WL1/halving/no_lb": 0.00`, …)
+//! - `DPA_BENCH_BASELINE=PATH` — compare against a checked-in baseline
+//!   JSON of the same shape; exit non-zero if any cell's S drifts more
+//!   than the tolerance. An empty/cell-less baseline skips the gate
+//!   (bootstrap: commit a CI-produced `BENCH_table1.json` as the
+//!   baseline — the sim is deterministic per seed, so values reproduce
+//!   across machines).
+//! - `DPA_BENCH_TOLERANCE=F` — max |S - baseline| per cell (default 0.05)
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
 
 use dpa::cli::mean_skew;
 use dpa::hash::Strategy;
@@ -30,15 +46,75 @@ fn paper_values(wl: &str, m: Strategy) -> (f64, f64) {
     }
 }
 
+fn env_parse<T: std::str::FromStr>(name: &str, default: T) -> T {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Serialize the measured cells as flat JSON (BTreeMap: stable order).
+fn to_json(seeds: usize, cells: &BTreeMap<String, f64>) -> String {
+    let mut out = String::from("{\n");
+    let _ = writeln!(out, "  \"seeds\": {seeds},");
+    let n = cells.len();
+    for (i, (k, v)) in cells.iter().enumerate() {
+        let comma = if i + 1 == n { "" } else { "," };
+        let _ = writeln!(out, "  \"{k}\": {v:.6}{comma}");
+    }
+    out.push_str("}\n");
+    out
+}
+
+/// Parse flat `{"key": float, ...}` JSON (the format `to_json` writes).
+fn parse_json(text: &str) -> Result<BTreeMap<String, f64>, String> {
+    let inner = text
+        .trim()
+        .strip_prefix('{')
+        .and_then(|t| t.strip_suffix('}'))
+        .ok_or("baseline is not a JSON object")?;
+    let mut map = BTreeMap::new();
+    for part in inner.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        // split on the LAST ':' — cell keys may themselves contain one
+        // (the `multiprobe:K` strategy spelling), values never do
+        let (k, v) = part.rsplit_once(':').ok_or("expected \"key\": value")?;
+        let v: f64 = v.trim().parse().map_err(|e| format!("bad value for {k}: {e}"))?;
+        map.insert(k.trim().trim_matches('"').to_string(), v);
+    }
+    Ok(map)
+}
+
+/// Gate the measured cells against a baseline. Returns drift messages
+/// (empty = pass). Only `workload/method/column` keys participate.
+fn compare_baseline(
+    baseline: &BTreeMap<String, f64>,
+    cells: &BTreeMap<String, f64>,
+    tol: f64,
+) -> Vec<String> {
+    let mut drifts = Vec::new();
+    for (k, &base) in baseline.iter().filter(|(k, _)| k.contains('/')) {
+        match cells.get(k) {
+            None => drifts.push(format!("cell '{k}' missing from this run")),
+            Some(&cur) if (cur - base).abs() > tol => {
+                drifts.push(format!("{k}: S = {cur:.3} drifted from baseline {base:.3}"))
+            }
+            Some(_) => {}
+        }
+    }
+    drifts
+}
+
 fn main() {
     dpa::util::logger::init();
-    let seeds = 3;
+    let seeds: usize = env_parse("DPA_BENCH_SEEDS", 3).max(1);
     println!("Experiment 1 (Table 1): S with/without LB — ours vs paper");
     println!("setup: 4 mappers, 4 reducers, τ=0.2, ≤1 round/reducer, {seeds} seeds\n");
 
     let mut t = Table::new([
         "Workload", "Method", "No LB", "(paper)", "With LB", "(paper)", "Δ", "(paper Δ)",
     ]);
+    let mut cells: BTreeMap<String, f64> = BTreeMap::new();
     let mut shape_ok = 0usize;
     let mut shape_total = 0usize;
     for w in paperwl::all() {
@@ -46,6 +122,8 @@ fn main() {
             let (p_nolb, p_lb) = paper_values(&w.name, strategy);
             let (s_nolb, _) = mean_skew(&w, strategy, false, 1, seeds).unwrap();
             let (s_lb, _) = mean_skew(&w, strategy, true, 1, seeds).unwrap();
+            cells.insert(format!("{}/{strategy}/no_lb", w.name), s_nolb);
+            cells.insert(format!("{}/{strategy}/with_lb", w.name), s_lb);
             let ours_delta = s_nolb - s_lb;
             let paper_delta = p_nolb - p_lb;
             // "shape" agreement: Δ sign matches (or both negligible)
@@ -73,4 +151,47 @@ fn main() {
     println!(
         "\nshape agreement (Δ direction/magnitude class): {shape_ok}/{shape_total}"
     );
+
+    if let Ok(path) = std::env::var("DPA_BENCH_JSON") {
+        std::fs::write(&path, to_json(seeds, &cells)).expect("writing bench JSON");
+        println!("wrote {path}");
+    }
+
+    if let Ok(path) = std::env::var("DPA_BENCH_BASELINE") {
+        let tol: f64 = env_parse("DPA_BENCH_TOLERANCE", 0.05);
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("reading baseline {path}: {e}"));
+        let baseline = parse_json(&text).expect("parsing baseline JSON");
+        // cells are per-seed-count means: comparing across different
+        // DPA_BENCH_SEEDS would gate on cross-seed variance, not drift
+        if let Some(&bs) = baseline.get("seeds") {
+            if bs as usize != seeds {
+                eprintln!(
+                    "bench gate FAILED: baseline was recorded with seeds={} but this \
+                     run used seeds={seeds} — regenerate the baseline with matching \
+                     DPA_BENCH_SEEDS",
+                    bs as usize
+                );
+                std::process::exit(1);
+            }
+        }
+        if !baseline.keys().any(|k| k.contains('/')) {
+            println!(
+                "baseline {path} has no cells — bootstrap run, gate skipped \
+                 (commit a produced BENCH_table1.json as the baseline to arm it)"
+            );
+            return;
+        }
+        let drifts = compare_baseline(&baseline, &cells, tol);
+        if drifts.is_empty() {
+            let n = baseline.keys().filter(|k| k.contains('/')).count();
+            println!("bench gate: all {n} baseline cells within ±{tol}");
+        } else {
+            eprintln!("bench gate FAILED (tolerance ±{tol}):");
+            for d in &drifts {
+                eprintln!("  {d}");
+            }
+            std::process::exit(1);
+        }
+    }
 }

@@ -47,6 +47,10 @@ pub struct ThreadParams {
     /// Post-repartition consistency: merge-at-end (§2) or state
     /// forwarding (§7).
     pub mode: ConsistencyMode,
+    /// Compiled data plane for the mappers' batched route path (one XLA
+    /// call hashes + routes a whole task; every router family). `None` =
+    /// scalar routing through the epoch-cached router.
+    pub route_runtime: Option<Arc<crate::runtime::programs::SharedRuntime>>,
 }
 
 impl Default for ThreadParams {
@@ -59,6 +63,7 @@ impl Default for ThreadParams {
             reduce_delay_us: 200,
             pop_timeout: Duration::from_millis(2),
             mode: ConsistencyMode::MergeAtEnd,
+            route_runtime: None,
         }
     }
 }
@@ -120,19 +125,34 @@ impl ThreadDriver {
             let exec = map_exec.clone();
             let router = router.clone();
             let map_delay = p.map_delay_us;
+            let route_runtime = p.route_runtime.clone();
             mapper_handles.push(
                 std::thread::Builder::new()
                     .name(format!("dpa-mapper-{i}"))
                     .spawn(move || {
+                        let batched = route_runtime.is_some();
                         let mut mc = MapperCore::new(i, exec, router);
+                        if let Some(rt) = route_runtime {
+                            mc = mc.with_route_runtime(rt);
+                        }
                         let mut staged: Vec<Vec<crate::exec::Record>> =
                             (0..core.queues.len()).map(|_| Vec::new()).collect();
                         while let Some(task) = core.pool.fetch() {
-                            for item in task.items.iter() {
-                                for (dest, rec) in mc.process_item(item) {
+                            if batched {
+                                // one XLA call per B records; the map cost
+                                // is charged for the whole task at once
+                                let items = task.items.len() as u64;
+                                for (dest, rec) in mc.process_task(&task) {
                                     staged[dest].push(rec);
                                 }
-                                spin_us(map_delay);
+                                spin_us(map_delay.saturating_mul(items));
+                            } else {
+                                for item in task.items.iter() {
+                                    for (dest, rec) in mc.process_item(item) {
+                                        staged[dest].push(rec);
+                                    }
+                                    spin_us(map_delay);
+                                }
                             }
                             for (dest, recs) in staged.iter_mut().enumerate() {
                                 if recs.is_empty() {

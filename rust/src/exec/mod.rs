@@ -47,6 +47,16 @@ impl Record {
             }
         }
     }
+
+    /// Seed the memoized hash with an externally computed value (the
+    /// compiled batch-route path hashes on device; downstream ownership
+    /// checks then reuse it). Must equal `murmur3(key)` — the XLA parity
+    /// suite pins the kernel to the native hash.
+    #[inline]
+    pub fn prime_hash(&self, h: u32) {
+        debug_assert_eq!(h, crate::hash::murmur3_x86_32(self.key.as_bytes()));
+        self.hash_cache.set(Some(h));
+    }
 }
 
 impl Clone for Record {

@@ -99,22 +99,107 @@ impl RouteDelta {
     }
 }
 
-/// A router's externally visible state: what the XLA route program and
-/// the §7 state-forwarding key-ownership diff consume.
+/// A router's externally visible state: what the compiled XLA route
+/// programs and the §7 state-forwarding key-ownership diff consume.
+/// The payload is tagged per router *family* — each variant lowers to a
+/// different compiled program (see
+/// [`crate::runtime::programs::snapshot_tensors`]).
 #[derive(Clone, Debug)]
 pub struct RouteSnapshot {
     pub router: &'static str,
     pub epoch: u64,
     pub nodes: usize,
+    pub state: SnapshotState,
+}
+
+/// Family-specific routing state inside a [`RouteSnapshot`].
+#[derive(Clone, Debug)]
+pub enum SnapshotState {
     /// Token-ring family: the sorted token table (the exact arrays the
-    /// compiled XLA `route` program takes; see
-    /// [`crate::runtime::programs::snapshot_tensors`]).
-    pub tokens: Option<Vec<Token>>,
-    /// Two-choices: the sticky `(key_hash, owner)` assignments — the
-    /// basis of an ownership diff across a repartition.
-    pub assignments: Option<Vec<(u32, u32)>>,
-    /// Multi-probe: the frozen per-node load weights routing consults.
-    pub weights: Option<Vec<u64>>,
+    /// compiled XLA `route` program takes).
+    TokenRing { tokens: Vec<Token> },
+    /// Multi-probe family (`route_probe` program): node ring positions
+    /// sorted by `(hash, node)`, the probe count, and the per-node state
+    /// frozen at the last redistribute — the shed flags routing consults
+    /// plus the raw load weights they were derived from (diagnostics).
+    Probe {
+        position_hashes: Vec<u32>,
+        position_nodes: Vec<u32>,
+        probes: u32,
+        overloaded: Vec<bool>,
+        weights: Vec<u64>,
+    },
+    /// Two-choices family (`route_assign` program): the sticky
+    /// `(key_hash, owner)` table sorted by key hash — the basis of an
+    /// ownership diff across a repartition — plus the per-node loads
+    /// frozen at snapshot time, which resolve keys *not yet* in the
+    /// table by the same first-sight rule the scalar router applies.
+    Assignment {
+        assignments: Vec<(u32, u32)>,
+        loads: Vec<u64>,
+    },
+}
+
+impl RouteSnapshot {
+    /// Token table, if this is a token-ring snapshot.
+    pub fn tokens(&self) -> Option<&[Token]> {
+        match &self.state {
+            SnapshotState::TokenRing { tokens } => Some(tokens),
+            _ => None,
+        }
+    }
+
+    /// Sticky assignment table, if this is a two-choices snapshot.
+    pub fn assignments(&self) -> Option<&[(u32, u32)]> {
+        match &self.state {
+            SnapshotState::Assignment { assignments, .. } => Some(assignments),
+            _ => None,
+        }
+    }
+
+    /// Frozen load weights, if this is a multi-probe snapshot.
+    pub fn weights(&self) -> Option<&[u64]> {
+        match &self.state {
+            SnapshotState::Probe { weights, .. } => Some(weights),
+            _ => None,
+        }
+    }
+
+    /// Route a key hash host-side, exactly as the router that produced
+    /// this snapshot would at its epoch (for two-choices, as it would
+    /// *record* a first sight under the frozen loads). This is the
+    /// native fallback lane of the compiled route programs — one
+    /// implementation per family, shared with the scalar routers, so the
+    /// compiled/native/scalar paths cannot drift.
+    pub fn route(&self, hash: u32) -> usize {
+        match &self.state {
+            SnapshotState::TokenRing { tokens } => {
+                tokens[super::ring::clockwise_successor_by(tokens, hash, |t| t.hash)].node
+                    as usize
+            }
+            SnapshotState::Probe {
+                position_hashes,
+                position_nodes,
+                probes,
+                overloaded,
+                ..
+            } => probe_route(position_hashes, position_nodes, overloaded, *probes, hash),
+            SnapshotState::Assignment { assignments, loads } => {
+                match assignments.binary_search_by_key(&hash, |&(k, _)| k) {
+                    Ok(i) => assignments[i].1 as usize,
+                    Err(_) => {
+                        let (c1, c2) = two_choices_candidates(hash, self.nodes);
+                        let l = |n: usize| loads.get(n).copied().unwrap_or(0);
+                        if l(c2) < l(c1) {
+                            c2
+                        } else {
+                            c1
+                        }
+                    }
+                }
+            }
+        }
+    }
 }
 
 /// The redistribution layer's trait. Implementations must route
@@ -136,8 +221,17 @@ pub trait Router: Send + Sync {
     /// Relieve an overloaded node. Returns what changed.
     fn redistribute(&mut self, target: usize, loads: &Loads) -> RouteDelta;
 
-    /// Externally visible routing state.
-    fn snapshot(&self) -> RouteSnapshot;
+    /// Externally visible routing state. `loads` is the live load view:
+    /// routers whose *first-sight* decision consults loads (two-choices)
+    /// freeze it into the snapshot so batch routing over the snapshot
+    /// stays a pure function; the others ignore it.
+    fn snapshot(&self, loads: &Loads) -> RouteSnapshot;
+
+    /// Record externally computed sticky assignments (the compiled batch
+    /// route path writes back its first-sight choices so later scalar
+    /// routes agree). First writer wins per key; routers without a
+    /// sticky table ignore this.
+    fn record_assignments(&self, _assignments: &[(u32, u32)]) {}
 
     /// Clone into an independent (or internally shared, for sticky
     /// assignment tables) instance for per-actor route caches.
@@ -237,14 +331,12 @@ impl Router for TokenRingRouter {
         }
     }
 
-    fn snapshot(&self) -> RouteSnapshot {
+    fn snapshot(&self, _loads: &Loads) -> RouteSnapshot {
         RouteSnapshot {
             router: self.name(),
             epoch: self.ring.epoch(),
             nodes: self.ring.nodes(),
-            tokens: Some(self.ring.sorted_tokens().to_vec()),
-            assignments: None,
-            weights: None,
+            state: SnapshotState::TokenRing { tokens: self.ring.sorted_tokens().to_vec() },
         }
     }
 
@@ -259,6 +351,51 @@ impl Router for TokenRingRouter {
     fn as_token_ring_mut(&mut self) -> Option<&mut Ring> {
         Some(&mut self.ring)
     }
+}
+
+/// The k-probe routing decision over a frozen position/flag table —
+/// lexicographic `(overloaded, clockwise distance, node)` over `probes`
+/// seeded probe points. The single scalar implementation shared by
+/// [`MultiProbeRouter::route`] and the runtime's snapshot fallback lane;
+/// the Pallas `kprobe` kernel (`python/compile/kernels/kprobe.py`) is
+/// the batched form and must agree bit-for-bit (`rust/tests/xla_parity`).
+pub fn probe_route(
+    position_hashes: &[u32],
+    position_nodes: &[u32],
+    overloaded: &[bool],
+    probes: u32,
+    hash: u32,
+) -> usize {
+    // lexicographic (overloaded?, distance, node): classic MPCH among
+    // acceptable owners, falling back to pure distance when every
+    // probe lands on an overloaded node
+    let mut best: Option<(bool, u32, usize)> = None;
+    for j in 0..probes.max(1) {
+        let p = murmur3_x86_32_seed(&hash.to_le_bytes(), j);
+        let i = super::ring::clockwise_successor_by(position_hashes, p, |&h| h);
+        let (pos, node) = (position_hashes[i], position_nodes[i] as usize);
+        let cand = (overloaded[node], pos.wrapping_sub(p), node);
+        let better = match best {
+            None => true,
+            Some(b) => cand < b,
+        };
+        if better {
+            best = Some(cand);
+        }
+    }
+    best.expect("probes >= 1").2
+}
+
+/// The two candidate nodes of a key hash under the two-choices router —
+/// shared by [`TwoChoicesRouter`] and the runtime's snapshot fallback
+/// lane; the Pallas `assign` kernel computes the same pair.
+#[inline]
+pub fn two_choices_candidates(hash: u32, nodes: usize) -> (usize, usize) {
+    let b = hash.to_le_bytes();
+    (
+        murmur3_x86_32_seed(&b, TWO_CHOICES_SEEDS[0]) as usize % nodes,
+        murmur3_x86_32_seed(&b, TWO_CHOICES_SEEDS[1]) as usize % nodes,
+    )
 }
 
 /// Multi-probe consistent hashing: one ring position per node (no virtual
@@ -310,13 +447,6 @@ impl MultiProbeRouter {
         }
     }
 
-    /// Clockwise owner of ring point `p` (first position ≥ p, wrapping).
-    #[inline]
-    fn successor(&self, p: u32) -> (u32, usize) {
-        let i = super::ring::clockwise_successor_by(&self.position_hashes, p, |&h| h);
-        (self.position_hashes[i], self.position_nodes[i] as usize)
-    }
-
     /// Nodes whose load sits strictly above the mean of `loads`.
     fn overload_flags(loads: &[u64]) -> Vec<bool> {
         let n = loads.len().max(1) as u128;
@@ -340,23 +470,13 @@ impl Router for MultiProbeRouter {
     }
 
     fn route(&self, hash: u32, _loads: &Loads) -> usize {
-        // lexicographic (overloaded?, distance, node): classic MPCH among
-        // acceptable owners, falling back to pure distance when every
-        // probe lands on an overloaded node
-        let mut best: Option<(bool, u32, usize)> = None;
-        for j in 0..self.probes {
-            let p = murmur3_x86_32_seed(&hash.to_le_bytes(), j);
-            let (pos, node) = self.successor(p);
-            let cand = (self.overloaded[node], pos.wrapping_sub(p), node);
-            let better = match best {
-                None => true,
-                Some(b) => cand < b,
-            };
-            if better {
-                best = Some(cand);
-            }
-        }
-        best.expect("probes >= 1").2
+        probe_route(
+            &self.position_hashes,
+            &self.position_nodes,
+            &self.overloaded,
+            self.probes,
+            hash,
+        )
     }
 
     fn redistribute(&mut self, _target: usize, loads: &Loads) -> RouteDelta {
@@ -375,14 +495,18 @@ impl Router for MultiProbeRouter {
         RouteDelta { changed: true, ..RouteDelta::default() }
     }
 
-    fn snapshot(&self) -> RouteSnapshot {
+    fn snapshot(&self, _loads: &Loads) -> RouteSnapshot {
         RouteSnapshot {
             router: self.name(),
             epoch: self.epoch,
             nodes: self.weights.len(),
-            tokens: None,
-            assignments: None,
-            weights: Some(self.weights.clone()),
+            state: SnapshotState::Probe {
+                position_hashes: self.position_hashes.clone(),
+                position_nodes: self.position_nodes.clone(),
+                probes: self.probes,
+                overloaded: self.overloaded.clone(),
+                weights: self.weights.clone(),
+            },
         }
     }
 
@@ -426,11 +550,7 @@ impl TwoChoicesRouter {
 
     #[inline]
     fn candidates(&self, hash: u32) -> (usize, usize) {
-        let b = hash.to_le_bytes();
-        (
-            murmur3_x86_32_seed(&b, TWO_CHOICES_SEEDS[0]) as usize % self.nodes,
-            murmur3_x86_32_seed(&b, TWO_CHOICES_SEEDS[1]) as usize % self.nodes,
-        )
+        two_choices_candidates(hash, self.nodes)
     }
 
     /// Number of keys currently pinned to `node`.
@@ -507,21 +627,38 @@ impl Router for TwoChoicesRouter {
         }
     }
 
-    fn snapshot(&self) -> RouteSnapshot {
+    fn snapshot(&self, loads: &Loads) -> RouteSnapshot {
+        let mut frozen = loads.to_vec();
+        frozen.resize(self.nodes, 0);
         RouteSnapshot {
             router: self.name(),
             epoch: self.epoch(),
             nodes: self.nodes,
-            tokens: None,
-            assignments: Some(
-                self.assignments
+            state: SnapshotState::Assignment {
+                // BTreeMap iteration is ascending by key hash — the sort
+                // order the compiled table lookup requires
+                assignments: self
+                    .assignments
                     .read()
                     .unwrap()
                     .iter()
                     .map(|(&k, &n)| (k, n))
                     .collect(),
-            ),
-            weights: None,
+                loads: frozen,
+            },
+        }
+    }
+
+    fn record_assignments(&self, assignments: &[(u32, u32)]) {
+        if assignments.is_empty() {
+            return;
+        }
+        let mut map = self.assignments.write().unwrap();
+        for &(k, n) in assignments {
+            // first writer wins: a racing scalar route (which inserts
+            // under live loads) keeps its choice; ours is dropped and the
+            // stale send is forwarded by the normal mechanism
+            map.entry(k).or_insert(n);
         }
     }
 
@@ -589,7 +726,13 @@ impl RouterHandle {
     }
 
     pub fn snapshot(&self) -> RouteSnapshot {
-        self.inner.read().unwrap().snapshot()
+        self.inner.read().unwrap().snapshot(&self.loads)
+    }
+
+    /// Write back first-sight assignments computed by the compiled batch
+    /// route path (no-op for routers without a sticky table).
+    pub fn record_assignments(&self, assignments: &[(u32, u32)]) {
+        self.inner.read().unwrap().record_assignments(assignments);
     }
 
     /// Apply the router's redistribution for an overloaded node and
@@ -687,10 +830,10 @@ impl RouterCache {
         self.route_hash(murmur3_x86_32(key))
     }
 
-    /// Refreshed snapshot (e.g. to feed the XLA route program).
+    /// Refreshed snapshot (e.g. to feed the XLA route programs).
     pub fn snapshot(&mut self) -> RouteSnapshot {
         self.refresh();
-        self.local.snapshot()
+        self.local.snapshot(self.handle.loads())
     }
 
     pub fn handle(&self) -> &RouterHandle {
@@ -982,18 +1125,78 @@ mod tests {
         let ring = RouterHandle::token_ring(Ring::new(3, 2), RingOp::NoOp);
         let snap = ring.snapshot();
         assert_eq!(snap.router, "token-ring");
-        assert_eq!(snap.tokens.as_ref().map(Vec::len), Some(6));
+        assert_eq!(snap.tokens().map(<[Token]>::len), Some(6));
+        assert!(snap.assignments().is_none());
 
         let mp = RouterHandle::new(Box::new(MultiProbeRouter::new(3, 7)));
         let snap = mp.snapshot();
         assert_eq!(snap.router, "multi-probe");
-        assert!(snap.tokens.is_none());
-        assert_eq!(snap.weights.as_ref().map(Vec::len), Some(3));
+        assert!(snap.tokens().is_none());
+        assert_eq!(snap.weights().map(<[u64]>::len), Some(3));
+        match &snap.state {
+            SnapshotState::Probe { position_hashes, position_nodes, probes, overloaded, .. } => {
+                assert_eq!(position_hashes.len(), 3);
+                assert_eq!(position_nodes.len(), 3);
+                assert!(position_hashes.windows(2).all(|w| w[0] <= w[1]), "sorted");
+                assert_eq!(*probes, 7);
+                assert_eq!(overloaded.len(), 3);
+            }
+            other => panic!("expected Probe state, got {other:?}"),
+        }
 
         let tc = RouterHandle::new(Box::new(TwoChoicesRouter::new(3)));
         tc.route_key(b"k");
+        tc.loads().set(1, 42);
         let snap = tc.snapshot();
         assert_eq!(snap.router, "two-choices");
-        assert_eq!(snap.assignments.as_ref().map(Vec::len), Some(1));
+        assert_eq!(snap.assignments().map(<[(u32, u32)]>::len), Some(1));
+        match &snap.state {
+            SnapshotState::Assignment { loads, .. } => {
+                assert_eq!(loads, &vec![0, 42, 0], "loads frozen into the snapshot")
+            }
+            other => panic!("expected Assignment state, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn snapshot_route_matches_scalar_router_every_family() {
+        // the host-side fallback lane of the compiled route programs must
+        // agree with Router::route at the snapshot's epoch
+        let loads = Loads::new(5);
+        let mut routers: Vec<Box<dyn Router>> = vec![
+            Box::new(TokenRingRouter::new(Ring::new(5, 4), RingOp::Halve)),
+            Box::new(MultiProbeRouter::new(5, 3)),
+            Box::new(TwoChoicesRouter::new(5)),
+        ];
+        for r in routers.iter_mut() {
+            // include a post-redistribute epoch
+            for n in 0..5 {
+                loads.set(n, if n == 2 { 90 } else { 3 });
+            }
+            r.redistribute(2, &loads);
+            // warm the sticky table for some keys, leave others cold
+            for k in keys(40) {
+                r.route(murmur3_x86_32(k.as_bytes()), &loads);
+            }
+            let snap = r.snapshot(&loads);
+            for k in keys(300) {
+                let h = murmur3_x86_32(k.as_bytes());
+                assert_eq!(snap.route(h), r.route(h, &loads), "{} key {k}", r.name());
+            }
+        }
+    }
+
+    #[test]
+    fn two_choices_record_assignments_first_writer_wins() {
+        let router = TwoChoicesRouter::new(4);
+        let loads = Loads::new(4);
+        let h_new = murmur3_x86_32(b"cold-key");
+        let h_seen = murmur3_x86_32(b"warm-key");
+        let seen_owner = router.route(h_seen, &loads) as u32;
+        let (c1, _) = router.candidates(h_new);
+        router.record_assignments(&[(h_new, c1 as u32), (h_seen, seen_owner + 1)]);
+        // the cold key's write-back sticks; the warm key keeps its owner
+        assert_eq!(router.route(h_new, &loads), c1);
+        assert_eq!(router.route(h_seen, &loads) as u32, seen_owner);
     }
 }

@@ -5,23 +5,39 @@
 //! [`RouterCache`]).
 //!
 //! Both drivers run this same core; only the surrounding loop differs.
+//! With a [`SharedRuntime`] attached ([`MapperCore::with_route_runtime`])
+//! the per-task path routes through the compiled XLA route program of the
+//! router's family ([`SharedRuntime::route_batch_snapshot`]) — hash +
+//! owner for a whole task in one batched call — falling back to the
+//! scalar [`RouterCache`] when the snapshot has no compiled lowering.
 
 use std::sync::Arc;
 
 use crate::exec::{MapExecutor, Record, Task};
 use crate::hash::{RouterCache, RouterHandle};
+use crate::runtime::programs::SharedRuntime;
 
 /// Per-mapper state + the map-and-route step.
 pub struct MapperCore {
     pub id: usize,
     exec: Arc<dyn MapExecutor>,
     router: RouterCache,
+    /// Compiled data plane for batched routing (`None` = scalar routing).
+    route_runtime: Option<Arc<SharedRuntime>>,
+    /// Last snapshot taken for the batched path, tagged with its epoch.
+    /// Reused across tasks for routers whose snapshot is a pure function
+    /// of the epoch (token-ring, multi-probe) — no per-task state clone
+    /// or shared-lock traffic; sticky-table snapshots are refreshed every
+    /// task (the table grows within an epoch).
+    snapshot_cache: Option<(u64, crate::hash::RouteSnapshot)>,
     /// Records emitted (the run report's `mapped[i]`).
     pub emitted: u64,
     /// Input items consumed.
     pub items_in: u64,
     /// Tasks fetched.
     pub tasks_in: u64,
+    /// Records routed through the compiled batch path.
+    pub compiled_routed: u64,
 }
 
 impl MapperCore {
@@ -30,10 +46,20 @@ impl MapperCore {
             id,
             exec,
             router: router.cache(),
+            route_runtime: None,
+            snapshot_cache: None,
             emitted: 0,
             items_in: 0,
             tasks_in: 0,
+            compiled_routed: 0,
         }
+    }
+
+    /// Route whole tasks through the compiled XLA route program of the
+    /// router's snapshot family.
+    pub fn with_route_runtime(mut self, rt: Arc<SharedRuntime>) -> Self {
+        self.route_runtime = Some(rt);
+        self
     }
 
     /// Map one input item and route each output record: returns
@@ -51,14 +77,96 @@ impl MapperCore {
             .collect()
     }
 
-    /// Process a whole task (convenience for drivers that work per-task).
+    /// Process a whole task. With a route runtime attached, the task's
+    /// records are hashed *and* routed in one batched XLA call per `B`
+    /// records; otherwise this is the per-item scalar path.
     pub fn process_task(&mut self, task: &Task) -> Vec<(usize, Record)> {
-        self.tasks_in += 1;
-        let mut out = Vec::with_capacity(task.items.len());
-        for item in task.items.iter() {
-            out.extend(self.process_item(item));
+        if self.route_runtime.is_none() {
+            self.tasks_in += 1;
+            let mut out = Vec::with_capacity(task.items.len());
+            for item in task.items.iter() {
+                out.extend(self.process_item(item));
+            }
+            return out;
         }
-        out
+        self.tasks_in += 1;
+        let mut recs = Vec::with_capacity(task.items.len());
+        for item in task.items.iter() {
+            self.items_in += 1;
+            recs.extend(self.exec.map(item));
+        }
+        self.emitted += recs.len() as u64;
+        self.route_records(recs)
+    }
+
+    /// Batched routing over the current snapshot, with the scalar path as
+    /// fallback for snapshots the loaded artifacts cannot serve.
+    fn route_records(&mut self, recs: Vec<Record>) -> Vec<(usize, Record)> {
+        let rt = self.route_runtime.clone().expect("checked by caller");
+        let epoch = self.router.handle().epoch();
+        let refresh = match &self.snapshot_cache {
+            Some((e, snap)) => {
+                *e != epoch || matches!(snap.state, crate::hash::SnapshotState::Assignment { .. })
+            }
+            None => true,
+        };
+        if refresh {
+            self.snapshot_cache = Some((epoch, self.router.snapshot()));
+        }
+        let snap = &self.snapshot_cache.as_ref().expect("just filled").1;
+        let keys: Vec<&[u8]> = recs.iter().map(|r| r.key.as_bytes()).collect();
+        match rt.route_batch_snapshot(&keys, snap) {
+            Ok(routed) => {
+                // sticky-table routers: record first-sight choices so the
+                // shared table (which reducers' ownership checks consult)
+                // agrees with the owners we just computed. First writer
+                // wins; a lost race is a stale send the forwarding
+                // mechanism absorbs, never a split key.
+                if let Some(table) = snap.assignments() {
+                    let fresh: Vec<(u32, u32)> = routed
+                        .iter()
+                        .filter(|(h, _)| table.binary_search_by_key(h, |&(k, _)| k).is_err())
+                        .map(|&(h, o)| (h, o as u32))
+                        .collect();
+                    self.router.handle().record_assignments(&fresh);
+                }
+                self.compiled_routed += routed.len() as u64;
+                recs.into_iter()
+                    .zip(routed)
+                    .map(|(r, (h, dest))| {
+                        r.prime_hash(h);
+                        (dest, r)
+                    })
+                    .collect()
+            }
+            Err(e) => {
+                if e.downcast_ref::<crate::runtime::Error>().is_some() {
+                    // structural (artifacts lack this family's program, or
+                    // the live state outgrew the compiled capacity): it
+                    // would fail identically every task — go scalar for
+                    // the rest of the run
+                    log::debug!(
+                        "mapper {}: compiled route path disabled, routing scalar: {e:#}",
+                        self.id
+                    );
+                    self.route_runtime = None;
+                    self.snapshot_cache = None;
+                } else {
+                    // a real execution fault deserves a loud signal; the
+                    // scalar fallback keeps the run correct
+                    log::warn!(
+                        "mapper {}: compiled route failed, routed this task scalar: {e:#}",
+                        self.id
+                    );
+                }
+                recs.into_iter()
+                    .map(|r| {
+                        let dest = self.router.route_hash(r.hash());
+                        (dest, r)
+                    })
+                    .collect()
+            }
+        }
     }
 }
 

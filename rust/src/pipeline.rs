@@ -252,6 +252,7 @@ pub struct Pipeline {
     cfg: PipelineConfig,
     map_exec: Arc<dyn MapExecutor>,
     reduce_factory: ReduceFactory,
+    route_runtime: Option<Arc<crate::runtime::programs::SharedRuntime>>,
 }
 
 impl Pipeline {
@@ -260,7 +261,20 @@ impl Pipeline {
         map_exec: Arc<dyn MapExecutor>,
         reduce_factory: ReduceFactory,
     ) -> Self {
-        Pipeline { cfg, map_exec, reduce_factory }
+        Pipeline { cfg, map_exec, reduce_factory, route_runtime: None }
+    }
+
+    /// Route whole tasks through the compiled XLA route program of the
+    /// configured router's family (threads driver; the sim models
+    /// per-item costs and keeps the scalar path). Works for every
+    /// strategy — token-ring, multi-probe and two-choices snapshots all
+    /// lower to tensors.
+    pub fn with_route_runtime(
+        mut self,
+        rt: Arc<crate::runtime::programs::SharedRuntime>,
+    ) -> Self {
+        self.route_runtime = Some(rt);
+        self
     }
 
     /// The paper's word-count pipeline over pre-split items.
@@ -355,6 +369,7 @@ impl Pipeline {
                     reduce_delay_us: self.cfg.reduce_delay_us,
                     pop_timeout: std::time::Duration::from_millis(self.cfg.pop_timeout_ms),
                     mode: self.cfg.mode,
+                    route_runtime: self.route_runtime.clone(),
                 });
                 driver.run(
                     self.map_exec.clone(),
@@ -385,6 +400,7 @@ impl Pipeline {
                 cfg,
                 map_exec: self.map_exec.clone(),
                 reduce_factory: self.reduce_factory.clone(),
+                route_runtime: self.route_runtime.clone(),
             };
             out.push(p.run_shared(shared.clone())?);
         }

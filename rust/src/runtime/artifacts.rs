@@ -22,6 +22,13 @@ pub struct Manifest {
     pub t: usize,
     /// Vocab slots of `reduce_count` / `merge_state`.
     pub v: usize,
+    /// Node/position capacity of `route_probe` tables and the
+    /// `route_assign` loads vector.
+    pub p: usize,
+    /// Probe capacity `route_probe` was unrolled for.
+    pub k: usize,
+    /// Sticky-assignment table capacity of `route_assign`.
+    pub a: usize,
 }
 
 impl Manifest {
@@ -39,8 +46,21 @@ impl Manifest {
                 .with_context(|| format!("manifest missing key '{k}'"))
                 .map(|v| v as usize)
         };
-        let m = Manifest { b: get("B")?, w: get("W")?, t: get("T")?, v: get("V")? };
-        if m.b == 0 || m.w == 0 || m.t == 0 || m.v == 0 {
+        // P/K/A arrived with the router-aware route programs; default to
+        // their aot.py values so pre-existing manifests still parse (the
+        // corresponding .hlo.txt files are simply absent then and the
+        // runtime reports the snapshot as unsupported on use)
+        let get_or = |k: &str, d: usize| map.get(k).map_or(d, |&v| v as usize);
+        let m = Manifest {
+            b: get("B")?,
+            w: get("W")?,
+            t: get("T")?,
+            v: get("V")?,
+            p: get_or("P", 64),
+            k: get_or("K", 8),
+            a: get_or("A", 4096),
+        };
+        if m.b == 0 || m.w == 0 || m.t == 0 || m.v == 0 || m.p == 0 || m.k == 0 || m.a == 0 {
             bail!("manifest has zero-sized dimension: {m:?}");
         }
         Ok(m)
@@ -103,9 +123,24 @@ mod tests {
 
     #[test]
     fn parse_manifest() {
-        let m = Manifest::parse(r#"{"B": 256, "W": 8, "T": 512, "V": 4096}"#).unwrap();
-        assert_eq!(m, Manifest { b: 256, w: 8, t: 512, v: 4096 });
+        let m = Manifest::parse(
+            r#"{"B": 256, "W": 8, "T": 512, "V": 4096, "P": 64, "K": 8, "A": 4096}"#,
+        )
+        .unwrap();
+        assert_eq!(m, Manifest { b: 256, w: 8, t: 512, v: 4096, p: 64, k: 8, a: 4096 });
         assert_eq!(m.max_key_bytes(), 32);
+    }
+
+    #[test]
+    fn parse_manifest_defaults_probe_dims() {
+        // manifests written before the router-aware route programs
+        let m = Manifest::parse(r#"{"B": 256, "W": 8, "T": 512, "V": 4096}"#).unwrap();
+        assert_eq!((m.p, m.k, m.a), (64, 8, 4096));
+        let m = Manifest::parse(
+            r#"{"B": 256, "W": 8, "T": 512, "V": 4096, "P": 16, "K": 4, "A": 128}"#,
+        )
+        .unwrap();
+        assert_eq!((m.p, m.k, m.a), (16, 4, 128));
     }
 
     #[test]

@@ -9,6 +9,10 @@
 //! - `hash_only`  — batched MurmurHash3 (the L1 Pallas kernel),
 //! - `route`      — hash + consistent-ring lookup (ring state passed as
 //!   runtime tensors, so one executable serves every repartition),
+//! - `route_probe` — hash + k-probe lookup (the multi-probe router's
+//!   position/flag tables as runtime tensors; L1 `kprobe` kernel),
+//! - `route_assign` — hash + sticky-assignment lookup (the two-choices
+//!   table + frozen loads as runtime tensors; L1 `assign` kernel),
 //! - `reduce_count` — histogram update of a reducer's dense count state
 //!   (the L1 Pallas histogram kernel),
 //! - `merge_state`  — the §2 state-merge step over dense states.
@@ -24,4 +28,4 @@ pub mod programs;
 
 pub use artifacts::{default_artifacts_dir, Manifest};
 pub use client::RuntimeClient;
-pub use programs::{pack_key, ring_tensors, snapshot_tensors, Runtime};
+pub use programs::{pack_key, ring_tensors, snapshot_tensors, Error, Runtime, SnapshotTensors};

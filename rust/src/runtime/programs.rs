@@ -1,14 +1,45 @@
-//! Typed wrappers over the four compiled programs, plus the host-side
+//! Typed wrappers over the compiled programs, plus the host-side
 //! packing that must agree bit-for-bit with `python/compile/model.py`.
+//!
+//! Routing is compiled per router *family*: a [`RouteSnapshot`] lowers
+//! through [`snapshot_tensors`] into a tagged [`SnapshotTensors`] —
+//! token table (`route`), probe table (`route_probe`) or assignment
+//! table (`route_assign`) — and [`Runtime::route_batch_snapshot`]
+//! dispatches on the tag, so every router the `hash::router` layer can
+//! build routes in one batched XLA call.
 
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context};
 
-use crate::hash::{Ring, RouteSnapshot, Token};
+use crate::hash::{Ring, RouteSnapshot, SnapshotState, Token};
 
 use super::artifacts::Manifest;
 use super::client::RuntimeClient;
+
+/// Typed failures of the compiled route-program lane. Wrapped in the
+/// crate's `anyhow` result; callers that need to react (rather than
+/// propagate) downcast to this.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum Error {
+    /// The snapshot has no compiled lowering in the loaded artifacts —
+    /// e.g. artifacts predating the `route_probe`/`route_assign`
+    /// programs, or a future router family without a kernel.
+    #[error(
+        "router '{router}' snapshot is not supported by the compiled route \
+         programs: {reason}"
+    )]
+    UnsupportedSnapshot { router: String, reason: String },
+    /// The snapshot's live state exceeds the static capacity (a
+    /// manifest dimension) the program was compiled for.
+    #[error("{what} has {have} live entries but {program} was compiled for {cap}")]
+    CapacityExceeded {
+        program: &'static str,
+        what: &'static str,
+        have: usize,
+        cap: usize,
+    },
+}
 
 /// Pack a key's bytes into little-endian u32 words (zero padded) plus its
 /// byte length — the exact layout the murmur3 Pallas kernel consumes.
@@ -32,10 +63,13 @@ pub fn pack_key(key: &[u8], w: usize) -> Option<(Vec<u32>, i32)> {
 /// live token count.
 fn token_tensors(tokens: &[Token], t: usize) -> crate::Result<(Vec<u32>, Vec<i32>, i32)> {
     if tokens.len() > t {
-        bail!(
-            "ring has {} tokens but the route program was compiled for T={t}",
-            tokens.len()
-        );
+        return Err(Error::CapacityExceeded {
+            program: "route",
+            what: "token table",
+            have: tokens.len(),
+            cap: t,
+        }
+        .into());
     }
     let mut hashes = vec![u32::MAX; t];
     let mut owners = vec![0i32; t];
@@ -51,30 +85,113 @@ pub fn ring_tensors(ring: &Ring, t: usize) -> crate::Result<(Vec<u32>, Vec<i32>,
     token_tensors(ring.sorted_tokens(), t)
 }
 
-/// Host-side clockwise lookup over a snapshot's token table — the native
-/// fallback for keys the compiled program cannot take. Delegates to the
-/// same successor walk as `Ring::lookup_hash` (the table is sorted by
-/// `(hash, node, idx)`), so the two paths cannot drift.
-fn lookup_token_table(tokens: &[Token], h: u32) -> usize {
-    tokens[crate::hash::ring::clockwise_successor_by(tokens, h, |t| t.hash)].node as usize
+/// A [`RouteSnapshot`] lowered to the padded tensors of its family's
+/// compiled route program. Tagged exactly like [`SnapshotState`]; the
+/// tensor layouts are the kernel contracts documented in
+/// `python/compile/kernels/{kprobe,assign}.py` and `model.py`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SnapshotTensors {
+    /// `route`: sorted token hashes (padded `u32::MAX`), owners, live
+    /// count.
+    Tokens { hashes: Vec<u32>, owners: Vec<i32>, len: i32 },
+    /// `route_probe`: sorted node positions (padded `u32::MAX`/0), live
+    /// count, per-node shed flags (padded 0), live probe count.
+    Probe {
+        pos_hashes: Vec<u32>,
+        pos_nodes: Vec<i32>,
+        len: i32,
+        overloaded: Vec<i32>,
+        probes: i32,
+    },
+    /// `route_assign`: sorted assignment keys (padded `u32::MAX`),
+    /// owners, live count, frozen per-node loads (u32-saturated, padded
+    /// 0), node count.
+    Assignment {
+        keys: Vec<u32>,
+        owners: Vec<i32>,
+        len: i32,
+        loads: Vec<u32>,
+        nodes: i32,
+    },
 }
 
-/// Router-snapshot state as the padded `route`-program tensors. Only the
-/// token-ring family has a token table the compiled program can consume;
-/// probe routers (multi-probe, two-choices) fail here and must route
-/// host-side.
-pub fn snapshot_tensors(
-    snap: &RouteSnapshot,
-    t: usize,
-) -> crate::Result<(Vec<u32>, Vec<i32>, i32)> {
-    let tokens = snap.tokens.as_ref().with_context(|| {
-        format!(
-            "router '{}' has no token table; the XLA route program only serves \
-             token-ring routers",
-            snap.router
-        )
-    })?;
-    token_tensors(tokens, t)
+/// Lower a router snapshot of **any** family to its compiled-program
+/// tensors, validating against the manifest's static capacities.
+pub fn snapshot_tensors(snap: &RouteSnapshot, m: &Manifest) -> crate::Result<SnapshotTensors> {
+    let cap = |program: &'static str, what: &'static str, have: usize, cap: usize| {
+        if have > cap {
+            Err(Error::CapacityExceeded { program, what, have, cap })
+        } else {
+            Ok(())
+        }
+    };
+    match &snap.state {
+        SnapshotState::TokenRing { tokens } => {
+            let (hashes, owners, len) = token_tensors(tokens, m.t)?;
+            Ok(SnapshotTensors::Tokens { hashes, owners, len })
+        }
+        SnapshotState::Probe {
+            position_hashes,
+            position_nodes,
+            probes,
+            overloaded,
+            ..
+        } => {
+            let n = position_hashes.len();
+            cap("route_probe", "position table", n, m.p)?;
+            cap("route_probe", "overload flags", overloaded.len(), m.p)?;
+            cap("route_probe", "probe count", *probes as usize, m.k)?;
+            let mut pos_hashes = vec![u32::MAX; m.p];
+            let mut pos_nodes = vec![0i32; m.p];
+            pos_hashes[..n].copy_from_slice(position_hashes);
+            for (o, &node) in pos_nodes.iter_mut().zip(position_nodes) {
+                *o = node as i32;
+            }
+            let mut flags = vec![0i32; m.p];
+            for (f, &b) in flags.iter_mut().zip(overloaded) {
+                *f = b as i32;
+            }
+            Ok(SnapshotTensors::Probe {
+                pos_hashes,
+                pos_nodes,
+                len: n as i32,
+                overloaded: flags,
+                probes: *probes as i32,
+            })
+        }
+        SnapshotState::Assignment { assignments, loads } => {
+            cap("route_assign", "assignment table", assignments.len(), m.a)?;
+            cap("route_assign", "node loads", snap.nodes, m.p)?;
+            let mut keys = vec![u32::MAX; m.a];
+            let mut owners = vec![0i32; m.a];
+            for (i, &(k, o)) in assignments.iter().enumerate() {
+                keys[i] = k;
+                owners[i] = o as i32;
+            }
+            let mut frozen = vec![0u32; m.p];
+            for (f, &l) in frozen.iter_mut().zip(loads) {
+                *f = l.min(u32::MAX as u64) as u32;
+            }
+            Ok(SnapshotTensors::Assignment {
+                keys,
+                owners,
+                len: assignments.len() as i32,
+                loads: frozen,
+                nodes: snap.nodes as i32,
+            })
+        }
+    }
+}
+
+/// The `route` program's routing-state literals — the one place the
+/// token-table argument layout is spelled out, shared by the raw-ring
+/// and snapshot entry points so they cannot diverge.
+fn token_state_literals(hashes: &[u32], owners: &[i32], len: i32) -> Vec<xla::Literal> {
+    vec![
+        xla::Literal::vec1(hashes),
+        xla::Literal::vec1(owners),
+        xla::Literal::scalar(len),
+    ]
 }
 
 /// Opaque handle to a device-resident reducer state (`u32[V]` counts
@@ -92,6 +209,11 @@ pub struct Runtime {
     pub dir: PathBuf,
     hash_only: xla::PjRtLoadedExecutable,
     route: xla::PjRtLoadedExecutable,
+    /// Probe-family route program (`None` when the loaded artifacts
+    /// predate it; probe snapshots then error typed, not panic).
+    route_probe: Option<xla::PjRtLoadedExecutable>,
+    /// Assignment-family route program (`None` as above).
+    route_assign: Option<xla::PjRtLoadedExecutable>,
     reduce_count: xla::PjRtLoadedExecutable,
     /// Untupled variant whose output buffer feeds back as the next
     /// call's input (device-resident state path).
@@ -109,9 +231,21 @@ impl Runtime {
         let manifest = Manifest::load(dir)?;
         let client = RuntimeClient::cpu()?;
         let compile = |name: &str| client.compile_hlo_text(&dir.join(name));
+        // the router-family programs are optional: absent in artifacts
+        // built before them, and their absence is a typed error at use,
+        // not a load failure
+        let compile_opt = |name: &str| -> crate::Result<Option<xla::PjRtLoadedExecutable>> {
+            if dir.join(name).exists() {
+                Ok(Some(compile(name)?))
+            } else {
+                Ok(None)
+            }
+        };
         Ok(Runtime {
             hash_only: compile("hash_only.hlo.txt")?,
             route: compile("route.hlo.txt")?,
+            route_probe: compile_opt("route_probe.hlo.txt")?,
+            route_assign: compile_opt("route_assign.hlo.txt")?,
             reduce_count: compile("reduce_count.hlo.txt")?,
             reduce_count_raw: compile("reduce_count_raw.hlo.txt")?,
             merge_state: compile("merge_state.hlo.txt")?,
@@ -256,39 +390,73 @@ impl Runtime {
     /// Hash + ring lookup via the compiled route program. Returns
     /// `(hash, owner)` per key.
     pub fn route_batch(&self, keys: &[&[u8]], ring: &Ring) -> crate::Result<Vec<(u32, usize)>> {
-        let tensors = ring_tensors(ring, self.manifest.t)?;
-        self.route_batch_with(keys, tensors, &|h| ring.lookup_hash(h))
+        let (hashes, owners, len) = ring_tensors(ring, self.manifest.t)?;
+        let state = token_state_literals(&hashes, &owners, len);
+        self.route_batch_with(keys, &self.route, state, &|h| ring.lookup_hash(h))
     }
 
-    /// Hash + lookup via the compiled route program, driven by a router
-    /// [`RouteSnapshot`] instead of a raw ring — the trait-layer entry
-    /// point ([`crate::hash::RouterCache::snapshot`] feeds it). Fails for
-    /// probe routers, which have no token table the program can consume.
+    /// Hash + lookup via the compiled route program of the snapshot's
+    /// router family — the trait-layer entry point
+    /// ([`crate::hash::RouterCache::snapshot`] feeds it). Dispatches on
+    /// the [`SnapshotTensors`] tag: token table → `route`, probe table →
+    /// `route_probe`, assignment table → `route_assign`. Returns a typed
+    /// [`Error::UnsupportedSnapshot`] when the loaded artifacts lack the
+    /// family's program.
     pub fn route_batch_snapshot(
         &self,
         keys: &[&[u8]],
         snap: &RouteSnapshot,
     ) -> crate::Result<Vec<(u32, usize)>> {
-        let tensors = snapshot_tensors(snap, self.manifest.t)?;
-        let tokens = snap.tokens.as_ref().expect("snapshot_tensors checked");
-        self.route_batch_with(keys, tensors, &|h| lookup_token_table(tokens, h))
+        let unsupported = |reason: &str| Error::UnsupportedSnapshot {
+            router: snap.router.to_string(),
+            reason: reason.to_string(),
+        };
+        let (exe, state) = match snapshot_tensors(snap, &self.manifest)? {
+            SnapshotTensors::Tokens { hashes, owners, len } => {
+                (&self.route, token_state_literals(&hashes, &owners, len))
+            }
+            SnapshotTensors::Probe { pos_hashes, pos_nodes, len, overloaded, probes } => (
+                self.route_probe.as_ref().ok_or_else(|| {
+                    unsupported("artifacts lack route_probe.hlo.txt — run `make artifacts`")
+                })?,
+                vec![
+                    xla::Literal::vec1(&pos_hashes),
+                    xla::Literal::vec1(&pos_nodes),
+                    xla::Literal::scalar(len),
+                    xla::Literal::vec1(&overloaded),
+                    xla::Literal::scalar(probes),
+                ],
+            ),
+            SnapshotTensors::Assignment { keys: akeys, owners, len, loads, nodes } => (
+                self.route_assign.as_ref().ok_or_else(|| {
+                    unsupported("artifacts lack route_assign.hlo.txt — run `make artifacts`")
+                })?,
+                vec![
+                    xla::Literal::vec1(&akeys),
+                    xla::Literal::vec1(&owners),
+                    xla::Literal::scalar(len),
+                    xla::Literal::vec1(&loads),
+                    xla::Literal::scalar(nodes),
+                ],
+            ),
+        };
+        // native fallback: the snapshot's own host-side route — the same
+        // per-family decision the scalar routers share
+        self.route_batch_with(keys, exe, state, &|h| snap.route(h))
     }
 
-    /// Shared body of the two `route_batch` entry points: `tensors` are
-    /// the padded route-program inputs, `native_lookup` resolves keys too
+    /// Shared body of the `route_batch*` entry points: `state` holds the
+    /// routing-table literals appended after the packed key batch (in
+    /// the program's argument order); `native_lookup` resolves keys too
     /// long for the kernel (host-side fallback, bit-identical semantics).
     fn route_batch_with(
         &self,
         keys: &[&[u8]],
-        tensors: (Vec<u32>, Vec<i32>, i32),
+        exe: &xla::PjRtLoadedExecutable,
+        state: Vec<xla::Literal>,
         native_lookup: &dyn Fn(u32) -> usize,
     ) -> crate::Result<Vec<(u32, usize)>> {
         let (b, w) = (self.manifest.b, self.manifest.w);
-        let (hashes, owners, len) = tensors;
-        let ring_h = xla::Literal::vec1(&hashes);
-        let ring_o = xla::Literal::vec1(&owners);
-        let ring_n = xla::Literal::scalar(len);
-
         let mut out = Vec::with_capacity(keys.len());
         for chunk in keys.chunks(b) {
             let mut words = vec![0u32; b * w];
@@ -308,16 +476,11 @@ impl Runtime {
             }
             let words_lit = xla::Literal::vec1(&words).reshape(&[b as i64, w as i64])?;
             let lens_lit = xla::Literal::vec1(&lens);
-            let outs = self.client.execute_tuple(
-                &self.route,
-                &[
-                    words_lit,
-                    lens_lit,
-                    ring_h.clone(),
-                    ring_o.clone(),
-                    ring_n.clone(),
-                ],
-            )?;
+            let mut args = Vec::with_capacity(2 + state.len());
+            args.push(words_lit);
+            args.push(lens_lit);
+            args.extend(state.iter().cloned());
+            let outs = self.client.execute_tuple(exe, &args)?;
             let hs: Vec<u32> = outs[0].to_vec()?;
             let os: Vec<i32> = outs[1].to_vec()?;
             for i in 0..chunk.len() {
@@ -384,6 +547,12 @@ pub struct SharedRuntime {
 // thread-safe in the PJRT C API.
 unsafe impl Send for SharedRuntime {}
 unsafe impl Sync for SharedRuntime {}
+
+impl std::fmt::Debug for SharedRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SharedRuntime").field("manifest", &self.manifest).finish_non_exhaustive()
+    }
+}
 
 impl SharedRuntime {
     pub fn load(dir: &Path) -> crate::Result<std::sync::Arc<Self>> {
@@ -501,32 +670,124 @@ mod tests {
         assert!(ring_tensors(&ring, 8).is_err());
     }
 
+    fn mini_manifest() -> Manifest {
+        Manifest { b: 64, w: 8, t: 16, v: 512, p: 8, k: 4, a: 16 }
+    }
+
     #[test]
-    fn token_table_lookup_matches_ring() {
+    fn snapshot_route_matches_ring_lookup() {
+        use crate::hash::{RingOp, RouterHandle};
         let mut ring = Ring::new(4, 8);
         ring.halve(2);
-        let tokens = ring.sorted_tokens();
+        let handle = RouterHandle::token_ring(ring.clone(), RingOp::NoOp);
+        let snap = handle.snapshot();
         for i in 0..4096u32 {
             let h = i.wrapping_mul(0x9E37_79B9);
-            assert_eq!(lookup_token_table(tokens, h), ring.lookup_hash(h), "h={h:#x}");
+            assert_eq!(snap.route(h), ring.lookup_hash(h), "h={h:#x}");
         }
-        for t in tokens.to_vec() {
+        for t in ring.sorted_tokens().to_vec() {
             for h in [t.hash.wrapping_sub(1), t.hash, t.hash.wrapping_add(1)] {
-                assert_eq!(lookup_token_table(ring.sorted_tokens(), h), ring.lookup_hash(h));
+                assert_eq!(snap.route(h), ring.lookup_hash(h));
             }
         }
     }
 
     #[test]
-    fn snapshot_tensors_serve_token_ring_only() {
-        use crate::hash::{RingOp, RouterHandle, StrategySpec};
+    fn snapshot_tensors_token_family_packs_like_ring_tensors() {
+        use crate::hash::{RingOp, RouterHandle};
         let handle = RouterHandle::token_ring(Ring::new(3, 2), RingOp::NoOp);
-        let (hashes, owners, len) = snapshot_tensors(&handle.snapshot(), 16).unwrap();
+        let got = snapshot_tensors(&handle.snapshot(), &mini_manifest()).unwrap();
         let (rh, ro, rl) = handle.with_ring(|r| ring_tensors(r, 16)).unwrap().unwrap();
-        assert_eq!((hashes, owners, len), (rh, ro, rl), "same packing as ring_tensors");
+        assert_eq!(
+            got,
+            SnapshotTensors::Tokens { hashes: rh, owners: ro, len: rl },
+            "same packing as ring_tensors"
+        );
+    }
 
+    #[test]
+    fn snapshot_tensors_probe_family() {
+        use crate::hash::{RouterHandle, StrategySpec};
         let probing =
             RouterHandle::new(StrategySpec::MultiProbe { probes: 3 }.build_router(3, 8, None));
-        assert!(snapshot_tensors(&probing.snapshot(), 16).is_err());
+        match snapshot_tensors(&probing.snapshot(), &mini_manifest()).unwrap() {
+            SnapshotTensors::Probe { pos_hashes, pos_nodes, len, overloaded, probes } => {
+                assert_eq!(len, 3);
+                assert_eq!(probes, 3);
+                assert!(pos_hashes[..3].windows(2).all(|w| w[0] <= w[1]), "sorted");
+                assert!(pos_hashes[3..].iter().all(|&h| h == u32::MAX), "padding");
+                assert!(pos_nodes[..3].iter().all(|&n| (0..3).contains(&n)));
+                assert_eq!(overloaded, vec![0; 8], "fresh router sheds nobody");
+            }
+            other => panic!("expected Probe tensors, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn snapshot_tensors_assignment_family_freezes_loads() {
+        use crate::hash::{RouterHandle, StrategySpec, TwoChoicesRouter};
+        let handle = RouterHandle::new(StrategySpec::TwoChoices.build_router(3, 8, None));
+        handle.route_key(b"warm");
+        handle.loads().set(1, 7);
+        match snapshot_tensors(&handle.snapshot(), &mini_manifest()).unwrap() {
+            SnapshotTensors::Assignment { keys, owners, len, loads, nodes } => {
+                assert_eq!(len, 1);
+                assert_eq!(nodes, 3);
+                assert_eq!(keys[0], crate::hash::murmur3_x86_32(b"warm"));
+                assert!(keys[1..].iter().all(|&k| k == u32::MAX), "padding");
+                assert!((owners[0] as usize) < 3);
+                assert_eq!(loads, vec![0, 7, 0, 0, 0, 0, 0, 0], "frozen, padded to P");
+            }
+            other => panic!("expected Assignment tensors, got {other:?}"),
+        }
+
+        // u32 saturation of oversized loads
+        let tc = TwoChoicesRouter::new(2);
+        let loads = crate::hash::Loads::new(2);
+        loads.set(0, u64::MAX);
+        let snap = crate::hash::Router::snapshot(&tc, &loads);
+        match snapshot_tensors(&snap, &mini_manifest()).unwrap() {
+            SnapshotTensors::Assignment { loads, .. } => assert_eq!(loads[0], u32::MAX),
+            other => panic!("expected Assignment tensors, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn snapshot_tensors_capacity_errors_are_typed() {
+        use crate::hash::{RouterHandle, StrategySpec};
+        // probe count above the compiled K
+        let probing =
+            RouterHandle::new(StrategySpec::MultiProbe { probes: 9 }.build_router(3, 8, None));
+        let err = snapshot_tensors(&probing.snapshot(), &mini_manifest()).unwrap_err();
+        match err.downcast_ref::<Error>() {
+            Some(Error::CapacityExceeded { program, what, have, cap }) => {
+                assert_eq!((*program, *what, *have, *cap), ("route_probe", "probe count", 9, 4));
+            }
+            other => panic!("expected CapacityExceeded, got {other:?}"),
+        }
+        // more nodes than the compiled P
+        let wide =
+            RouterHandle::new(StrategySpec::MultiProbe { probes: 2 }.build_router(9, 8, None));
+        assert!(snapshot_tensors(&wide.snapshot(), &mini_manifest())
+            .unwrap_err()
+            .downcast_ref::<Error>()
+            .is_some());
+        // token table beyond T still errors typed through the ring path
+        let ring = RouterHandle::token_ring(Ring::new(4, 8), crate::hash::RingOp::NoOp);
+        let err = snapshot_tensors(&ring.snapshot(), &mini_manifest()).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<Error>(),
+            Some(Error::CapacityExceeded { program: "route", .. })
+        ));
+    }
+
+    #[test]
+    fn unsupported_snapshot_error_renders_router_name() {
+        let e = Error::UnsupportedSnapshot {
+            router: "two-choices".into(),
+            reason: "artifacts lack route_assign.hlo.txt".into(),
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("two-choices") && msg.contains("route_assign"), "{msg}");
     }
 }

@@ -233,7 +233,7 @@ fn prop_multiprobe_redistribute_is_empty_delta_zero_churn() {
         prop_assert!(delta.zero_token_churn(), "token churn: {delta:?}");
         prop_assert!(delta.keys_reassigned == 0, "explicit key moves: {delta:?}");
         prop_assert!(
-            handle.snapshot().tokens.is_none(),
+            handle.snapshot().tokens().is_none(),
             "multi-probe grew a token table"
         );
         let after: Vec<usize> = keys.iter().map(|k| handle.route_key(k.as_bytes())).collect();

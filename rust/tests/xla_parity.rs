@@ -94,6 +94,89 @@ fn route_parity_rust_vs_xla_across_repartitions() {
 }
 
 #[test]
+fn compiled_route_parity_all_router_families_across_epochs() {
+    // the tentpole contract: a RouteSnapshot from ANY router family
+    // lowers to tensors and the compiled batch route agrees bit-for-bit
+    // with the scalar Router::route — including post-redistribute epochs
+    use dpa::hash::{RouterHandle, StrategySpec};
+    let rt = runtime();
+    let keys = random_keys(300, 24, 0xC0DE);
+    let refs: Vec<&[u8]> = keys.iter().map(Vec::as_slice).collect();
+    let specs = [
+        StrategySpec::Halving,
+        StrategySpec::Doubling,
+        StrategySpec::MultiProbe { probes: 2 },
+        StrategySpec::MultiProbe { probes: 4 },
+        StrategySpec::TwoChoices,
+    ];
+    for spec in specs {
+        let handle = RouterHandle::new(spec.build_router(4, 8, None));
+        // warm the sticky table with a third of the keys; the rest hit
+        // the compiled path cold (frozen-loads first-sight fallback)
+        for &k in refs.iter().take(100) {
+            handle.route_key(k);
+        }
+        for round in 0u64..3 {
+            let epoch = handle.epoch();
+            let snap = handle.snapshot();
+            let routed = rt.route_batch_snapshot(&refs, &snap).unwrap();
+            for (k, (h, owner)) in keys.iter().zip(&routed) {
+                assert_eq!(*h, murmur3_x86_32(k), "{spec}");
+                assert_eq!(
+                    *owner,
+                    handle.route_hash(*h),
+                    "{spec} epoch {epoch} (round {round}) key {k:?}"
+                );
+            }
+            // skew the loads onto one live owner and redistribute, so the
+            // next round checks a genuinely different epoch
+            let target = routed[0].1;
+            for n in 0..4 {
+                handle.loads().set(n, if n == target { 60 + round * 10 } else { 1 });
+            }
+            handle.redistribute(target);
+        }
+    }
+}
+
+#[test]
+fn probe_snapshot_on_legacy_artifacts_errors_typed() {
+    // artifacts written before route_probe/route_assign existed: loading
+    // still works, a token snapshot still routes, and a probe snapshot
+    // reports a typed UnsupportedSnapshot instead of panicking
+    use dpa::hash::{RouterHandle, StrategySpec};
+    let src = dpa::runtime::default_artifacts_dir().expect("artifacts missing");
+    let tmp = std::env::temp_dir().join(format!("dpa-legacy-artifacts-{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    for f in [
+        "hash_only.hlo.txt",
+        "route.hlo.txt",
+        "reduce_count.hlo.txt",
+        "reduce_count_raw.hlo.txt",
+        "merge_state.hlo.txt",
+        "manifest.json",
+    ] {
+        std::fs::copy(src.join(f), tmp.join(f)).unwrap();
+    }
+    let rt = SharedRuntime::load(&tmp).expect("legacy artifacts load");
+    let keys: Vec<&[u8]> = vec![b"a".as_slice(), b"b".as_slice()];
+
+    let ring = RouterHandle::token_ring(Ring::new(4, 8), dpa::hash::RingOp::NoOp);
+    assert!(rt.route_batch_snapshot(&keys, &ring.snapshot()).is_ok());
+
+    let probing =
+        RouterHandle::new(StrategySpec::MultiProbe { probes: 3 }.build_router(4, 8, None));
+    let err = rt.route_batch_snapshot(&keys, &probing.snapshot()).unwrap_err();
+    match err.downcast_ref::<dpa::runtime::Error>() {
+        Some(dpa::runtime::Error::UnsupportedSnapshot { router, .. }) => {
+            assert_eq!(router, "multi-probe");
+        }
+        other => panic!("expected UnsupportedSnapshot, got {other:?}"),
+    }
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+#[test]
 fn oversized_keys_fall_back_to_native() {
     let rt = runtime();
     let long = vec![b'x'; 100];
@@ -242,5 +325,34 @@ fn full_pipeline_on_xla_executors_thread_driver() {
     assert_eq!(report.result.len(), 17);
     for (_, c) in &report.result {
         assert!(*c == 35 || *c == 36, "count {c}");
+    }
+}
+
+#[test]
+fn full_pipeline_compiled_route_path_every_router_family() {
+    // mappers route whole tasks through the family's compiled route
+    // program (Pipeline::with_route_runtime); results must stay exact for
+    // every strategy, including the sticky-table write-back of two-choices
+    let rt = runtime();
+    for strategy in [
+        Strategy::Halving,
+        Strategy::Doubling,
+        Strategy::MultiProbe { probes: 3 },
+        Strategy::TwoChoices,
+    ] {
+        let factory = xla_wordcount_factory(rt.clone());
+        let mut cfg = PipelineConfig::default();
+        cfg.driver = dpa::pipeline::DriverKind::Threads;
+        cfg.strategy = strategy;
+        cfg.reduce_delay_us = 0;
+        let items: Vec<String> = (0..600).map(|i| format!("w{}", i % 17)).collect();
+        let pipeline =
+            Pipeline::new(cfg, Arc::new(IdentityMap), factory).with_route_runtime(rt.clone());
+        let report = pipeline.run(items).unwrap();
+        assert_eq!(report.total_processed(), 600, "{strategy}");
+        assert_eq!(report.result.len(), 17, "{strategy}");
+        for (_, c) in &report.result {
+            assert!(*c == 35 || *c == 36, "{strategy}: count {c}");
+        }
     }
 }
