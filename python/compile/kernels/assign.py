@@ -18,8 +18,13 @@ Contract (shared with `rust/src/runtime/programs.rs::snapshot_tensors`):
   count. Lookup is a compare-and-count searchsorted (`#{keys < h}` over
   the live prefix) plus an exact-match check — no scatter, the same
   trick the histogram kernel uses.
-- ``loads``: per-node queue lengths frozen at snapshot time, padded to
-  ``P`` (u32-saturated on the rust side).
+- ``loads``: per-node **EWMA-decayed** loads frozen at snapshot time
+  (``balancer::signal`` fixed point, ``FRAC_BITS = 8`` fractional bits;
+  u32-saturated on the rust side), padded to ``P``. The kernel only
+  compares them, so the fixed-point scale cancels — but the decayed
+  values are what the scalar router consults for first sights, which is
+  exactly why compiled and scalar routing stay bit-identical under the
+  smoothed signal.
 - ``nodes``: live node count; candidate ``i`` of a key hash is
   ``murmur3(hash LE bytes, seed CAND_SEEDS[i]) % nodes``.
 

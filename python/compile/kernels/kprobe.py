@@ -20,7 +20,12 @@ Contract (shared with `rust/src/runtime/programs.rs::snapshot_tensors`):
   ``clockwise_successor_by``'s first-of-equals semantics because argmin
   returns the first occurrence and the table is pre-sorted.
 - ``overloaded``: per-**node** 0/1 shed flags (indexed by node id, padded
-  to ``P``), frozen at the last redistribute.
+  to ``P``), frozen at the last redistribute. Since the load-signal
+  subsystem these are the *hysteresis-banded* flags (sticky between the
+  high/low watermarks around the decayed mean), so — unlike the old
+  one-above-mean classification — several nodes can legitimately be
+  frozen shed at once; the lexicographic choice below handles any flag
+  pattern, including all-shed (pure-distance fallback).
 - ``probes``: live probe count (≤ the static ``max_probes`` the program
   was lowered for); probe ``j`` hashes the key hash's 4 LE bytes with
   murmur3 seed ``j``.

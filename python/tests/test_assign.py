@@ -88,6 +88,37 @@ def test_single_node_everything_lands_on_it():
     assert (got == 0).all()
 
 
+# mirror of rust `balancer::signal::FRAC_BITS`: since the load-signal
+# subsystem, the frozen loads tensor carries EWMA-decayed values in
+# fixed point rather than raw queue lengths
+FRAC_BITS = 8
+
+
+def test_fixed_point_decayed_loads_scale_invariant():
+    # the kernel only *compares* loads, so the fixed-point scale of the
+    # decayed signal must not change any first-sight decision
+    hashes = [murmur3_py(f"key-{i}".encode()) for i in range(80)]
+    raw, _ = run(hashes, {}, [50, 3, 20, 7], nodes=4)
+    fp, ref = run(hashes, {}, [v << FRAC_BITS for v in [50, 3, 20, 7]], nodes=4)
+    np.testing.assert_array_equal(fp, ref)
+    np.testing.assert_array_equal(fp, raw)
+
+
+def test_fractional_decayed_loads_order_correctly():
+    # decayed values are rarely whole multiples of the scale; a
+    # sub-unit difference (e.g. 50.30 vs 49.99 in fixed point) must
+    # still pick the genuinely lighter candidate
+    hashes = [murmur3_py(f"key-{i}".encode()) for i in range(80)]
+    lo = (50 << FRAC_BITS) - 3  # ≈ 49.99
+    hi = (50 << FRAC_BITS) + 77  # ≈ 50.30
+    got, ref = run(hashes, {}, [hi, lo], nodes=2)
+    np.testing.assert_array_equal(got, ref)
+    for h, o in zip(hashes, got):
+        c1, c2 = candidates(h, 2)
+        if c1 != c2:
+            assert o == 1, f"hash {h:#x} ignored a sub-unit load difference"
+
+
 @pytest.mark.parametrize("seed", range(12))
 def test_matches_reference_random(seed):
     rng = np.random.default_rng(seed)

@@ -110,6 +110,26 @@ def test_probe_count_masking():
     np.testing.assert_array_equal(a, b)
 
 
+def test_hysteresis_flag_sets_shed_multiple_nodes():
+    # since ISSUE 4 the frozen flags come from the hysteresis band, which
+    # (being sticky) can legitimately freeze SEVERAL reducers shed at
+    # once — a state the old one-above-mean classification never
+    # produced; routing must shed every flagged owner while any
+    # unflagged probe owner exists
+    pos = node_positions(4)
+    hashes = [murmur3_py(f"key-{i}".encode()) for i in range(200)]
+    base, _ = run(hashes, pos, list(range(4)), [0, 0, 0, 0], probes=5)
+    got, ref = run(hashes, pos, list(range(4)), [1, 1, 0, 0], probes=5)
+    np.testing.assert_array_equal(got, ref)
+    # keys already owned by an unflagged node never move
+    unflagged_before = np.isin(base, [2, 3])
+    np.testing.assert_array_equal(got[unflagged_before], base[unflagged_before])
+    # flagged nodes shed together
+    assert np.sum(np.isin(got, [0, 1])) < np.sum(np.isin(base, [0, 1]))
+    # and nothing moved ONTO a flagged node
+    assert not np.any(np.isin(got, [0, 1]) & ~np.isin(base, [0, 1]))
+
+
 @pytest.mark.parametrize("seed", range(12))
 def test_matches_reference_random(seed):
     rng = np.random.default_rng(seed)

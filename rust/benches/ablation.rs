@@ -16,7 +16,6 @@
 // experiment configs override one default knob at a time (see lib.rs)
 #![allow(clippy::field_reassign_with_default)]
 
-
 use dpa::balancer::policy::{MeanRatioPolicy, NeverPolicy, ThresholdPolicy};
 use dpa::balancer::state_forward::ConsistencyMode;
 use dpa::balancer::BalancerCore;

@@ -9,7 +9,6 @@
 // experiment configs override one default knob at a time (see lib.rs)
 #![allow(clippy::field_reassign_with_default)]
 
-
 use std::sync::Arc;
 use std::time::Duration;
 

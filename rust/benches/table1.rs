@@ -10,21 +10,28 @@
 //! CI smoke knobs (all via environment, used by the `bench-smoke` job):
 //!
 //! - `DPA_BENCH_SEEDS=N`     — seeded runs per cell (default 3; CI uses 1)
-//! - `DPA_BENCH_JSON=PATH`   — write the S values as flat JSON
-//!   (`"WL1/halving/no_lb": 0.00`, …)
+//! - `DPA_BENCH_JSON=PATH`   — write the measured cells as flat JSON:
+//!   skew (`"WL1/halving/no_lb": 0.00`, `"…/with_lb": …`) and
+//!   redistribution counts (`"…/migrations": …` for the LB run,
+//!   `"…/migrations_no_lb": …` — provably 0 — for the no-LB run)
 //! - `DPA_BENCH_BASELINE=PATH` — compare against a checked-in baseline
-//!   JSON of the same shape; exit non-zero if any cell's S drifts more
-//!   than the tolerance. An empty/cell-less baseline skips the gate
-//!   (bootstrap: commit a CI-produced `BENCH_table1.json` as the
-//!   baseline — the sim is deterministic per seed, so values reproduce
-//!   across machines).
-//! - `DPA_BENCH_TOLERANCE=F` — max |S - baseline| per cell (default 0.05)
+//!   JSON of the same shape; exit non-zero if any cell drifts more than
+//!   its tolerance. A cell-less baseline skips the gate (bootstrap:
+//!   commit a CI-produced `BENCH_table1.json` as the baseline — the sim
+//!   is deterministic per seed, so values reproduce across machines); a
+//!   *partial* baseline gates exactly the cells it contains.
+//! - `DPA_BENCH_TOLERANCE=F` — max |S - baseline| per skew cell
+//!   (default 0.05)
+//! - `DPA_BENCH_MIG_TOLERANCE=F` — max |migrations - baseline| per
+//!   migration cell (default 0: the sim is deterministic, so any drift
+//!   in how often the balancer repartitions is a behavior change)
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
-use dpa::cli::mean_skew;
+use dpa::cli::cell_stats;
 use dpa::hash::Strategy;
+use dpa::pipeline::DriverKind;
 use dpa::util::table::{delta2, f2, Table};
 use dpa::workload::paperwl;
 
@@ -86,19 +93,26 @@ fn parse_json(text: &str) -> Result<BTreeMap<String, f64>, String> {
 }
 
 /// Gate the measured cells against a baseline. Returns drift messages
-/// (empty = pass). Only `workload/method/column` keys participate.
+/// (empty = pass). Only `workload/method/column` keys participate;
+/// migration-count cells are bounded by their own (tighter) tolerance.
 fn compare_baseline(
     baseline: &BTreeMap<String, f64>,
     cells: &BTreeMap<String, f64>,
     tol: f64,
+    mig_tol: f64,
 ) -> Vec<String> {
     let mut drifts = Vec::new();
     for (k, &base) in baseline.iter().filter(|(k, _)| k.contains('/')) {
+        let (bound, what) = if k.contains("/migrations") {
+            (mig_tol, "migrations")
+        } else {
+            (tol, "S")
+        };
         match cells.get(k) {
             None => drifts.push(format!("cell '{k}' missing from this run")),
-            Some(&cur) if (cur - base).abs() > tol => {
-                drifts.push(format!("{k}: S = {cur:.3} drifted from baseline {base:.3}"))
-            }
+            Some(&cur) if (cur - base).abs() > bound => drifts.push(format!(
+                "{k}: {what} = {cur:.3} drifted from baseline {base:.3} (±{bound})"
+            )),
             Some(_) => {}
         }
     }
@@ -112,7 +126,7 @@ fn main() {
     println!("setup: 4 mappers, 4 reducers, τ=0.2, ≤1 round/reducer, {seeds} seeds\n");
 
     let mut t = Table::new([
-        "Workload", "Method", "No LB", "(paper)", "With LB", "(paper)", "Δ", "(paper Δ)",
+        "Workload", "Method", "No LB", "(paper)", "With LB", "(paper)", "Δ", "(paper Δ)", "migr",
     ]);
     let mut cells: BTreeMap<String, f64> = BTreeMap::new();
     let mut shape_ok = 0usize;
@@ -120,10 +134,16 @@ fn main() {
     for w in paperwl::all() {
         for strategy in Strategy::methods() {
             let (p_nolb, p_lb) = paper_values(&w.name, strategy);
-            let (s_nolb, _) = mean_skew(&w, strategy, false, 1, seeds).unwrap();
-            let (s_lb, _) = mean_skew(&w, strategy, true, 1, seeds).unwrap();
+            let nolb = cell_stats(&w, strategy, DriverKind::Sim, false, 1, seeds).unwrap();
+            let lb = cell_stats(&w, strategy, DriverKind::Sim, true, 1, seeds).unwrap();
+            let (s_nolb, s_lb) = (nolb.skew, lb.skew);
             cells.insert(format!("{}/{strategy}/no_lb", w.name), s_nolb);
             cells.insert(format!("{}/{strategy}/with_lb", w.name), s_lb);
+            cells.insert(format!("{}/{strategy}/migrations", w.name), lb.migrations);
+            cells.insert(
+                format!("{}/{strategy}/migrations_no_lb", w.name),
+                nolb.migrations,
+            );
             let ours_delta = s_nolb - s_lb;
             let paper_delta = p_nolb - p_lb;
             // "shape" agreement: Δ sign matches (or both negligible)
@@ -144,6 +164,7 @@ fn main() {
                 f2(p_lb),
                 delta2(ours_delta),
                 delta2(paper_delta),
+                format!("{:.1}", lb.migrations),
             ]);
         }
     }
@@ -159,6 +180,7 @@ fn main() {
 
     if let Ok(path) = std::env::var("DPA_BENCH_BASELINE") {
         let tol: f64 = env_parse("DPA_BENCH_TOLERANCE", 0.05);
+        let mig_tol: f64 = env_parse("DPA_BENCH_MIG_TOLERANCE", 0.0);
         let text = std::fs::read_to_string(&path)
             .unwrap_or_else(|e| panic!("reading baseline {path}: {e}"));
         let baseline = parse_json(&text).expect("parsing baseline JSON");
@@ -182,12 +204,15 @@ fn main() {
             );
             return;
         }
-        let drifts = compare_baseline(&baseline, &cells, tol);
+        let drifts = compare_baseline(&baseline, &cells, tol, mig_tol);
         if drifts.is_empty() {
             let n = baseline.keys().filter(|k| k.contains('/')).count();
-            println!("bench gate: all {n} baseline cells within ±{tol}");
+            println!(
+                "bench gate: all {n} baseline cells within tolerance \
+                 (S ±{tol}, migrations ±{mig_tol})"
+            );
         } else {
-            eprintln!("bench gate FAILED (tolerance ±{tol}):");
+            eprintln!("bench gate FAILED (S ±{tol}, migrations ±{mig_tol}):");
             for d in &drifts {
                 eprintln!("  {d}");
             }

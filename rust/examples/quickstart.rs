@@ -8,7 +8,6 @@
 // experiment configs override one default knob at a time (see lib.rs)
 #![allow(clippy::field_reassign_with_default)]
 
-
 use dpa::hash::Strategy;
 use dpa::pipeline::{Pipeline, PipelineConfig};
 use dpa::workload::generators;

@@ -9,7 +9,6 @@
 // experiment configs override one default knob at a time (see lib.rs)
 #![allow(clippy::field_reassign_with_default)]
 
-
 use dpa::hash::Strategy;
 use dpa::pipeline::{Pipeline, PipelineConfig};
 use dpa::util::table::{delta2, f2, Table};

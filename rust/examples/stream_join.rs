@@ -15,7 +15,6 @@
 // experiment configs override one default knob at a time (see lib.rs)
 #![allow(clippy::field_reassign_with_default)]
 
-
 use std::sync::Arc;
 
 use dpa::balancer::state_forward::ConsistencyMode;

@@ -4,11 +4,15 @@
 //! [`Router`](crate::hash::Router) behind a shared
 //! [`RouterHandle`]), maintains the last-reported load state (queue size)
 //! of every reducer, and repartitions the keyspace when the §4.1 policy
-//! fires. [`policy`] holds the trigger predicate, [`BalancerCore`] the
-//! actor state shared by both drivers, and [`state_forward`] the §7
+//! fires. [`policy`] holds the trigger predicate, [`signal`] the adaptive
+//! load-signal subsystem (EWMA decay, hysteresis overload flags and the
+//! migration-gain guard the probe routers consume — every
+//! [`Self::observe`](BalancerCore::observe) feeds it), [`BalancerCore`]
+//! the actor state shared by both drivers, and [`state_forward`] the §7
 //! staged state-forwarding extension.
 
 pub mod policy;
+pub mod signal;
 pub mod state_forward;
 
 use crate::hash::{RouterHandle, StrategySpec};
@@ -116,9 +120,12 @@ impl BalancerCore {
 
     /// Update the load state *without* evaluating the policy — used while
     /// the §7 state-forwarding protocol is mid-stage (updates must be
-    /// atomic and infrequent) and by idle-poll reports. Also publishes
-    /// the load to the router's shared [`Loads`](crate::hash::Loads)
-    /// view, which load-aware routers consult at route time.
+    /// atomic and infrequent) and by idle-poll reports. Also feeds the
+    /// observation into the router's shared [`Loads`](crate::hash::Loads)
+    /// signal (raw + EWMA + hysteresis flags), which load-aware routers
+    /// consult at route and redistribute time. The policy itself keeps
+    /// triggering on the *raw* `qlens` — Eq. 1 is the paper's semantics;
+    /// the smoothed signal shapes what a triggered redistribute does.
     pub fn observe(&mut self, reducer: usize, qlen: usize) {
         if reducer >= self.qlens.len() {
             // a reducer added at runtime (elastic extension)
@@ -349,5 +356,23 @@ mod tests {
             b
         };
         assert_eq!(b.router().loads().get(2), 17);
+    }
+
+    #[test]
+    fn observe_feeds_the_decayed_signal() {
+        use crate::balancer::signal::{FRAC_BITS, SignalConfig};
+        let cfg = SignalConfig { decay_alpha: 0.5, hysteresis: 0.0, min_gain: 0.0 };
+        let router = RouterHandle::with_signal(
+            Strategy::TwoChoices.build_router(4, 8, None),
+            &cfg,
+        );
+        let mut b =
+            BalancerCore::new(router, Strategy::TwoChoices, 0.2, 4, 1, 10).without_warmup();
+        b.observe(2, 100);
+        b.observe(2, 100);
+        let loads = b.router().loads();
+        assert_eq!(loads.get(2), 100, "raw lane mirrors the report");
+        assert_eq!(loads.decayed(2), 75 << FRAC_BITS, "EWMA after two samples");
+        assert!(loads.overloaded(2), "sole loaded reducer is flagged");
     }
 }

@@ -1,0 +1,457 @@
+//! The adaptive load-signal subsystem.
+//!
+//! The paper triggers redistribution off raw instantaneous queue lengths
+//! (§4.1 Eq. 1), and the probe routers used to freeze those same raw
+//! values into their routing state — the shed flags of
+//! [`MultiProbeRouter`](crate::hash::MultiProbeRouter) and the first-sight
+//! loads of [`TwoChoicesRouter`](crate::hash::TwoChoicesRouter). Raw
+//! instantaneous loads ping-pong keys on adversarial skew (one hot key
+//! drags its queue wherever it is routed, so every redistribution makes
+//! the *previous* owner look cold and the new owner hot — WL3): AutoFlow
+//! and "When Two Choices Are not Enough" both smooth the signal and guard
+//! migrations behind a minimum improvement so repeated migrations
+//! converge instead of oscillating.
+//!
+//! [`LoadSignal`] is that smoothed view. It is the lock-free per-reducer
+//! load store shared between the balancer (the only writer — reports
+//! arrive over the existing [`LoadReport`](crate::runtime::exec::LoadReport)
+//! channel and land here via `BalancerCore::observe`) and the load-aware
+//! routers (readers). Per reducer it maintains:
+//!
+//! * the **raw** last-reported queue length (what Eq. 1 keeps triggering
+//!   on — the paper's policy semantics are untouched);
+//! * an **EWMA-decayed** queue length in integer fixed point
+//!   (`decayed' = α·raw + (1-α)·decayed`, [`FRAC_BITS`] fractional bits,
+//!   exact integer arithmetic so every lane — scalar routers, snapshot
+//!   tensors, compiled kernels — sees bit-identical values);
+//! * a **hysteresis-banded overload flag**: the flag turns on only when
+//!   the decayed load crosses `mean·(1+hysteresis)` and back off only
+//!   below `mean·(1-hysteresis)` — inside the band it keeps its state,
+//!   so a reducer must cross *distinct* watermarks to flip.
+//!
+//! [`SignalConfig::min_gain`] is the migration-gain guard:
+//! [`LoadSignal::migration_gain_ok`] admits a key re-home only when the
+//! destination's decayed load undercuts the source's by at least that
+//! fraction, which is what stops `TwoChoicesRouter::redistribute` from
+//! bouncing a hot key between its two candidates.
+//!
+//! [`SignalConfig::legacy()`] (α = 1, no band, no gain guard) reproduces
+//! the pre-signal behavior bit for bit: the decayed value is exactly the
+//! raw value in fixed point, the flag is the old strictly-above-mean
+//! classification, and the gain guard is disabled.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Fractional bits of the fixed-point decayed load. Every consumer of the
+/// decayed signal (routers, snapshot tensors, the compiled kernels'
+/// frozen-load inputs) sees values scaled by `1 << FRAC_BITS`.
+pub const FRAC_BITS: u32 = 8;
+
+/// Resolution of the `decay_alpha` / `hysteresis` / `min_gain` knobs once
+/// converted to integer fixed point.
+pub const KNOB_SCALE: u64 = 1 << 16;
+
+/// User-facing signal knobs (TOML `[balancer]` keys `decay_alpha`,
+/// `hysteresis`, `min_gain`; CLI `--decay-alpha`, `--hysteresis`,
+/// `--min-gain`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SignalConfig {
+    /// EWMA weight of the newest sample, in `(0, 1]`. `1.0` = no
+    /// smoothing (the decayed signal mirrors the raw queue length).
+    pub decay_alpha: f64,
+    /// Half-width of the overload band around the mean decayed load, as a
+    /// fraction of the mean: flag on above `mean·(1+hysteresis)`, off
+    /// below `mean·(1-hysteresis)`. `0.0` = the legacy strictly-above-mean
+    /// classification; values ≥ 1 never release a flag once set.
+    pub hysteresis: f64,
+    /// Minimum fractional improvement a key migration must promise:
+    /// re-home from `a` to `b` only when
+    /// `decayed(b) ≤ decayed(a)·(1 - min_gain)`. `0.0` disables the guard
+    /// (legacy unconditional re-homing); must be < 1.
+    pub min_gain: f64,
+}
+
+impl SignalConfig {
+    /// The pre-signal behavior: undecayed loads, above-mean flags, no
+    /// migration guard. Bit-compatible with the PR 2/3 routers.
+    pub fn legacy() -> Self {
+        SignalConfig { decay_alpha: 1.0, hysteresis: 0.0, min_gain: 0.0 }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        // NaN fails every branch explicitly — a NaN knob must not slip
+        // through as "not less than zero"
+        if self.decay_alpha.is_nan() || self.decay_alpha <= 0.0 || self.decay_alpha > 1.0 {
+            return Err(format!(
+                "balancer.decay_alpha must be in (0, 1], got {}",
+                self.decay_alpha
+            ));
+        }
+        if self.hysteresis.is_nan() || self.hysteresis < 0.0 {
+            return Err(format!(
+                "balancer.hysteresis must be non-negative, got {}",
+                self.hysteresis
+            ));
+        }
+        if self.min_gain.is_nan() || self.min_gain < 0.0 || self.min_gain >= 1.0 {
+            return Err(format!(
+                "balancer.min_gain must be in [0, 1), got {}",
+                self.min_gain
+            ));
+        }
+        Ok(())
+    }
+}
+
+impl Default for SignalConfig {
+    /// The recommended smoothing: enough memory that one redistribution's
+    /// load shift does not immediately invert the signal, a band wide
+    /// enough that border reducers keep their classification, and a gain
+    /// guard that rejects near-lateral key moves.
+    fn default() -> Self {
+        SignalConfig { decay_alpha: 0.5, hysteresis: 0.25, min_gain: 0.1 }
+    }
+}
+
+#[derive(Debug)]
+struct SignalInner {
+    raw: Vec<AtomicU64>,
+    /// EWMA-decayed loads, `FRAC_BITS` fixed point, saturated at
+    /// `u32::MAX` — the compiled route programs carry loads as u32, so
+    /// saturating *in the signal* keeps the scalar (u64) and compiled
+    /// (u32) comparisons literally identical in every regime.
+    decayed: Vec<AtomicU64>,
+    /// Hysteresis-banded overload flags.
+    flags: Vec<AtomicBool>,
+    /// Which nodes have reported at least once. Until all have, flags
+    /// use the total above-mean rule: the sticky band would otherwise
+    /// freeze warm-up-order transients (the first reporter carries all
+    /// observed load for an instant) that uniform steady load could
+    /// never release.
+    seen: Vec<AtomicBool>,
+    /// EWMA new-sample weight, `KNOB_SCALE` fixed point (`KNOB_SCALE` =
+    /// no smoothing).
+    alpha: u64,
+    /// Flag-on threshold `KNOB_SCALE·(1+hysteresis)`.
+    high: u64,
+    /// Flag-off threshold `KNOB_SCALE·(1-hysteresis)`, floored at 0.
+    low: u64,
+    /// Migration-gain guard, `KNOB_SCALE` fixed point (0 = disabled).
+    min_gain: u64,
+}
+
+/// Lock-free per-reducer load signal: raw + EWMA-decayed queue lengths
+/// and hysteresis overload flags, shared between the balancer (writer)
+/// and the load-aware routers (readers). Clones share state.
+///
+/// This type *is* the `hash::Loads` view the [`Router`](crate::hash::Router)
+/// trait routes against — `Loads` is an alias for it.
+#[derive(Clone, Debug)]
+pub struct LoadSignal {
+    inner: Arc<SignalInner>,
+}
+
+impl LoadSignal {
+    /// A legacy (unsmoothed) signal — see [`SignalConfig::legacy`]. This
+    /// is what bare `RouterHandle::new` constructs, keeping router unit
+    /// semantics bit-compatible with the raw-load era.
+    pub fn new(nodes: usize) -> Self {
+        Self::with_config(nodes, &SignalConfig::legacy())
+    }
+
+    /// A signal with explicit smoothing knobs (the pipeline threads the
+    /// `[balancer]` config here).
+    pub fn with_config(nodes: usize, cfg: &SignalConfig) -> Self {
+        let knob = |v: f64| (v * KNOB_SCALE as f64).round() as u64;
+        let h = knob(cfg.hysteresis);
+        LoadSignal {
+            inner: Arc::new(SignalInner {
+                raw: (0..nodes).map(|_| AtomicU64::new(0)).collect(),
+                decayed: (0..nodes).map(|_| AtomicU64::new(0)).collect(),
+                flags: (0..nodes).map(|_| AtomicBool::new(false)).collect(),
+                seen: (0..nodes).map(|_| AtomicBool::new(false)).collect(),
+                alpha: knob(cfg.decay_alpha).clamp(1, KNOB_SCALE),
+                high: KNOB_SCALE + h,
+                low: KNOB_SCALE.saturating_sub(h),
+                min_gain: knob(cfg.min_gain).min(KNOB_SCALE - 1),
+            }),
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.inner.raw.len()
+    }
+
+    /// Record one load observation: stores the raw queue length, folds it
+    /// into the EWMA and refreshes every node's hysteresis flag (the mean
+    /// moved). Out-of-range nodes (elastic scale-out beyond the initial
+    /// topology) are ignored — token routing never consults loads.
+    pub fn set(&self, node: usize, qlen: u64) {
+        let i = &*self.inner;
+        let (Some(raw), Some(dec)) = (i.raw.get(node), i.decayed.get(node)) else {
+            return;
+        };
+        raw.store(qlen, Ordering::Relaxed);
+        // decayed values saturate at the compiled-lane width (u32): the
+        // route_assign tensor carries them as u32, and saturating here —
+        // rather than at tensor-packing time — keeps the scalar router's
+        // comparisons identical to the kernel's even when both operands
+        // are pinned at the ceiling
+        let q_fp = qlen.saturating_mul(1 << FRAC_BITS).min(u32::MAX as u64);
+        let next = if i.alpha == KNOB_SCALE {
+            q_fp
+        } else {
+            // convex combination of two values ≤ u32::MAX stays ≤ u32::MAX
+            ((i.alpha as u128 * q_fp as u128
+                + (KNOB_SCALE - i.alpha) as u128 * dec.load(Ordering::Relaxed) as u128)
+                / KNOB_SCALE as u128) as u64
+        };
+        dec.store(next, Ordering::Relaxed);
+        self.refresh_flags();
+        // marked only after the refresh: the refresh that completes
+        // warm-up must itself still use the total rule, so the band
+        // engages on a clean full-view slate
+        i.seen[node].store(true, Ordering::Relaxed);
+    }
+
+    /// Re-evaluate the overload flags against the current decayed mean.
+    ///
+    /// Until every node has reported once: the total above-mean rule
+    /// (`d·n > Σd`), exactly the pre-signal classification — the band
+    /// must not freeze warm-up-order transients. Afterwards: on above
+    /// `mean·(1+h)`, off at or below `mean·(1-h)`, kept inside the band.
+    /// With `h = 0` the two rules coincide (on iff strictly above the
+    /// mean), which is what makes [`SignalConfig::legacy`] bit-compatible
+    /// with the old per-redistribute flag computation. Exact integer
+    /// comparisons (`d·n·S` vs `Σd·(S±h)`), no float rounding.
+    fn refresh_flags(&self) {
+        let i = &*self.inner;
+        let n = i.decayed.len() as u128;
+        let ds: Vec<u64> = i.decayed.iter().map(|d| d.load(Ordering::Relaxed)).collect();
+        let sum: u128 = ds.iter().map(|&d| d as u128).sum();
+        let banded = i.seen.iter().all(|s| s.load(Ordering::Relaxed));
+        for (node, &d) in ds.iter().enumerate() {
+            let lhs = d as u128 * n * KNOB_SCALE as u128;
+            if !banded {
+                i.flags[node].store(lhs > sum * KNOB_SCALE as u128, Ordering::Relaxed);
+            } else if lhs > sum * i.high as u128 {
+                i.flags[node].store(true, Ordering::Relaxed);
+            } else if lhs <= sum * i.low as u128 {
+                i.flags[node].store(false, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Last raw reported queue length.
+    pub fn get(&self, node: usize) -> u64 {
+        self.inner.raw.get(node).map_or(0, |a| a.load(Ordering::Relaxed))
+    }
+
+    /// Raw queue lengths.
+    pub fn to_vec(&self) -> Vec<u64> {
+        self.inner.raw.iter().map(|a| a.load(Ordering::Relaxed)).collect()
+    }
+
+    /// EWMA-decayed load, `FRAC_BITS` fixed point, saturated at
+    /// `u32::MAX` (the compiled-lane width). Under the legacy config
+    /// this is exactly `get(node) << FRAC_BITS` for any realistic qlen.
+    pub fn decayed(&self, node: usize) -> u64 {
+        self.inner.decayed.get(node).map_or(0, |a| a.load(Ordering::Relaxed))
+    }
+
+    /// Decayed loads (fixed point).
+    pub fn decayed_vec(&self) -> Vec<u64> {
+        self.inner.decayed.iter().map(|a| a.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Current hysteresis overload flag of `node`.
+    pub fn overloaded(&self, node: usize) -> bool {
+        self.inner.flags.get(node).is_some_and(|f| f.load(Ordering::Relaxed))
+    }
+
+    /// All hysteresis overload flags.
+    pub fn flags_vec(&self) -> Vec<bool> {
+        self.inner.flags.iter().map(|f| f.load(Ordering::Relaxed)).collect()
+    }
+
+    /// The migration-gain guard: may a key move from `from` to `to`?
+    /// `true` when the guard is disabled (`min_gain = 0`, the legacy
+    /// unconditional re-homing) or when `to`'s decayed load undercuts
+    /// `from`'s by at least the configured fraction.
+    pub fn migration_gain_ok(&self, from: usize, to: usize) -> bool {
+        let g = self.inner.min_gain;
+        if g == 0 {
+            return true;
+        }
+        let df = self.decayed(from) as u128;
+        let dt = self.decayed(to) as u128;
+        dt * KNOB_SCALE as u128 <= df * (KNOB_SCALE - g) as u128
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FP: u64 = 1 << FRAC_BITS;
+
+    #[test]
+    fn legacy_signal_mirrors_raw_loads() {
+        let s = LoadSignal::new(4);
+        for (n, q) in [(0u64, 40u64), (1, 7), (2, 6), (3, 5)].map(|(n, q)| (n as usize, q)) {
+            s.set(n, q);
+        }
+        assert_eq!(s.to_vec(), vec![40, 7, 6, 5]);
+        assert_eq!(s.decayed_vec(), vec![40 * FP, 7 * FP, 6 * FP, 5 * FP]);
+        // above-mean classification, exactly like the old overload_flags
+        assert_eq!(s.flags_vec(), vec![true, false, false, false]);
+        // legacy guard is disabled: any move is admissible
+        assert!(s.migration_gain_ok(3, 0));
+    }
+
+    #[test]
+    fn ewma_decays_toward_observations() {
+        let cfg = SignalConfig { decay_alpha: 0.5, ..SignalConfig::legacy() };
+        let s = LoadSignal::with_config(2, &cfg);
+        s.set(0, 100);
+        assert_eq!(s.decayed(0), 50 * FP, "first sample: α·q");
+        s.set(0, 100);
+        assert_eq!(s.decayed(0), 75 * FP, "converging toward 100");
+        s.set(0, 0);
+        assert_eq!(s.decayed(0), 75 * FP / 2, "decaying back down");
+        assert_eq!(s.get(0), 0, "raw lane tracks the instantaneous value");
+    }
+
+    #[test]
+    fn ewma_contracts_toward_the_observed_value() {
+        // |d' - q_fp| <= |d - q_fp| for every update, including with
+        // integer truncation — the property props.rs fuzzes
+        let cfg = SignalConfig { decay_alpha: 0.3, ..SignalConfig::legacy() };
+        let s = LoadSignal::with_config(1, &cfg);
+        s.set(0, 1000);
+        let mut prev = s.decayed(0);
+        for _ in 0..50 {
+            s.set(0, 10);
+            let d = s.decayed(0);
+            let target = 10 * FP;
+            assert!(d.abs_diff(target) <= prev.abs_diff(target));
+            prev = d;
+        }
+    }
+
+    #[test]
+    fn hysteresis_band_keeps_flags_inside() {
+        let cfg = SignalConfig {
+            decay_alpha: 1.0,
+            hysteresis: 0.5,
+            min_gain: 0.0,
+        };
+        let s = LoadSignal::with_config(4, &cfg);
+        for n in 0..4 {
+            s.set(n, 10);
+        }
+        // warm-up uses the total above-mean rule (the band would freeze
+        // reporting-order transients), so uniform load ends all-clear
+        assert_eq!(s.flags_vec(), vec![false; 4]);
+        s.set(0, 28); // mean 14.5: 28 > 21.75 → on (band is live now)
+        assert!(s.overloaded(0));
+        s.set(0, 12); // mean 10.5: 12 inside (5.25, 15.75] → stays on
+        assert!(s.overloaded(0), "inside the band the flag must stick");
+        s.set(0, 4); // mean 8.5: 4 < 4.25 → off
+        assert!(!s.overloaded(0));
+        s.set(0, 12); // back inside the band → stays off
+        assert!(!s.overloaded(0), "re-entering the band must not re-flag");
+    }
+
+    #[test]
+    fn migration_gain_guard_blocks_lateral_moves() {
+        let cfg = SignalConfig {
+            decay_alpha: 1.0,
+            hysteresis: 0.0,
+            min_gain: 0.25,
+        };
+        let s = LoadSignal::with_config(2, &cfg);
+        s.set(0, 100);
+        s.set(1, 80);
+        assert!(!s.migration_gain_ok(0, 1), "80 > 75 = 100·(1-0.25)");
+        s.set(1, 75);
+        assert!(s.migration_gain_ok(0, 1), "exactly the promised gain");
+        s.set(1, 100);
+        assert!(!s.migration_gain_ok(0, 1), "lateral move rejected");
+    }
+
+    #[test]
+    fn saturating_arithmetic_on_huge_loads() {
+        // the decayed lane saturates at the compiled route programs' u32
+        // width, so scalar and compiled comparisons agree even pinned at
+        // the ceiling
+        let s = LoadSignal::new(2);
+        s.set(0, u64::MAX);
+        assert_eq!(s.decayed(0), u32::MAX as u64, "saturates at the compiled width");
+        assert_eq!(s.get(0), u64::MAX, "raw lane keeps the full value");
+        let cfg = SignalConfig { decay_alpha: 0.5, ..SignalConfig::legacy() };
+        let s = LoadSignal::with_config(1, &cfg);
+        s.set(0, u64::MAX);
+        s.set(0, u64::MAX);
+        let d = s.decayed(0);
+        assert!(d > 0 && d <= u32::MAX as u64, "no overflow wraparound");
+    }
+
+    #[test]
+    fn warmup_uses_total_rule_until_everyone_reported() {
+        // with the band live from the start, the first reporter (briefly
+        // carrying ALL observed load) would be flagged and uniform load
+        // could never release it — warm-up must classify totally
+        let cfg = SignalConfig {
+            decay_alpha: 1.0,
+            hysteresis: 0.5,
+            min_gain: 0.0,
+        };
+        let s = LoadSignal::with_config(3, &cfg);
+        s.set(0, 10);
+        assert!(s.overloaded(0), "sole reporter carries all observed load");
+        s.set(1, 10);
+        s.set(2, 10);
+        assert_eq!(s.flags_vec(), vec![false; 3], "full uniform view is clear");
+        // the band engages only after the completing refresh: a later
+        // in-band wobble no longer rewrites flags
+        s.set(0, 13);
+        assert!(!s.overloaded(0), "13 is inside the band (5.5, 16.5]");
+    }
+
+    #[test]
+    fn out_of_range_nodes_ignored() {
+        let s = LoadSignal::new(2);
+        s.set(7, 100); // elastic scale-out beyond the initial topology
+        assert_eq!(s.to_vec(), vec![0, 0]);
+        assert_eq!(s.get(7), 0);
+        assert_eq!(s.decayed(7), 0);
+        assert!(!s.overloaded(7));
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(SignalConfig::default().validate().is_ok());
+        assert!(SignalConfig::legacy().validate().is_ok());
+        let bad = |f: fn(&mut SignalConfig)| {
+            let mut c = SignalConfig::default();
+            f(&mut c);
+            c.validate().is_err()
+        };
+        assert!(bad(|c| c.decay_alpha = 0.0));
+        assert!(bad(|c| c.decay_alpha = 1.5));
+        assert!(bad(|c| c.hysteresis = -0.1));
+        assert!(bad(|c| c.min_gain = 1.0));
+        assert!(bad(|c| c.min_gain = -0.1));
+    }
+
+    #[test]
+    fn clones_share_the_signal() {
+        let a = LoadSignal::new(2);
+        let b = a.clone();
+        a.set(1, 9);
+        assert_eq!(b.get(1), 9);
+        assert_eq!(b.decayed(1), 9 * FP);
+    }
+}

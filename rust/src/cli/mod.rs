@@ -42,6 +42,9 @@ OPTIONS (run):
                                                              [default: doubling]
   --rounds N        max LB rounds per reducer                [default: 1]
   --tau F           Eq.1 threshold τ                         [default: 0.2]
+  --decay-alpha F   EWMA weight of new load samples (0,1]    [default: 0.5]
+  --hysteresis F    overload-flag band around the mean       [default: 0.25]
+  --min-gain F      min fractional gain to re-home a key     [default: 0.1]
   --mappers N / --reducers N                                 [default: 4/4]
   --driver D        sim|threads                              [default: sim]
   --seed N          sim schedule seed                        [default: 0]
@@ -112,6 +115,15 @@ pub fn parse(argv: &[String]) -> crate::Result<Command> {
             }
             if let Some(v) = args.take_opt_parse("tau")? {
                 cfg.tau = v;
+            }
+            if let Some(v) = args.take_opt_parse("decay-alpha")? {
+                cfg.signal.decay_alpha = v;
+            }
+            if let Some(v) = args.take_opt_parse("hysteresis")? {
+                cfg.signal.hysteresis = v;
+            }
+            if let Some(v) = args.take_opt_parse("min-gain")? {
+                cfg.signal.min_gain = v;
             }
             if let Some(v) = args.take_opt_parse("mappers")? {
                 cfg.mappers = v;
@@ -185,7 +197,9 @@ pub fn execute(cmd: Command) -> crate::Result<i32> {
         }
         Command::Workloads => {
             let (rh, rd) = paperwl::initial_rings();
-            let mut t = Table::new(["workload", "items", "distinct", "S halving", "S doubling", "construction"]);
+            let mut t = Table::new([
+                "workload", "items", "distinct", "S halving", "S doubling", "construction",
+            ]);
             for w in paperwl::all() {
                 t.row([
                     w.name.clone(),
@@ -256,9 +270,45 @@ fn cell_cfg(strategy: Strategy, driver: DriverKind, lb: bool, max_rounds: u32) -
 }
 
 /// Run one cell over seeds `0..seeds` (the paper's 3-run protocol).
-fn seed_sweep(cfg: PipelineConfig, items: &[String], seeds: usize) -> crate::Result<Vec<RunReport>> {
+fn seed_sweep(
+    cfg: PipelineConfig,
+    items: &[String],
+    seeds: usize,
+) -> crate::Result<Vec<RunReport>> {
     let seed_list: Vec<u64> = (0..seeds as u64).collect();
     Pipeline::wordcount(cfg).run_seeds(items, &seed_list)
+}
+
+/// Everything one experiment cell measures: mean skew (with variance),
+/// mean forwarded messages and mean redistribution (migration) count —
+/// the column the WL3 ping-pong reduction is gated on.
+#[derive(Clone, Copy, Debug)]
+pub struct CellStats {
+    pub skew: f64,
+    pub skew_var: f64,
+    pub forwarded: f64,
+    pub migrations: f64,
+}
+
+/// Run one experiment cell and collect its [`CellStats`].
+pub fn cell_stats(
+    w: &Workload,
+    strategy: Strategy,
+    driver: DriverKind,
+    lb: bool,
+    max_rounds: u32,
+    seeds: usize,
+) -> crate::Result<CellStats> {
+    let reports = seed_sweep(cell_cfg(strategy, driver, lb, max_rounds), &w.items, seeds)?;
+    let s = Summary::from_slice(&reports.iter().map(RunReport::skew).collect::<Vec<_>>());
+    let n = reports.len().max(1) as f64;
+    let mean = |f: fn(&RunReport) -> u64| reports.iter().map(|r| f(r) as f64).sum::<f64>() / n;
+    Ok(CellStats {
+        skew: s.mean(),
+        skew_var: s.variance(),
+        forwarded: mean(RunReport::total_forwarded),
+        migrations: mean(RunReport::migrations),
+    })
 }
 
 /// Mean skew (and variance) of a workload under a strategy / rounds cap
@@ -270,10 +320,8 @@ pub fn mean_skew(
     max_rounds: u32,
     seeds: usize,
 ) -> crate::Result<(f64, f64)> {
-    let cfg = cell_cfg(strategy, DriverKind::Sim, lb, max_rounds);
-    let reports = seed_sweep(cfg, &w.items, seeds)?;
-    let s = Summary::from_slice(&reports.iter().map(RunReport::skew).collect::<Vec<_>>());
-    Ok((s.mean(), s.variance()))
+    let c = cell_stats(w, strategy, DriverKind::Sim, lb, max_rounds, seeds)?;
+    Ok((c.skew, c.skew_var))
 }
 
 /// One table1 cell: mean skew plus mean forwarded-message count.
@@ -285,28 +333,28 @@ pub fn strategy_stats(
     max_rounds: u32,
     seeds: usize,
 ) -> crate::Result<(f64, f64)> {
-    let reports = seed_sweep(cell_cfg(strategy, driver, lb, max_rounds), &w.items, seeds)?;
-    let s = Summary::from_slice(&reports.iter().map(RunReport::skew).collect::<Vec<_>>());
-    let fwd = reports.iter().map(|r| r.total_forwarded() as f64).sum::<f64>()
-        / reports.len().max(1) as f64;
-    Ok((s.mean(), fwd))
+    let c = cell_stats(w, strategy, driver, lb, max_rounds, seeds)?;
+    Ok((c.skew, c.forwarded))
 }
 
 /// Reproduce Table 1 (Experiment 1): S with/without LB for WL1–WL5 ×
 /// the selected strategies × both drivers, ≤ 1 LB round, mean over
-/// seeds, with the mean forwarded-message count of the LB runs (the
-/// consistency cost the ROADMAP asks to compare across router families).
+/// seeds, with the mean forwarded-message count and the redistribution
+/// (migration) count of the LB runs — the latter is how the WL3
+/// ping-pong reduction from the decayed+hysteresis signal is measured.
 pub fn table1(seeds: usize, strategies: &[Strategy]) -> crate::Result<String> {
     let mut out = String::from(
-        "Experiment 1 (Table 1): skew S and forwarded messages, no-LB vs LB \
-         (≤1 round/reducer)\n",
+        "Experiment 1 (Table 1): skew S, forwarded messages and migrations, \
+         no-LB vs LB (≤1 round/reducer)\n",
     );
-    let mut t = Table::new(["Workload", "Method", "Driver", "No LB", "With LB", "Δ", "fwd (LB)"]);
+    let mut t = Table::new([
+        "Workload", "Method", "Driver", "No LB", "With LB", "Δ", "fwd (LB)", "migr (LB)",
+    ]);
     for w in paperwl::all() {
         for &strategy in strategies {
             for driver in [DriverKind::Sim, DriverKind::Threads] {
-                let (s_nolb, _) = strategy_stats(&w, strategy, driver, false, 1, seeds)?;
-                let (s_lb, fwd_lb) = strategy_stats(&w, strategy, driver, true, 1, seeds)?;
+                let nolb = cell_stats(&w, strategy, driver, false, 1, seeds)?;
+                let lb = cell_stats(&w, strategy, driver, true, 1, seeds)?;
                 t.row([
                     w.name.clone(),
                     strategy.to_string(),
@@ -314,10 +362,11 @@ pub fn table1(seeds: usize, strategies: &[Strategy]) -> crate::Result<String> {
                         DriverKind::Sim => "sim".to_string(),
                         DriverKind::Threads => "threads".to_string(),
                     },
-                    f2(s_nolb),
-                    f2(s_lb),
-                    delta2(s_nolb - s_lb),
-                    format!("{fwd_lb:.1}"),
+                    f2(nolb.skew),
+                    f2(lb.skew),
+                    delta2(nolb.skew - lb.skew),
+                    format!("{:.1}", lb.forwarded),
+                    format!("{:.1}", lb.migrations),
                 ]);
             }
         }
@@ -429,6 +478,29 @@ mod tests {
     fn parse_run_probe_strategy() {
         match parse(&sv(&["run", "--strategy", "twochoices", "--quiet"])).unwrap() {
             Command::Run(o) => assert_eq!(o.cfg.strategy, Strategy::TwoChoices),
+            _ => panic!("expected Run"),
+        }
+    }
+
+    #[test]
+    fn parse_run_signal_knobs() {
+        let cmd = parse(&sv(&[
+            "run",
+            "--decay-alpha",
+            "0.3",
+            "--hysteresis",
+            "0.4",
+            "--min-gain",
+            "0.2",
+            "--quiet",
+        ]))
+        .unwrap();
+        match cmd {
+            Command::Run(o) => {
+                assert!((o.cfg.signal.decay_alpha - 0.3).abs() < 1e-12);
+                assert!((o.cfg.signal.hysteresis - 0.4).abs() < 1e-12);
+                assert!((o.cfg.signal.min_gain - 0.2).abs() < 1e-12);
+            }
             _ => panic!("expected Run"),
         }
     }

@@ -173,7 +173,8 @@ impl<E: ReduceExecutor> CostlyReduce<E> {
 impl<E: ReduceExecutor> ReduceExecutor for CostlyReduce<E> {
     fn reduce(&mut self, rec: Record) {
         if self.cost_us > 0 {
-            let deadline = std::time::Instant::now() + std::time::Duration::from_micros(self.cost_us);
+            let deadline =
+                std::time::Instant::now() + std::time::Duration::from_micros(self.cost_us);
             while std::time::Instant::now() < deadline {
                 std::hint::spin_loop();
             }

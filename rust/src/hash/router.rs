@@ -36,43 +36,20 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
+use crate::balancer::signal::{LoadSignal, SignalConfig};
+
 use super::murmur3::{murmur3_x86_32, murmur3_x86_32_seed};
 use super::ring::{Ring, Token};
 
-/// Live per-node load view (last reported queue lengths), shared between
-/// the balancer (writer) and load-aware routers (readers). Lock-free.
-#[derive(Clone, Debug)]
-pub struct Loads {
-    inner: Arc<Vec<AtomicU64>>,
-}
-
-impl Loads {
-    pub fn new(nodes: usize) -> Self {
-        Loads {
-            inner: Arc::new((0..nodes).map(|_| AtomicU64::new(0)).collect()),
-        }
-    }
-
-    pub fn nodes(&self) -> usize {
-        self.inner.len()
-    }
-
-    /// Record node load. Out-of-range nodes (elastic scale-out beyond the
-    /// initial topology) are ignored — token routing never consults loads.
-    pub fn set(&self, node: usize, qlen: u64) {
-        if let Some(a) = self.inner.get(node) {
-            a.store(qlen, Ordering::Relaxed);
-        }
-    }
-
-    pub fn get(&self, node: usize) -> u64 {
-        self.inner.get(node).map_or(0, |a| a.load(Ordering::Relaxed))
-    }
-
-    pub fn to_vec(&self) -> Vec<u64> {
-        self.inner.iter().map(|a| a.load(Ordering::Relaxed)).collect()
-    }
-}
+/// The live per-node load view routers consult — since the signal
+/// subsystem this *is* the [`LoadSignal`]: the balancer writes raw queue
+/// lengths into it, routers read the EWMA-decayed values
+/// ([`LoadSignal::decayed`]), the hysteresis overload flags
+/// ([`LoadSignal::flags_vec`]) and the migration-gain guard
+/// ([`LoadSignal::migration_gain_ok`]). A bare [`Loads::new`] carries the
+/// legacy (unsmoothed) configuration, so load values and flags are
+/// bit-compatible with the raw-load era.
+pub type Loads = LoadSignal;
 
 /// What one `redistribute` call changed — the routers' common currency
 /// for events, metrics and the zero-churn property tests.
@@ -120,8 +97,10 @@ pub enum SnapshotState {
     TokenRing { tokens: Vec<Token> },
     /// Multi-probe family (`route_probe` program): node ring positions
     /// sorted by `(hash, node)`, the probe count, and the per-node state
-    /// frozen at the last redistribute — the shed flags routing consults
-    /// plus the raw load weights they were derived from (diagnostics).
+    /// frozen at the last redistribute — the hysteresis shed flags
+    /// routing consults plus the EWMA-decayed load weights
+    /// ([`FRAC_BITS`](crate::balancer::signal::FRAC_BITS) fixed point)
+    /// they were frozen alongside (diagnostics).
     Probe {
         position_hashes: Vec<u32>,
         position_nodes: Vec<u32>,
@@ -131,9 +110,10 @@ pub enum SnapshotState {
     },
     /// Two-choices family (`route_assign` program): the sticky
     /// `(key_hash, owner)` table sorted by key hash — the basis of an
-    /// ownership diff across a repartition — plus the per-node loads
-    /// frozen at snapshot time, which resolve keys *not yet* in the
-    /// table by the same first-sight rule the scalar router applies.
+    /// ownership diff across a repartition — plus the per-node
+    /// EWMA-decayed loads (fixed point) frozen at snapshot time, which
+    /// resolve keys *not yet* in the table by the same first-sight rule
+    /// the scalar router applies.
     Assignment {
         assignments: Vec<(u32, u32)>,
         loads: Vec<u64>,
@@ -409,22 +389,27 @@ pub fn two_choices_candidates(hash: u32, nodes: usize) -> (usize, usize) {
 /// shed-from-the-hot-nodes classification keeps the classic MPCH
 /// distance spread among the acceptable candidates.
 ///
-/// `redistribute` moves **zero tokens**: it re-freezes the weight vector
-/// from the live load view and re-derives the overload flags (load
-/// strictly above the mean). Freezing (rather than consulting live loads
-/// per route) keeps ownership a pure function of the epoch — the
-/// forwarding check and the §7 ownership diff stay stable between LB
-/// events.
+/// `redistribute` moves **zero tokens**: it re-freezes the decayed
+/// weight vector and the *hysteresis* overload flags from the live
+/// [`LoadSignal`] (under the legacy signal config the flags degenerate to
+/// the old strictly-above-mean classification). Freezing (rather than
+/// consulting live loads per route) keeps ownership a pure function of
+/// the epoch — the forwarding check and the §7 ownership diff stay
+/// stable between LB events. Because the frozen flags come from the
+/// banded signal, a reducer must cross distinct high/low watermarks for
+/// its shed flag to flip, which is what stops the shed set (and with it
+/// the keyspace) from ping-ponging on adversarial drift.
 #[derive(Clone)]
 pub struct MultiProbeRouter {
     /// Node positions sorted by `(hash, node)`.
     position_hashes: Vec<u32>,
     position_nodes: Vec<u32>,
     probes: u32,
-    /// Per-node load weights frozen at the last redistribute (snapshot /
-    /// diagnostics; routing consults only the derived flags).
+    /// Per-node decayed load weights (fixed point) frozen at the last
+    /// redistribute (snapshot / diagnostics; routing consults only the
+    /// frozen flags).
     weights: Vec<u64>,
-    /// Frozen per-node overload flags (`load > mean(loads)`).
+    /// Hysteresis overload flags frozen at the last redistribute.
     overloaded: Vec<bool>,
     epoch: u64,
 }
@@ -445,14 +430,6 @@ impl MultiProbeRouter {
             overloaded: vec![false; nodes],
             epoch: 1,
         }
-    }
-
-    /// Nodes whose load sits strictly above the mean of `loads`.
-    fn overload_flags(loads: &[u64]) -> Vec<bool> {
-        let n = loads.len().max(1) as u128;
-        let sum: u128 = loads.iter().map(|&l| l as u128).sum();
-        // load > mean  ⇔  load * n > sum  (exact, no float rounding)
-        loads.iter().map(|&l| (l as u128) * n > sum).collect()
     }
 }
 
@@ -480,13 +457,14 @@ impl Router for MultiProbeRouter {
     }
 
     fn redistribute(&mut self, _target: usize, loads: &Loads) -> RouteDelta {
-        let mut fresh = loads.to_vec();
-        fresh.resize(self.weights.len(), 0);
-        let flags = Self::overload_flags(&fresh);
+        let mut flags = loads.flags_vec();
+        flags.resize(self.weights.len(), false);
         if flags == self.overloaded {
             // same shed set ⇒ identical routing: a no-op, not a new epoch
             return RouteDelta::unchanged();
         }
+        let mut fresh = loads.decayed_vec();
+        fresh.resize(self.weights.len(), 0);
         self.weights = fresh;
         self.overloaded = flags;
         self.epoch += 1;
@@ -521,13 +499,17 @@ const TWO_CHOICES_SEEDS: [u32; 2] = [0x517c_c1b7, 0x9e37_79b9];
 /// Per-key power of two choices with a sticky assignment table.
 ///
 /// Each key hash has two candidate nodes; the first route of a key picks
-/// the currently less-loaded candidate and *records* it. Every later
-/// route — including the reducer's ownership check and the §7 ownership
-/// diff — returns the recorded owner, so a key's state never splits
-/// across nodes (the merge-correctness guard). `redistribute` re-homes
-/// roughly every other key of the overloaded node to its alternate
-/// candidate; under StateForward the normal epoch machinery then ships
-/// the moved keys' state.
+/// the candidate with the lower *decayed* load and *records* it. Every
+/// later route — including the reducer's ownership check and the §7
+/// ownership diff — returns the recorded owner, so a key's state never
+/// splits across nodes (the merge-correctness guard). `redistribute`
+/// re-homes roughly every other key of the overloaded node to its
+/// alternate candidate, but only keys whose move clears the signal's
+/// migration-gain guard ([`LoadSignal::migration_gain_ok`]): a re-home
+/// that would land on a candidate not meaningfully colder than the
+/// source is skipped, which is what stops a hot key from bouncing
+/// between its two candidates on adversarial drift. Under StateForward
+/// the normal epoch machinery then ships the moved keys' state.
 ///
 /// The table is shared (`Arc`) across [`Router::clone_router`] clones, so
 /// per-actor route caches all see one consistent assignment.
@@ -585,7 +567,7 @@ impl Router for TwoChoicesRouter {
         let mut map = self.assignments.write().unwrap();
         // entry(): a racing first-router wins; we adopt its choice
         let n = *map.entry(hash).or_insert_with(|| {
-            if loads.get(c2) < loads.get(c1) {
+            if loads.decayed(c2) < loads.decayed(c1) {
                 c2 as u32
             } else {
                 c1 as u32
@@ -594,7 +576,7 @@ impl Router for TwoChoicesRouter {
         n as usize
     }
 
-    fn redistribute(&mut self, target: usize, _loads: &Loads) -> RouteDelta {
+    fn redistribute(&mut self, target: usize, loads: &Loads) -> RouteDelta {
         let mut map = self.assignments.write().unwrap();
         let pinned: Vec<u32> = map
             .iter()
@@ -612,6 +594,12 @@ impl Router for TwoChoicesRouter {
             if alt == target {
                 continue; // both candidates collide on the target
             }
+            if !loads.migration_gain_ok(target, alt) {
+                // the alternate is not meaningfully colder than the
+                // source: moving would at best trade places (and at worst
+                // ping-pong the key back next round)
+                continue;
+            }
             map.insert(*k, alt as u32);
             moved += 1;
         }
@@ -628,7 +616,10 @@ impl Router for TwoChoicesRouter {
     }
 
     fn snapshot(&self, loads: &Loads) -> RouteSnapshot {
-        let mut frozen = loads.to_vec();
+        // freeze the *decayed* view — the very values route() consults
+        // for first sights, so batch routing over the snapshot stays
+        // bit-identical to the scalar router at this epoch
+        let mut frozen = loads.decayed_vec();
         frozen.resize(self.nodes, 0);
         RouteSnapshot {
             router: self.name(),
@@ -682,9 +673,22 @@ pub struct RouterHandle {
 }
 
 impl RouterHandle {
+    /// A handle whose load view carries the legacy (unsmoothed) signal —
+    /// bit-compatible with the raw-load era. The pipeline threads the
+    /// configured smoothing through [`Self::with_signal`] instead.
     pub fn new(router: Box<dyn Router>) -> Self {
+        Self::with_loads(router, Loads::new)
+    }
+
+    /// A handle whose load view is a [`LoadSignal`] configured with
+    /// `signal` (EWMA decay, hysteresis band, migration-gain guard).
+    pub fn with_signal(router: Box<dyn Router>, signal: &SignalConfig) -> Self {
+        Self::with_loads(router, |nodes| Loads::with_config(nodes, signal))
+    }
+
+    fn with_loads(router: Box<dyn Router>, mk: impl FnOnce(usize) -> Loads) -> Self {
         let epoch = router.epoch();
-        let loads = Loads::new(router.nodes());
+        let loads = mk(router.nodes());
         RouterHandle {
             inner: Arc::new(RwLock::new(router)),
             epoch: Arc::new(AtomicU64::new(epoch)),
@@ -1152,7 +1156,10 @@ mod tests {
         assert_eq!(snap.assignments().map(<[(u32, u32)]>::len), Some(1));
         match &snap.state {
             SnapshotState::Assignment { loads, .. } => {
-                assert_eq!(loads, &vec![0, 42, 0], "loads frozen into the snapshot")
+                // frozen values are the decayed signal in fixed point
+                // (legacy config: exactly raw << FRAC_BITS)
+                let fp = 1u64 << crate::balancer::signal::FRAC_BITS;
+                assert_eq!(loads, &vec![0, 42 * fp, 0], "decayed loads frozen");
             }
             other => panic!("expected Assignment state, got {other:?}"),
         }
@@ -1198,5 +1205,91 @@ mod tests {
         // the cold key's write-back sticks; the warm key keeps its owner
         assert_eq!(router.route(h_new, &loads), c1);
         assert_eq!(router.route(h_seen, &loads) as u32, seen_owner);
+    }
+
+    #[test]
+    fn multi_probe_redistribute_freezes_hysteresis_flags() {
+        // same observation sequence against both signal configs: one hot
+        // node flags and freezes, then mild drift around the mean — the
+        // banded signal keeps the shed set (no-op, no epoch burn) while
+        // the legacy above-mean signal churns it
+        let drive = |loads: &Loads, r: &mut MultiProbeRouter| {
+            for n in 0..4 {
+                loads.set(n, 10); // warm-up: uniform, all-clear flags
+            }
+            loads.set(0, 28); // node 0 goes hot → flagged either way
+            assert!(r.redistribute(0, loads).changed, "hot flag freezes");
+            let epoch = r.epoch();
+            // mild drift around the mean, hot node still clearly hot
+            loads.set(0, 12);
+            loads.set(2, 14);
+            (epoch, r.redistribute(0, loads).changed)
+        };
+
+        let banded = SignalConfig { decay_alpha: 1.0, hysteresis: 0.5, min_gain: 0.0 };
+        let loads = Loads::with_config(4, &banded);
+        let mut r = MultiProbeRouter::new(4, 3);
+        let (epoch, changed) = drive(&loads, &mut r);
+        assert!(!changed, "drift inside the band must not re-freeze");
+        assert_eq!(r.epoch(), epoch, "no-op keeps the epoch");
+
+        let raw = Loads::new(4);
+        let mut legacy = MultiProbeRouter::new(4, 3);
+        let (epoch, changed) = drive(&raw, &mut legacy);
+        assert!(changed, "legacy above-mean flags churn on the same drift");
+        assert!(legacy.epoch() > epoch);
+    }
+
+    #[test]
+    fn two_choices_min_gain_guard_blocks_lateral_rehomes() {
+        let cfg = SignalConfig { decay_alpha: 1.0, hysteresis: 0.0, min_gain: 0.5 };
+        let loads = Loads::with_config(4, &cfg);
+        let router = TwoChoicesRouter::new(4);
+        for k in keys(400) {
+            router.route(murmur3_x86_32(k.as_bytes()), &loads);
+        }
+        let target = (0..4).max_by_key(|&n| router.assigned_to(n)).unwrap();
+        // the target is hot but every alternate is nearly as hot: moving
+        // a key would merely trade places, so the guard rejects it all
+        for n in 0..4 {
+            loads.set(n, if n == target { 100 } else { 80 });
+        }
+        let mut r = router.clone();
+        assert!(
+            !r.redistribute(target, &loads).changed,
+            "gain guard must reject lateral moves"
+        );
+        // a genuinely cold alternate clears the guard
+        for n in 0..4 {
+            loads.set(n, if n == target { 100 } else { 10 });
+        }
+        let d = r.redistribute(target, &loads);
+        assert!(d.changed);
+        assert!(d.keys_reassigned > 0);
+    }
+
+    #[test]
+    fn two_choices_first_sight_uses_decayed_signal() {
+        let cfg = SignalConfig { decay_alpha: 0.25, hysteresis: 0.0, min_gain: 0.0 };
+        let loads = Loads::with_config(2, &cfg);
+        let router = TwoChoicesRouter::new(2);
+        // node 0 has a long hot history; node 1 one taller spike
+        for _ in 0..8 {
+            loads.set(0, 60);
+        }
+        loads.set(1, 70);
+        assert!(loads.decayed(0) > loads.decayed(1), "EWMA remembers history");
+        assert!(loads.get(0) < loads.get(1), "raw view says the opposite");
+        let mut differing = 0;
+        for k in keys(200) {
+            let h = murmur3_x86_32(k.as_bytes());
+            let (c1, c2) = two_choices_candidates(h, 2);
+            if c1 != c2 {
+                differing += 1;
+                // the decayed-cold candidate wins first sight
+                assert_eq!(router.route(h, &loads), 1);
+            }
+        }
+        assert!(differing > 50, "hash functions collapsed");
     }
 }

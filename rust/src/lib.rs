@@ -13,9 +13,13 @@
 //! multi-probe consistent hashing (zero token churn) and per-key
 //! power-of-two-choices. A load-balancer actor ([`balancer`]) watches
 //! per-reducer queue lengths and calls the router's redistribution when
-//! the paper's Eq. 1 predicate `Q_max > Q_s * (1 + tau)` fires. Records
-//! enqueued under an old partition scheme are *forwarded* by the dequeuing
-//! reducer, and reducer states are *merged* at the end of the run.
+//! the paper's Eq. 1 predicate `Q_max > Q_s * (1 + tau)` fires; the
+//! probe routers consume an adaptive load signal ([`balancer::signal`]:
+//! EWMA decay, hysteresis overload flags, migration-gain guard) instead
+//! of raw instantaneous loads, so repeated redistributions converge
+//! rather than ping-pong on adversarial drift. Records enqueued under an
+//! old partition scheme are *forwarded* by the dequeuing reducer, and
+//! reducer states are *merged* at the end of the run.
 //!
 //! ## Layers
 //!

@@ -69,6 +69,21 @@ impl RunReport {
         self.lb_events.len()
     }
 
+    /// Redistributions that actually changed the routing (every recorded
+    /// event did — no-op redistributes are not events). This is the
+    /// migration count `dpa table1` and the bench gate track: on
+    /// adversarial drift (WL3) a raw load signal makes it balloon
+    /// (ping-pong) while the decayed+hysteresis signal keeps it small.
+    pub fn migrations(&self) -> u64 {
+        self.lb_events.len() as u64
+    }
+
+    /// Keys explicitly re-homed across all events (two-choices family;
+    /// token churn families move keys implicitly instead).
+    pub fn keys_reassigned(&self) -> u64 {
+        self.lb_events.iter().map(|e| e.delta.keys_reassigned).sum()
+    }
+
     /// Throughput in reduced messages per wall second (threads driver).
     pub fn throughput(&self) -> f64 {
         let secs = self.wall.as_secs_f64();
@@ -190,5 +205,28 @@ mod tests {
     #[test]
     fn throughput_nan_without_wall() {
         assert!(sample().throughput().is_nan());
+    }
+
+    #[test]
+    fn migration_counters() {
+        let mut r = sample();
+        assert_eq!(r.migrations(), 0);
+        assert_eq!(r.keys_reassigned(), 0);
+        for moved in [2u64, 3] {
+            r.lb_events.push(LbEvent {
+                at: 0,
+                target: 0,
+                qlens: vec![],
+                epoch: 2,
+                strategy: Strategy::TwoChoices,
+                delta: RouteDelta {
+                    changed: true,
+                    keys_reassigned: moved,
+                    ..RouteDelta::default()
+                },
+            });
+        }
+        assert_eq!(r.migrations(), 2);
+        assert_eq!(r.keys_reassigned(), 5);
     }
 }

@@ -7,6 +7,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context};
 
+use crate::balancer::signal::SignalConfig;
 use crate::balancer::state_forward::ConsistencyMode;
 use crate::balancer::BalancerCore;
 use crate::config::Document;
@@ -77,6 +78,12 @@ pub struct PipelineConfig {
     pub min_trigger_qlen: usize,
     /// Min driver-time between LB events (sim: ticks; threads: µs).
     pub cooldown: u64,
+    /// The adaptive load-signal knobs (EWMA decay, hysteresis band,
+    /// migration-gain guard) the routers consume. The Eq. 1 *trigger*
+    /// keeps evaluating raw queue lengths — the paper's policy semantics
+    /// are untouched; the signal shapes what the probe routers freeze and
+    /// which key migrations two-choices admits.
+    pub signal: SignalConfig,
     /// Load report every N handled messages.
     pub report_interval: u64,
     /// Items per coordinator task.
@@ -111,6 +118,7 @@ impl Default for PipelineConfig {
             max_rounds: 1,
             min_trigger_qlen: 8,
             cooldown: 50,
+            signal: SignalConfig::default(),
             report_interval: 2,
             chunk_size: 10,
             queue_capacity: 1 << 16,
@@ -165,6 +173,15 @@ impl PipelineConfig {
                     self.min_trigger_qlen = doc.get_int(key).context("min_trigger_qlen")? as usize
                 }
                 "balancer.cooldown" => self.cooldown = doc.get_int(key).context("cooldown")? as u64,
+                "balancer.decay_alpha" => {
+                    self.signal.decay_alpha = doc.get_float(key).context("decay_alpha")?
+                }
+                "balancer.hysteresis" => {
+                    self.signal.hysteresis = doc.get_float(key).context("hysteresis")?
+                }
+                "balancer.min_gain" => {
+                    self.signal.min_gain = doc.get_float(key).context("min_gain")?
+                }
                 "balancer.report_interval" => {
                     self.report_interval = doc.get_int(key).context("report_interval")? as u64
                 }
@@ -172,7 +189,9 @@ impl PipelineConfig {
                     self.halving_init_tokens =
                         doc.get_int(key).context("halving_init_tokens")? as u32
                 }
-                "sim.map_cost" => self.sim_costs.map_cost = doc.get_int(key).context("map_cost")? as u64,
+                "sim.map_cost" => {
+                    self.sim_costs.map_cost = doc.get_int(key).context("map_cost")? as u64
+                }
                 "sim.reduce_cost" => {
                     self.sim_costs.reduce_cost = doc.get_int(key).context("reduce_cost")? as u64
                 }
@@ -225,6 +244,7 @@ impl PipelineConfig {
         if self.pop_timeout_ms == 0 {
             bail!("threads.pop_timeout_ms must be at least 1 (idle reducers would busy-spin)");
         }
+        self.signal.validate().map_err(anyhow::Error::msg)?;
         Ok(())
     }
 
@@ -237,13 +257,17 @@ impl PipelineConfig {
         }
     }
 
-    /// Construct the routing layer this configuration describes.
+    /// Construct the routing layer this configuration describes, with
+    /// its load view carrying the configured [`SignalConfig`].
     pub fn build_router(&self) -> RouterHandle {
-        RouterHandle::new(self.strategy.build_router(
-            self.reducers,
-            self.halving_init_tokens,
-            self.initial_tokens,
-        ))
+        RouterHandle::with_signal(
+            self.strategy.build_router(
+                self.reducers,
+                self.halving_init_tokens,
+                self.initial_tokens,
+            ),
+            &self.signal,
+        )
     }
 }
 
@@ -489,6 +513,53 @@ max_rounds = 3
         let mut cfg = PipelineConfig::default();
         cfg.apply_document(&doc).unwrap();
         assert_eq!(cfg.pop_timeout_ms, 7);
+    }
+
+    #[test]
+    fn signal_config_keys_round_trip() {
+        let doc = crate::config::parse(
+            "[balancer]\ndecay_alpha = 0.3\nhysteresis = 0.4\nmin_gain = 0.2\n",
+        )
+        .unwrap();
+        let mut cfg = PipelineConfig::default();
+        cfg.apply_document(&doc).unwrap();
+        assert!((cfg.signal.decay_alpha - 0.3).abs() < 1e-12);
+        assert!((cfg.signal.hysteresis - 0.4).abs() < 1e-12);
+        assert!((cfg.signal.min_gain - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn invalid_signal_configs_rejected() {
+        let mut cfg = PipelineConfig::default();
+        cfg.signal.decay_alpha = 0.0;
+        assert!(cfg.validate().is_err(), "α = 0 would freeze the signal");
+
+        let mut cfg = PipelineConfig::default();
+        cfg.signal.min_gain = 1.0;
+        assert!(cfg.validate().is_err(), "min_gain = 1 blocks every move");
+
+        // and through the document path, so typos fail loudly too
+        let doc = crate::config::parse("[balancer]\ndecay_alpha = 2.0\n").unwrap();
+        let mut cfg = PipelineConfig::default();
+        assert!(cfg.apply_document(&doc).is_err());
+    }
+
+    #[test]
+    fn build_router_threads_the_signal() {
+        let mut cfg = PipelineConfig::default();
+        cfg.strategy = Strategy::TwoChoices;
+        cfg.signal = crate::balancer::signal::SignalConfig {
+            decay_alpha: 0.5,
+            hysteresis: 0.0,
+            min_gain: 0.0,
+        };
+        let router = cfg.build_router();
+        router.loads().set(0, 100);
+        // half-weight EWMA instead of the raw mirror ⇒ the configured
+        // signal reached the router's load view
+        let fp = 1u64 << crate::balancer::signal::FRAC_BITS;
+        assert_eq!(router.loads().decayed(0), 50 * fp);
+        assert_eq!(router.loads().get(0), 100);
     }
 
     #[test]

@@ -444,6 +444,29 @@ mod tests {
     }
 
     #[test]
+    fn apply_report_feeds_the_load_signal() {
+        use crate::balancer::signal::{FRAC_BITS, SignalConfig};
+        let cfg = SignalConfig { decay_alpha: 0.5, hysteresis: 0.0, min_gain: 0.0 };
+        let router =
+            RouterHandle::with_signal(Strategy::TwoChoices.build_router(4, 8, None), &cfg);
+        let c = core(ConsistencyMode::MergeAtEnd, &router, vec![]);
+        let mut balancer =
+            BalancerCore::new(router.clone(), Strategy::TwoChoices, 0.2, 4, 1, 0)
+                .without_warmup();
+        // non-evaluating (idle) reports still feed the decayed signal the
+        // routers consume — both report kinds flow through observe()
+        for _ in 0..2 {
+            let e = c.apply_report(
+                &mut balancer,
+                LoadReport { reducer: 1, qlen: 100, at: 0, evaluate: false },
+            );
+            assert!(e.is_none(), "idle observations never trigger");
+        }
+        assert_eq!(router.loads().get(1), 100);
+        assert_eq!(router.loads().decayed(1), 75 << FRAC_BITS);
+    }
+
+    #[test]
     fn report_gating_follows_stage() {
         let router = RouterHandle::new(Strategy::Doubling.build_router(4, 8, None));
         let c = core(ConsistencyMode::StateForward, &router, vec![]);

@@ -104,8 +104,11 @@ pub enum SnapshotTensors {
         probes: i32,
     },
     /// `route_assign`: sorted assignment keys (padded `u32::MAX`),
-    /// owners, live count, frozen per-node loads (u32-saturated, padded
-    /// 0), node count.
+    /// owners, live count, frozen per-node decayed loads (fixed point,
+    /// padded 0), node count. The signal already saturates decayed
+    /// values at `u32::MAX`, so the u32 clamp here is a no-op and the
+    /// kernel's u32 comparisons match the scalar router's u64 ones in
+    /// every regime, including at the ceiling.
     Assignment {
         keys: Vec<u32>,
         owners: Vec<i32>,
@@ -729,6 +732,9 @@ mod tests {
         let handle = RouterHandle::new(StrategySpec::TwoChoices.build_router(3, 8, None));
         handle.route_key(b"warm");
         handle.loads().set(1, 7);
+        // the frozen loads are the decayed signal in fixed point (legacy
+        // signal: exactly raw << FRAC_BITS)
+        let fp = 1u32 << crate::balancer::signal::FRAC_BITS;
         match snapshot_tensors(&handle.snapshot(), &mini_manifest()).unwrap() {
             SnapshotTensors::Assignment { keys, owners, len, loads, nodes } => {
                 assert_eq!(len, 1);
@@ -736,7 +742,7 @@ mod tests {
                 assert_eq!(keys[0], crate::hash::murmur3_x86_32(b"warm"));
                 assert!(keys[1..].iter().all(|&k| k == u32::MAX), "padding");
                 assert!((owners[0] as usize) < 3);
-                assert_eq!(loads, vec![0, 7, 0, 0, 0, 0, 0, 0], "frozen, padded to P");
+                assert_eq!(loads, vec![0, 7 * fp, 0, 0, 0, 0, 0, 0], "frozen, padded to P");
             }
             other => panic!("expected Assignment tensors, got {other:?}"),
         }

@@ -182,7 +182,8 @@ impl SimDriver {
                             match core.pool.fetch() {
                                 Some(task) => {
                                     mapper_task[i] = Some((task, 0));
-                                    let c = jitter(&mut rng, p.costs.fetch_cost, p.costs.cost_jitter);
+                                    let c =
+                                        jitter(&mut rng, p.costs.fetch_cost, p.costs.cost_jitter);
                                     push(&mut heap, &mut seq, now + c, actor);
                                 }
                                 None => {

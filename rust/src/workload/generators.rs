@@ -73,7 +73,13 @@ pub fn hot_key(n_items: usize, hot_frac: f64, n_cold_keys: usize, seed: u64) -> 
 /// Adversarial: every key in the stream is owned by `node` under `ring`
 /// (distinct keys, so repartitioning *can* split the load). Panics if the
 /// pool has fewer than `distinct` keys on that node.
-pub fn adversarial(ring: &Ring, node: usize, n_items: usize, distinct: usize, seed: u64) -> Workload {
+pub fn adversarial(
+    ring: &Ring,
+    node: usize,
+    n_items: usize,
+    distinct: usize,
+    seed: u64,
+) -> Workload {
     let pool = key_pool();
     let owned: Vec<String> = pool
         .into_iter()

@@ -8,7 +8,6 @@
 // experiment configs override one default knob at a time (see lib.rs)
 #![allow(clippy::field_reassign_with_default)]
 
-
 use dpa::balancer::state_forward::ConsistencyMode;
 use dpa::hash::Strategy;
 use dpa::pipeline::{DriverKind, Pipeline, PipelineConfig};

@@ -5,9 +5,10 @@
 // experiment configs override one default knob at a time (see lib.rs)
 #![allow(clippy::field_reassign_with_default)]
 
-
+use dpa::balancer::signal::SignalConfig;
 use dpa::balancer::state_forward::ConsistencyMode;
-use dpa::hash::{Ring, SharedRing, Strategy};
+use dpa::balancer::BalancerCore;
+use dpa::hash::{Ring, RouterHandle, SharedRing, Strategy};
 use dpa::metrics::skew;
 use dpa::pipeline::{Pipeline, PipelineConfig};
 use dpa::workload::paperwl;
@@ -264,6 +265,102 @@ fn join_hazard_merge_at_end_vs_state_forwarding() {
             merged_matches < oracle_matches,
             "expected lost probes under merge-at-end ({merged_matches} vs {oracle_matches})"
         );
+    }
+}
+
+/// Solve for a hot key whose ownership actually *can* move under the
+/// given probe-router strategy: overload its owner on a throwaway
+/// (legacy-signal) router, redistribute, and check the route changed.
+/// WL3's adversarial property needs a movable key — an immovable one
+/// (e.g. two-choices candidates colliding) cannot ping-pong at all.
+fn movable_hot_key(strategy: Strategy) -> String {
+    dpa::workload::generators::key_pool()
+        .into_iter()
+        .find(|k| {
+            let h = RouterHandle::new(strategy.build_router(4, 8, None));
+            let owner = h.route_key(k.as_bytes());
+            for n in 0..4 {
+                h.loads().set(n, if n == owner { 50 } else { 1 });
+            }
+            h.redistribute(owner);
+            h.route_key(k.as_bytes()) != owner
+        })
+        .expect("key pool has a movable key for every probe router")
+}
+
+/// Drive the WL3 adversary against a balancer + probe router: whoever
+/// owns the hot key instantly becomes the hot reducer (queue 50), every
+/// other reducer drains to 1 — the exact drift that makes raw frozen
+/// loads chase the key around. Returns how many redistributions actually
+/// changed the routing.
+fn adversarial_drift_migrations(strategy: Strategy, signal: &SignalConfig, key: &str) -> usize {
+    let router = RouterHandle::with_signal(strategy.build_router(4, 8, None), signal);
+    let mut b =
+        BalancerCore::new(router.clone(), strategy, 0.2, 4, 100, 0).without_warmup();
+    let mut events = 0;
+    for t in 0..16u64 {
+        let owner = router.route_key(key.as_bytes());
+        for n in 0..4 {
+            if n != owner {
+                b.observe(n, 1);
+            }
+        }
+        if b.report(owner, 50, t).is_some() {
+            events += 1;
+        }
+    }
+    events
+}
+
+#[test]
+fn wl3_drift_hysteresis_cuts_ping_pong_migrations() {
+    // ISSUE 4 tentpole regression: under adversarial single-hot-key drift
+    // the frozen-raw-load behavior redistributes on (nearly) every policy
+    // evaluation — the signal inverts the instant the key moves — while
+    // the decayed + hysteresis + min-gain signal must produce strictly
+    // fewer migrations for BOTH probe-router families.
+    let smoothed = SignalConfig { decay_alpha: 0.2, hysteresis: 0.75, min_gain: 0.5 };
+    for strategy in [Strategy::MultiProbe { probes: 5 }, Strategy::TwoChoices] {
+        let key = movable_hot_key(strategy);
+        let raw = adversarial_drift_migrations(strategy, &SignalConfig::legacy(), &key);
+        let damped = adversarial_drift_migrations(strategy, &smoothed, &key);
+        assert!(raw >= 3, "{strategy}: the adversary did not ping-pong (raw = {raw})");
+        assert!(
+            damped < raw,
+            "{strategy}: hysteresis did not reduce migrations ({damped} !< {raw})"
+        );
+    }
+}
+
+#[test]
+fn wl3_pipeline_exact_under_legacy_and_smoothed_signal() {
+    // end-to-end: the full sim pipeline on the real WL3 stream stays
+    // exact under BOTH signal configurations — migrations (however many
+    // the drain dynamics allow) never lose or duplicate records, and the
+    // merged result is routing-invariant. The strict fewer-migrations
+    // inequality lives in the balancer-level test above, where the
+    // adversary is undiluted by cooldowns and queue-drain timing.
+    let w = paperwl::wl3();
+    for strategy in [Strategy::MultiProbe { probes: 5 }, Strategy::TwoChoices] {
+        let run = |signal: SignalConfig| {
+            let mut cfg = cfg_for(strategy);
+            cfg.signal = signal;
+            cfg.max_rounds = 8;
+            cfg.cooldown = 10;
+            Pipeline::wordcount(cfg).run(w.items.clone()).unwrap()
+        };
+        let raw = run(SignalConfig::legacy());
+        let damped = run(SignalConfig { decay_alpha: 0.2, hysteresis: 0.75, min_gain: 0.5 });
+        for r in [&raw, &damped] {
+            r.check_conservation().unwrap();
+            assert_eq!(r.total_processed(), 100, "{strategy}");
+            assert_eq!(r.result.len(), 1, "{strategy}: WL3 is a single key");
+            assert!(
+                r.migrations() <= 8 * 4,
+                "{strategy}: rounds cap bounds migrations"
+            );
+        }
+        assert_eq!(raw.result, damped.result, "{strategy}: result is routing-invariant");
     }
 }
 

@@ -6,7 +6,6 @@
 // experiment configs override one default knob at a time (see lib.rs)
 #![allow(clippy::field_reassign_with_default)]
 
-
 use dpa::balancer::policy::{LbPolicy, ThresholdPolicy};
 use dpa::hash::{murmur3_x86_32, Ring, RingOp, RouterHandle, Strategy, StrategySpec};
 use dpa::metrics::skew;
@@ -304,6 +303,75 @@ fn prop_token_ring_redistribute_moves_only_affected_keys() {
                 }
             }
         }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ewma_signal_bounded_and_contracting() {
+    // ISSUE 4 satellite: the decayed signal is (a) bounded by the
+    // observed queue lengths — it can never report load nobody had —
+    // and (b) monotone under decay: every update moves it (weakly)
+    // toward the observed value, integer truncation included
+    use dpa::balancer::signal::{FRAC_BITS, LoadSignal, SignalConfig};
+    forall("EWMA bounded by observations and contracting", 60, |g| {
+        let alpha = 0.05 + g.f64() * 0.95; // (0, 1]
+        let cfg = SignalConfig {
+            decay_alpha: alpha.min(1.0),
+            hysteresis: g.f64(),
+            min_gain: 0.0,
+        };
+        let s = LoadSignal::with_config(1, &cfg);
+        let mut max_seen = 0u64;
+        for _ in 0..g.usize_in(1, 40) {
+            let q = g.usize_in(0, 10_000) as u64;
+            max_seen = max_seen.max(q);
+            let before = s.decayed(0);
+            s.set(0, q);
+            let after = s.decayed(0);
+            let target = q << FRAC_BITS;
+            prop_assert!(
+                after <= max_seen << FRAC_BITS,
+                "decayed {after} exceeds max observed {max_seen} (α={alpha})"
+            );
+            prop_assert!(
+                after.abs_diff(target) <= before.abs_diff(target),
+                "update moved away from the observation: |{after}-{target}| > \
+                 |{before}-{target}| (α={alpha})"
+            );
+        }
+        // monotone decay: observing silence strictly drains the signal
+        let mut prev = s.decayed(0);
+        for _ in 0..200 {
+            s.set(0, 0);
+            let d = s.decayed(0);
+            prop_assert!(d <= prev, "decay increased the signal");
+            prop_assert!(d < prev || prev == 0, "positive signal failed to decay");
+            prev = d;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_migration_gain_guard_is_antisymmetric_on_skew() {
+    // if moving a→b clears a positive gain guard, moving b→a must not:
+    // a guard that admits both directions is exactly the ping-pong hazard
+    use dpa::balancer::signal::{LoadSignal, SignalConfig};
+    forall("min-gain guard admits at most one direction", 80, |g| {
+        let cfg = SignalConfig {
+            decay_alpha: 1.0,
+            hysteresis: 0.0,
+            min_gain: 0.01 + g.f64() * 0.9,
+        };
+        let s = LoadSignal::with_config(2, &cfg);
+        s.set(0, g.usize_in(1, 1000) as u64);
+        s.set(1, g.usize_in(1, 1000) as u64);
+        prop_assert!(
+            !(s.migration_gain_ok(0, 1) && s.migration_gain_ok(1, 0)),
+            "guard admitted both directions for loads {:?}",
+            s.to_vec()
+        );
         Ok(())
     });
 }

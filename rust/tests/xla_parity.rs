@@ -8,7 +8,6 @@
 // experiment configs override one default knob at a time (see lib.rs)
 #![allow(clippy::field_reassign_with_default)]
 
-
 use std::sync::Arc;
 
 use dpa::exec::builtin::{IdentityMap, WordCount};
@@ -135,6 +134,50 @@ fn compiled_route_parity_all_router_families_across_epochs() {
                 handle.loads().set(n, if n == target { 60 + round * 10 } else { 1 });
             }
             handle.redistribute(target);
+        }
+    }
+}
+
+#[test]
+fn compiled_route_parity_with_decayed_signal_snapshots() {
+    // ISSUE 4 tentpole: snapshots now freeze the EWMA-decayed loads
+    // (fractional fixed point) and the hysteresis shed flags. The
+    // compiled kernels must keep agreeing bit-for-bit with the scalar
+    // routers when the frozen tensors carry those decayed values —
+    // including flag sets with several reducers shed at once, which only
+    // hysteresis (sticky flags) produces.
+    use dpa::balancer::signal::SignalConfig;
+    use dpa::hash::{RouterHandle, StrategySpec};
+    let rt = runtime();
+    let keys = random_keys(300, 24, 0xDECA7);
+    let refs: Vec<&[u8]> = keys.iter().map(Vec::as_slice).collect();
+    let signal = SignalConfig { decay_alpha: 0.3, hysteresis: 0.5, min_gain: 0.2 };
+    for spec in [StrategySpec::MultiProbe { probes: 3 }, StrategySpec::TwoChoices] {
+        let handle = RouterHandle::with_signal(spec.build_router(4, 8, None), &signal);
+        for &k in refs.iter().take(100) {
+            handle.route_key(k);
+        }
+        for round in 0u64..4 {
+            // drive a drifting load history through the EWMA so the
+            // snapshot carries genuinely fractional decayed weights and
+            // accumulated (sticky) hysteresis flags
+            let hot = (round as usize) % 4;
+            for step in 0..3u64 {
+                for n in 0..4 {
+                    handle.loads().set(n, if n == hot { 40 + step * 20 } else { 2 });
+                }
+            }
+            handle.redistribute(hot);
+            let snap = handle.snapshot();
+            let routed = rt.route_batch_snapshot(&refs, &snap).unwrap();
+            for (k, (h, owner)) in keys.iter().zip(&routed) {
+                assert_eq!(*h, murmur3_x86_32(k), "{spec}");
+                assert_eq!(
+                    *owner,
+                    handle.route_hash(*h),
+                    "{spec} round {round} key {k:?}"
+                );
+            }
         }
     }
 }
