@@ -89,6 +89,7 @@ def programs():
                 spec((A,), i32),
                 spec((), i32),
                 spec((P,), u32),
+                spec((P,), i32),
                 spec((), i32),
             ),
         ),
@@ -125,7 +126,10 @@ def main() -> None:
         f.write(text)
     print(f"wrote {path} ({len(text)} chars)")
 
-    manifest = {"B": B, "W": W, "T": T, "V": V, "P": P, "K": K, "A": A}
+    # AV = route_assign ABI version: 2 added the live-node-id tensors
+    # (elastic membership); rust treats AV < 2 artifacts' route_assign as
+    # unsupported and routes two-choices scalar instead of shape-erroring
+    manifest = {"B": B, "W": W, "T": T, "V": V, "P": P, "K": K, "A": A, "AV": 2}
     mpath = os.path.join(args.out, "manifest.json")
     with open(mpath, "w") as f:
         json.dump(manifest, f)

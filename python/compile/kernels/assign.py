@@ -20,17 +20,23 @@ Contract (shared with `rust/src/runtime/programs.rs::snapshot_tensors`):
   trick the histogram kernel uses.
 - ``loads``: per-node **EWMA-decayed** loads frozen at snapshot time
   (``balancer::signal`` fixed point, ``FRAC_BITS = 8`` fractional bits;
-  u32-saturated on the rust side), padded to ``P``. The kernel only
-  compares them, so the fixed-point scale cancels — but the decayed
-  values are what the scalar router consults for first sights, which is
-  exactly why compiled and scalar routing stay bit-identical under the
-  smoothed signal.
-- ``nodes``: live node count; candidate ``i`` of a key hash is
-  ``murmur3(hash LE bytes, seed CAND_SEEDS[i]) % nodes``.
+  u32-saturated on the rust side), padded to ``P`` and indexed by node
+  **id**. The kernel only compares them, so the fixed-point scale
+  cancels — but the decayed values are what the scalar router consults
+  for first sights, which is exactly why compiled and scalar routing
+  stay bit-identical under the smoothed signal.
+- ``live_nodes``/``n_live``: the ascending **live node id** list, padded
+  to ``P`` with ``0``. Elastic membership retires ids without reusing
+  them, so the id space has gaps; candidate ``i`` of a key hash is
+  ``live_nodes[murmur3(hash LE bytes, seed CAND_SEEDS[i]) % n_live]`` —
+  with the identity list ``[0..n)`` this reduces to the fixed-membership
+  ``% nodes`` rule, bit for bit (rust:
+  ``hash::router::two_choices_candidates_in``).
 
 TPU shape notes: a ``(TB, A)`` compare + row-sum (VPU lanes, the
-histogram formulation) and three ``(TB,)`` gathers. ``interpret=True``:
-the CPU PJRT plugin cannot execute Mosaic custom-calls.
+histogram formulation) and a handful of ``(TB,)`` gathers.
+``interpret=True``: the CPU PJRT plugin cannot execute Mosaic
+custom-calls.
 """
 
 import functools
@@ -45,22 +51,25 @@ from .murmur3 import murmur3_u32x1_seeded
 CAND_SEEDS = (0x517CC1B7, 0x9E3779B9)
 
 
-def two_choices_candidates(h, nodes):
-    """The two candidate nodes of a key hash (vectorized)."""
-    n = jnp.asarray(nodes, jnp.uint32)
-    c1 = murmur3_u32x1_seeded(h, CAND_SEEDS[0]) % n
-    c2 = murmur3_u32x1_seeded(h, CAND_SEEDS[1]) % n
-    return c1.astype(jnp.int32), c2.astype(jnp.int32)
+def two_choices_candidates(h, live_nodes, n_live):
+    """The two candidate nodes of a key hash over the live id list
+    (vectorized): ``live_nodes[murmur_i(h) % n_live]``."""
+    n = jnp.asarray(n_live, jnp.uint32)
+    live_nodes = jnp.asarray(live_nodes, jnp.int32)
+    i1 = (murmur3_u32x1_seeded(h, CAND_SEEDS[0]) % n).astype(jnp.int32)
+    i2 = (murmur3_u32x1_seeded(h, CAND_SEEDS[1]) % n).astype(jnp.int32)
+    return live_nodes[i1], live_nodes[i2]
 
 
-def _kernel(hash_ref, key_ref, owner_ref, live_ref, load_ref, nodes_ref,
-            out_ref):
+def _kernel(hash_ref, key_ref, owner_ref, live_ref, load_ref, live_node_ref,
+            nlive_ref, out_ref):
     h = hash_ref[...]                       # (TB,) uint32 key hashes
     keys = key_ref[...]                     # (A,)  uint32 sorted table keys
     owners = owner_ref[...]                 # (A,)  int32 recorded owners
-    loads = load_ref[...]                   # (P,)  uint32 frozen loads
+    loads = load_ref[...]                   # (P,)  uint32 frozen loads (by id)
+    live_nodes = live_node_ref[...]         # (P,)  int32 live node ids
     live = live_ref[0]                      # int32 table entries
-    nodes = nodes_ref[0]                    # int32 node count
+    n_live = nlive_ref[0]                   # int32 live node count
     a_cap = keys.shape[0]
     in_table = jax.lax.broadcasted_iota(jnp.int32, (1, a_cap), 1) < live
 
@@ -71,18 +80,20 @@ def _kernel(hash_ref, key_ref, owner_ref, live_ref, load_ref, nodes_ref,
     idx_c = jnp.minimum(idx, a_cap - 1)
     hit = (idx < live) & (keys[idx_c] == h)
 
-    c1, c2 = two_choices_candidates(h, nodes)
+    c1, c2 = two_choices_candidates(h, live_nodes, n_live)
     fresh = jnp.where(loads[c2] < loads[c1], c2, c1)
     out_ref[...] = jnp.where(hit, owners[idx_c], fresh)
 
 
 @functools.partial(jax.jit, static_argnames=("block_b",))
-def assign_kernel(hashes, keys, owners, live, loads, nodes, *, block_b=64):
+def assign_kernel(hashes, keys, owners, live, loads, live_nodes, n_live, *,
+                  block_b=64):
     """Batched sticky-table owner lookup via ``pl.pallas_call``.
 
     ``hashes``: (B,) uint32; ``keys``/``owners``: (A,) padded sorted
-    table; ``loads``: (P,) frozen per-node loads; ``live``, ``nodes``:
-    scalar i32. B must be a multiple of ``block_b``.
+    table; ``loads``: (P,) frozen per-node loads indexed by id;
+    ``live_nodes``: (P,) padded ascending live node ids; ``live``,
+    ``n_live``: scalar i32. B must be a multiple of ``block_b``.
     """
     (b,) = hashes.shape
     assert b % block_b == 0, f"batch {b} not a multiple of block {block_b}"
@@ -99,6 +110,7 @@ def assign_kernel(hashes, keys, owners, live, loads, nodes, *, block_b=64):
             pl.BlockSpec((a_cap,), full),
             pl.BlockSpec((1,), full),
             pl.BlockSpec((p_cap,), full),
+            pl.BlockSpec((p_cap,), full),
             pl.BlockSpec((1,), full),
         ],
         out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
@@ -110,5 +122,6 @@ def assign_kernel(hashes, keys, owners, live, loads, nodes, *, block_b=64):
         jnp.asarray(owners, jnp.int32),
         jnp.reshape(jnp.asarray(live, jnp.int32), (1,)),
         jnp.asarray(loads, jnp.uint32),
-        jnp.reshape(jnp.asarray(nodes, jnp.int32), (1,)),
+        jnp.asarray(live_nodes, jnp.int32),
+        jnp.reshape(jnp.asarray(n_live, jnp.int32), (1,)),
     )

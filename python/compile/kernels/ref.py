@@ -91,10 +91,12 @@ def kprobe_ref(hashes, pos_hashes, pos_nodes, pos_len, overloaded, probes):
     return np.array(out, dtype=np.int32)
 
 
-def assign_ref(hashes, keys, owners, live, loads, nodes):
+def assign_ref(hashes, keys, owners, live, loads, live_nodes, n_live):
     """Plain-python sticky-table lookup with the two-choices first-sight
-    fallback on frozen loads — mirrors rust's snapshot routing for
-    ``TwoChoicesRouter``."""
+    fallback on frozen loads over the live node id list — mirrors rust's
+    snapshot routing for ``TwoChoicesRouter`` under elastic membership
+    (``candidate = live_nodes[murmur_i(h) % n_live]``; loads indexed by
+    node id)."""
     import numpy as np
 
     from .assign import CAND_SEEDS
@@ -104,14 +106,15 @@ def assign_ref(hashes, keys, owners, live, loads, nodes):
         for k, o in zip(np.asarray(keys)[: int(live)], np.asarray(owners))
     }
     loads = [int(x) for x in np.asarray(loads)]
+    lv = [int(x) for x in np.asarray(live_nodes)[: int(n_live)]]
     out = []
     for h in np.asarray(hashes):
         h = int(h)
         if h in table:
             out.append(table[h])
             continue
-        c1 = murmur3_py(h.to_bytes(4, "little"), seed=CAND_SEEDS[0]) % int(nodes)
-        c2 = murmur3_py(h.to_bytes(4, "little"), seed=CAND_SEEDS[1]) % int(nodes)
+        c1 = lv[murmur3_py(h.to_bytes(4, "little"), seed=CAND_SEEDS[0]) % len(lv)]
+        c2 = lv[murmur3_py(h.to_bytes(4, "little"), seed=CAND_SEEDS[1]) % len(lv)]
         out.append(c2 if loads[c2] < loads[c1] else c1)
     return np.array(out, dtype=np.int32)
 

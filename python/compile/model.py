@@ -7,8 +7,8 @@ Six programs (shapes fixed at AOT time, see ``aot.py``):
                                                   -> (hashes, owners)
 - ``route_probe(words, lens, pos_hashes, pos_nodes, pos_len, overloaded,
   probes)``                                       -> (hashes, owners)
-- ``route_assign(words, lens, keys, owners, live, loads, nodes)``
-                                                  -> (hashes, owners)
+- ``route_assign(words, lens, keys, owners, live, loads, live_nodes,
+  n_live)``                                       -> (hashes, owners)
 - ``reduce_count(counts, ids)``                   -> (counts',)
 - ``merge_state(a, b)``                           -> (a + b,)
 
@@ -72,10 +72,14 @@ def route_probe(words, lens, pos_hashes, pos_nodes, pos_len, overloaded,
     return hashes, owners
 
 
-def route_assign(words, lens, keys, owners, live, loads, nodes):
-    """Hash + sticky-table lookup: the two-choices decision, batched."""
+def route_assign(words, lens, keys, owners, live, loads, live_nodes, n_live):
+    """Hash + sticky-table lookup: the two-choices decision, batched.
+
+    ``live_nodes``/``n_live`` carry the elastic membership — candidates
+    hash into the live id list, so one compiled executable serves every
+    node count the balancer's scaling policy produces."""
     hashes = murmur3_kernel(words, lens)
-    out = assign_kernel(hashes, keys, owners, live, loads, nodes)
+    out = assign_kernel(hashes, keys, owners, live, loads, live_nodes, n_live)
     return hashes, out
 
 

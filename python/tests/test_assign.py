@@ -1,6 +1,7 @@
 """Assignment-table kernel vs the plain-python transcription of the
 two-choices snapshot routing: sticky hits, frozen-loads fallback on
-misses, and the edge cases (empty table, boundary keys, load ties)."""
+misses, elastic (gapped) live node sets, and the edge cases (empty
+table, boundary keys, load ties)."""
 
 import jax.numpy as jnp
 import numpy as np
@@ -14,8 +15,9 @@ P_CAP = 8
 BLOCK = 64
 
 
-def run(hashes, table, loads, nodes):
-    """``table``: {key_hash: owner}. Pads to kernel shapes, runs one batch."""
+def run(hashes, table, loads, live):
+    """``table``: {key_hash: owner}; ``live``: ascending live node ids;
+    ``loads`` indexed by node id. Pads to kernel shapes, runs one batch."""
     items = sorted(table.items())
     keys = np.full(A_CAP, 0xFFFFFFFF, np.uint32)
     owners = np.zeros(A_CAP, np.int32)
@@ -23,20 +25,23 @@ def run(hashes, table, loads, nodes):
         keys[i], owners[i] = k, o
     lv = np.zeros(P_CAP, np.uint32)
     lv[: len(loads)] = np.asarray(loads, np.uint32)
+    ln = np.zeros(P_CAP, np.int32)
+    ln[: len(live)] = np.asarray(live, np.int32)
     b = max(BLOCK, -(-len(hashes) // BLOCK) * BLOCK)
     hs = np.zeros(b, np.uint32)
     hs[: len(hashes)] = np.asarray(hashes, np.uint32)
     got = assign_kernel(
         jnp.asarray(hs), jnp.asarray(keys), jnp.asarray(owners),
-        jnp.int32(len(items)), jnp.asarray(lv), jnp.int32(nodes),
+        jnp.int32(len(items)), jnp.asarray(lv), jnp.asarray(ln),
+        jnp.int32(len(live)),
     )
-    ref = assign_ref(hs, keys, owners, len(items), lv, nodes)
+    ref = assign_ref(hs, keys, owners, len(items), lv, ln, len(live))
     return np.array(got)[: len(hashes)], ref[: len(hashes)]
 
 
-def candidates(h, nodes):
-    c1 = murmur3_py(int(h).to_bytes(4, "little"), seed=CAND_SEEDS[0]) % nodes
-    c2 = murmur3_py(int(h).to_bytes(4, "little"), seed=CAND_SEEDS[1]) % nodes
+def candidates(h, live):
+    c1 = live[murmur3_py(int(h).to_bytes(4, "little"), seed=CAND_SEEDS[0]) % len(live)]
+    c2 = live[murmur3_py(int(h).to_bytes(4, "little"), seed=CAND_SEEDS[1]) % len(live)]
     return c1, c2
 
 
@@ -44,29 +49,58 @@ def test_recorded_owners_win_over_loads():
     hashes = [murmur3_py(f"key-{i}".encode()) for i in range(20)]
     table = {h: i % 3 for i, h in enumerate(hashes)}
     # loads wildly skewed: sticky assignments must still be returned
-    got, ref = run(hashes, table, [10_000, 0, 10_000, 0], nodes=4)
+    got, ref = run(hashes, table, [10_000, 0, 10_000, 0], live=[0, 1, 2, 3])
     np.testing.assert_array_equal(got, ref)
     np.testing.assert_array_equal(got, np.array([i % 3 for i in range(20)]))
 
 
 def test_empty_table_uses_two_choices_on_frozen_loads():
     hashes = [murmur3_py(f"key-{i}".encode()) for i in range(100)]
-    got, ref = run(hashes, {}, [50, 0], nodes=2)
+    got, ref = run(hashes, {}, [50, 0], live=[0, 1])
     np.testing.assert_array_equal(got, ref)
     # any key whose candidates differ must land on the unloaded node 1
     for h, o in zip(hashes, got):
-        c1, c2 = candidates(h, 2)
+        c1, c2 = candidates(h, [0, 1])
         if c1 != c2:
             assert o == 1, f"hash {h:#x} ignored the frozen loads"
+
+
+def test_identity_live_list_matches_fixed_membership_rule():
+    # with live = [0..n) the candidate rule must reduce to the historical
+    # `murmur % nodes` — the bit-compat bridge to pre-elastic snapshots
+    hashes = [murmur3_py(f"key-{i}".encode()) for i in range(60)]
+    got, _ = run(hashes, {}, [9, 5, 7, 3], live=[0, 1, 2, 3])
+    for h, o in zip(hashes, got):
+        c1 = murmur3_py(int(h).to_bytes(4, "little"), seed=CAND_SEEDS[0]) % 4
+        c2 = murmur3_py(int(h).to_bytes(4, "little"), seed=CAND_SEEDS[1]) % 4
+        loads = [9, 5, 7, 3]
+        assert o == (c2 if loads[c2] < loads[c1] else c1)
+
+
+def test_gapped_live_set_never_yields_retired_ids():
+    # elastic membership: ids 1 and 3 retired — no first sight may land
+    # on them, and sticky entries still win
+    live = [0, 2, 4]
+    keep = murmur3_py(b"sticky-one")
+    table = {keep: 2}
+    hashes = [keep] + [murmur3_py(f"key-{i}".encode()) for i in range(80)]
+    got, ref = run(hashes, table, [5, 0, 9, 0, 1], live=live)
+    np.testing.assert_array_equal(got, ref)
+    assert got[0] == 2
+    assert set(np.unique(got)).issubset(set(live)), "retired id produced"
+    for h, o in zip(hashes[1:], got[1:]):
+        c1, c2 = candidates(h, live)
+        loads = [5, 0, 9, 0, 1]
+        assert o == (c2 if loads[c2] < loads[c1] else c1)
 
 
 def test_load_tie_keeps_first_candidate():
     # rust: `if loads[c2] < loads[c1] { c2 } else { c1 }` — ties pick c1
     hashes = [murmur3_py(f"key-{i}".encode()) for i in range(50)]
-    got, ref = run(hashes, {}, [7, 7, 7], nodes=3)
+    got, ref = run(hashes, {}, [7, 7, 7], live=[0, 1, 2])
     np.testing.assert_array_equal(got, ref)
     for h, o in zip(hashes, got):
-        assert o == candidates(h, 3)[0]
+        assert o == candidates(h, [0, 1, 2])[0]
 
 
 def test_miss_next_to_hit_and_boundary_keys():
@@ -74,18 +108,26 @@ def test_miss_next_to_hit_and_boundary_keys():
     # alias onto it, and the 0x00000000 / 0xFFFFFFFF extremes work
     table = {100: 2, 0: 1, 0xFFFFFFFF: 3}
     hashes = [99, 100, 101, 0, 1, 0xFFFFFFFF, 0xFFFFFFFE]
-    got, ref = run(hashes, table, [0, 0, 0, 0], nodes=4)
+    got, ref = run(hashes, table, [0, 0, 0, 0], live=[0, 1, 2, 3])
     np.testing.assert_array_equal(got, ref)
     assert got[1] == 2 and got[3] == 1 and got[5] == 3
     for h, o in zip([99, 101, 1, 0xFFFFFFFE], got[[0, 2, 4, 6]]):
-        assert o == candidates(h, 4)[0], "miss must use the fallback"
+        assert o == candidates(h, [0, 1, 2, 3])[0], "miss must use the fallback"
 
 
 def test_single_node_everything_lands_on_it():
     hashes = [murmur3_py(f"key-{i}".encode()) for i in range(30)]
-    got, ref = run(hashes, {hashes[0]: 0}, [9], nodes=1)
+    got, ref = run(hashes, {hashes[0]: 0}, [9], live=[0])
     np.testing.assert_array_equal(got, ref)
     assert (got == 0).all()
+
+
+def test_single_survivor_of_many_ids():
+    # everything retired but id 3: every miss lands there
+    hashes = [murmur3_py(f"key-{i}".encode()) for i in range(30)]
+    got, ref = run(hashes, {}, [4, 4, 4, 4], live=[3])
+    np.testing.assert_array_equal(got, ref)
+    assert (got == 3).all()
 
 
 # mirror of rust `balancer::signal::FRAC_BITS`: since the load-signal
@@ -98,8 +140,10 @@ def test_fixed_point_decayed_loads_scale_invariant():
     # the kernel only *compares* loads, so the fixed-point scale of the
     # decayed signal must not change any first-sight decision
     hashes = [murmur3_py(f"key-{i}".encode()) for i in range(80)]
-    raw, _ = run(hashes, {}, [50, 3, 20, 7], nodes=4)
-    fp, ref = run(hashes, {}, [v << FRAC_BITS for v in [50, 3, 20, 7]], nodes=4)
+    raw, _ = run(hashes, {}, [50, 3, 20, 7], live=[0, 1, 2, 3])
+    fp, ref = run(
+        hashes, {}, [v << FRAC_BITS for v in [50, 3, 20, 7]], live=[0, 1, 2, 3]
+    )
     np.testing.assert_array_equal(fp, ref)
     np.testing.assert_array_equal(fp, raw)
 
@@ -111,10 +155,10 @@ def test_fractional_decayed_loads_order_correctly():
     hashes = [murmur3_py(f"key-{i}".encode()) for i in range(80)]
     lo = (50 << FRAC_BITS) - 3  # ≈ 49.99
     hi = (50 << FRAC_BITS) + 77  # ≈ 50.30
-    got, ref = run(hashes, {}, [hi, lo], nodes=2)
+    got, ref = run(hashes, {}, [hi, lo], live=[0, 1])
     np.testing.assert_array_equal(got, ref)
     for h, o in zip(hashes, got):
-        c1, c2 = candidates(h, 2)
+        c1, c2 = candidates(h, [0, 1])
         if c1 != c2:
             assert o == 1, f"hash {h:#x} ignored a sub-unit load difference"
 
@@ -123,13 +167,16 @@ def test_fractional_decayed_loads_order_correctly():
 def test_matches_reference_random(seed):
     rng = np.random.default_rng(seed)
     entries = int(rng.integers(0, A_CAP + 1))
-    nodes = int(rng.integers(1, P_CAP + 1))
+    id_space = int(rng.integers(1, P_CAP + 1))
+    # random non-empty live subset of the id space (elastic gaps)
+    n_live = int(rng.integers(1, id_space + 1))
+    live = sorted(rng.choice(id_space, size=n_live, replace=False).tolist())
     table_keys = rng.choice(2**32, size=entries, replace=False)
-    table = {int(k): int(rng.integers(0, nodes)) for k in table_keys}
-    loads = rng.integers(0, 100, nodes)
+    table = {int(k): int(rng.choice(live)) for k in table_keys}
+    loads = rng.integers(0, 100, id_space)
     # half fresh hashes, half table hits (when the table is non-empty)
     hashes = list(rng.integers(0, 2**32, BLOCK // 2).astype(np.uint32))
     if entries:
         hashes += list(rng.choice(table_keys, size=BLOCK - len(hashes)))
-    got, ref = run(hashes, table, loads, nodes)
+    got, ref = run(hashes, table, loads, live=live)
     np.testing.assert_array_equal(got, ref)

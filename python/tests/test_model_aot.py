@@ -72,12 +72,15 @@ def test_route_assign_composes_hash_and_table():
     to[:20] = np.arange(20) % 3
     loads = np.zeros(aot.P, np.uint32)
     loads[0] = 50
+    # elastic membership: id 1 retired — candidates hash into the live list
+    live = np.zeros(aot.P, np.int32)
+    live[:3] = [0, 2, 3]
     hashes, owners = model.route_assign(
         words, lens, jnp.asarray(tk), jnp.asarray(to), jnp.int32(20),
-        jnp.asarray(loads), jnp.int32(4),
+        jnp.asarray(loads), jnp.asarray(live), jnp.int32(3),
     )
     hashes, owners = np.array(hashes), np.array(owners)
-    ref = assign_ref(hashes[: len(keys)], tk, to, 20, loads, 4)
+    ref = assign_ref(hashes[: len(keys)], tk, to, 20, loads, live, 3)
     np.testing.assert_array_equal(owners[: len(keys)], ref)
 
 
@@ -121,6 +124,7 @@ def test_aot_writes_artifacts(tmp_path):
     manifest = (out / "manifest.json").read_text()
     assert '"B": 256' in manifest and '"V": 4096' in manifest
     assert '"P": 64' in manifest and '"K": 8' in manifest and '"A": 4096' in manifest
+    assert '"AV": 2' in manifest, "route_assign ABI version (elastic live list)"
 
 
 def test_manifest_constants_are_consistent():

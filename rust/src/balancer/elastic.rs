@@ -1,0 +1,324 @@
+//! Elastic reducer membership: the scaling policy that decides when the
+//! reducer set itself should grow or shrink.
+//!
+//! The paper chose consistent hashing precisely because membership
+//! changes move a minimal number of keys (§7 sketches reducers "simply
+//! claiming tokens"), yet its evaluation runs a fixed reducer count.
+//! AutoFlow (arXiv:2103.08888) argues a hotspot-aware balancer must also
+//! change *parallelism*, not just re-route: when every reducer is hot,
+//! redistribution only reshuffles the overload. [`ElasticController`] is
+//! that second control loop. It watches the same decayed
+//! [`LoadSignal`](crate::balancer::signal::LoadSignal) the routers
+//! consume — not raw queue lengths, which would flap on every burst — and
+//! compares the **mean decayed queue length over the live reducers**
+//! against two watermarks:
+//!
+//! * mean above `scale_up` and live count below `max_reducers` →
+//!   **scale up** (a brand-new reducer joins via
+//!   [`Router::add_node`](crate::hash::Router::add_node));
+//! * mean below `scale_down` and live count above `min_reducers` →
+//!   **scale down** (the coldest live reducer retires via
+//!   [`Router::retire_node`](crate::hash::Router::retire_node)).
+//!
+//! Requiring `scale_up > scale_down` makes the pair a hysteresis band of
+//! its own, and a dedicated cooldown rate-limits membership churn the
+//! same way the LB cooldown rate-limits repartitions (right after a
+//! membership change the queue lengths are stale). Scale events flow
+//! through the exact §7 machinery a redistribution uses: the epoch bump
+//! opens a synchronization window, survivors extract state the new
+//! membership disowns, and a retiring reducer drains by the ordinary
+//! ownership-check forwarding.
+//!
+//! [`ElasticController::from_schedule`] is the deterministic test
+//! harness: instead of watermarks it applies a fixed scale-op sequence
+//! every N evaluated reports, so cross-driver parity suites can run an
+//! identical scale-up + scale-down schedule on the sim and the threads
+//! driver.
+
+use crate::balancer::signal::FRAC_BITS;
+use crate::hash::Loads;
+
+/// User-facing elastic knobs (TOML `[balancer]` keys `scale_up`,
+/// `scale_down`, `min_reducers`, `max_reducers`; CLI `--scale-up`,
+/// `--scale-down`, `--min-reducers`, `--max-reducers`). The cooldown
+/// rides the existing `balancer.cooldown` knob — one trigger-hygiene
+/// setting for both control loops.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ElasticConfig {
+    /// Scale up when the mean decayed queue length (over live reducers)
+    /// exceeds this.
+    pub scale_up: f64,
+    /// Scale down when the mean decayed queue length falls below this.
+    /// Must be strictly less than `scale_up` (the watermark pair is a
+    /// hysteresis band).
+    pub scale_down: f64,
+    /// Never retire below this many live reducers.
+    pub min_reducers: usize,
+    /// Never grow beyond this many reducer ids (live ∪ retired slots are
+    /// bounded by it too — it is the pre-allocation capacity for queues,
+    /// tracker slots and load-signal slots).
+    pub max_reducers: usize,
+}
+
+impl Default for ElasticConfig {
+    /// Watermarks in queue-length units: grow when reducers average eight
+    /// queued records, shrink when they average less than one.
+    fn default() -> Self {
+        ElasticConfig { scale_up: 8.0, scale_down: 1.0, min_reducers: 1, max_reducers: 16 }
+    }
+}
+
+impl ElasticConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.scale_up.is_nan() || self.scale_down.is_nan() {
+            return Err("balancer.scale_up/scale_down must not be NaN".into());
+        }
+        if self.scale_down < 0.0 {
+            return Err(format!(
+                "balancer.scale_down must be non-negative, got {}",
+                self.scale_down
+            ));
+        }
+        if self.scale_up <= self.scale_down {
+            return Err(format!(
+                "balancer.scale_up ({}) must exceed scale_down ({}) — the watermark \
+                 pair is a hysteresis band",
+                self.scale_up, self.scale_down
+            ));
+        }
+        if self.min_reducers == 0 {
+            return Err("balancer.min_reducers must be at least 1".into());
+        }
+        if self.max_reducers < self.min_reducers {
+            return Err(format!(
+                "balancer.max_reducers ({}) must be >= min_reducers ({})",
+                self.max_reducers, self.min_reducers
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// A membership decision the balancer should apply.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleOp {
+    /// Spawn one brand-new reducer.
+    Up,
+    /// Retire the given live reducer (watermark mode picks the coldest).
+    Down(usize),
+}
+
+/// The scaling controller the balancer owns: policy + cooldown state.
+#[derive(Debug)]
+pub struct ElasticController {
+    policy: PolicyState,
+    /// Min driver-time between membership changes (same units as the LB
+    /// cooldown: sim ticks or µs).
+    cooldown: u64,
+    last_scale_at: Option<u64>,
+    reports_seen: u64,
+}
+
+#[derive(Debug)]
+enum PolicyState {
+    Watermarks {
+        cfg: ElasticConfig,
+        /// Watermarks pre-scaled to the signal's fixed point.
+        up_fp: u64,
+        down_fp: u64,
+    },
+    Schedule {
+        ops: std::vec::IntoIter<ScaleOp>,
+        every_reports: u64,
+        min: usize,
+        max: usize,
+    },
+}
+
+impl ElasticController {
+    /// Watermark-driven controller (the `dpa elastic` production mode).
+    pub fn from_watermarks(cfg: ElasticConfig, cooldown: u64) -> Self {
+        let fp = |v: f64| (v * f64::from(1u32 << FRAC_BITS)).round() as u64;
+        ElasticController {
+            policy: PolicyState::Watermarks {
+                up_fp: fp(cfg.scale_up),
+                down_fp: fp(cfg.scale_down),
+                cfg,
+            },
+            cooldown,
+            last_scale_at: None,
+            reports_seen: 0,
+        }
+    }
+
+    /// Deterministic schedule controller (cross-driver parity tests).
+    pub fn from_schedule(ops: Vec<ScaleOp>, every_reports: u64, min: usize, max: usize) -> Self {
+        ElasticController {
+            policy: PolicyState::Schedule {
+                ops: ops.into_iter(),
+                every_reports: every_reports.max(1),
+                min,
+                max,
+            },
+            cooldown: 0,
+            last_scale_at: None,
+            reports_seen: 0,
+        }
+    }
+
+    /// The configured ceiling on reducer ids (pre-allocation capacity).
+    pub fn max_reducers(&self) -> usize {
+        match &self.policy {
+            PolicyState::Watermarks { cfg, .. } => cfg.max_reducers,
+            PolicyState::Schedule { max, .. } => *max,
+        }
+    }
+
+    /// Evaluate the policy for one load report. `loads` is the shared
+    /// decayed signal, `live` the currently routable reducer count,
+    /// `id_space` the total ids ever allocated (live ∪ retired — the
+    /// scale-up bound, since retired slots are not reusable), `now` the
+    /// driver clock. Returns the membership op to apply, if any.
+    pub fn decide(
+        &mut self,
+        loads: &Loads,
+        live: usize,
+        id_space: usize,
+        now: u64,
+    ) -> Option<ScaleOp> {
+        self.reports_seen += 1;
+        if let Some(last) = self.last_scale_at {
+            if now.saturating_sub(last) < self.cooldown {
+                return None;
+            }
+        }
+        let op = match &mut self.policy {
+            PolicyState::Watermarks { cfg, up_fp, down_fp } => {
+                let mean = loads.decayed_mean_fp();
+                if mean > *up_fp && id_space < cfg.max_reducers {
+                    Some(ScaleOp::Up)
+                } else if mean < *down_fp && live > cfg.min_reducers {
+                    loads.coldest_live().map(ScaleOp::Down)
+                } else {
+                    None
+                }
+            }
+            PolicyState::Schedule { ops, every_reports, min, max } => {
+                if self.reports_seen % *every_reports != 0 {
+                    return None;
+                }
+                match ops.as_slice().first().copied() {
+                    Some(ScaleOp::Up) if id_space < *max => ops.next(),
+                    Some(ScaleOp::Down(_)) if live > *min => {
+                        ops.next();
+                        loads.coldest_live().map(ScaleOp::Down)
+                    }
+                    Some(_) => {
+                        ops.next(); // bound hit: drop the op, keep draining
+                        None
+                    }
+                    None => None,
+                }
+            }
+        };
+        if op.is_some() {
+            self.last_scale_at = Some(now);
+        }
+        op
+    }
+
+    /// Arm the cooldown without a decision (a membership change applied
+    /// by someone else, e.g. a no-op retire retried later).
+    pub fn arm_cooldown(&mut self, now: u64) {
+        self.last_scale_at = Some(now);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::balancer::signal::{LoadSignal, SignalConfig};
+
+    fn signal(qlens: &[u64]) -> LoadSignal {
+        let s = LoadSignal::with_capacity(qlens.len(), 8, &SignalConfig::legacy());
+        for (n, &q) in qlens.iter().enumerate() {
+            s.set(n, q);
+        }
+        s
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(ElasticConfig::default().validate().is_ok());
+        let bad = |f: fn(&mut ElasticConfig)| {
+            let mut c = ElasticConfig::default();
+            f(&mut c);
+            c.validate().is_err()
+        };
+        assert!(bad(|c| c.scale_up = c.scale_down));
+        assert!(bad(|c| c.scale_down = -1.0));
+        assert!(bad(|c| c.scale_up = f64::NAN));
+        assert!(bad(|c| c.min_reducers = 0));
+        assert!(bad(|c| c.max_reducers = 0));
+    }
+
+    #[test]
+    fn watermarks_scale_up_on_hot_mean() {
+        let cfg =
+            ElasticConfig { scale_up: 4.0, scale_down: 1.0, min_reducers: 2, max_reducers: 6 };
+        let mut c = ElasticController::from_watermarks(cfg, 10);
+        let loads = signal(&[20, 2]); // mean 11 > 4
+        assert_eq!(c.decide(&loads, 2, 2, 0), Some(ScaleOp::Up));
+        // cooldown suppresses an immediate second decision
+        assert_eq!(c.decide(&loads, 3, 3, 5), None);
+        assert_eq!(c.decide(&loads, 3, 3, 20), Some(ScaleOp::Up));
+        // the ceiling is on the id space, not the live count
+        assert_eq!(c.decide(&loads, 4, 6, 40), None, "max_reducers reached");
+    }
+
+    #[test]
+    fn watermarks_scale_down_to_coldest() {
+        let cfg =
+            ElasticConfig { scale_up: 8.0, scale_down: 2.0, min_reducers: 2, max_reducers: 6 };
+        let mut c = ElasticController::from_watermarks(cfg, 0);
+        let loads = signal(&[1, 0, 2]); // mean 1 < 2, node 1 coldest
+        assert_eq!(c.decide(&loads, 3, 3, 0), Some(ScaleOp::Down(1)));
+        assert_eq!(c.decide(&loads, 2, 3, 1), None, "min_reducers floor");
+    }
+
+    #[test]
+    fn watermarks_quiet_inside_the_band() {
+        let cfg =
+            ElasticConfig { scale_up: 8.0, scale_down: 1.0, min_reducers: 1, max_reducers: 8 };
+        let mut c = ElasticController::from_watermarks(cfg, 0);
+        let loads = signal(&[4, 4]); // mean 4: inside (1, 8)
+        assert_eq!(c.decide(&loads, 2, 2, 0), None);
+    }
+
+    #[test]
+    fn schedule_fires_every_n_reports_in_order() {
+        let mut c = ElasticController::from_schedule(
+            vec![ScaleOp::Up, ScaleOp::Down(0)],
+            3,
+            1,
+            8,
+        );
+        let loads = signal(&[5, 1]);
+        let mut fired = Vec::new();
+        for now in 0..12u64 {
+            if let Some(op) = c.decide(&loads, 2, 2, now) {
+                fired.push(op);
+            }
+        }
+        // node 1 is the coldest live node, so the scheduled Down retargets
+        assert_eq!(fired, vec![ScaleOp::Up, ScaleOp::Down(1)]);
+    }
+
+    #[test]
+    fn schedule_respects_bounds() {
+        let mut c = ElasticController::from_schedule(vec![ScaleOp::Up], 1, 1, 2);
+        let loads = signal(&[5, 1]);
+        assert_eq!(c.decide(&loads, 2, 2, 0), None, "id space at max: op dropped");
+        assert_eq!(c.decide(&loads, 2, 2, 1), None, "schedule drained");
+    }
+}

@@ -7,17 +7,20 @@
 //! fires. [`policy`] holds the trigger predicate, [`signal`] the adaptive
 //! load-signal subsystem (EWMA decay, hysteresis overload flags and the
 //! migration-gain guard the probe routers consume — every
-//! [`Self::observe`](BalancerCore::observe) feeds it), [`BalancerCore`]
-//! the actor state shared by both drivers, and [`state_forward`] the §7
-//! staged state-forwarding extension.
+//! [`BalancerCore::observe`] feeds it), [`elastic`] the scaling policy
+//! that grows/shrinks the reducer set itself off the same decayed signal,
+//! [`BalancerCore`] the actor state shared by both drivers, and
+//! [`state_forward`] the §7 staged state-forwarding extension.
 
+pub mod elastic;
 pub mod policy;
 pub mod signal;
 pub mod state_forward;
 
 use crate::hash::{RouterHandle, StrategySpec};
-use crate::metrics::LbEvent;
+use crate::metrics::{LbEvent, MembershipChange};
 
+use elastic::{ElasticController, ScaleOp};
 use policy::{LbPolicy, ThresholdPolicy};
 
 /// Balancer actor state. The threads driver gives it to a dedicated
@@ -47,6 +50,8 @@ pub struct BalancerCore {
     /// noise. The paper's periodic check has the same effect implicitly.
     cooldown: u64,
     last_event_at: Option<u64>,
+    /// Elastic membership controller (`None` = fixed reducer set).
+    elastic: Option<ElasticController>,
     events: Vec<LbEvent>,
 }
 
@@ -70,6 +75,7 @@ impl BalancerCore {
             max_rounds,
             cooldown,
             last_event_at: None,
+            elastic: None,
             events: Vec::new(),
         }
     }
@@ -77,6 +83,15 @@ impl BalancerCore {
     /// Swap in a custom policy (ablations).
     pub fn with_policy(mut self, policy: Box<dyn LbPolicy + Send>) -> Self {
         self.policy = policy;
+        self
+    }
+
+    /// Attach the elastic membership controller: scale decisions are then
+    /// evaluated on every policy-eligible report, before Eq. 1 (changing
+    /// parallelism beats reshuffling a keyspace every reducer of which is
+    /// hot — and vice versa for a drained pipeline).
+    pub fn with_elastic(mut self, controller: ElasticController) -> Self {
+        self.elastic = Some(controller);
         self
     }
 
@@ -138,14 +153,20 @@ impl BalancerCore {
         self.router.loads().set(reducer, qlen as u64);
     }
 
-    /// Evaluate the policy over the current load vector and apply the
-    /// router's redistribution if it fires.
+    /// Evaluate the scaling policy (if attached) and Eq. 1 over the
+    /// current load vector, and apply the router's membership change or
+    /// redistribution if either fires.
     pub fn maybe_rebalance(&mut self, now: u64) -> Option<LbEvent> {
-        if self.spec == StrategySpec::None {
-            return None;
-        }
         if !self.reported.iter().all(|&r| r) {
             return None; // warm-up: wait until every reducer has reported
+        }
+        // parallelism first: when the whole pipeline is hot (or drained),
+        // re-routing only reshuffles the problem — membership changes it
+        if let Some(e) = self.maybe_scale(now) {
+            return Some(e);
+        }
+        if self.spec == StrategySpec::None {
+            return None;
         }
         if let Some(last) = self.last_event_at {
             if now.saturating_sub(last) < self.cooldown {
@@ -154,6 +175,11 @@ impl BalancerCore {
         }
         let target = self.policy.pick_target(&self.qlens)?;
         if self.rounds[target] >= self.max_rounds {
+            return None;
+        }
+        if !self.router.is_live(target) {
+            // a retired reducer draining its backlog is not a rebalance
+            // target — its keys are already being forwarded away
             return None;
         }
         let delta = self.router.redistribute(target);
@@ -180,11 +206,62 @@ impl BalancerCore {
             epoch: self.router.epoch(),
             strategy: self.spec,
             delta,
+            membership: None,
         };
         log::info!(
             "LB fired at {now}: target reducer {target}, qlens {:?}, strategy {}",
             event.qlens,
             self.spec
+        );
+        self.events.push(event.clone());
+        Some(event)
+    }
+
+    /// Evaluate the elastic membership policy and apply the scale
+    /// decision through the router. Returns the membership event when the
+    /// routable set changed.
+    fn maybe_scale(&mut self, now: u64) -> Option<LbEvent> {
+        let elastic = self.elastic.as_mut()?;
+        let live = self.router.live_count();
+        let id_space = self.router.nodes();
+        let op = elastic.decide(self.router.loads(), live, id_space, now)?;
+        let (target, delta, membership) = match op {
+            ScaleOp::Up => {
+                let (id, delta) = self.router.add_node()?; // capacity guard
+                // the joiner must report before anything else may fire —
+                // the same warm-up rule a cold start obeys
+                self.qlens.resize(id + 1, 0);
+                self.rounds.resize(id + 1, 0);
+                self.reported.resize(id + 1, false);
+                (id, delta, MembershipChange::Added { id: id as u32 })
+            }
+            ScaleOp::Down(id) => {
+                let delta = self.router.retire_node(id);
+                if !delta.changed {
+                    // already retired / last live node: nothing to apply,
+                    // the controller's cooldown already rate-limits retries
+                    return None;
+                }
+                (id, delta, MembershipChange::Retired { id: id as u32 })
+            }
+        };
+        debug_assert!(delta.changed);
+        // a membership change also arms the LB cooldown — queue lengths
+        // are stale until the new routing has had time to act
+        self.last_event_at = Some(now);
+        let event = LbEvent {
+            at: now,
+            target: target as u32,
+            qlens: self.qlens.clone(),
+            epoch: self.router.epoch(),
+            strategy: self.spec,
+            delta,
+            membership: Some(membership),
+        };
+        log::info!(
+            "elastic scaling at {now}: {membership:?}, {} live reducers, qlens {:?}",
+            self.router.live_count(),
+            event.qlens
         );
         self.events.push(event.clone());
         Some(event)
@@ -346,6 +423,54 @@ mod tests {
         // the shed set changes (a different node overloads) and the no-op
         // armed the cooldown: LB resumes instead of staying disabled
         assert!(b.report(1, 90, 40).is_some());
+    }
+
+    #[test]
+    fn elastic_scale_up_and_down_through_reports() {
+        use super::elastic::{ElasticConfig, ElasticController};
+        use crate::metrics::MembershipChange;
+        let cfg =
+            ElasticConfig { scale_up: 4.0, scale_down: 1.0, min_reducers: 2, max_reducers: 4 };
+        let router = RouterHandle::with_signal_capacity(
+            Strategy::Doubling.build_router(2, 8, None),
+            &crate::balancer::signal::SignalConfig::legacy(),
+            cfg.max_reducers,
+        );
+        let mut b = BalancerCore::new(router, Strategy::Doubling, 0.2, 4, 1, 10)
+            .with_elastic(ElasticController::from_watermarks(cfg, 10))
+            .without_warmup();
+        // hot mean (20+2)/2 = 11 > 4 → a brand-new reducer joins
+        b.observe(1, 2);
+        let e = b.report(0, 20, 0).expect("scale-up fires");
+        assert_eq!(e.membership, Some(MembershipChange::Added { id: 2 }));
+        assert!(e.delta.changed);
+        assert_eq!(e.delta.nodes_added, 1);
+        assert_eq!(b.router().live_count(), 3);
+        // warm-up: nothing else may fire until the joiner reports
+        assert!(b.report(0, 50, 30).is_none(), "joiner unheard");
+        b.observe(2, 0);
+        // cooled pipeline → the coldest reducer retires
+        b.observe(0, 0);
+        let e = b.report(1, 1, 40).expect("scale-down fires");
+        assert!(matches!(e.membership, Some(MembershipChange::Retired { .. })));
+        assert_eq!(e.delta.nodes_retired, 1);
+        assert_eq!(b.router().live_count(), 2);
+        // floor: no retire below min_reducers
+        assert!(b.report(1, 0, 80).is_none());
+        assert_eq!(b.router().live_count(), 2);
+    }
+
+    #[test]
+    fn retired_reducer_is_not_a_rebalance_target() {
+        let mut b = mk(Strategy::Doubling, 4);
+        b.observe(1, 1);
+        b.observe(2, 1);
+        b.observe(3, 1);
+        assert!(b.router().retire_node(0).changed);
+        // reducer 0's drain backlog looks huge, but it is retired: no event
+        assert!(b.report(0, 500, 0).is_none());
+        // a live hot reducer still triggers normally
+        assert!(b.report(1, 500, 20).is_some());
     }
 
     #[test]

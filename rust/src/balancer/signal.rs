@@ -130,6 +130,11 @@ struct SignalInner {
     /// observed load for an instant) that uniform steady load could
     /// never release.
     seen: Vec<AtomicBool>,
+    /// Elastic membership: which slots participate in the mean/flag
+    /// computation. Slots are pre-allocated to a fixed capacity so the
+    /// store stays lock-free; scale-up activates a slot, scale-down
+    /// retires it (retired slots read as zero and are never flagged).
+    live: Vec<AtomicBool>,
     /// EWMA new-sample weight, `KNOB_SCALE` fixed point (`KNOB_SCALE` =
     /// no smoothing).
     alpha: u64,
@@ -161,16 +166,28 @@ impl LoadSignal {
     }
 
     /// A signal with explicit smoothing knobs (the pipeline threads the
-    /// `[balancer]` config here).
+    /// `[balancer]` config here). Capacity equals the initial node count
+    /// (the fixed-membership case); elastic runs use
+    /// [`Self::with_capacity`].
     pub fn with_config(nodes: usize, cfg: &SignalConfig) -> Self {
+        Self::with_capacity(nodes, nodes, cfg)
+    }
+
+    /// A signal with `capacity` pre-allocated slots of which the first
+    /// `nodes` start live. Elastic membership changes go through
+    /// [`Self::activate`] / [`Self::retire`]; pre-allocation (rather than
+    /// growth) is what keeps the store lock-free.
+    pub fn with_capacity(nodes: usize, capacity: usize, cfg: &SignalConfig) -> Self {
+        let capacity = capacity.max(nodes);
         let knob = |v: f64| (v * KNOB_SCALE as f64).round() as u64;
         let h = knob(cfg.hysteresis);
         LoadSignal {
             inner: Arc::new(SignalInner {
-                raw: (0..nodes).map(|_| AtomicU64::new(0)).collect(),
-                decayed: (0..nodes).map(|_| AtomicU64::new(0)).collect(),
-                flags: (0..nodes).map(|_| AtomicBool::new(false)).collect(),
-                seen: (0..nodes).map(|_| AtomicBool::new(false)).collect(),
+                raw: (0..capacity).map(|_| AtomicU64::new(0)).collect(),
+                decayed: (0..capacity).map(|_| AtomicU64::new(0)).collect(),
+                flags: (0..capacity).map(|_| AtomicBool::new(false)).collect(),
+                seen: (0..capacity).map(|_| AtomicBool::new(false)).collect(),
+                live: (0..capacity).map(|i| AtomicBool::new(i < nodes)).collect(),
                 alpha: knob(cfg.decay_alpha).clamp(1, KNOB_SCALE),
                 high: KNOB_SCALE + h,
                 low: KNOB_SCALE.saturating_sub(h),
@@ -179,8 +196,52 @@ impl LoadSignal {
         }
     }
 
+    /// Slot capacity (the id space the signal can ever track).
     pub fn nodes(&self) -> usize {
         self.inner.raw.len()
+    }
+
+    /// Nodes currently participating in the mean/flag computation.
+    pub fn live_count(&self) -> usize {
+        self.inner.live.iter().filter(|l| l.load(Ordering::Relaxed)).count()
+    }
+
+    /// Is `node` a live (participating) slot?
+    pub fn is_live(&self, node: usize) -> bool {
+        self.inner.live.get(node).is_some_and(|l| l.load(Ordering::Relaxed))
+    }
+
+    /// Elastic scale-up: slot `node` joins the mean/flag computation with
+    /// a clean history. It re-enters warm-up (`seen = false`), so the
+    /// hysteresis band disengages until the new node has reported — the
+    /// mean just shifted regime, and freezing a pre-shift classification
+    /// would be exactly the warm-up transient the total rule exists for.
+    pub fn activate(&self, node: usize) {
+        let i = &*self.inner;
+        let (Some(live), Some(seen)) = (i.live.get(node), i.seen.get(node)) else {
+            return;
+        };
+        i.raw[node].store(0, Ordering::Relaxed);
+        i.decayed[node].store(0, Ordering::Relaxed);
+        i.flags[node].store(false, Ordering::Relaxed);
+        seen.store(false, Ordering::Relaxed);
+        live.store(true, Ordering::Relaxed);
+        self.refresh_flags();
+    }
+
+    /// Elastic scale-down: slot `node` leaves the computation. Its load
+    /// reads as zero, it is never flagged, and the remaining nodes' flags
+    /// are refreshed against the shrunken mean.
+    pub fn retire(&self, node: usize) {
+        let i = &*self.inner;
+        let Some(live) = i.live.get(node) else {
+            return;
+        };
+        live.store(false, Ordering::Relaxed);
+        i.raw[node].store(0, Ordering::Relaxed);
+        i.decayed[node].store(0, Ordering::Relaxed);
+        i.flags[node].store(false, Ordering::Relaxed);
+        self.refresh_flags();
     }
 
     /// Record one load observation: stores the raw queue length, folds it
@@ -227,11 +288,25 @@ impl LoadSignal {
     /// comparisons (`d·n·S` vs `Σd·(S±h)`), no float rounding.
     fn refresh_flags(&self) {
         let i = &*self.inner;
-        let n = i.decayed.len() as u128;
+        let lv: Vec<bool> = i.live.iter().map(|l| l.load(Ordering::Relaxed)).collect();
+        let n = lv.iter().filter(|&&l| l).count() as u128;
+        if n == 0 {
+            return;
+        }
         let ds: Vec<u64> = i.decayed.iter().map(|d| d.load(Ordering::Relaxed)).collect();
-        let sum: u128 = ds.iter().map(|&d| d as u128).sum();
-        let banded = i.seen.iter().all(|s| s.load(Ordering::Relaxed));
+        let sum: u128 = ds.iter().zip(&lv).filter(|&(_, &l)| l).map(|(&d, _)| d as u128).sum();
+        // the band engages only once every LIVE node has reported; a
+        // freshly activated node re-opens warm-up (see `activate`)
+        let banded = i
+            .seen
+            .iter()
+            .zip(&lv)
+            .all(|(s, &l)| !l || s.load(Ordering::Relaxed));
         for (node, &d) in ds.iter().enumerate() {
+            if !lv[node] {
+                i.flags[node].store(false, Ordering::Relaxed);
+                continue;
+            }
             let lhs = d as u128 * n * KNOB_SCALE as u128;
             if !banded {
                 i.flags[node].store(lhs > sum * KNOB_SCALE as u128, Ordering::Relaxed);
@@ -273,6 +348,38 @@ impl LoadSignal {
     /// All hysteresis overload flags.
     pub fn flags_vec(&self) -> Vec<bool> {
         self.inner.flags.iter().map(|f| f.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Mean EWMA-decayed load over the live nodes (`FRAC_BITS` fixed
+    /// point) — the watermark input of the elastic scaling policy.
+    pub fn decayed_mean_fp(&self) -> u64 {
+        let i = &*self.inner;
+        let mut sum = 0u128;
+        let mut n = 0u128;
+        for (d, l) in i.decayed.iter().zip(&i.live) {
+            if l.load(Ordering::Relaxed) {
+                sum += d.load(Ordering::Relaxed) as u128;
+                n += 1;
+            }
+        }
+        if n == 0 {
+            0
+        } else {
+            (sum / n) as u64
+        }
+    }
+
+    /// The live node with the smallest decayed load (ties to the lowest
+    /// id) — the scale-down victim choice. `None` when nothing is live.
+    pub fn coldest_live(&self) -> Option<usize> {
+        let i = &*self.inner;
+        i.decayed
+            .iter()
+            .zip(&i.live)
+            .enumerate()
+            .filter(|(_, (_, l))| l.load(Ordering::Relaxed))
+            .min_by_key(|(n, (d, _))| (d.load(Ordering::Relaxed), *n))
+            .map(|(n, _)| n)
     }
 
     /// The migration-gain guard: may a key move from `from` to `to`?
@@ -444,6 +551,53 @@ mod tests {
         assert!(bad(|c| c.hysteresis = -0.1));
         assert!(bad(|c| c.min_gain = 1.0));
         assert!(bad(|c| c.min_gain = -0.1));
+    }
+
+    #[test]
+    fn capacity_slots_join_and_leave_the_mean() {
+        let s = LoadSignal::with_capacity(2, 4, &SignalConfig::legacy());
+        assert_eq!(s.nodes(), 4, "slots pre-allocated to capacity");
+        assert_eq!(s.live_count(), 2);
+        s.set(0, 30);
+        s.set(1, 10);
+        // inactive slots never flag and never drag the mean down
+        assert_eq!(s.flags_vec(), vec![true, false, false, false]);
+        assert_eq!(s.decayed_mean_fp(), 20 * FP);
+
+        s.activate(2);
+        assert_eq!(s.live_count(), 3);
+        assert!(!s.overloaded(2), "fresh slot starts clear");
+        s.set(2, 2);
+        assert_eq!(s.decayed_mean_fp(), 14 * FP);
+        assert_eq!(s.coldest_live(), Some(2));
+
+        s.retire(2);
+        assert_eq!(s.live_count(), 2);
+        assert!(!s.is_live(2));
+        assert_eq!(s.decayed(2), 0, "retired slot reads as zero");
+        assert_eq!(s.decayed_mean_fp(), 20 * FP, "mean back over the survivors");
+        // flags were refreshed against the shrunken membership
+        assert_eq!(s.flags_vec(), vec![true, false, false, false]);
+    }
+
+    #[test]
+    fn activate_reopens_warmup_for_the_band() {
+        let cfg = SignalConfig { decay_alpha: 1.0, hysteresis: 0.5, min_gain: 0.0 };
+        let s = LoadSignal::with_capacity(2, 3, &cfg);
+        s.set(0, 10);
+        s.set(1, 10);
+        assert_eq!(s.flags_vec(), vec![false, false, false]);
+        s.activate(2);
+        // the new node has not reported: the warm-up total rule is back
+        s.set(0, 11);
+        assert!(s.overloaded(0), "warm-up total rule while the new node is unheard");
+        s.set(2, 10); // completes warm-up (node 0 still above the total mean)
+        // band re-engaged: an in-band dip keeps the sticky flag...
+        s.set(0, 6); // mean 8.67, off-watermark 4.33: 6 is inside the band
+        assert!(s.overloaded(0), "inside the band the flag sticks");
+        // ...and only crossing the low watermark releases it
+        s.set(0, 2); // mean 7.33, off-watermark 3.67
+        assert!(!s.overloaded(0));
     }
 
     #[test]

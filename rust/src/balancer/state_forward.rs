@@ -78,9 +78,17 @@ pub struct StageTracker {
     /// books it, so the count can dip below zero transiently.
     outstanding: AtomicI64,
     /// Per-reducer flag: has it run its substage-1 extraction for the
-    /// in-progress epoch?
+    /// in-progress epoch? Slots are pre-allocated to the elastic
+    /// capacity; inactive slots are permanently `true`.
     extracted: Vec<AtomicBool>,
-    /// How many reducers have extracted for the in-progress epoch.
+    /// Which pre-allocated slots carry a spawned reducer. Scale-up flips
+    /// a slot on ([`Self::activate`]); slots never deactivate — a retired
+    /// reducer keeps draining (and keeps its extraction duty, trivially
+    /// empty) until the run ends.
+    active: Vec<AtomicBool>,
+    /// Count of active slots (the extraction quorum).
+    active_count: AtomicUsize,
+    /// How many active reducers have extracted for the in-progress epoch.
     extracted_count: AtomicUsize,
     /// Total state transfers performed (metrics).
     transfers: AtomicU64,
@@ -88,11 +96,21 @@ pub struct StageTracker {
 
 impl StageTracker {
     pub fn new(reducers: usize, initial_epoch: u64) -> Self {
+        Self::with_capacity(reducers, reducers, initial_epoch)
+    }
+
+    /// A tracker with `capacity` pre-allocated reducer slots of which the
+    /// first `reducers` start active — elastic runs activate the rest via
+    /// [`Self::activate`] as reducers spawn.
+    pub fn with_capacity(reducers: usize, capacity: usize, initial_epoch: u64) -> Self {
+        let capacity = capacity.max(reducers);
         StageTracker {
             synced_epoch: AtomicU64::new(initial_epoch),
             pending_epoch: AtomicU64::new(0),
             outstanding: AtomicI64::new(0),
-            extracted: (0..reducers).map(|_| AtomicBool::new(true)).collect(),
+            extracted: (0..capacity).map(|_| AtomicBool::new(true)).collect(),
+            active: (0..capacity).map(|i| AtomicBool::new(i < reducers)).collect(),
+            active_count: AtomicUsize::new(reducers),
             extracted_count: AtomicUsize::new(reducers),
             transfers: AtomicU64::new(0),
         }
@@ -125,9 +143,12 @@ impl StageTracker {
         assert!(epoch > self.synced_epoch.load(Ordering::SeqCst));
         // reset the extraction slate *before* publishing the epoch: a
         // reducer that sees the pending epoch must also see its cleared
-        // flag, or it would skip its substage-1 duty
-        for e in &self.extracted {
-            e.store(false, Ordering::SeqCst);
+        // flag, or it would skip its substage-1 duty. Only active slots
+        // owe an extraction — inactive slots have no reducer to run one.
+        for (e, a) in self.extracted.iter().zip(&self.active) {
+            if a.load(Ordering::SeqCst) {
+                e.store(false, Ordering::SeqCst);
+            }
         }
         self.extracted_count.store(0, Ordering::SeqCst);
         let prev = self.pending_epoch.swap(epoch, Ordering::SeqCst);
@@ -159,9 +180,9 @@ impl StageTracker {
         self.maybe_finish();
     }
 
-    /// True once every reducer extracted for the pending epoch.
+    /// True once every active reducer extracted for the pending epoch.
     pub fn all_extracted(&self) -> bool {
-        self.extracted_count.load(Ordering::SeqCst) == self.extracted.len()
+        self.extracted_count.load(Ordering::SeqCst) == self.active_count.load(Ordering::SeqCst)
     }
 
     fn maybe_finish(&self) {
@@ -187,11 +208,32 @@ impl StageTracker {
             && !self.extracted[reducer].load(Ordering::SeqCst)
     }
 
-    /// Grow tracking when a reducer is added at runtime (elastic §7).
-    pub fn add_reducer(&mut self) {
-        // a brand-new reducer has no state to extract
-        self.extracted.push(AtomicBool::new(true));
-        self.extracted_count.fetch_add(1, Ordering::SeqCst);
+    /// Elastic §7: a reducer spawned at runtime joins the protocol in its
+    /// pre-allocated slot. Must be called from `Synchronized` — the
+    /// balancer activates the slot *before* opening the membership
+    /// change's synchronization epoch, so the joiner (which has no state)
+    /// runs its trivial extraction with everyone else.
+    pub fn activate(&self, reducer: usize) {
+        assert!(
+            self.pending_epoch.load(Ordering::SeqCst) == 0,
+            "activating a reducer mid-synchronization (membership changes are \
+             gated on Synchronized)"
+        );
+        assert!(reducer < self.active.len(), "reducer {reducer} beyond tracker capacity");
+        let was = self.active[reducer].swap(true, Ordering::SeqCst);
+        if !was {
+            self.active_count.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Number of active (spawned) reducer slots.
+    pub fn active_count(&self) -> usize {
+        self.active_count.load(Ordering::SeqCst)
+    }
+
+    /// Slot capacity the tracker was pre-allocated for.
+    pub fn capacity(&self) -> usize {
+        self.active.len()
     }
 }
 
@@ -268,16 +310,33 @@ mod tests {
     }
 
     #[test]
-    fn elastic_add_reducer() {
-        let mut t = StageTracker::new(2, 1);
-        t.add_reducer();
+    fn elastic_activate_joins_the_quorum() {
+        let t = StageTracker::with_capacity(2, 4, 1);
+        assert_eq!(t.active_count(), 2);
+        assert_eq!(t.capacity(), 4);
+        t.activate(2);
+        assert_eq!(t.active_count(), 3);
         t.begin_epoch(2);
-        // all three must now extract
+        // all three active reducers must now extract; slot 3 owes nothing
+        assert!(t.needs_extraction(0));
+        assert!(t.needs_extraction(2));
+        assert!(!t.needs_extraction(3), "inactive slot owes no extraction");
         t.extraction_done(0, 0);
         t.extraction_done(1, 0);
         assert_eq!(t.stage(), Stage::Synchronizing);
         t.extraction_done(2, 0);
         assert_eq!(t.stage(), Stage::Synchronized);
+        // re-activating an active slot is idempotent
+        t.activate(2);
+        assert_eq!(t.active_count(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "mid-synchronization")]
+    fn activate_mid_sync_panics() {
+        let t = StageTracker::with_capacity(2, 4, 1);
+        t.begin_epoch(2);
+        t.activate(2);
     }
 
     #[test]

@@ -26,6 +26,11 @@ USAGE:
                                  reproduce Table 1 (Experiment 1) on both
                                  drivers, with forwarded-message counts
   dpa fig3 [--max-rounds N]      reproduce Figure 3 (Experiment 2)
+  dpa elastic [--strategy S] [--items N]
+                                 elastic-membership demo: a WL1-style hot
+                                 phase scales the reducer set up, the cool
+                                 tail scales it back down — run on BOTH
+                                 drivers, parity-checked against the oracle
   dpa workloads                  describe the five paper workloads
   dpa help
 
@@ -45,6 +50,13 @@ OPTIONS (run):
   --decay-alpha F   EWMA weight of new load samples (0,1]    [default: 0.5]
   --hysteresis F    overload-flag band around the mean       [default: 0.25]
   --min-gain F      min fractional gain to re-home a key     [default: 0.1]
+  --scale-up F      mean decayed qlen above which a reducer
+                    is ADDED (any --scale-*/--*-reducers flag
+                    enables elastic membership)               [default: 8.0]
+  --scale-down F    mean decayed qlen below which the coldest
+                    reducer RETIRES                           [default: 1.0]
+  --min-reducers N  elastic floor                             [default: 1]
+  --max-reducers N  elastic ceiling (id-space pre-allocation) [default: 16]
   --mappers N / --reducers N                                 [default: 4/4]
   --driver D        sim|threads                              [default: sim]
   --seed N          sim schedule seed                        [default: 0]
@@ -61,6 +73,7 @@ pub enum Command {
     Run(Box<RunOpts>),
     Table1 { seeds: usize, strategies: Vec<Strategy> },
     Fig3 { max_rounds: u32 },
+    Elastic { strategy: Strategy, items: usize },
     Workloads,
     Help,
 }
@@ -99,6 +112,17 @@ pub fn parse(argv: &[String]) -> crate::Result<Command> {
             args.finish()?;
             Ok(Command::Fig3 { max_rounds })
         }
+        "elastic" => {
+            let strategy = args
+                .take_opt("strategy")
+                .map(|s| s.parse::<Strategy>())
+                .transpose()
+                .map_err(anyhow::Error::msg)?
+                .unwrap_or(Strategy::Doubling);
+            let items = args.take_opt_parse("items")?.unwrap_or(400usize);
+            args.finish()?;
+            Ok(Command::Elastic { strategy, items })
+        }
         "run" => {
             let mut cfg = PipelineConfig::default();
             if let Some(path) = args.take_opt("config") {
@@ -124,6 +148,18 @@ pub fn parse(argv: &[String]) -> crate::Result<Command> {
             }
             if let Some(v) = args.take_opt_parse("min-gain")? {
                 cfg.signal.min_gain = v;
+            }
+            if let Some(v) = args.take_opt_parse("scale-up")? {
+                cfg.elastic_mut().scale_up = v;
+            }
+            if let Some(v) = args.take_opt_parse("scale-down")? {
+                cfg.elastic_mut().scale_down = v;
+            }
+            if let Some(v) = args.take_opt_parse("min-reducers")? {
+                cfg.elastic_mut().min_reducers = v;
+            }
+            if let Some(v) = args.take_opt_parse("max-reducers")? {
+                cfg.elastic_mut().max_reducers = v;
             }
             if let Some(v) = args.take_opt_parse("mappers")? {
                 cfg.mappers = v;
@@ -239,7 +275,108 @@ pub fn execute(cmd: Command) -> crate::Result<i32> {
             print!("{}", fig3(max_rounds)?);
             Ok(0)
         }
+        Command::Elastic { strategy, items } => {
+            let (out, ok) = elastic_demo(strategy, items)?;
+            print!("{out}");
+            Ok(i32::from(!ok))
+        }
     }
+}
+
+/// The `dpa elastic` acceptance run: a WL1-style hot phase (every item on
+/// one doubling-layout reducer) drives the decayed mean over the scale-up
+/// watermark, then a uniform cool tail sinks it below the scale-down
+/// watermark — on BOTH drivers, with every membership change flowing
+/// through the §7 state-forwarding machinery. Returns the rendered
+/// timeline and whether the acceptance held: identical merged output on
+/// both drivers (equal to the serial oracle) and, on the deterministic
+/// sim, at least one scale-up AND one scale-down.
+pub fn elastic_demo(strategy: Strategy, items: usize) -> crate::Result<(String, bool)> {
+    let hot = paperwl::wl1();
+    let tail = generators::uniform(items.max(100), 60, 11);
+    let mut all: Vec<String> = hot.items.clone();
+    all.extend(tail.items.iter().cloned());
+    let oracle = {
+        let mut m = std::collections::HashMap::new();
+        for i in &all {
+            *m.entry(i.clone()).or_insert(0i64) += 1;
+        }
+        let mut v: Vec<(String, i64)> = m.into_iter().collect();
+        v.sort();
+        v
+    };
+
+    let mk_cfg = |driver| {
+        let mut cfg = PipelineConfig::default();
+        cfg.driver = driver;
+        cfg.strategy = strategy;
+        if strategy.is_token_ring() {
+            cfg.initial_tokens = Some(strategy.initial_tokens(cfg.halving_init_tokens));
+        }
+        cfg.mode = ConsistencyMode::StateForward;
+        cfg.max_rounds = 2;
+        cfg.cooldown = 20;
+        if driver == DriverKind::Threads {
+            cfg.reduce_delay_us = 150;
+        }
+        *cfg.elastic_mut() = crate::balancer::elastic::ElasticConfig {
+            scale_up: 2.0,
+            scale_down: 1.0,
+            min_reducers: 4,
+            max_reducers: 8,
+        };
+        cfg
+    };
+
+    let mut out = format!(
+        "elastic membership demo — strategy {strategy}, {} hot + {} tail items, \
+         reducers 4..=8 (watermarks: up >2.0, down <1.0 mean decayed qlen)\n\n",
+        hot.items.len(),
+        tail.items.len()
+    );
+    let mut ok = true;
+    let mut results = Vec::new();
+    for driver in [DriverKind::Sim, DriverKind::Threads] {
+        let name = match driver {
+            DriverKind::Sim => "sim",
+            DriverKind::Threads => "threads",
+        };
+        let r = Pipeline::wordcount(mk_cfg(driver)).run(all.clone())?;
+        let (added, retired) = r.scale_counts();
+        out.push_str(&format!(
+            "[{name}] S = {} | {} reducer ids ({} scale-ups, {} retires) | \
+             processed = {:?}\n",
+            f2(r.skew()),
+            r.processed.len(),
+            added,
+            retired,
+            r.processed
+        ));
+        for e in r.membership_events() {
+            out.push_str(&format!(
+                "  @{:>8} {:?} (epoch {}, qlens {:?})\n",
+                e.at, e.membership.unwrap(), e.epoch, e.qlens
+            ));
+        }
+        if r.result != oracle {
+            out.push_str(&format!("[{name}] FAIL: merged output != serial oracle\n"));
+            ok = false;
+        }
+        if driver == DriverKind::Sim && (added == 0 || retired == 0) {
+            out.push_str(
+                "[sim] FAIL: expected at least one scale-up and one scale-down\n",
+            );
+            ok = false;
+        }
+        results.push(r.result);
+    }
+    if results[0] == results[1] {
+        out.push_str("\nsim and threads merged outputs identical, equal to the oracle ✓\n");
+    } else {
+        out.push_str("\nFAIL: sim and threads merged outputs differ\n");
+        ok = false;
+    }
+    Ok((out, ok))
 }
 
 /// One experiment cell's configuration under `strategy` on `driver`.
@@ -501,6 +638,51 @@ mod tests {
                 assert!((o.cfg.signal.hysteresis - 0.4).abs() < 1e-12);
                 assert!((o.cfg.signal.min_gain - 0.2).abs() < 1e-12);
             }
+            _ => panic!("expected Run"),
+        }
+    }
+
+    #[test]
+    fn parse_elastic_command_and_run_knobs() {
+        match parse(&sv(&["elastic", "--strategy", "halving", "--items", "200"])).unwrap() {
+            Command::Elastic { strategy, items } => {
+                assert_eq!(strategy, Strategy::Halving);
+                assert_eq!(items, 200);
+            }
+            _ => panic!("expected Elastic"),
+        }
+        match parse(&sv(&["elastic"])).unwrap() {
+            Command::Elastic { strategy, items } => {
+                assert_eq!(strategy, Strategy::Doubling);
+                assert_eq!(items, 400);
+            }
+            _ => panic!("expected Elastic"),
+        }
+        let cmd = parse(&sv(&[
+            "run",
+            "--scale-up",
+            "6.0",
+            "--scale-down",
+            "0.5",
+            "--min-reducers",
+            "2",
+            "--max-reducers",
+            "8",
+            "--quiet",
+        ]))
+        .unwrap();
+        match cmd {
+            Command::Run(o) => {
+                let e = o.cfg.elastic.expect("scale flags enable elastic");
+                assert!((e.scale_up - 6.0).abs() < 1e-12);
+                assert!((e.scale_down - 0.5).abs() < 1e-12);
+                assert_eq!((e.min_reducers, e.max_reducers), (2, 8));
+            }
+            _ => panic!("expected Run"),
+        }
+        // no scale flag → elastic stays off
+        match parse(&sv(&["run", "--quiet"])).unwrap() {
+            Command::Run(o) => assert!(o.cfg.elastic.is_none()),
             _ => panic!("expected Run"),
         }
     }

@@ -18,14 +18,14 @@
 //! variance). The deterministic counterpart is [`crate::sim`].
 
 use std::sync::mpsc::{self, RecvTimeoutError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::balancer::state_forward::ConsistencyMode;
 use crate::balancer::BalancerCore;
 use crate::exec::{MapExecutor, ReduceFactory};
 use crate::mapper::MapperCore;
-use crate::metrics::RunReport;
+use crate::metrics::{MembershipChange, RunReport};
 use crate::reducer::ReducerCore;
 use crate::runtime::exec::{ExecCore, ExecParams, LoadReport, ReducerStep};
 
@@ -51,6 +51,10 @@ pub struct ThreadParams {
     /// call hashes + routes a whole task; every router family). `None` =
     /// scalar routing through the epoch-cached router.
     pub route_runtime: Option<Arc<crate::runtime::programs::SharedRuntime>>,
+    /// Elastic reducer-id ceiling (0 = fixed membership). The balancer
+    /// thread spawns a new reducer thread when it applies an `Added`
+    /// membership event.
+    pub max_reducers: usize,
 }
 
 impl Default for ThreadParams {
@@ -64,6 +68,7 @@ impl Default for ThreadParams {
             pop_timeout: Duration::from_millis(2),
             mode: ConsistencyMode::MergeAtEnd,
             route_runtime: None,
+            max_reducers: 0,
         }
     }
 }
@@ -111,6 +116,7 @@ impl ThreadDriver {
                 report_interval: p.report_interval,
                 mode: p.mode,
                 coordinated_stop: true,
+                max_reducers: p.max_reducers,
             },
         ));
         let (report_tx, report_rx) = mpsc::channel::<LoadReport>();
@@ -169,16 +175,24 @@ impl ThreadDriver {
         }
 
         // reducers: step the shared state-machine; reports go through the
-        // channel — the hot path takes no balancer lock
-        let mut reducer_handles = Vec::with_capacity(n_reducers);
-        for i in 0..n_reducers {
+        // channel — the hot path takes no balancer lock. The spawner is
+        // shared with the balancer thread, which uses it to bring up
+        // brand-new reducers on elastic scale-up events; handles live in
+        // a shared vec (appended in reducer-id order) joined at the end.
+        let reducer_handles: Arc<Mutex<Vec<std::thread::JoinHandle<ReducerCore>>>> =
+            Arc::new(Mutex::new(Vec::with_capacity(n_reducers)));
+        let spawn_reducer = {
             let core = core.clone();
-            let tx = report_tx.clone();
             let router = router.clone();
-            let exec = reduce_factory(i);
+            let report_tx = report_tx.clone();
+            let factory = reduce_factory.clone();
             let reduce_delay = p.reduce_delay_us;
             let pop_timeout = p.pop_timeout;
-            reducer_handles.push(
+            move |i: usize| -> std::thread::JoinHandle<ReducerCore> {
+                let core = core.clone();
+                let tx = report_tx.clone();
+                let router = router.clone();
+                let exec = factory(i);
                 std::thread::Builder::new()
                     .name(format!("dpa-reducer-{i}"))
                     .spawn(move || {
@@ -222,17 +236,25 @@ impl ThreadDriver {
                         }
                         rc
                     })
-                    .expect("spawn reducer"),
-            );
+                    .expect("spawn reducer")
+            }
+        };
+        {
+            let mut handles = reducer_handles.lock().unwrap();
+            for i in 0..n_reducers {
+                handles.push(spawn_reducer(i));
+            }
         }
         drop(report_tx);
 
         // balancer thread: owns the BalancerCore outright — no mutex.
-        // Applies reports, fires repartitions, and (once the pipeline is
-        // drained, synchronized and every queue empty) issues the
-        // coordinated stop. Because the same thread both rebalances and
-        // stops, no repartition can start after a reducer was released.
+        // Applies reports, fires repartitions, spawns reducers on elastic
+        // scale-up, and (once the pipeline is drained, synchronized and
+        // every queue empty) issues the coordinated stop. Because the
+        // same thread rebalances, scales and stops, no repartition or
+        // membership change can start after a reducer was released.
         let bal_core = core.clone();
+        let bal_handles = reducer_handles.clone();
         let balancer_handle = std::thread::Builder::new()
             .name("dpa-balancer".into())
             .spawn(move || {
@@ -240,7 +262,15 @@ impl ThreadDriver {
                 loop {
                     match report_rx.recv_timeout(Duration::from_micros(500)) {
                         Ok(r) => {
-                            let _ = bal_core.apply_report(&mut balancer, r);
+                            let event = bal_core.apply_report(&mut balancer, r);
+                            if let Some(MembershipChange::Added { id }) =
+                                event.and_then(|e| e.membership)
+                            {
+                                // the queue (pre-allocated) may already be
+                                // receiving records at the new epoch; the
+                                // thread starts draining it now
+                                bal_handles.lock().unwrap().push(spawn_reducer(id as usize));
+                            }
                         }
                         Err(RecvTimeoutError::Timeout) => {}
                         Err(RecvTimeoutError::Disconnected) => break,
@@ -252,6 +282,17 @@ impl ThreadDriver {
                         bal_core.request_stop();
                         break;
                     }
+                    // a reducer may only exit after request_stop, so a
+                    // finished handle here means it PANICKED. Holding the
+                    // spawner (and its report sender) in this thread makes
+                    // the channel-disconnect fallback unreachable, so this
+                    // liveness check is what turns a dead reducer into a
+                    // propagated panic at join() instead of a silent hang
+                    // of the drain condition.
+                    if bal_handles.lock().unwrap().iter().any(|h| h.is_finished()) {
+                        bal_core.request_stop(); // release the survivors
+                        break;
+                    }
                 }
                 balancer
             })
@@ -261,11 +302,16 @@ impl ThreadDriver {
             .into_iter()
             .map(|h| h.join().expect("mapper panicked"))
             .collect();
-        let mut reducers: Vec<ReducerCore> = reducer_handles
+        // join the balancer FIRST: after it exits, no further reducer can
+        // be spawned, so taking the handle vec is race-free
+        let mut balancer = balancer_handle.join().expect("balancer panicked");
+        let handles = std::mem::take(&mut *reducer_handles.lock().unwrap());
+        // handles were appended in id order, so the collected cores are too
+        let mut reducers: Vec<ReducerCore> = handles
             .into_iter()
             .map(|h| h.join().expect("reducer panicked"))
             .collect();
-        let mut balancer = balancer_handle.join().expect("balancer panicked");
+        debug_assert!(reducers.iter().enumerate().all(|(i, rc)| rc.id == i));
         let wall = t0.elapsed();
 
         core.finish(&mappers, &mut reducers, &mut balancer, reduce_factory, wall, 0)

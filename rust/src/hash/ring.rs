@@ -221,6 +221,36 @@ impl Ring {
         node
     }
 
+    /// Elastic scale-down — remove **all** of `node`'s tokens, so its
+    /// arcs fall to their clockwise successors (the consistent-hashing
+    /// minimal-movement property: only keys the retired node owned move).
+    /// The node id stays allocated (ids are never reused); the node is
+    /// simply no longer routable. Returns the number of tokens removed —
+    /// `0` when the node held none, or when it is the **last** node with
+    /// tokens (an empty ring cannot route).
+    pub fn retire_node(&mut self, node: usize) -> u32 {
+        let Some(toks) = self.node_tokens.get(node) else {
+            return 0; // unknown id: nothing to retire
+        };
+        let n = toks.len() as u32;
+        if n == 0 || n as usize == self.tokens.len() {
+            return 0;
+        }
+        self.node_tokens[node].clear();
+        self.rebuild();
+        n
+    }
+
+    /// Does `node` currently hold any tokens (i.e. is it routable)?
+    pub fn is_live(&self, node: usize) -> bool {
+        self.node_tokens.get(node).is_some_and(|t| !t.is_empty())
+    }
+
+    /// Number of nodes holding at least one token.
+    pub fn live_nodes(&self) -> usize {
+        self.node_tokens.iter().filter(|t| !t.is_empty()).count()
+    }
+
     /// Fraction of the ring's hash space owned by `node` (sums to 1 across
     /// nodes). Useful for diagnostics and property tests.
     pub fn arc_fraction(&self, node: usize) -> f64 {
@@ -519,6 +549,39 @@ mod tests {
             }
         }
         assert!(claimed > 0, "the new node claimed some keys");
+    }
+
+    #[test]
+    fn retire_node_moves_only_its_keys() {
+        let mut ring = Ring::new(4, 8);
+        let keys: Vec<String> = (0..2000).map(|i| format!("key-{i}")).collect();
+        let before: Vec<usize> = keys.iter().map(|k| ring.lookup(k.as_bytes())).collect();
+        assert_eq!(ring.retire_node(2), 8);
+        assert!(!ring.is_live(2));
+        assert_eq!(ring.live_nodes(), 3);
+        assert_eq!(ring.nodes(), 4, "the id stays allocated");
+        let mut moved = 0;
+        for (k, &owner) in keys.iter().zip(&before) {
+            let now = ring.lookup(k.as_bytes());
+            assert_ne!(now, 2, "key {k} still routes to the retired node");
+            if owner != 2 {
+                assert_eq!(now, owner, "key {k} moved between surviving nodes");
+            } else {
+                moved += 1;
+            }
+        }
+        assert!(moved > 0, "the retired node owned no keys?");
+        // retiring again is a no-op
+        assert_eq!(ring.retire_node(2), 0);
+    }
+
+    #[test]
+    fn retire_last_live_node_refused() {
+        let mut ring = Ring::new(2, 4);
+        assert_eq!(ring.retire_node(0), 4);
+        assert_eq!(ring.retire_node(1), 0, "an empty ring cannot route");
+        assert!(ring.is_live(1));
+        assert_eq!(ring.live_nodes(), 1);
     }
 
     #[test]

@@ -46,23 +46,27 @@ use super::ring::{Ring, Token};
 /// lengths into it, routers read the EWMA-decayed values
 /// ([`LoadSignal::decayed`]), the hysteresis overload flags
 /// ([`LoadSignal::flags_vec`]) and the migration-gain guard
-/// ([`LoadSignal::migration_gain_ok`]). A bare [`Loads::new`] carries the
-/// legacy (unsmoothed) configuration, so load values and flags are
-/// bit-compatible with the raw-load era.
+/// ([`LoadSignal::migration_gain_ok`]). A bare [`LoadSignal::new`]
+/// carries the legacy (unsmoothed) configuration, so load values and
+/// flags are bit-compatible with the raw-load era.
 pub type Loads = LoadSignal;
 
-/// What one `redistribute` call changed — the routers' common currency
-/// for events, metrics and the zero-churn property tests.
+/// What one `redistribute` / membership call changed — the routers'
+/// common currency for events, metrics and the zero-churn property tests.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct RouteDelta {
     /// Did the routing function change at all?
     pub changed: bool,
-    /// Tokens created on the ring (doubling family).
+    /// Tokens created on the ring (doubling family, token-ring joins).
     pub tokens_added: u32,
-    /// Tokens removed from the ring (halving family).
+    /// Tokens removed on the ring (halving family, token-ring retires).
     pub tokens_removed: u32,
     /// Keys explicitly re-homed (two-choices family).
     pub keys_reassigned: u64,
+    /// Nodes that joined the routable set (elastic scale-up).
+    pub nodes_added: u32,
+    /// Nodes that left the routable set (elastic scale-down).
+    pub nodes_retired: u32,
 }
 
 impl RouteDelta {
@@ -96,9 +100,10 @@ pub enum SnapshotState {
     /// compiled XLA `route` program takes).
     TokenRing { tokens: Vec<Token> },
     /// Multi-probe family (`route_probe` program): node ring positions
-    /// sorted by `(hash, node)`, the probe count, and the per-node state
-    /// frozen at the last redistribute — the hysteresis shed flags
-    /// routing consults plus the EWMA-decayed load weights
+    /// sorted by `(hash, node)` — only **live** nodes have a position, so
+    /// elastic membership shrinks/grows this table — the probe count, and
+    /// the per-node state frozen at the last redistribute: the hysteresis
+    /// shed flags routing consults plus the EWMA-decayed load weights
     /// ([`FRAC_BITS`](crate::balancer::signal::FRAC_BITS) fixed point)
     /// they were frozen alongside (diagnostics).
     Probe {
@@ -110,12 +115,15 @@ pub enum SnapshotState {
     },
     /// Two-choices family (`route_assign` program): the sticky
     /// `(key_hash, owner)` table sorted by key hash — the basis of an
-    /// ownership diff across a repartition — plus the per-node
-    /// EWMA-decayed loads (fixed point) frozen at snapshot time, which
-    /// resolve keys *not yet* in the table by the same first-sight rule
-    /// the scalar router applies.
+    /// ownership diff across a repartition — the ascending **live node
+    /// id** list candidate hashing indexes (under elastic membership the
+    /// id space has gaps; `candidate = live[h % live.len()]`), plus the
+    /// per-node EWMA-decayed loads (fixed point) frozen at snapshot time,
+    /// which resolve keys *not yet* in the table by the same first-sight
+    /// rule the scalar router applies.
     Assignment {
         assignments: Vec<(u32, u32)>,
+        live: Vec<u32>,
         loads: Vec<u64>,
     },
 }
@@ -164,11 +172,11 @@ impl RouteSnapshot {
                 overloaded,
                 ..
             } => probe_route(position_hashes, position_nodes, overloaded, *probes, hash),
-            SnapshotState::Assignment { assignments, loads } => {
+            SnapshotState::Assignment { assignments, live, loads } => {
                 match assignments.binary_search_by_key(&hash, |&(k, _)| k) {
                     Ok(i) => assignments[i].1 as usize,
                     Err(_) => {
-                        let (c1, c2) = two_choices_candidates(hash, self.nodes);
+                        let (c1, c2) = two_choices_candidates_in(hash, live);
                         let l = |n: usize| loads.get(n).copied().unwrap_or(0);
                         if l(c2) < l(c1) {
                             c2
@@ -200,6 +208,36 @@ pub trait Router: Send + Sync {
 
     /// Relieve an overloaded node. Returns what changed.
     fn redistribute(&mut self, target: usize, loads: &Loads) -> RouteDelta;
+
+    /// Elastic scale-up: grow the routable set with the brand-new node
+    /// `id`, which must equal the current id space ([`Router::nodes`] —
+    /// ids are dense and never reused). Minimal-movement contract: no key
+    /// may move between two *surviving* nodes — only keys the new node
+    /// claims change owner (token ring / multi-probe), or none at all
+    /// (two-choices: sticky assignments hold; only unseen keys can
+    /// first-sight onto the joiner).
+    fn add_node(&mut self, id: usize) -> RouteDelta;
+
+    /// Elastic scale-down: remove `id` from the routable set (its id
+    /// stays allocated). Minimal-movement contract: only keys owned by
+    /// the retired node move. Returns an unchanged delta when `id` is
+    /// already retired or is the last live node (an empty routable set
+    /// cannot route). `loads` resolves where the retired node's keys land
+    /// for routers whose placement is load-aware (two-choices re-homes
+    /// each orphaned key to the less-loaded of its re-computed
+    /// candidates).
+    fn retire_node(&mut self, id: usize, loads: &Loads) -> RouteDelta;
+
+    /// Is `id` currently routable? (Retired ids stay allocated but are
+    /// never returned by `route`.)
+    fn is_live(&self, id: usize) -> bool {
+        id < self.nodes()
+    }
+
+    /// Number of currently routable nodes (`<= nodes()`).
+    fn live_count(&self) -> usize {
+        self.nodes()
+    }
 
     /// Externally visible routing state. `loads` is the live load view:
     /// routers whose *first-sight* decision consults loads (two-choices)
@@ -256,11 +294,20 @@ pub enum RingOp {
 pub struct TokenRingRouter {
     ring: Ring,
     op: RingOp,
+    /// Tokens a node joining at runtime claims — the founding per-node
+    /// share, so a joiner takes the same expected arc fraction a seed
+    /// node started with (minimal movement: exactly the claimed arcs).
+    join_tokens: u32,
 }
 
 impl TokenRingRouter {
     pub fn new(ring: Ring, op: RingOp) -> Self {
-        TokenRingRouter { ring, op }
+        let join_tokens = (0..ring.nodes())
+            .map(|n| ring.tokens_of(n))
+            .max()
+            .unwrap_or(1)
+            .max(1);
+        TokenRingRouter { ring, op, join_tokens }
     }
 }
 
@@ -309,6 +356,38 @@ impl Router for TokenRingRouter {
                 }
             }
         }
+    }
+
+    fn add_node(&mut self, id: usize) -> RouteDelta {
+        assert_eq!(id, self.ring.nodes(), "node ids are dense and never reused");
+        self.ring.add_node(self.join_tokens);
+        RouteDelta {
+            changed: true,
+            tokens_added: self.join_tokens,
+            nodes_added: 1,
+            ..RouteDelta::default()
+        }
+    }
+
+    fn retire_node(&mut self, id: usize, _loads: &Loads) -> RouteDelta {
+        let removed = self.ring.retire_node(id);
+        if removed == 0 {
+            return RouteDelta::unchanged();
+        }
+        RouteDelta {
+            changed: true,
+            tokens_removed: removed,
+            nodes_retired: 1,
+            ..RouteDelta::default()
+        }
+    }
+
+    fn is_live(&self, id: usize) -> bool {
+        self.ring.is_live(id)
+    }
+
+    fn live_count(&self) -> usize {
+        self.ring.live_nodes()
     }
 
     fn snapshot(&self, _loads: &Loads) -> RouteSnapshot {
@@ -366,15 +445,32 @@ pub fn probe_route(
     best.expect("probes >= 1").2
 }
 
-/// The two candidate nodes of a key hash under the two-choices router —
-/// shared by [`TwoChoicesRouter`] and the runtime's snapshot fallback
-/// lane; the Pallas `assign` kernel computes the same pair.
+/// The two candidate nodes of a key hash under the two-choices router
+/// with a **contiguous** live set `0..nodes` — the fixed-membership case.
+/// Equivalent to [`two_choices_candidates_in`] over the identity list.
 #[inline]
 pub fn two_choices_candidates(hash: u32, nodes: usize) -> (usize, usize) {
     let b = hash.to_le_bytes();
     (
         murmur3_x86_32_seed(&b, TWO_CHOICES_SEEDS[0]) as usize % nodes,
         murmur3_x86_32_seed(&b, TWO_CHOICES_SEEDS[1]) as usize % nodes,
+    )
+}
+
+/// The two candidate nodes of a key hash over an explicit ascending live
+/// node id list (elastic membership leaves gaps in the id space):
+/// `candidate_i = live[murmur3_seed_i(hash) % live.len()]`. With
+/// `live = [0, 1, .., n-1]` this is exactly [`two_choices_candidates`],
+/// so fixed-membership routing is bit-identical to the pre-elastic code.
+/// Shared by [`TwoChoicesRouter`], the runtime's snapshot fallback lane
+/// and (in batched form) the Pallas `assign` kernel.
+#[inline]
+pub fn two_choices_candidates_in(hash: u32, live: &[u32]) -> (usize, usize) {
+    let b = hash.to_le_bytes();
+    let n = live.len();
+    (
+        live[murmur3_x86_32_seed(&b, TWO_CHOICES_SEEDS[0]) as usize % n] as usize,
+        live[murmur3_x86_32_seed(&b, TWO_CHOICES_SEEDS[1]) as usize % n] as usize,
     )
 }
 
@@ -473,6 +569,52 @@ impl Router for MultiProbeRouter {
         RouteDelta { changed: true, ..RouteDelta::default() }
     }
 
+    fn add_node(&mut self, id: usize) -> RouteDelta {
+        assert_eq!(id, self.weights.len(), "node ids are dense and never reused");
+        let h = murmur3_x86_32(format!("node-{id}").as_bytes());
+        // keep the position table sorted by (hash, node) — the compiled
+        // route_probe program receives it as-is
+        let at = self
+            .position_hashes
+            .iter()
+            .zip(&self.position_nodes)
+            .position(|(&ph, &pn)| (ph, pn) > (h, id as u32))
+            .unwrap_or(self.position_hashes.len());
+        self.position_hashes.insert(at, h);
+        self.position_nodes.insert(at, id as u32);
+        self.weights.push(0);
+        self.overloaded.push(false);
+        self.epoch += 1;
+        // minimal movement: only keys whose closest acceptable probe now
+        // lands on the new position move — the MPCH consistency property
+        RouteDelta { changed: true, nodes_added: 1, ..RouteDelta::default() }
+    }
+
+    fn retire_node(&mut self, id: usize, _loads: &Loads) -> RouteDelta {
+        if self.position_hashes.len() <= 1 {
+            return RouteDelta::unchanged(); // the last live position must stay
+        }
+        let Some(at) = self.position_nodes.iter().position(|&n| n as usize == id) else {
+            return RouteDelta::unchanged(); // already retired
+        };
+        self.position_hashes.remove(at);
+        self.position_nodes.remove(at);
+        self.overloaded[id] = false;
+        self.weights[id] = 0;
+        self.epoch += 1;
+        // only arcs whose successor probe was the retired position move —
+        // they fall to their next-closest acceptable probe owner
+        RouteDelta { changed: true, nodes_retired: 1, ..RouteDelta::default() }
+    }
+
+    fn is_live(&self, id: usize) -> bool {
+        self.position_nodes.iter().any(|&n| n as usize == id)
+    }
+
+    fn live_count(&self) -> usize {
+        self.position_nodes.len()
+    }
+
     fn snapshot(&self, _loads: &Loads) -> RouteSnapshot {
         RouteSnapshot {
             router: self.name(),
@@ -511,35 +653,52 @@ const TWO_CHOICES_SEEDS: [u32; 2] = [0x517c_c1b7, 0x9e37_79b9];
 /// between its two candidates on adversarial drift. Under StateForward
 /// the normal epoch machinery then ships the moved keys' state.
 ///
-/// The table is shared (`Arc`) across [`Router::clone_router`] clones, so
-/// per-actor route caches all see one consistent assignment.
+/// The table — and the live node id list candidate hashing indexes — is
+/// shared (`Arc`) across [`Router::clone_router`] clones, so per-actor
+/// route caches all see one consistent assignment and one membership:
+/// a first sight can never record a node a concurrent retire just
+/// removed (both run under the same write lock).
 #[derive(Clone)]
 pub struct TwoChoicesRouter {
-    nodes: usize,
-    assignments: Arc<RwLock<BTreeMap<u32, u32>>>,
+    /// Total id space (live ∪ retired); candidate hashing indexes the
+    /// shared live list, so ids may have gaps after retires.
+    id_space: usize,
+    state: Arc<RwLock<TwoChoicesState>>,
     epoch: Arc<AtomicU64>,
+}
+
+#[derive(Debug)]
+struct TwoChoicesState {
+    /// Sticky `key hash → owner` assignments.
+    assignments: BTreeMap<u32, u32>,
+    /// Ascending live node ids (`candidate = live[h % live.len()]`).
+    live: Vec<u32>,
 }
 
 impl TwoChoicesRouter {
     pub fn new(nodes: usize) -> Self {
         assert!(nodes > 0, "two-choices router needs at least one node");
         TwoChoicesRouter {
-            nodes,
-            assignments: Arc::new(RwLock::new(BTreeMap::new())),
+            id_space: nodes,
+            state: Arc::new(RwLock::new(TwoChoicesState {
+                assignments: BTreeMap::new(),
+                live: (0..nodes as u32).collect(),
+            })),
             epoch: Arc::new(AtomicU64::new(1)),
         }
     }
 
     #[inline]
     fn candidates(&self, hash: u32) -> (usize, usize) {
-        two_choices_candidates(hash, self.nodes)
+        two_choices_candidates_in(hash, &self.state.read().unwrap().live)
     }
 
     /// Number of keys currently pinned to `node`.
     pub fn assigned_to(&self, node: usize) -> usize {
-        self.assignments
+        self.state
             .read()
             .unwrap()
+            .assignments
             .values()
             .filter(|&&n| n as usize == node)
             .count()
@@ -552,7 +711,7 @@ impl Router for TwoChoicesRouter {
     }
 
     fn nodes(&self) -> usize {
-        self.nodes
+        self.id_space
     }
 
     fn epoch(&self) -> u64 {
@@ -560,13 +719,15 @@ impl Router for TwoChoicesRouter {
     }
 
     fn route(&self, hash: u32, loads: &Loads) -> usize {
-        if let Some(&n) = self.assignments.read().unwrap().get(&hash) {
+        if let Some(&n) = self.state.read().unwrap().assignments.get(&hash) {
             return n as usize;
         }
-        let (c1, c2) = self.candidates(hash);
-        let mut map = self.assignments.write().unwrap();
+        let mut st = self.state.write().unwrap();
+        // candidates computed under the same lock a membership change
+        // takes, so a first sight can never pick a just-retired node
+        let (c1, c2) = two_choices_candidates_in(hash, &st.live);
         // entry(): a racing first-router wins; we adopt its choice
-        let n = *map.entry(hash).or_insert_with(|| {
+        let n = *st.assignments.entry(hash).or_insert_with(|| {
             if loads.decayed(c2) < loads.decayed(c1) {
                 c2 as u32
             } else {
@@ -577,8 +738,9 @@ impl Router for TwoChoicesRouter {
     }
 
     fn redistribute(&mut self, target: usize, loads: &Loads) -> RouteDelta {
-        let mut map = self.assignments.write().unwrap();
-        let pinned: Vec<u32> = map
+        let mut st = self.state.write().unwrap();
+        let pinned: Vec<u32> = st
+            .assignments
             .iter()
             .filter(|&(_, &n)| n as usize == target)
             .map(|(&k, _)| k)
@@ -589,7 +751,7 @@ impl Router for TwoChoicesRouter {
             if i % 2 != 0 {
                 continue;
             }
-            let (c1, c2) = self.candidates(*k);
+            let (c1, c2) = two_choices_candidates_in(*k, &st.live);
             let alt = if c1 == target { c2 } else { c1 };
             if alt == target {
                 continue; // both candidates collide on the target
@@ -600,10 +762,10 @@ impl Router for TwoChoicesRouter {
                 // ping-pong the key back next round)
                 continue;
             }
-            map.insert(*k, alt as u32);
+            st.assignments.insert(*k, alt as u32);
             moved += 1;
         }
-        drop(map);
+        drop(st);
         if moved == 0 {
             return RouteDelta::unchanged();
         }
@@ -615,26 +777,79 @@ impl Router for TwoChoicesRouter {
         }
     }
 
+    fn add_node(&mut self, id: usize) -> RouteDelta {
+        assert_eq!(id, self.id_space, "node ids are dense and never reused");
+        let mut st = self.state.write().unwrap();
+        st.live.push(id as u32); // fresh max id keeps the list ascending
+        self.id_space += 1;
+        drop(st);
+        self.epoch.fetch_add(1, Ordering::AcqRel);
+        // sticky assignments hold, so NO existing key moves at all — the
+        // joiner receives load only through first sights of unseen keys
+        // (and any later redistribute whose candidates now include it)
+        RouteDelta { changed: true, nodes_added: 1, ..RouteDelta::default() }
+    }
+
+    fn retire_node(&mut self, id: usize, loads: &Loads) -> RouteDelta {
+        let mut st = self.state.write().unwrap();
+        if st.live.len() <= 1 {
+            return RouteDelta::unchanged(); // the last live node must stay
+        }
+        let Ok(at) = st.live.binary_search(&(id as u32)) else {
+            return RouteDelta::unchanged(); // already retired
+        };
+        st.live.remove(at);
+        // sticky-table rewrite restricted to the retired owner: each of
+        // its keys re-homes to the less-loaded of its candidates under
+        // the NEW membership (the retired node is no candidate anymore);
+        // every other entry is untouched
+        let orphaned: Vec<u32> = st
+            .assignments
+            .iter()
+            .filter(|&(_, &n)| n as usize == id)
+            .map(|(&k, _)| k)
+            .collect();
+        let mut moved = 0u64;
+        for k in orphaned {
+            let (c1, c2) = two_choices_candidates_in(k, &st.live);
+            let n = if loads.decayed(c2) < loads.decayed(c1) { c2 } else { c1 };
+            st.assignments.insert(k, n as u32);
+            moved += 1;
+        }
+        drop(st);
+        self.epoch.fetch_add(1, Ordering::AcqRel);
+        RouteDelta {
+            changed: true,
+            keys_reassigned: moved,
+            nodes_retired: 1,
+            ..RouteDelta::default()
+        }
+    }
+
+    fn is_live(&self, id: usize) -> bool {
+        self.state.read().unwrap().live.binary_search(&(id as u32)).is_ok()
+    }
+
+    fn live_count(&self) -> usize {
+        self.state.read().unwrap().live.len()
+    }
+
     fn snapshot(&self, loads: &Loads) -> RouteSnapshot {
         // freeze the *decayed* view — the very values route() consults
         // for first sights, so batch routing over the snapshot stays
         // bit-identical to the scalar router at this epoch
         let mut frozen = loads.decayed_vec();
-        frozen.resize(self.nodes, 0);
+        frozen.resize(self.id_space, 0);
+        let st = self.state.read().unwrap();
         RouteSnapshot {
             router: self.name(),
             epoch: self.epoch(),
-            nodes: self.nodes,
+            nodes: self.id_space,
             state: SnapshotState::Assignment {
                 // BTreeMap iteration is ascending by key hash — the sort
                 // order the compiled table lookup requires
-                assignments: self
-                    .assignments
-                    .read()
-                    .unwrap()
-                    .iter()
-                    .map(|(&k, &n)| (k, n))
-                    .collect(),
+                assignments: st.assignments.iter().map(|(&k, &n)| (k, n)).collect(),
+                live: st.live.clone(),
                 loads: frozen,
             },
         }
@@ -644,12 +859,17 @@ impl Router for TwoChoicesRouter {
         if assignments.is_empty() {
             return;
         }
-        let mut map = self.assignments.write().unwrap();
+        let mut st = self.state.write().unwrap();
         for &(k, n) in assignments {
+            // skip owners retired since the snapshot was taken — recording
+            // one would pin the key to a node routing no longer returns
+            if st.live.binary_search(&n).is_err() {
+                continue;
+            }
             // first writer wins: a racing scalar route (which inserts
             // under live loads) keeps its choice; ours is dropped and the
             // stale send is forwarded by the normal mechanism
-            map.entry(k).or_insert(n);
+            st.assignments.entry(k).or_insert(n);
         }
     }
 
@@ -684,6 +904,21 @@ impl RouterHandle {
     /// `signal` (EWMA decay, hysteresis band, migration-gain guard).
     pub fn with_signal(router: Box<dyn Router>, signal: &SignalConfig) -> Self {
         Self::with_loads(router, |nodes| Loads::with_config(nodes, signal))
+    }
+
+    /// Like [`Self::with_signal`], but pre-allocating load-signal slots
+    /// for up to `capacity` nodes — the elastic ceiling
+    /// (`balancer.max_reducers`). [`Self::add_node`] refuses to grow past
+    /// it, so everything sized off the capacity (reducer queues, tracker
+    /// slots) stays valid for every id the router can ever return.
+    pub fn with_signal_capacity(
+        router: Box<dyn Router>,
+        signal: &SignalConfig,
+        capacity: usize,
+    ) -> Self {
+        Self::with_loads(router, |nodes| {
+            Loads::with_capacity(nodes, capacity.max(nodes), signal)
+        })
     }
 
     fn with_loads(router: Box<dyn Router>, mk: impl FnOnce(usize) -> Loads) -> Self {
@@ -746,6 +981,59 @@ impl RouterHandle {
         let delta = g.redistribute(target, &self.loads);
         self.epoch.store(g.epoch(), Ordering::Release);
         delta
+    }
+
+    /// Elastic scale-up: grow the routable set by one brand-new node and
+    /// publish the new epoch. Returns the node's id and the membership
+    /// delta, or `None` when the pre-allocated slot capacity (see
+    /// [`Self::with_signal_capacity`]) is exhausted. The new node joins
+    /// the load signal with a clean history.
+    pub fn add_node(&self) -> Option<(usize, RouteDelta)> {
+        let mut g = self.inner.write().unwrap();
+        let id = g.nodes();
+        if id >= self.loads.nodes() {
+            return None; // out of pre-allocated slots
+        }
+        let delta = g.add_node(id);
+        self.loads.activate(id);
+        self.epoch.store(g.epoch(), Ordering::Release);
+        Some((id, delta))
+    }
+
+    /// Elastic scale-down: remove `id` from the routable set and publish
+    /// the new epoch (every [`RouterCache`] drops its memo on the bump, so
+    /// a cached `hash → retired id` entry is never served again). The
+    /// node also leaves the load signal's mean/flag computation. No-op
+    /// delta when `id` is already retired or is the last live node.
+    pub fn retire_node(&self, id: usize) -> RouteDelta {
+        let mut g = self.inner.write().unwrap();
+        let delta = g.retire_node(id, &self.loads);
+        if delta.changed {
+            self.loads.retire(id);
+        }
+        self.epoch.store(g.epoch(), Ordering::Release);
+        delta
+    }
+
+    /// Is `id` currently routable?
+    pub fn is_live(&self, id: usize) -> bool {
+        self.inner.read().unwrap().is_live(id)
+    }
+
+    /// Number of currently routable nodes (`<= nodes()`).
+    pub fn live_count(&self) -> usize {
+        self.inner.read().unwrap().live_count()
+    }
+
+    /// Ascending ids of the currently routable nodes.
+    pub fn live_nodes(&self) -> Vec<usize> {
+        let g = self.inner.read().unwrap();
+        (0..g.nodes()).filter(|&n| g.is_live(n)).collect()
+    }
+
+    /// Pre-allocated id-space ceiling (the load signal's slot count).
+    pub fn capacity(&self) -> usize {
+        self.loads.nodes()
     }
 
     /// Mutate the underlying token ring directly (elastic scale-out, test
@@ -1266,6 +1554,194 @@ mod tests {
         let d = r.redistribute(target, &loads);
         assert!(d.changed);
         assert!(d.keys_reassigned > 0);
+    }
+
+    #[test]
+    fn token_ring_membership_minimal_movement() {
+        let loads = Loads::new(4);
+        let mut r = TokenRingRouter::new(Ring::new(4, 8), RingOp::Halve);
+        let ks = keys(1500);
+        let before: Vec<usize> =
+            ks.iter().map(|k| r.route(murmur3_x86_32(k.as_bytes()), &loads)).collect();
+        let d = r.add_node(4);
+        assert!(d.changed);
+        assert_eq!((d.nodes_added, d.tokens_added), (1, 8));
+        assert!(r.is_live(4));
+        assert_eq!(r.live_count(), 5);
+        for (k, &b) in ks.iter().zip(&before) {
+            let now = r.route(murmur3_x86_32(k.as_bytes()), &loads);
+            if now != b {
+                assert_eq!(now, 4, "key {k} moved between surviving nodes on join");
+            }
+        }
+        let mid: Vec<usize> =
+            ks.iter().map(|k| r.route(murmur3_x86_32(k.as_bytes()), &loads)).collect();
+        let d = r.retire_node(4, &loads);
+        assert!(d.changed);
+        assert_eq!((d.nodes_retired, d.tokens_removed), (1, 8));
+        assert!(!r.is_live(4));
+        assert_eq!(r.nodes(), 5, "the id stays allocated");
+        for (k, &b) in ks.iter().zip(&mid) {
+            let now = r.route(murmur3_x86_32(k.as_bytes()), &loads);
+            assert_ne!(now, 4, "key {k} still routed to the retired node");
+            if b != 4 {
+                assert_eq!(now, b, "key {k} moved between survivors on retire");
+            }
+        }
+        assert!(!r.retire_node(4, &loads).changed, "double retire is a no-op");
+    }
+
+    #[test]
+    fn multi_probe_membership_minimal_movement() {
+        let loads = Loads::new(4);
+        let mut r = MultiProbeRouter::new(4, 3);
+        let ks = keys(1500);
+        let before: Vec<usize> =
+            ks.iter().map(|k| r.route(murmur3_x86_32(k.as_bytes()), &loads)).collect();
+        let d = r.add_node(4);
+        assert!(d.changed && d.zero_token_churn());
+        assert_eq!(d.nodes_added, 1);
+        assert!(r.is_live(4));
+        assert_eq!(r.live_count(), 5);
+        let mut claimed = 0;
+        for (k, &b) in ks.iter().zip(&before) {
+            let now = r.route(murmur3_x86_32(k.as_bytes()), &loads);
+            if now != b {
+                assert_eq!(now, 4, "key {k} moved between surviving nodes on join");
+                claimed += 1;
+            }
+        }
+        assert!(claimed > 0, "the joiner claimed nothing");
+        let mid: Vec<usize> =
+            ks.iter().map(|k| r.route(murmur3_x86_32(k.as_bytes()), &loads)).collect();
+        let d = r.retire_node(1, &loads);
+        assert!(d.changed);
+        assert_eq!(d.nodes_retired, 1);
+        assert!(!r.is_live(1));
+        for (k, &b) in ks.iter().zip(&mid) {
+            let now = r.route(murmur3_x86_32(k.as_bytes()), &loads);
+            assert_ne!(now, 1, "key {k} still routed to the retired node");
+            if b != 1 {
+                assert_eq!(now, b, "key {k} moved between survivors on retire");
+            }
+        }
+    }
+
+    #[test]
+    fn two_choices_membership_sticky_and_orphan_rewrite() {
+        let loads = Loads::new(4);
+        let mut r = TwoChoicesRouter::new(4);
+        let ks = keys(600);
+        let before: Vec<usize> =
+            ks.iter().map(|k| r.route(murmur3_x86_32(k.as_bytes()), &loads)).collect();
+        // join: sticky assignments hold — NO seen key moves at all
+        let d = r.add_node(4);
+        assert!(d.changed && d.zero_token_churn());
+        assert_eq!(d.keys_reassigned, 0);
+        for (k, &b) in ks.iter().zip(&before) {
+            assert_eq!(
+                r.route(murmur3_x86_32(k.as_bytes()), &loads),
+                b,
+                "sticky key {k} moved on join"
+            );
+        }
+        // unseen keys can first-sight onto the joiner
+        let fresh: Vec<String> = (0..800).map(|i| format!("fresh-{i}")).collect();
+        let landed = fresh
+            .iter()
+            .filter(|k| r.route(murmur3_x86_32(k.as_bytes()), &loads) == 4)
+            .count();
+        assert!(landed > 0, "the joiner never appears among fresh candidates");
+        // retire: only the retired owner's keys are rewritten
+        let victim = 2usize;
+        let owned = r.assigned_to(victim);
+        assert!(owned > 0);
+        let mid: Vec<(String, usize)> = ks
+            .iter()
+            .chain(fresh.iter())
+            .map(|k| (k.clone(), r.route(murmur3_x86_32(k.as_bytes()), &loads)))
+            .collect();
+        let d = r.retire_node(victim, &loads);
+        assert!(d.changed);
+        assert_eq!(d.nodes_retired, 1);
+        assert_eq!(d.keys_reassigned as usize, owned, "rewrite restricted to the victim");
+        assert_eq!(r.assigned_to(victim), 0);
+        for (k, b) in &mid {
+            let now = r.route(murmur3_x86_32(k.as_bytes()), &loads);
+            assert_ne!(now, victim, "key {k} still pinned to the retired node");
+            if *b != victim {
+                assert_eq!(now, *b, "key {k} moved although its owner survived");
+            }
+        }
+    }
+
+    #[test]
+    fn router_cache_never_serves_a_retired_owner() {
+        // regression (elastic membership): the cache memoizes
+        // (hash → owner) per epoch for shared-table routers; a membership
+        // change MUST invalidate it — a memoized entry for a retired node
+        // being served would strand records on a dead reducer
+        let handle = RouterHandle::new(Box::new(TwoChoicesRouter::new(4)));
+        let mut cache = handle.cache();
+        let ks = keys(300);
+        // warm the memo through the cache
+        let before: Vec<usize> = ks.iter().map(|k| cache.route_key(k.as_bytes())).collect();
+        let victim = before[0];
+        let d = handle.retire_node(victim);
+        assert!(d.changed);
+        for (k, &b) in ks.iter().zip(&before) {
+            let now = cache.route_key(k.as_bytes());
+            assert_ne!(now, victim, "cache served the retired owner for {k}");
+            assert_eq!(now, handle.route_key(k.as_bytes()), "cache != shared table");
+            if b != victim {
+                assert_eq!(now, b, "{k} moved although its owner survived");
+            }
+        }
+        // and the same through a token-ring cache (epoch comes from the ring)
+        let handle = RouterHandle::token_ring(Ring::new(4, 8), RingOp::NoOp);
+        let mut cache = handle.cache();
+        let owner = cache.route_key(b"some-key");
+        assert!(handle.retire_node(owner).changed);
+        assert_ne!(cache.route_key(b"some-key"), owner, "stale ring snapshot served");
+    }
+
+    #[test]
+    fn handle_add_node_respects_capacity_and_signal() {
+        let cfg = SignalConfig::legacy();
+        let handle = RouterHandle::with_signal_capacity(
+            Box::new(MultiProbeRouter::new(2, 3)),
+            &cfg,
+            3,
+        );
+        assert_eq!(handle.capacity(), 3);
+        let e0 = handle.epoch();
+        let (id, d) = handle.add_node().expect("one slot free");
+        assert_eq!(id, 2);
+        assert!(d.changed);
+        assert!(handle.epoch() > e0);
+        assert_eq!(handle.live_nodes(), vec![0, 1, 2]);
+        assert!(handle.add_node().is_none(), "capacity exhausted");
+        // the joiner participates in the load signal
+        handle.loads().set(2, 9);
+        assert_eq!(handle.loads().get(2), 9);
+        // retire publishes and removes it from the signal's live set
+        let d = handle.retire_node(2);
+        assert!(d.changed);
+        assert_eq!(handle.live_nodes(), vec![0, 1]);
+        assert!(!handle.loads().is_live(2));
+    }
+
+    #[test]
+    fn two_choices_record_assignments_skips_retired_owners() {
+        let router = TwoChoicesRouter::new(4);
+        let loads = Loads::new(4);
+        let mut r = router.clone();
+        r.retire_node(3, &loads);
+        let h = murmur3_x86_32(b"late-write-back");
+        router.record_assignments(&[(h, 3)]);
+        // the stale write-back was dropped; routing resolves live
+        let owner = router.route(h, &loads);
+        assert_ne!(owner, 3, "recorded a retired owner");
     }
 
     #[test]

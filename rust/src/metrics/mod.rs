@@ -4,5 +4,5 @@
 pub mod skew;
 pub mod report;
 
-pub use report::{LbEvent, RunReport};
+pub use report::{LbEvent, MembershipChange, RunReport};
 pub use skew::skew;

@@ -8,13 +8,28 @@ use crate::util::table::{f2, Table};
 
 use super::skew::skew;
 
-/// One load-balancing event (a `redistribute(node)` call that changed the
-/// routing), recorded by the balancer.
+/// An elastic reducer-membership change carried by an [`LbEvent`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MembershipChange {
+    /// A brand-new reducer joined the routable set (scale-up). The
+    /// drivers spawn its actor when they see this event.
+    Added { id: u32 },
+    /// A reducer left the routable set (scale-down). Its actor drains —
+    /// the ownership check forwards everything it still holds — and its
+    /// remaining state merges exactly once at the end (§7 extraction
+    /// ships it immediately under state forwarding).
+    Retired { id: u32 },
+}
+
+/// One load-balancing event — a `redistribute(node)` call that changed
+/// the routing, or an elastic membership change — recorded by the
+/// balancer.
 #[derive(Clone, Debug)]
 pub struct LbEvent {
     /// Virtual time (sim driver) or elapsed µs (thread driver).
     pub at: u64,
-    /// The overloaded reducer the event targeted.
+    /// The overloaded reducer the event targeted (for membership events:
+    /// the joining / retiring reducer).
     pub target: u32,
     /// Queue lengths observed when the predicate fired.
     pub qlens: Vec<usize>,
@@ -25,6 +40,8 @@ pub struct LbEvent {
     /// What the router's redistribution changed (token churn / key
     /// re-homes; empty-churn for multi-probe).
     pub delta: RouteDelta,
+    /// Elastic membership change (`None` for a plain redistribution).
+    pub membership: Option<MembershipChange>,
 }
 
 /// Full accounting of a pipeline run.
@@ -84,6 +101,26 @@ impl RunReport {
         self.lb_events.iter().map(|e| e.delta.keys_reassigned).sum()
     }
 
+    /// Elastic membership events, in order (empty for fixed-membership
+    /// runs).
+    pub fn membership_events(&self) -> Vec<&LbEvent> {
+        self.lb_events.iter().filter(|e| e.membership.is_some()).collect()
+    }
+
+    /// Reducers added / retired by elastic scaling over the run.
+    pub fn scale_counts(&self) -> (u64, u64) {
+        let mut added = 0;
+        let mut retired = 0;
+        for e in &self.lb_events {
+            match e.membership {
+                Some(MembershipChange::Added { .. }) => added += 1,
+                Some(MembershipChange::Retired { .. }) => retired += 1,
+                None => {}
+            }
+        }
+        (added, retired)
+    }
+
     /// Throughput in reduced messages per wall second (threads driver).
     pub fn throughput(&self) -> f64 {
         let secs = self.wall.as_secs_f64();
@@ -139,17 +176,28 @@ impl RunReport {
         }
         out.push_str(&t.render());
         for e in &self.lb_events {
-            out.push_str(&format!(
-                "LB@{} target={} strategy={} qlens={:?} \
-                 (+{} / -{} tokens, {} keys re-homed)\n",
-                e.at,
-                e.target,
-                e.strategy,
-                e.qlens,
-                e.delta.tokens_added,
-                e.delta.tokens_removed,
-                e.delta.keys_reassigned
-            ));
+            match e.membership {
+                Some(MembershipChange::Added { id }) => out.push_str(&format!(
+                    "LB@{} SCALE-UP reducer {id} joined (epoch {}, +{} tokens) qlens={:?}\n",
+                    e.at, e.epoch, e.delta.tokens_added, e.qlens
+                )),
+                Some(MembershipChange::Retired { id }) => out.push_str(&format!(
+                    "LB@{} SCALE-DOWN reducer {id} retired (epoch {}, -{} tokens, \
+                     {} keys re-homed) qlens={:?}\n",
+                    e.at, e.epoch, e.delta.tokens_removed, e.delta.keys_reassigned, e.qlens
+                )),
+                None => out.push_str(&format!(
+                    "LB@{} target={} strategy={} qlens={:?} \
+                     (+{} / -{} tokens, {} keys re-homed)\n",
+                    e.at,
+                    e.target,
+                    e.strategy,
+                    e.qlens,
+                    e.delta.tokens_added,
+                    e.delta.tokens_removed,
+                    e.delta.keys_reassigned
+                )),
+            }
         }
         out
     }
@@ -224,6 +272,7 @@ mod tests {
                     keys_reassigned: moved,
                     ..RouteDelta::default()
                 },
+                membership: None,
             });
         }
         assert_eq!(r.migrations(), 2);

@@ -7,6 +7,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context};
 
+use crate::balancer::elastic::{ElasticConfig, ElasticController};
 use crate::balancer::signal::SignalConfig;
 use crate::balancer::state_forward::ConsistencyMode;
 use crate::balancer::BalancerCore;
@@ -61,7 +62,8 @@ pub enum ExecutorKind {
 pub struct PipelineConfig {
     pub mappers: usize,
     pub reducers: usize,
-    /// Redistribution strategy spec ([`Strategy::None`] = the paper's
+    /// Redistribution strategy spec
+    /// ([`StrategySpec::None`](crate::hash::StrategySpec::None) = the paper's
     /// "No LB" baseline; `multiprobe[:K]` and `twochoices` select the
     /// probe-based routers).
     pub strategy: Strategy,
@@ -84,6 +86,16 @@ pub struct PipelineConfig {
     /// are untouched; the signal shapes what the probe routers freeze and
     /// which key migrations two-choices admits.
     pub signal: SignalConfig,
+    /// Elastic reducer membership: `None` = the reducer set is fixed for
+    /// the whole run (the paper's setup); `Some` attaches the
+    /// decayed-signal scaling policy — the run starts at `reducers` live
+    /// reducers and may grow to `max_reducers` / shrink to
+    /// `min_reducers`, with every membership change flowing through the
+    /// §7 synchronization machinery. Enabled by any of the
+    /// `balancer.{scale_up,scale_down,min_reducers,max_reducers}` TOML
+    /// keys or their CLI flags; the scale cooldown rides
+    /// `balancer.cooldown`.
+    pub elastic: Option<ElasticConfig>,
     /// Load report every N handled messages.
     pub report_interval: u64,
     /// Items per coordinator task.
@@ -119,6 +131,7 @@ impl Default for PipelineConfig {
             min_trigger_qlen: 8,
             cooldown: 50,
             signal: SignalConfig::default(),
+            elastic: None,
             report_interval: 2,
             chunk_size: 10,
             queue_capacity: 1 << 16,
@@ -182,6 +195,20 @@ impl PipelineConfig {
                 "balancer.min_gain" => {
                     self.signal.min_gain = doc.get_float(key).context("min_gain")?
                 }
+                "balancer.scale_up" => {
+                    self.elastic_mut().scale_up = doc.get_float(key).context("scale_up")?
+                }
+                "balancer.scale_down" => {
+                    self.elastic_mut().scale_down = doc.get_float(key).context("scale_down")?
+                }
+                "balancer.min_reducers" => {
+                    self.elastic_mut().min_reducers =
+                        doc.get_int(key).context("min_reducers")? as usize
+                }
+                "balancer.max_reducers" => {
+                    self.elastic_mut().max_reducers =
+                        doc.get_int(key).context("max_reducers")? as usize
+                }
                 "balancer.report_interval" => {
                     self.report_interval = doc.get_int(key).context("report_interval")? as u64
                 }
@@ -231,9 +258,28 @@ impl PipelineConfig {
         Ok(cfg)
     }
 
+    /// Elastic knobs, created with defaults on first touch (any
+    /// `balancer.scale_*` / `*_reducers` key or CLI flag enables the
+    /// subsystem).
+    pub fn elastic_mut(&mut self) -> &mut ElasticConfig {
+        self.elastic.get_or_insert_with(ElasticConfig::default)
+    }
+
     pub fn validate(&self) -> crate::Result<()> {
         if self.mappers == 0 || self.reducers == 0 {
             bail!("need at least one mapper and one reducer");
+        }
+        if let Some(e) = &self.elastic {
+            e.validate().map_err(anyhow::Error::msg)?;
+            if self.reducers < e.min_reducers || self.reducers > e.max_reducers {
+                bail!(
+                    "pipeline.reducers ({}) must start within \
+                     [balancer.min_reducers, balancer.max_reducers] = [{}, {}]",
+                    self.reducers,
+                    e.min_reducers,
+                    e.max_reducers
+                );
+            }
         }
         if self.tau < 0.0 {
             bail!("τ must be non-negative (§4.1)");
@@ -258,16 +304,25 @@ impl PipelineConfig {
     }
 
     /// Construct the routing layer this configuration describes, with
-    /// its load view carrying the configured [`SignalConfig`].
+    /// its load view carrying the configured [`SignalConfig`] and —
+    /// under elastic membership — slots pre-allocated up to
+    /// `max_reducers`.
     pub fn build_router(&self) -> RouterHandle {
-        RouterHandle::with_signal(
-            self.strategy.build_router(
-                self.reducers,
-                self.halving_init_tokens,
-                self.initial_tokens,
-            ),
-            &self.signal,
-        )
+        let router = self.strategy.build_router(
+            self.reducers,
+            self.halving_init_tokens,
+            self.initial_tokens,
+        );
+        match &self.elastic {
+            Some(e) => RouterHandle::with_signal_capacity(router, &self.signal, e.max_reducers),
+            None => RouterHandle::with_signal(router, &self.signal),
+        }
+    }
+
+    /// Reducer-id ceiling the drivers pre-allocate for (0 = fixed
+    /// membership; the drivers then size everything off `reducers`).
+    pub fn reducer_capacity(&self) -> usize {
+        self.elastic.as_ref().map_or(0, |e| e.max_reducers)
     }
 }
 
@@ -347,14 +402,19 @@ impl Pipeline {
             DriverKind::Sim => self.cfg.cooldown,
             DriverKind::Threads => self.cfg.cooldown.saturating_mul(1000),
         };
-        BalancerCore::new(
+        let mut balancer = BalancerCore::new(
             router,
             self.cfg.strategy,
             self.cfg.tau,
             self.cfg.min_trigger_qlen,
             self.cfg.max_rounds,
             cooldown,
-        )
+        );
+        if let Some(e) = &self.cfg.elastic {
+            // the scale cooldown rides the same driver-time conversion
+            balancer = balancer.with_elastic(ElasticController::from_watermarks(*e, cooldown));
+        }
+        balancer
     }
 
     /// Execute the pipeline over `items`. Accepts anything convertible to
@@ -375,6 +435,7 @@ impl Pipeline {
                     report_interval: self.cfg.report_interval,
                     chunk_size: self.cfg.chunk_size,
                     mode: self.cfg.mode,
+                    max_reducers: self.cfg.reducer_capacity(),
                 });
                 driver.run(
                     self.map_exec.clone(),
@@ -394,6 +455,7 @@ impl Pipeline {
                     pop_timeout: std::time::Duration::from_millis(self.cfg.pop_timeout_ms),
                     mode: self.cfg.mode,
                     route_runtime: self.route_runtime.clone(),
+                    max_reducers: self.cfg.reducer_capacity(),
                 });
                 driver.run(
                     self.map_exec.clone(),
@@ -560,6 +622,70 @@ max_rounds = 3
         let fp = 1u64 << crate::balancer::signal::FRAC_BITS;
         assert_eq!(router.loads().decayed(0), 50 * fp);
         assert_eq!(router.loads().get(0), 100);
+    }
+
+    #[test]
+    fn elastic_config_keys_round_trip_and_validate() {
+        let doc = crate::config::parse(
+            "[balancer]\nscale_up = 6.0\nscale_down = 0.5\nmin_reducers = 2\nmax_reducers = 8\n",
+        )
+        .unwrap();
+        let mut cfg = PipelineConfig::default();
+        cfg.apply_document(&doc).unwrap();
+        let e = cfg.elastic.expect("any scale key enables elastic");
+        assert!((e.scale_up - 6.0).abs() < 1e-12);
+        assert!((e.scale_down - 0.5).abs() < 1e-12);
+        assert_eq!((e.min_reducers, e.max_reducers), (2, 8));
+        assert_eq!(cfg.reducer_capacity(), 8);
+        // the router pre-allocates signal slots up to the ceiling
+        let router = cfg.build_router();
+        assert_eq!(router.capacity(), 8);
+        assert_eq!(router.nodes(), 4);
+
+        // inverted watermarks rejected
+        let mut bad = PipelineConfig::default();
+        bad.elastic_mut().scale_up = 1.0;
+        bad.elastic_mut().scale_down = 2.0;
+        assert!(bad.validate().is_err());
+        // starting outside [min, max] rejected
+        let mut bad = PipelineConfig::default();
+        bad.elastic_mut().min_reducers = 6;
+        bad.elastic_mut().max_reducers = 8;
+        assert!(bad.validate().is_err(), "reducers=4 below min_reducers=6");
+        // fixed-membership default stays off
+        assert!(PipelineConfig::default().elastic.is_none());
+        assert_eq!(PipelineConfig::default().reducer_capacity(), 0);
+    }
+
+    #[test]
+    fn elastic_sim_run_scales_and_stays_exact() {
+        // aggressive watermarks on a skewed workload: the run must stay
+        // exact (conservation + oracle) whatever membership does, and
+        // under this configuration the hot phase reliably trips scale-up
+        let w = crate::workload::paperwl::wl1();
+        let mut cfg = PipelineConfig::default();
+        cfg.strategy = Strategy::Doubling;
+        cfg.initial_tokens = Some(1);
+        cfg.mode = ConsistencyMode::StateForward;
+        cfg.cooldown = 30;
+        *cfg.elastic_mut() = crate::balancer::elastic::ElasticConfig {
+            scale_up: 2.0,
+            scale_down: 0.25,
+            min_reducers: 2,
+            max_reducers: 8,
+        };
+        let r = Pipeline::wordcount(cfg).run(w.items.clone()).unwrap();
+        r.check_conservation().unwrap();
+        let mut oracle = std::collections::HashMap::new();
+        for i in &w.items {
+            *oracle.entry(i.clone()).or_insert(0i64) += 1;
+        }
+        let mut expect: Vec<(String, i64)> = oracle.into_iter().collect();
+        expect.sort();
+        assert_eq!(r.result, expect);
+        let (added, _retired) = r.scale_counts();
+        assert!(added > 0, "WL1 hot phase never tripped the scale-up watermark");
+        assert!(r.processed.len() > 4, "no reducer actually spawned");
     }
 
     #[test]

@@ -29,6 +29,11 @@ pub struct Manifest {
     pub k: usize,
     /// Sticky-assignment table capacity of `route_assign`.
     pub a: usize,
+    /// `route_assign` ABI version: 2 added the live-node-id tensors
+    /// (elastic membership). Version-1 artifacts still load, but their
+    /// `route_assign` is reported unsupported (typed error) instead of
+    /// being fed tensors whose shapes it predates.
+    pub av: usize,
 }
 
 impl Manifest {
@@ -59,6 +64,7 @@ impl Manifest {
             p: get_or("P", 64),
             k: get_or("K", 8),
             a: get_or("A", 4096),
+            av: get_or("AV", 1),
         };
         if m.b == 0 || m.w == 0 || m.t == 0 || m.v == 0 || m.p == 0 || m.k == 0 || m.a == 0 {
             bail!("manifest has zero-sized dimension: {m:?}");
@@ -124,10 +130,13 @@ mod tests {
     #[test]
     fn parse_manifest() {
         let m = Manifest::parse(
-            r#"{"B": 256, "W": 8, "T": 512, "V": 4096, "P": 64, "K": 8, "A": 4096}"#,
+            r#"{"B": 256, "W": 8, "T": 512, "V": 4096, "P": 64, "K": 8, "A": 4096, "AV": 2}"#,
         )
         .unwrap();
-        assert_eq!(m, Manifest { b: 256, w: 8, t: 512, v: 4096, p: 64, k: 8, a: 4096 });
+        assert_eq!(
+            m,
+            Manifest { b: 256, w: 8, t: 512, v: 4096, p: 64, k: 8, a: 4096, av: 2 }
+        );
         assert_eq!(m.max_key_bytes(), 32);
     }
 
@@ -136,6 +145,7 @@ mod tests {
         // manifests written before the router-aware route programs
         let m = Manifest::parse(r#"{"B": 256, "W": 8, "T": 512, "V": 4096}"#).unwrap();
         assert_eq!((m.p, m.k, m.a), (64, 8, 4096));
+        assert_eq!(m.av, 1, "pre-elastic manifests default to assign ABI v1");
         let m = Manifest::parse(
             r#"{"B": 256, "W": 8, "T": 512, "V": 4096, "P": 16, "K": 4, "A": 128}"#,
         )

@@ -29,7 +29,7 @@ use crate::coordinator::{merge_states, TaskPool};
 use crate::exec::{Record, ReduceFactory};
 use crate::hash::RouterHandle;
 use crate::mapper::MapperCore;
-use crate::metrics::{LbEvent, RunReport};
+use crate::metrics::{LbEvent, MembershipChange, RunReport};
 use crate::queue::DataQueue;
 use crate::reducer::{Handled, ReducerCore};
 
@@ -51,6 +51,11 @@ pub struct ExecParams {
     /// `false` = reducers stop themselves on drained + synchronized (sim:
     /// the single-threaded schedule makes the condition stable).
     pub coordinated_stop: bool,
+    /// Reducer-id ceiling for elastic scale-up (`balancer.max_reducers`).
+    /// Queues and tracker slots are pre-allocated up to it so membership
+    /// changes never reallocate shared structures; equal to the initial
+    /// reducer count for fixed-membership runs.
+    pub max_reducers: usize,
 }
 
 /// One load report flowing from a reducer to the balancer's owner.
@@ -108,14 +113,18 @@ impl ExecCore {
     ) -> Self {
         let items: Arc<[String]> = items.into();
         let n_reducers = router.nodes();
+        // elastic runs pre-allocate queue + tracker slots to the ceiling,
+        // so a scale-up only *activates* a slot — shared structures never
+        // grow while other actors hold references to them
+        let capacity = params.max_reducers.max(n_reducers);
         let input_items = items.len() as u64;
         ExecCore {
             pool: TaskPool::from_items(items, params.chunk_size),
-            queues: (0..n_reducers)
+            queues: (0..capacity)
                 .map(|_| DataQueue::new(params.queue_capacity))
                 .collect(),
             monitor: ShutdownMonitor::new(n_mappers),
-            tracker: StageTracker::new(n_reducers, router.epoch()),
+            tracker: StageTracker::with_capacity(n_reducers, capacity, router.epoch()),
             mode: params.mode,
             report_interval: params.report_interval,
             input_items,
@@ -226,6 +235,14 @@ impl ExecCore {
     /// repartition may start while a previous one is still synchronizing
     /// ("updates must be atomic and infrequent"), and a repartition that
     /// does fire immediately opens the new epoch's synchronization window.
+    ///
+    /// Elastic membership events flow through the very same gate: a
+    /// scale-up first activates the joiner's pre-allocated tracker slot
+    /// (so it participates in the extraction quorum from this epoch on),
+    /// then the epoch opens like any repartition. The driver watches the
+    /// returned event's [`MembershipChange::Added`] to actually spawn the
+    /// reducer actor; its queue already exists and may legally receive
+    /// records before the actor starts stepping.
     pub fn apply_report(&self, balancer: &mut BalancerCore, r: LoadReport) -> Option<LbEvent> {
         if !r.evaluate || !self.synced() {
             balancer.observe(r.reducer, r.qlen);
@@ -233,6 +250,9 @@ impl ExecCore {
         }
         let event = balancer.report(r.reducer, r.qlen, r.at);
         if let Some(e) = &event {
+            if let Some(MembershipChange::Added { id }) = e.membership {
+                self.tracker.activate(id as usize);
+            }
             if self.mode == ConsistencyMode::StateForward {
                 self.tracker.begin_epoch(e.epoch);
             }
@@ -268,7 +288,9 @@ impl ExecCore {
             result,
             wall,
             virtual_end,
-            peak_qlen: self.queues.iter().map(|q| q.peak()).collect(),
+            // only the spawned reducers' queues (elastic runs pre-allocate
+            // more slots than ever activate)
+            peak_qlen: self.queues.iter().take(reducers.len()).map(|q| q.peak()).collect(),
             input_items: self.input_items,
         }
     }
@@ -291,6 +313,7 @@ mod tests {
                 report_interval: 2,
                 mode,
                 coordinated_stop: false,
+                max_reducers: 0,
             },
         )
     }
@@ -464,6 +487,47 @@ mod tests {
         }
         assert_eq!(router.loads().get(1), 100);
         assert_eq!(router.loads().decayed(1), 75 << FRAC_BITS);
+    }
+
+    #[test]
+    fn apply_report_scale_up_activates_tracker_and_opens_epoch() {
+        use crate::balancer::elastic::{ElasticConfig, ElasticController};
+        use crate::balancer::signal::SignalConfig;
+        let cfg =
+            ElasticConfig { scale_up: 2.0, scale_down: 0.5, min_reducers: 2, max_reducers: 4 };
+        let router = RouterHandle::with_signal_capacity(
+            Strategy::Doubling.build_router(2, 8, None),
+            &SignalConfig::legacy(),
+            cfg.max_reducers,
+        );
+        let mut balancer = BalancerCore::new(router.clone(), Strategy::Doubling, 0.2, 4, 1, 0)
+            .with_elastic(ElasticController::from_watermarks(cfg, 0))
+            .without_warmup();
+        let c = ExecCore::build(
+            &router,
+            1,
+            Vec::<String>::new(),
+            ExecParams {
+                chunk_size: 10,
+                queue_capacity: usize::MAX,
+                report_interval: 2,
+                mode: ConsistencyMode::StateForward,
+                coordinated_stop: false,
+                max_reducers: cfg.max_reducers,
+            },
+        );
+        assert_eq!(c.queues.len(), 4, "queues pre-allocated to the ceiling");
+        assert_eq!(c.tracker.active_count(), 2);
+        let e = c
+            .apply_report(&mut balancer, LoadReport { reducer: 0, qlen: 30, at: 0, evaluate: true })
+            .expect("scale-up fires");
+        assert!(matches!(
+            e.membership,
+            Some(crate::metrics::MembershipChange::Added { id: 2 })
+        ));
+        assert_eq!(c.tracker.active_count(), 3, "joiner in the extraction quorum");
+        assert_eq!(c.tracker.stage(), Stage::Synchronizing, "membership opened the epoch");
+        assert_eq!(router.nodes(), 3);
     }
 
     #[test]

@@ -105,16 +105,20 @@ pub enum SnapshotTensors {
     },
     /// `route_assign`: sorted assignment keys (padded `u32::MAX`),
     /// owners, live count, frozen per-node decayed loads (fixed point,
-    /// padded 0), node count. The signal already saturates decayed
-    /// values at `u32::MAX`, so the u32 clamp here is a no-op and the
-    /// kernel's u32 comparisons match the scalar router's u64 ones in
-    /// every regime, including at the ceiling.
+    /// padded 0, indexed by node id), the ascending live node id list
+    /// (padded 0) and its length — elastic membership leaves gaps in the
+    /// id space, and the kernel's candidate rule hashes into this list.
+    /// The signal already saturates decayed values at `u32::MAX`, so the
+    /// u32 clamp here is a no-op and the kernel's u32 comparisons match
+    /// the scalar router's u64 ones in every regime, including at the
+    /// ceiling.
     Assignment {
         keys: Vec<u32>,
         owners: Vec<i32>,
         len: i32,
         loads: Vec<u32>,
-        nodes: i32,
+        live: Vec<i32>,
+        n_live: i32,
     },
 }
 
@@ -162,9 +166,10 @@ pub fn snapshot_tensors(snap: &RouteSnapshot, m: &Manifest) -> crate::Result<Sna
                 probes: *probes as i32,
             })
         }
-        SnapshotState::Assignment { assignments, loads } => {
+        SnapshotState::Assignment { assignments, live, loads } => {
             cap("route_assign", "assignment table", assignments.len(), m.a)?;
             cap("route_assign", "node loads", snap.nodes, m.p)?;
+            cap("route_assign", "live node list", live.len(), m.p)?;
             let mut keys = vec![u32::MAX; m.a];
             let mut owners = vec![0i32; m.a];
             for (i, &(k, o)) in assignments.iter().enumerate() {
@@ -175,12 +180,17 @@ pub fn snapshot_tensors(snap: &RouteSnapshot, m: &Manifest) -> crate::Result<Sna
             for (f, &l) in frozen.iter_mut().zip(loads) {
                 *f = l.min(u32::MAX as u64) as u32;
             }
+            let mut live_ids = vec![0i32; m.p];
+            for (o, &n) in live_ids.iter_mut().zip(live) {
+                *o = n as i32;
+            }
             Ok(SnapshotTensors::Assignment {
                 keys,
                 owners,
                 len: assignments.len() as i32,
                 loads: frozen,
-                nodes: snap.nodes as i32,
+                live: live_ids,
+                n_live: live.len() as i32,
             })
         }
     }
@@ -430,16 +440,29 @@ impl Runtime {
                     xla::Literal::scalar(probes),
                 ],
             ),
-            SnapshotTensors::Assignment { keys: akeys, owners, len, loads, nodes } => (
-                self.route_assign.as_ref().ok_or_else(|| {
-                    unsupported("artifacts lack route_assign.hlo.txt — run `make artifacts`")
-                })?,
+            SnapshotTensors::Assignment { keys: akeys, owners, len, loads, live, n_live } => (
+                self.route_assign
+                    .as_ref()
+                    .filter(|_| self.manifest.av >= 2)
+                    .ok_or_else(|| {
+                        if self.manifest.av < 2 {
+                            unsupported(
+                                "artifacts predate the elastic route_assign ABI \
+                                 (manifest AV < 2) — run `make artifacts`",
+                            )
+                        } else {
+                            unsupported(
+                                "artifacts lack route_assign.hlo.txt — run `make artifacts`",
+                            )
+                        }
+                    })?,
                 vec![
                     xla::Literal::vec1(&akeys),
                     xla::Literal::vec1(&owners),
                     xla::Literal::scalar(len),
                     xla::Literal::vec1(&loads),
-                    xla::Literal::scalar(nodes),
+                    xla::Literal::vec1(&live),
+                    xla::Literal::scalar(n_live),
                 ],
             ),
         };
@@ -674,7 +697,7 @@ mod tests {
     }
 
     fn mini_manifest() -> Manifest {
-        Manifest { b: 64, w: 8, t: 16, v: 512, p: 8, k: 4, a: 16 }
+        Manifest { b: 64, w: 8, t: 16, v: 512, p: 8, k: 4, a: 16, av: 2 }
     }
 
     #[test]
@@ -736,9 +759,10 @@ mod tests {
         // signal: exactly raw << FRAC_BITS)
         let fp = 1u32 << crate::balancer::signal::FRAC_BITS;
         match snapshot_tensors(&handle.snapshot(), &mini_manifest()).unwrap() {
-            SnapshotTensors::Assignment { keys, owners, len, loads, nodes } => {
+            SnapshotTensors::Assignment { keys, owners, len, loads, live, n_live } => {
                 assert_eq!(len, 1);
-                assert_eq!(nodes, 3);
+                assert_eq!(n_live, 3);
+                assert_eq!(live, vec![0, 1, 2, 0, 0, 0, 0, 0], "live ids, padded to P");
                 assert_eq!(keys[0], crate::hash::murmur3_x86_32(b"warm"));
                 assert!(keys[1..].iter().all(|&k| k == u32::MAX), "padding");
                 assert!((owners[0] as usize) < 3);
@@ -754,6 +778,20 @@ mod tests {
         let snap = crate::hash::Router::snapshot(&tc, &loads);
         match snapshot_tensors(&snap, &mini_manifest()).unwrap() {
             SnapshotTensors::Assignment { loads, .. } => assert_eq!(loads[0], u32::MAX),
+            other => panic!("expected Assignment tensors, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn snapshot_tensors_assignment_carries_gapped_membership() {
+        use crate::hash::{RouterHandle, StrategySpec};
+        let handle = RouterHandle::new(StrategySpec::TwoChoices.build_router(4, 8, None));
+        handle.retire_node(1);
+        match snapshot_tensors(&handle.snapshot(), &mini_manifest()).unwrap() {
+            SnapshotTensors::Assignment { live, n_live, .. } => {
+                assert_eq!(n_live, 3);
+                assert_eq!(live, vec![0, 2, 3, 0, 0, 0, 0, 0], "gap at the retired id");
+            }
             other => panic!("expected Assignment tensors, got {other:?}"),
         }
     }

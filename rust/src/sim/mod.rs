@@ -23,7 +23,7 @@ use crate::balancer::state_forward::ConsistencyMode;
 use crate::balancer::BalancerCore;
 use crate::exec::{MapExecutor, ReduceFactory, Task};
 use crate::mapper::MapperCore;
-use crate::metrics::RunReport;
+use crate::metrics::{MembershipChange, RunReport};
 use crate::reducer::ReducerCore;
 use crate::runtime::exec::{ExecCore, ExecParams, LoadReport, ReducerStep};
 use crate::util::prng::Xoshiro256;
@@ -74,6 +74,10 @@ pub struct SimParams {
     pub report_interval: u64,
     pub chunk_size: usize,
     pub mode: ConsistencyMode,
+    /// Elastic reducer-id ceiling (0 = fixed membership). The scheduler
+    /// spawns a new reducer actor when the balancer emits an `Added`
+    /// membership event.
+    pub max_reducers: usize,
 }
 
 impl Default for SimParams {
@@ -84,6 +88,7 @@ impl Default for SimParams {
             report_interval: 2,
             chunk_size: 10,
             mode: ConsistencyMode::MergeAtEnd,
+            max_reducers: 0,
         }
     }
 }
@@ -131,6 +136,7 @@ impl SimDriver {
                 report_interval: p.report_interval,
                 mode: p.mode,
                 coordinated_stop: false,
+                max_reducers: p.max_reducers,
             },
         );
         let mut rng = Xoshiro256::new(p.seed);
@@ -227,7 +233,7 @@ impl SimDriver {
                             // periodic load report (§3), applied inline —
                             // the sim IS the balancer's owner
                             if reducers[i].due_report(p.report_interval) {
-                                let _ = core.apply_report(
+                                let event = core.apply_report(
                                     &mut balancer,
                                     LoadReport {
                                         reducer: i,
@@ -236,6 +242,24 @@ impl SimDriver {
                                         evaluate: true,
                                     },
                                 );
+                                // elastic scale-up: schedule the brand-new
+                                // reducer actor (its pre-allocated queue may
+                                // already hold records routed at the new
+                                // epoch); retires need no scheduler action —
+                                // the retiree drains by ordinary forwarding
+                                if let Some(MembershipChange::Added { id }) =
+                                    event.and_then(|e| e.membership)
+                                {
+                                    let id = id as usize;
+                                    debug_assert_eq!(id, reducers.len());
+                                    reducers.push(ReducerCore::new(
+                                        id,
+                                        reduce_factory(id),
+                                        router.clone(),
+                                    ));
+                                    reducers_running += 1;
+                                    push(&mut heap, &mut seq, now + 1, ActorId::Reducer(id));
+                                }
                             }
                         }
                         ReducerStep::Idle { stop } => {

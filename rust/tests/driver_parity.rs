@@ -77,6 +77,64 @@ fn state_forward_on_threads_wl1_skewed() {
 }
 
 #[test]
+fn elastic_scale_schedule_parity_state_forward_wl1() {
+    // ISSUE 5 satellite: an identical scale-up + scale-down SCHEDULE (the
+    // deterministic elastic controller) on WL1 under §7 state forwarding,
+    // on both drivers. Reducers join mid-run, the retiree's keys re-home
+    // and its state ships; the merged output must equal the serial oracle
+    // on the sim AND on real threads (where the §7 disjoint-merge
+    // assertion also guards against lost/duplicated state merges).
+    use std::sync::Arc;
+
+    use dpa::balancer::elastic::{ElasticController, ScaleOp};
+    use dpa::balancer::BalancerCore;
+    use dpa::driver::{ThreadDriver, ThreadParams};
+    use dpa::exec::builtin::{IdentityMap, WordCount};
+    use dpa::exec::ReduceFactory;
+    use dpa::hash::RouterHandle;
+    use dpa::sim::{SimDriver, SimParams};
+
+    let w = paperwl::wl1();
+    let oracle = wordcount_oracle(&w.items);
+    let factory: ReduceFactory = Arc::new(|_| Box::new(WordCount::new()) as _);
+    let schedule = || {
+        vec![ScaleOp::Up, ScaleOp::Up, ScaleOp::Down(0), ScaleOp::Down(0)]
+    };
+    let mk_balancer = || {
+        let router = RouterHandle::with_signal_capacity(
+            Strategy::Doubling.build_router(4, 8, Some(1)),
+            &dpa::balancer::signal::SignalConfig::default(),
+            8,
+        );
+        BalancerCore::new(router, Strategy::Doubling, 0.2, 8, 2, 30)
+            .with_elastic(ElasticController::from_schedule(schedule(), 6, 4, 8))
+    };
+
+    let sim = SimDriver::new(SimParams {
+        mode: ConsistencyMode::StateForward,
+        max_reducers: 8,
+        seed: 5,
+        ..Default::default()
+    });
+    let r = sim.run(Arc::new(IdentityMap), &factory, 4, mk_balancer(), w.items.clone());
+    r.check_conservation().unwrap();
+    assert_eq!(r.result, oracle, "sim elastic schedule diverged from the oracle");
+    let (added, retired) = r.scale_counts();
+    assert!(added > 0, "the schedule never scaled up on the sim");
+    assert!(retired > 0, "the schedule never scaled down on the sim");
+
+    let threads = ThreadDriver::new(ThreadParams {
+        mode: ConsistencyMode::StateForward,
+        max_reducers: 8,
+        reduce_delay_us: 100, // queues must build so reports keep flowing
+        ..Default::default()
+    });
+    let r = threads.run(Arc::new(IdentityMap), &factory, 4, mk_balancer(), w.items.clone());
+    r.check_conservation().unwrap();
+    assert_eq!(r.result, oracle, "threads elastic schedule diverged from the oracle");
+}
+
+#[test]
 fn shared_input_runs_do_not_clone_per_seed() {
     // run_seeds shares one Arc'd input across seeds; results stay exact
     let w = paperwl::wl4();

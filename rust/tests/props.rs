@@ -307,6 +307,86 @@ fn prop_token_ring_redistribute_moves_only_affected_keys() {
     });
 }
 
+/// Build a random router of a random family behind a capacity-bearing
+/// handle, with some routed keys warming any sticky state.
+fn random_elastic_handle(g: &mut Gen, keys: &[String]) -> RouterHandle {
+    let nodes = g.usize_in(2, 6);
+    let spec = match g.usize_in(0, 3) {
+        0 => StrategySpec::Halving,
+        1 => StrategySpec::Doubling,
+        2 => StrategySpec::MultiProbe { probes: 1 + g.usize_in(0, 6) as u32 },
+        _ => StrategySpec::TwoChoices,
+    };
+    let handle = RouterHandle::with_signal_capacity(
+        spec.build_router(nodes, 8, None),
+        &dpa::balancer::signal::SignalConfig::legacy(),
+        nodes + 4,
+    );
+    for n in 0..nodes {
+        handle.loads().set(n, g.usize_in(0, 50) as u64);
+    }
+    for k in keys {
+        handle.route_key(k.as_bytes());
+    }
+    handle
+}
+
+#[test]
+fn prop_retire_node_moves_only_the_retired_nodes_keys() {
+    // ISSUE 5 satellite: for ALL router families, retire_node re-homes
+    // exactly the keys the retired node owned — a key owned by any
+    // surviving node never moves, and nothing routes to the retiree
+    forall("retire_node moves only the retiree's keys", 40, |g| {
+        let keys: Vec<String> = (0..80).map(|_| g.string(16)).collect();
+        let handle = random_elastic_handle(g, &keys);
+        let before: Vec<usize> = keys.iter().map(|k| handle.route_key(k.as_bytes())).collect();
+        let victim = g.usize_in(0, handle.nodes() - 1);
+        let delta = handle.retire_node(victim);
+        if !delta.changed {
+            return Ok(()); // last live node: refused, routing untouched
+        }
+        prop_assert!(delta.nodes_retired == 1, "delta {delta:?}");
+        prop_assert!(!handle.is_live(victim), "victim still live");
+        for (k, &b) in keys.iter().zip(&before) {
+            let now = handle.route_key(k.as_bytes());
+            prop_assert!(now != victim, "'{k}' still routes to retired node {victim}");
+            if b != victim {
+                prop_assert!(
+                    now == b,
+                    "'{k}' moved {b} -> {now} although node {b} survived ({})",
+                    handle.name()
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_add_node_never_moves_keys_between_survivors() {
+    // ISSUE 5 satellite: for ALL router families, a join may only move
+    // keys ONTO the new node — never between two pre-existing nodes
+    forall("add_node moves keys only onto the joiner", 40, |g| {
+        let keys: Vec<String> = (0..80).map(|_| g.string(16)).collect();
+        let handle = random_elastic_handle(g, &keys);
+        let before: Vec<usize> = keys.iter().map(|k| handle.route_key(k.as_bytes())).collect();
+        let (id, delta) = handle.add_node().expect("capacity reserved");
+        prop_assert!(delta.changed && delta.nodes_added == 1, "delta {delta:?}");
+        prop_assert!(handle.is_live(id), "joiner not live");
+        for (k, &b) in keys.iter().zip(&before) {
+            let now = handle.route_key(k.as_bytes());
+            if now != b {
+                prop_assert!(
+                    now == id,
+                    "'{k}' moved {b} -> {now}, between survivors ({})",
+                    handle.name()
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_ewma_signal_bounded_and_contracting() {
     // ISSUE 4 satellite: the decayed signal is (a) bounded by the

@@ -183,6 +183,66 @@ fn compiled_route_parity_with_decayed_signal_snapshots() {
 }
 
 #[test]
+fn compiled_route_parity_with_elastic_membership() {
+    // the elastic acceptance contract: the compiled route programs must
+    // agree bit-for-bit with the scalar routers across epochs whose NODE
+    // COUNT varies — scale-up adds ids, scale-down leaves gaps in the id
+    // space — for all four router families
+    use dpa::balancer::signal::SignalConfig;
+    use dpa::hash::{RouterHandle, StrategySpec};
+    let rt = runtime();
+    let keys = random_keys(300, 24, 0xE1A5);
+    let refs: Vec<&[u8]> = keys.iter().map(Vec::as_slice).collect();
+    let specs = [
+        StrategySpec::Halving,
+        StrategySpec::Doubling,
+        StrategySpec::MultiProbe { probes: 3 },
+        StrategySpec::TwoChoices,
+    ];
+    for spec in specs {
+        let handle = RouterHandle::with_signal_capacity(
+            spec.build_router(3, 8, None),
+            &SignalConfig::legacy(),
+            8,
+        );
+        // warm the sticky table so retires exercise the orphan rewrite
+        for &k in refs.iter().take(100) {
+            handle.route_key(k);
+        }
+        let check = |label: &str| {
+            let snap = handle.snapshot();
+            let routed = rt.route_batch_snapshot(&refs, &snap).unwrap();
+            for (k, (h, owner)) in keys.iter().zip(&routed) {
+                assert_eq!(*h, murmur3_x86_32(k), "{spec}");
+                assert_eq!(
+                    *owner,
+                    handle.route_hash(*h),
+                    "{spec} {label} (epoch {}, {} live of {} ids) key {k:?}",
+                    handle.epoch(),
+                    handle.live_count(),
+                    handle.nodes()
+                );
+                assert!(handle.is_live(*owner), "{spec} {label}: routed to a dead node");
+            }
+        };
+        check("initial 3 nodes");
+        handle.add_node().expect("grow to 4");
+        check("after scale-up to 4");
+        handle.add_node().expect("grow to 5");
+        check("after scale-up to 5");
+        // retire a mid-range id: the id space keeps a gap at 1
+        assert!(handle.retire_node(1).changed, "{spec}");
+        check("after retiring id 1");
+        // a redistribution epoch on the gapped membership
+        for n in handle.live_nodes() {
+            handle.loads().set(n, if n == 0 { 80 } else { 2 });
+        }
+        handle.redistribute(0);
+        check("post-redistribute on gapped membership");
+    }
+}
+
+#[test]
 fn probe_snapshot_on_legacy_artifacts_errors_typed() {
     // artifacts written before route_probe/route_assign existed: loading
     // still works, a token snapshot still routes, and a probe snapshot
