@@ -1,0 +1,252 @@
+//! Bench target for the **lock-free batched hot path**: records/sec and
+//! p50/p99 per-record latency for every router family × both drivers ×
+//! a uniform and a Zipf-skewed stream. This is the throughput axis the
+//! hot-path work (epoch-published router snapshots, lock-free sticky
+//! table, batched queue drain) is proved on — the table1 bench gates the
+//! *quality* metric (skew S), this one gates the *speed* metric.
+//!
+//! ```sh
+//! cargo bench --bench throughput
+//! ```
+//!
+//! Per cell: the pipeline runs with busy-work delays zeroed (the routing
+//! and queue machinery IS the workload), wall time is measured on the
+//! host clock around the whole run — for the sim driver too, so
+//! records/sec is always real-time event-processing rate — and per-record
+//! latency (map-enqueue → reduce) comes from the run report's bucketed
+//! histogram (µs on threads, virtual ticks on the sim).
+//!
+//! CI smoke knobs (all via environment, used by the `bench-smoke` job):
+//!
+//! - `DPA_BENCH_SEEDS=N`   — seeded runs per cell (default 3; CI uses 1)
+//! - `DPA_BENCH_ITEMS=N`   — stream length per run (default 40000)
+//! - `DPA_BENCH_JSON=PATH` — write the measured cells as flat JSON:
+//!   `"family/driver/workload/rps"` plus `/p50` and `/p99`
+//! - `DPA_BENCH_BASELINE=PATH` — compare against a checked-in baseline of
+//!   the same shape; exit non-zero if any `rps` cell regresses more than
+//!   the relative tolerance. Latency cells are recorded but not gated
+//!   (units differ across machines and drivers). A cell-less baseline
+//!   skips the gate (bootstrap: commit a CI-produced
+//!   `BENCH_throughput.json` as the baseline to arm it).
+//! - `DPA_BENCH_RPS_TOLERANCE=F` — max relative records/sec regression
+//!   before the gate fails (default 0.10 = 10%)
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::time::Instant;
+
+use dpa::hash::Strategy;
+use dpa::pipeline::{DriverKind, Pipeline, PipelineConfig};
+use dpa::util::table::Table;
+use dpa::workload::{generators, Workload};
+
+fn env_parse<T: std::str::FromStr>(name: &str, default: T) -> T {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Serialize the measured cells as flat JSON (BTreeMap: stable order).
+fn to_json(seeds: usize, cells: &BTreeMap<String, f64>) -> String {
+    let mut out = String::from("{\n");
+    let _ = writeln!(out, "  \"seeds\": {seeds},");
+    let n = cells.len();
+    for (i, (k, v)) in cells.iter().enumerate() {
+        let comma = if i + 1 == n { "" } else { "," };
+        let _ = writeln!(out, "  \"{k}\": {v:.6}{comma}");
+    }
+    out.push_str("}\n");
+    out
+}
+
+/// Parse flat `{"key": float, ...}` JSON (the format `to_json` writes).
+fn parse_json(text: &str) -> Result<BTreeMap<String, f64>, String> {
+    let inner = text
+        .trim()
+        .strip_prefix('{')
+        .and_then(|t| t.strip_suffix('}'))
+        .ok_or("baseline is not a JSON object")?;
+    let mut map = BTreeMap::new();
+    for part in inner.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        // split on the LAST ':' — cell keys may themselves contain one
+        // (the `multiprobe:K` strategy spelling), values never do
+        let (k, v) = part.rsplit_once(':').ok_or("expected \"key\": value")?;
+        let v: f64 = v.trim().parse().map_err(|e| format!("bad value for {k}: {e}"))?;
+        map.insert(k.trim().trim_matches('"').to_string(), v);
+    }
+    Ok(map)
+}
+
+/// Gate the measured `rps` cells against a baseline, RELATIVELY: a cell
+/// fails when it regresses below `baseline * (1 - tol)`. Faster-than-
+/// baseline never fails (refresh the baseline to bank an improvement).
+fn compare_baseline(
+    baseline: &BTreeMap<String, f64>,
+    cells: &BTreeMap<String, f64>,
+    tol: f64,
+) -> Vec<String> {
+    let mut drifts = Vec::new();
+    for (k, &base) in baseline.iter().filter(|(k, _)| k.ends_with("/rps")) {
+        match cells.get(k) {
+            None => drifts.push(format!("cell '{k}' missing from this run")),
+            Some(&cur) if cur < base * (1.0 - tol) => drifts.push(format!(
+                "{k}: {cur:.0} rec/s regressed from baseline {base:.0} \
+                 ({:.1}% below, tolerance {:.0}%)",
+                (1.0 - cur / base) * 100.0,
+                tol * 100.0
+            )),
+            Some(_) => {}
+        }
+    }
+    drifts
+}
+
+/// One throughput cell's configuration: LB on (≤1 round), artificial
+/// busy-work zeroed so the hot path (hash → route → enqueue → drain →
+/// reduce) dominates the measurement.
+fn cell_cfg(strategy: Strategy, driver: DriverKind) -> PipelineConfig {
+    let mut cfg = PipelineConfig::default();
+    cfg.strategy = strategy;
+    if strategy.is_token_ring() {
+        cfg.initial_tokens = Some(strategy.initial_tokens(cfg.halving_init_tokens));
+    }
+    cfg.driver = driver;
+    cfg.max_rounds = 1;
+    cfg.map_delay_us = 0;
+    cfg.reduce_delay_us = 0;
+    cfg.chunk_size = 64;
+    cfg
+}
+
+fn fmt_rps(rps: f64) -> String {
+    if rps > 1e6 {
+        format!("{:.2} M rec/s", rps / 1e6)
+    } else {
+        format!("{:.0} rec/s", rps)
+    }
+}
+
+fn main() {
+    dpa::util::logger::init();
+    let seeds: usize = env_parse("DPA_BENCH_SEEDS", 3).max(1);
+    let n_items: usize = env_parse("DPA_BENCH_ITEMS", 40_000).max(1);
+
+    let families = [
+        Strategy::Halving,
+        Strategy::Doubling,
+        Strategy::MultiProbe { probes: dpa::hash::DEFAULT_PROBES },
+        Strategy::TwoChoices,
+    ];
+    // uniform vs skew: same length, same synthetic key space — the skewed
+    // stream hammers one reducer's queue and the sticky table's hot keys,
+    // which is exactly where lock contention used to live
+    let workloads: Vec<(&str, Workload)> = vec![
+        ("uniform", generators::uniform(n_items, 200, 42)),
+        ("zipf", generators::zipf_keyspace(n_items, 1_000_000, 1.2, 42)),
+    ];
+
+    println!("Throughput: records/sec + p50/p99 per-record latency, hot-path bench");
+    println!(
+        "setup: 4 mappers, 4 reducers, LB ≤1 round, no busy-work delays, \
+         {n_items} items/run, {seeds} seeds (latency: µs on threads, ticks on sim)\n"
+    );
+
+    let mut t = Table::new(["Family", "Driver", "Workload", "rec/s", "p50", "p99"]);
+    let mut cells: BTreeMap<String, f64> = BTreeMap::new();
+    for &strategy in &families {
+        for driver in [DriverKind::Sim, DriverKind::Threads] {
+            let dname = match driver {
+                DriverKind::Sim => "sim",
+                DriverKind::Threads => "threads",
+            };
+            for (wname, w) in &workloads {
+                let pipeline = Pipeline::wordcount(cell_cfg(strategy, driver));
+                let mut rps_sum = 0.0;
+                let mut p50_sum = 0.0;
+                let mut p99_sum = 0.0;
+                let mut lat_runs = 0usize;
+                for seed in 0..seeds as u64 {
+                    let t0 = Instant::now();
+                    let reports = pipeline
+                        .run_seeds(&w.items, &[seed])
+                        .unwrap_or_else(|e| panic!("{strategy}/{dname}/{wname}: {e:#}"));
+                    let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
+                    let r = &reports[0];
+                    rps_sum += r.total_processed() as f64 / elapsed;
+                    if let Some(lat) = r.latency {
+                        p50_sum += lat.p50 as f64;
+                        p99_sum += lat.p99 as f64;
+                        lat_runs += 1;
+                    }
+                }
+                let rps = rps_sum / seeds as f64;
+                let (p50, p99) = if lat_runs > 0 {
+                    (p50_sum / lat_runs as f64, p99_sum / lat_runs as f64)
+                } else {
+                    (0.0, 0.0)
+                };
+                let key = format!("{strategy}/{dname}/{wname}");
+                cells.insert(format!("{key}/rps"), rps);
+                cells.insert(format!("{key}/p50"), p50);
+                cells.insert(format!("{key}/p99"), p99);
+                t.row([
+                    strategy.to_string(),
+                    dname.to_string(),
+                    wname.to_string(),
+                    fmt_rps(rps),
+                    format!("{p50:.0}"),
+                    format!("{p99:.0}"),
+                ]);
+            }
+        }
+    }
+    t.print();
+
+    if let Ok(path) = std::env::var("DPA_BENCH_JSON") {
+        std::fs::write(&path, to_json(seeds, &cells)).expect("writing bench JSON");
+        println!("wrote {path}");
+    }
+
+    if let Ok(path) = std::env::var("DPA_BENCH_BASELINE") {
+        let tol: f64 = env_parse("DPA_BENCH_RPS_TOLERANCE", 0.10);
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("reading baseline {path}: {e}"));
+        let baseline = parse_json(&text).expect("parsing baseline JSON");
+        // rps cells are per-seed-count means: comparing across different
+        // DPA_BENCH_SEEDS would gate on cross-seed variance, not drift
+        if let Some(&bs) = baseline.get("seeds") {
+            if bs as usize != seeds {
+                eprintln!(
+                    "bench gate FAILED: baseline was recorded with seeds={} but this \
+                     run used seeds={seeds} — regenerate the baseline with matching \
+                     DPA_BENCH_SEEDS",
+                    bs as usize
+                );
+                std::process::exit(1);
+            }
+        }
+        if !baseline.keys().any(|k| k.contains('/')) {
+            println!(
+                "baseline {path} has no cells — bootstrap run, gate skipped \
+                 (commit a produced BENCH_throughput.json as the baseline to arm it)"
+            );
+            return;
+        }
+        let drifts = compare_baseline(&baseline, &cells, tol);
+        if drifts.is_empty() {
+            let n = baseline.keys().filter(|k| k.ends_with("/rps")).count();
+            println!(
+                "bench gate: all {n} baseline rps cells within {:.0}% of baseline",
+                tol * 100.0
+            );
+        } else {
+            eprintln!("bench gate FAILED (rps tolerance {:.0}%):", tol * 100.0);
+            for d in &drifts {
+                eprintln!("  {d}");
+            }
+            std::process::exit(1);
+        }
+    }
+}

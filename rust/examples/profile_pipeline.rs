@@ -16,6 +16,14 @@ fn main() {
     let p = Pipeline::wordcount(cfg);
     for _ in 0..5 {
         let r = p.run(w.items.clone()).unwrap();
-        println!("{:.0} items/s", r.throughput());
+        match r.latency {
+            Some(lat) => println!(
+                "{:.0} items/s  latency p50 = {} µs  p99 = {} µs",
+                r.throughput(),
+                lat.p50,
+                lat.p99
+            ),
+            None => println!("{:.0} items/s", r.throughput()),
+        }
     }
 }

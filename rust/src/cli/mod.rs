@@ -39,6 +39,9 @@ OPTIONS (table1):
   --strategies L    comma list of strategies to compare
                     (halving|doubling|multiprobe[:K]|twochoices)
                                                   [default: halving,doubling]
+  --throughput      add hot-path columns to the LB runs: records/sec
+                    (host wall clock) and p50/p99 per-record latency
+                    (sim: virtual ticks, threads: µs)
 
 OPTIONS (run):
   --workload WL     wl1|wl2|wl3|wl4|wl5|zipf|uniform|corpus|hot or a trace
@@ -71,7 +74,7 @@ OPTIONS (run):
 /// Parsed top-level command.
 pub enum Command {
     Run(Box<RunOpts>),
-    Table1 { seeds: usize, strategies: Vec<Strategy> },
+    Table1 { seeds: usize, strategies: Vec<Strategy>, throughput: bool },
     Fig3 { max_rounds: u32 },
     Elastic { strategy: Strategy, items: usize },
     Workloads,
@@ -104,8 +107,9 @@ pub fn parse(argv: &[String]) -> crate::Result<Command> {
             if strategies.is_empty() {
                 bail!("--strategies needs at least one strategy");
             }
+            let throughput = args.take_flag("throughput");
             args.finish()?;
-            Ok(Command::Table1 { seeds, strategies })
+            Ok(Command::Table1 { seeds, strategies, throughput })
         }
         "fig3" => {
             let max_rounds = args.take_opt_parse("max-rounds")?.unwrap_or(4u32);
@@ -267,8 +271,8 @@ pub fn execute(cmd: Command) -> crate::Result<i32> {
             }
             Ok(0)
         }
-        Command::Table1 { seeds, strategies } => {
-            print!("{}", table1(seeds, &strategies)?);
+        Command::Table1 { seeds, strategies, throughput } => {
+            print!("{}", table1_opts(seeds, &strategies, throughput)?);
             Ok(0)
         }
         Command::Fig3 { max_rounds } => {
@@ -418,13 +422,20 @@ fn seed_sweep(
 
 /// Everything one experiment cell measures: mean skew (with variance),
 /// mean forwarded messages and mean redistribution (migration) count —
-/// the column the WL3 ping-pong reduction is gated on.
+/// the column the WL3 ping-pong reduction is gated on — plus the
+/// hot-path throughput axis: host wall-clock records/sec over the sweep
+/// and mean per-record latency percentiles (map-enqueue → reduce; the
+/// sim reports virtual ticks, threads report µs; 0 when no run recorded
+/// latency).
 #[derive(Clone, Copy, Debug)]
 pub struct CellStats {
     pub skew: f64,
     pub skew_var: f64,
     pub forwarded: f64,
     pub migrations: f64,
+    pub rps: f64,
+    pub p50: f64,
+    pub p99: f64,
 }
 
 /// Run one experiment cell and collect its [`CellStats`].
@@ -436,15 +447,23 @@ pub fn cell_stats(
     max_rounds: u32,
     seeds: usize,
 ) -> crate::Result<CellStats> {
+    let t0 = std::time::Instant::now();
     let reports = seed_sweep(cell_cfg(strategy, driver, lb, max_rounds), &w.items, seeds)?;
+    let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
     let s = Summary::from_slice(&reports.iter().map(RunReport::skew).collect::<Vec<_>>());
     let n = reports.len().max(1) as f64;
     let mean = |f: fn(&RunReport) -> u64| reports.iter().map(|r| f(r) as f64).sum::<f64>() / n;
+    let processed: u64 = reports.iter().map(RunReport::total_processed).sum();
+    let lat: Vec<_> = reports.iter().filter_map(|r| r.latency).collect();
+    let ln = lat.len().max(1) as f64;
     Ok(CellStats {
         skew: s.mean(),
         skew_var: s.variance(),
         forwarded: mean(RunReport::total_forwarded),
         migrations: mean(RunReport::migrations),
+        rps: processed as f64 / elapsed,
+        p50: lat.iter().map(|l| l.p50 as f64).sum::<f64>() / ln,
+        p99: lat.iter().map(|l| l.p99 as f64).sum::<f64>() / ln,
     })
 }
 
@@ -480,19 +499,48 @@ pub fn strategy_stats(
 /// (migration) count of the LB runs — the latter is how the WL3
 /// ping-pong reduction from the decayed+hysteresis signal is measured.
 pub fn table1(seeds: usize, strategies: &[Strategy]) -> crate::Result<String> {
+    table1_opts(seeds, strategies, false)
+}
+
+/// [`table1`] with the hot-path axis: `throughput = true` appends
+/// records/sec (host wall clock over the LB sweep) and p50/p99
+/// per-record latency columns for the LB runs.
+pub fn table1_opts(
+    seeds: usize,
+    strategies: &[Strategy],
+    throughput: bool,
+) -> crate::Result<String> {
     let mut out = String::from(
         "Experiment 1 (Table 1): skew S, forwarded messages and migrations, \
          no-LB vs LB (≤1 round/reducer)\n",
     );
-    let mut t = Table::new([
-        "Workload", "Method", "Driver", "No LB", "With LB", "Δ", "fwd (LB)", "migr (LB)",
-    ]);
+    if throughput {
+        out.push_str(
+            "throughput columns measure the LB runs: rec/s on the host wall \
+             clock; p50/p99 per-record latency in virtual ticks (sim) or µs \
+             (threads)\n",
+        );
+    }
+    let mut header = vec![
+        "Workload".to_string(),
+        "Method".to_string(),
+        "Driver".to_string(),
+        "No LB".to_string(),
+        "With LB".to_string(),
+        "Δ".to_string(),
+        "fwd (LB)".to_string(),
+        "migr (LB)".to_string(),
+    ];
+    if throughput {
+        header.extend(["rec/s".to_string(), "p50".to_string(), "p99".to_string()]);
+    }
+    let mut t = Table::new(header);
     for w in paperwl::all() {
         for &strategy in strategies {
             for driver in [DriverKind::Sim, DriverKind::Threads] {
                 let nolb = cell_stats(&w, strategy, driver, false, 1, seeds)?;
                 let lb = cell_stats(&w, strategy, driver, true, 1, seeds)?;
-                t.row([
+                let mut row = vec![
                     w.name.clone(),
                     strategy.to_string(),
                     match driver {
@@ -504,7 +552,15 @@ pub fn table1(seeds: usize, strategies: &[Strategy]) -> crate::Result<String> {
                     delta2(nolb.skew - lb.skew),
                     format!("{:.1}", lb.forwarded),
                     format!("{:.1}", lb.migrations),
-                ]);
+                ];
+                if throughput {
+                    row.extend([
+                        format!("{:.0}", lb.rps),
+                        format!("{:.0}", lb.p50),
+                        format!("{:.0}", lb.p99),
+                    ]);
+                }
+                t.row(row);
             }
         }
     }
@@ -588,8 +644,9 @@ mod tests {
     fn parse_table1_strategies_filter() {
         let cmd = parse(&sv(&["table1", "--strategies", "halving,doubling,multiprobe"])).unwrap();
         match cmd {
-            Command::Table1 { seeds, strategies } => {
+            Command::Table1 { seeds, strategies, throughput } => {
                 assert_eq!(seeds, 3);
+                assert!(!throughput, "--throughput must be opt-in");
                 assert_eq!(
                     strategies,
                     vec![
@@ -609,6 +666,17 @@ mod tests {
             _ => panic!("expected Table1"),
         }
         assert!(parse(&sv(&["table1", "--strategies", "bogus"])).is_err());
+    }
+
+    #[test]
+    fn parse_table1_throughput_flag() {
+        match parse(&sv(&["table1", "--seeds", "1", "--throughput"])).unwrap() {
+            Command::Table1 { seeds, throughput, .. } => {
+                assert_eq!(seeds, 1);
+                assert!(throughput);
+            }
+            _ => panic!("expected Table1"),
+        }
     }
 
     #[test]

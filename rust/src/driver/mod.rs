@@ -21,6 +21,7 @@ use std::sync::mpsc::{self, RecvTimeoutError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::actor::Envelope;
 use crate::balancer::state_forward::ConsistencyMode;
 use crate::balancer::BalancerCore;
 use crate::exec::{MapExecutor, ReduceFactory};
@@ -44,12 +45,16 @@ pub struct ThreadParams {
     pub reduce_delay_us: u64,
     /// Reducer queue-poll timeout.
     pub pop_timeout: Duration,
+    /// Max envelopes a reducer drains per queue-lock acquisition (the
+    /// batched hot path); 1 degenerates to the old single-pop loop.
+    pub batch_max: usize,
     /// Post-repartition consistency: merge-at-end (§2) or state
     /// forwarding (§7).
     pub mode: ConsistencyMode,
     /// Compiled data plane for the mappers' batched route path (one XLA
     /// call hashes + routes a whole task; every router family). `None` =
-    /// scalar routing through the epoch-cached router.
+    /// the epoch-cached router's batch path (still one staleness check
+    /// per task, just scalar per-record lookups).
     pub route_runtime: Option<Arc<crate::runtime::programs::SharedRuntime>>,
     /// Elastic reducer-id ceiling (0 = fixed membership). The balancer
     /// thread spawns a new reducer thread when it applies an `Added`
@@ -66,6 +71,7 @@ impl Default for ThreadParams {
             map_delay_us: 0,
             reduce_delay_us: 200,
             pop_timeout: Duration::from_millis(2),
+            batch_max: 32,
             mode: ConsistencyMode::MergeAtEnd,
             route_runtime: None,
             max_reducers: 0,
@@ -136,7 +142,6 @@ impl ThreadDriver {
                 std::thread::Builder::new()
                     .name(format!("dpa-mapper-{i}"))
                     .spawn(move || {
-                        let batched = route_runtime.is_some();
                         let mut mc = MapperCore::new(i, exec, router);
                         if let Some(rt) = route_runtime {
                             mc = mc.with_route_runtime(rt);
@@ -144,25 +149,25 @@ impl ThreadDriver {
                         let mut staged: Vec<Vec<crate::exec::Record>> =
                             (0..core.queues.len()).map(|_| Vec::new()).collect();
                         while let Some(task) = core.pool.fetch() {
-                            if batched {
-                                // one XLA call per B records; the map cost
-                                // is charged for the whole task at once
-                                let items = task.items.len() as u64;
-                                for (dest, rec) in mc.process_task(&task) {
-                                    staged[dest].push(rec);
-                                }
-                                spin_us(map_delay.saturating_mul(items));
-                            } else {
-                                for item in task.items.iter() {
-                                    for (dest, rec) in mc.process_item(item) {
-                                        staged[dest].push(rec);
-                                    }
-                                    spin_us(map_delay);
-                                }
+                            // whole-task routing: one compiled XLA call (route
+                            // runtime attached) or one RouterCache batch —
+                            // either way a single epoch/staleness check per
+                            // task; the map cost is charged for the whole
+                            // task at once
+                            let items = task.items.len() as u64;
+                            for (dest, rec) in mc.process_task(&task) {
+                                staged[dest].push(rec);
                             }
+                            spin_us(map_delay.saturating_mul(items));
                             for (dest, recs) in staged.iter_mut().enumerate() {
                                 if recs.is_empty() {
                                     continue;
+                                }
+                                // stamp the whole slice with one clock read;
+                                // latency = this enqueue → final reduce
+                                let now = (t0.elapsed().as_micros() as u64).max(1);
+                                for r in recs.iter() {
+                                    r.set_stamp(now);
                                 }
                                 core.push_mapped_batch(dest, std::mem::take(recs));
                             }
@@ -188,6 +193,7 @@ impl ThreadDriver {
             let factory = reduce_factory.clone();
             let reduce_delay = p.reduce_delay_us;
             let pop_timeout = p.pop_timeout;
+            let batch_max = p.batch_max.max(1);
             move |i: usize| -> std::thread::JoinHandle<ReducerCore> {
                 let core = core.clone();
                 let tx = report_tx.clone();
@@ -197,18 +203,42 @@ impl ThreadDriver {
                     .name(format!("dpa-reducer-{i}"))
                     .spawn(move || {
                         let mut rc = ReducerCore::new(i, exec, router);
+                        // batched drain: refill `pending` with one queue
+                        // lock per `batch_max` envelopes; the core still
+                        // steps one envelope at a time, so its §7 logic is
+                        // untouched
+                        let mut pending: std::collections::VecDeque<Envelope> =
+                            std::collections::VecDeque::with_capacity(batch_max);
+                        let mut batching = true;
                         loop {
-                            let step =
-                                core.reducer_step(&mut rc, i, |q| q.pop_timeout(pop_timeout));
+                            let step = core.reducer_step(
+                                &mut rc,
+                                i,
+                                t0.elapsed().as_micros() as u64,
+                                |q| {
+                                    if let Some(env) = pending.pop_front() {
+                                        return Some(env);
+                                    }
+                                    if batching {
+                                        pending.extend(q.pop_batch(batch_max, pop_timeout));
+                                        pending.pop_front()
+                                    } else {
+                                        q.pop_timeout(pop_timeout)
+                                    }
+                                },
+                            );
                             match step {
                                 ReducerStep::Reduced | ReducerStep::Forwarded => {
+                                    batching = true; // data processing resumed
                                     if matches!(step, ReducerStep::Reduced) {
                                         spin_us(reduce_delay);
                                     }
                                     if rc.due_report(core.report_interval) {
                                         let _ = tx.send(LoadReport {
                                             reducer: i,
-                                            qlen: core.queues[i].len(),
+                                            // pending counts: it is load this
+                                            // reducer still has to handle
+                                            qlen: core.queues[i].len() + pending.len(),
                                             at: t0.elapsed().as_micros() as u64,
                                             evaluate: true,
                                         });
@@ -217,11 +247,32 @@ impl ThreadDriver {
                                 ReducerStep::StateExtracted { .. }
                                 | ReducerStep::StateAbsorbed => {}
                                 ReducerStep::Deferred => {
-                                    // substage 1: nothing to do but wait
-                                    // for the slowest extractor
+                                    // substage 1: the core just requeued the
+                                    // deferred record; hand any batched
+                                    // leftovers back too (state → priority
+                                    // lane, data → queue front) and fall
+                                    // back to single pops until the window
+                                    // closes
+                                    if !pending.is_empty() {
+                                        let mut data = Vec::with_capacity(pending.len());
+                                        for env in pending.drain(..) {
+                                            match env {
+                                                Envelope::State(_) => {
+                                                    core.queues[i].push_priority(env)
+                                                }
+                                                Envelope::Data(_) => data.push(env),
+                                            }
+                                        }
+                                        core.queues[i].requeue_front_batch(data);
+                                    }
+                                    batching = false;
+                                    // nothing to do but wait for the
+                                    // slowest extractor
                                     std::thread::yield_now();
                                 }
                                 ReducerStep::Idle { stop } => {
+                                    // pending is empty here: the pop closure
+                                    // always serves it before reporting None
                                     let _ = tx.send(LoadReport {
                                         reducer: i,
                                         qlen: 0,

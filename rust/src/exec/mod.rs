@@ -22,9 +22,15 @@ pub struct Record {
     pub key: String,
     pub value: i64,
     hash_cache: std::cell::Cell<Option<u32>>,
+    /// Enqueue timestamp for per-record latency: µs since run start on
+    /// the threads driver, virtual ticks on the sim. 0 = unstamped.
+    /// Deliberately NOT refreshed on forwarding hops, so the recorded
+    /// latency is end-to-end map-enqueue → final reduce. Invisible to
+    /// equality/debug, like the hash cache.
+    stamp: std::cell::Cell<u64>,
 }
 
-// SAFETY-free: Cell<Option<u32>> is Send (not Sync); Record moves between
+// SAFETY-free: Cell is Send (not Sync); Record moves between
 // threads through queues but is never shared by reference across threads.
 impl Record {
     pub fn new(key: impl Into<String>, value: i64) -> Self {
@@ -32,7 +38,20 @@ impl Record {
             key: key.into(),
             value,
             hash_cache: std::cell::Cell::new(None),
+            stamp: std::cell::Cell::new(0),
         }
+    }
+
+    /// The enqueue timestamp (0 if never stamped).
+    #[inline]
+    pub fn stamp(&self) -> u64 {
+        self.stamp.get()
+    }
+
+    /// Stamp the record with its enqueue time (driver clock units).
+    #[inline]
+    pub fn set_stamp(&self, t: u64) {
+        self.stamp.set(t);
     }
 
     /// MurmurHash3 of the key, computed once.
@@ -65,6 +84,7 @@ impl Clone for Record {
             key: self.key.clone(),
             value: self.value,
             hash_cache: self.hash_cache.clone(),
+            stamp: self.stamp.clone(),
         }
     }
 }

@@ -30,11 +30,17 @@
 //! Concurrency mirrors the old `SharedRing`/`RingCache` split:
 //! [`RouterHandle`] is the shared, epoch-versioned writer handle the
 //! balancer mutates; [`RouterCache`] gives mappers/reducers a lock-free
-//! local clone refreshed only when the published epoch moves.
+//! local clone refreshed only when the published epoch moves. Mutations
+//! run on a writer copy behind a `Mutex` and are *published* arc-swap
+//! style — readers swap in the finished snapshot and never wait out a
+//! redistribution. The two-choices sticky table itself is a lock-free
+//! concurrent map ([`AssignTable`]), so the steady-state route read path
+//! (hits, probe and token routing) acquires **no** `RwLock` at all.
 
-use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
+
+use once_cell::sync::OnceCell;
 
 use crate::balancer::signal::{LoadSignal, SignalConfig};
 
@@ -638,6 +644,197 @@ impl Router for MultiProbeRouter {
 /// Seeds for the two candidate hash functions (arbitrary odd constants).
 const TWO_CHOICES_SEEDS: [u32; 2] = [0x517c_c1b7, 0x9e37_79b9];
 
+/// Pack a sticky-table entry into one atomic word: key hash in the high
+/// half, `owner + 1` in the low half, so `0` unambiguously means *empty*
+/// (a real entry's low half is never zero). The hash half of a slot is
+/// write-once — owner rewrites keep it — which the duplicate-freedom
+/// argument below leans on.
+#[inline]
+fn pack_slot(hash: u32, owner: u32) -> u64 {
+    ((hash as u64) << 32) | (owner as u64 + 1)
+}
+
+#[inline]
+fn unpack_slot(packed: u64) -> (u32, u32) {
+    ((packed >> 32) as u32, (packed as u32) - 1)
+}
+
+/// Slots in the first [`AssignTable`] segment.
+const FIRST_SEGMENT_SLOTS: usize = 1 << 10;
+/// Per-segment growth factor for chained segments.
+const SEGMENT_GROWTH: usize = 4;
+/// Largest single segment (million-key tables chain a few of these).
+const MAX_SEGMENT_SLOTS: usize = 1 << 22;
+/// Linear-probe window inside one segment before descending to the next.
+const PROBE_WINDOW: usize = 64;
+
+/// One fixed-size open-addressing array in the [`AssignTable`] chain.
+/// Segments are append-only: a full probe window overflows into `next`
+/// (created on first demand), and existing slots are never moved — the
+/// property that lets readers run without any synchronization beyond the
+/// per-slot atomics.
+struct Segment {
+    slots: Box<[AtomicU64]>,
+    mask: usize,
+    next: OnceCell<Box<Segment>>,
+}
+
+impl Segment {
+    fn new(cap: usize) -> Segment {
+        debug_assert!(cap.is_power_of_two());
+        let slots: Box<[AtomicU64]> = (0..cap).map(|_| AtomicU64::new(0)).collect();
+        Segment { slots, mask: cap - 1, next: OnceCell::new() }
+    }
+
+    /// Fibonacci multiply-shift start slot for a key's linear probe walk.
+    #[inline]
+    fn start(&self, hash: u32) -> usize {
+        ((hash as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32) as usize & self.mask
+    }
+
+    #[inline]
+    fn window(&self) -> usize {
+        PROBE_WINDOW.min(self.slots.len())
+    }
+
+    fn next_segment(&self) -> &Segment {
+        self.next.get_or_init(|| {
+            Box::new(Segment::new((self.slots.len() * SEGMENT_GROWTH).min(MAX_SEGMENT_SLOTS)))
+        })
+    }
+}
+
+/// Lock-free concurrent `key hash → owner` map — the two-choices sticky
+/// table. Hand-rolled (the offline build carries no crossbeam) as a
+/// chain of open-addressing segments with single-word CAS slots:
+///
+/// * **get** probes each segment's window linearly; finding the key's
+///   hash returns its owner, finding an *empty* slot proves the key
+///   absent. Fully lock-free and wait-free per segment.
+/// * **insert_or_get** walks the same deterministic probe sequence and
+///   claims the first empty slot with a CAS. A failed CAS re-examines
+///   the slot: if the winner inserted the *same* key, its choice is
+///   adopted (first writer wins); otherwise the walk continues.
+/// * **rewrite** (redistribute / retire re-homes) stores a new owner
+///   into the existing slot — one atomic word, so concurrent readers can
+///   never observe a torn entry.
+///
+/// Entries are never removed, so "empty slot ⇒ absent" stays sound
+/// forever, and duplicates are impossible: both inserters of a key walk
+/// the same slot sequence, neither ever passes an empty slot without
+/// CASing it, and a slot's key half is write-once — so the second writer
+/// must either lose the CAS at the first claimable slot (and adopt) or
+/// observe the first writer's entry before reaching any later slot.
+struct AssignTable {
+    head: Segment,
+}
+
+impl AssignTable {
+    fn new() -> Self {
+        AssignTable { head: Segment::new(FIRST_SEGMENT_SLOTS) }
+    }
+
+    /// Lock-free lookup (the steady-state route *hit* path).
+    fn get(&self, hash: u32) -> Option<u32> {
+        let mut seg = &self.head;
+        loop {
+            let start = seg.start(hash);
+            for i in 0..seg.window() {
+                let cur = seg.slots[(start + i) & seg.mask].load(Ordering::Acquire);
+                if cur == 0 {
+                    return None;
+                }
+                let (h, owner) = unpack_slot(cur);
+                if h == hash {
+                    return Some(owner);
+                }
+            }
+            match seg.next.get() {
+                Some(next) => seg = next,
+                None => return None,
+            }
+        }
+    }
+
+    /// Insert `hash → owner` unless the key is already present; returns
+    /// the winning owner either way.
+    fn insert_or_get(&self, hash: u32, owner: u32) -> u32 {
+        let packed = pack_slot(hash, owner);
+        let mut seg = &self.head;
+        loop {
+            let start = seg.start(hash);
+            'probe: for i in 0..seg.window() {
+                let slot = &seg.slots[(start + i) & seg.mask];
+                let mut cur = slot.load(Ordering::Acquire);
+                loop {
+                    if cur == 0 {
+                        match slot.compare_exchange(
+                            0,
+                            packed,
+                            Ordering::AcqRel,
+                            Ordering::Acquire,
+                        ) {
+                            Ok(_) => return owner,
+                            Err(actual) => cur = actual, // re-examine the winner
+                        }
+                    } else {
+                        let (h, won) = unpack_slot(cur);
+                        if h == hash {
+                            return won; // first writer wins; adopt
+                        }
+                        continue 'probe; // claimed by another key
+                    }
+                }
+            }
+            seg = seg.next_segment();
+        }
+    }
+
+    /// Re-point the existing entry for `hash` at `owner` (no-op if the
+    /// key was never inserted). Callers serialize through the membership
+    /// write lock; the single-word store keeps lock-free readers un-torn.
+    fn rewrite(&self, hash: u32, owner: u32) {
+        let mut seg = &self.head;
+        loop {
+            let start = seg.start(hash);
+            for i in 0..seg.window() {
+                let slot = &seg.slots[(start + i) & seg.mask];
+                let cur = slot.load(Ordering::Acquire);
+                if cur == 0 {
+                    return;
+                }
+                if (cur >> 32) as u32 == hash {
+                    slot.store(pack_slot(hash, owner), Ordering::Release);
+                    return;
+                }
+            }
+            match seg.next.get() {
+                Some(next) => seg = next,
+                None => return,
+            }
+        }
+    }
+
+    /// All `(hash, owner)` entries, unordered — scan callers sort. Under
+    /// the membership *write* lock this is an exact point-in-time view
+    /// (first sights hold the read side); without it, entries landing
+    /// mid-scan may or may not be included, each individually valid.
+    fn entries(&self) -> Vec<(u32, u32)> {
+        let mut out = Vec::new();
+        let mut seg = Some(&self.head);
+        while let Some(s) = seg {
+            for slot in s.slots.iter() {
+                let cur = slot.load(Ordering::Acquire);
+                if cur != 0 {
+                    out.push(unpack_slot(cur));
+                }
+            }
+            seg = s.next.get().map(|b| &**b);
+        }
+        out
+    }
+}
+
 /// Per-key power of two choices with a sticky assignment table.
 ///
 /// Each key hash has two candidate nodes; the first route of a key picks
@@ -655,24 +852,23 @@ const TWO_CHOICES_SEEDS: [u32; 2] = [0x517c_c1b7, 0x9e37_79b9];
 ///
 /// The table — and the live node id list candidate hashing indexes — is
 /// shared (`Arc`) across [`Router::clone_router`] clones, so per-actor
-/// route caches all see one consistent assignment and one membership:
-/// a first sight can never record a node a concurrent retire just
-/// removed (both run under the same write lock).
+/// route caches all see one consistent assignment and one membership.
+/// The table itself is the lock-free [`AssignTable`]: steady-state hits
+/// acquire no lock at all. First sights (the table-miss path) hold the
+/// membership `RwLock` on the *read* side while picking and recording a
+/// candidate, and membership changes hold the write side — so a first
+/// sight can never record a node a concurrent retire just removed, and
+/// a retire's orphan scan can never miss a racing insert.
 #[derive(Clone)]
 pub struct TwoChoicesRouter {
     /// Total id space (live ∪ retired); candidate hashing indexes the
     /// shared live list, so ids may have gaps after retires.
     id_space: usize,
-    state: Arc<RwLock<TwoChoicesState>>,
-    epoch: Arc<AtomicU64>,
-}
-
-#[derive(Debug)]
-struct TwoChoicesState {
-    /// Sticky `key hash → owner` assignments.
-    assignments: BTreeMap<u32, u32>,
+    /// Sticky `key hash → owner` assignments (lock-free).
+    table: Arc<AssignTable>,
     /// Ascending live node ids (`candidate = live[h % live.len()]`).
-    live: Vec<u32>,
+    membership: Arc<RwLock<Vec<u32>>>,
+    epoch: Arc<AtomicU64>,
 }
 
 impl TwoChoicesRouter {
@@ -680,27 +876,23 @@ impl TwoChoicesRouter {
         assert!(nodes > 0, "two-choices router needs at least one node");
         TwoChoicesRouter {
             id_space: nodes,
-            state: Arc::new(RwLock::new(TwoChoicesState {
-                assignments: BTreeMap::new(),
-                live: (0..nodes as u32).collect(),
-            })),
+            table: Arc::new(AssignTable::new()),
+            membership: Arc::new(RwLock::new((0..nodes as u32).collect())),
             epoch: Arc::new(AtomicU64::new(1)),
         }
     }
 
     #[inline]
     fn candidates(&self, hash: u32) -> (usize, usize) {
-        two_choices_candidates_in(hash, &self.state.read().unwrap().live)
+        two_choices_candidates_in(hash, &self.membership.read().unwrap())
     }
 
     /// Number of keys currently pinned to `node`.
     pub fn assigned_to(&self, node: usize) -> usize {
-        self.state
-            .read()
-            .unwrap()
-            .assignments
-            .values()
-            .filter(|&&n| n as usize == node)
+        self.table
+            .entries()
+            .iter()
+            .filter(|&&(_, n)| n as usize == node)
             .count()
     }
 }
@@ -719,39 +911,44 @@ impl Router for TwoChoicesRouter {
     }
 
     fn route(&self, hash: u32, loads: &Loads) -> usize {
-        if let Some(&n) = self.state.read().unwrap().assignments.get(&hash) {
+        // steady-state hit: one lock-free table probe, no RwLock at all
+        if let Some(n) = self.table.get(hash) {
             return n as usize;
         }
-        let mut st = self.state.write().unwrap();
-        // candidates computed under the same lock a membership change
-        // takes, so a first sight can never pick a just-retired node
-        let (c1, c2) = two_choices_candidates_in(hash, &st.live);
-        // entry(): a racing first-router wins; we adopt its choice
-        let n = *st.assignments.entry(hash).or_insert_with(|| {
-            if loads.decayed(c2) < loads.decayed(c1) {
-                c2 as u32
-            } else {
-                c1 as u32
-            }
-        });
-        n as usize
+        // first sight: candidates computed under the membership *read*
+        // lock a membership change excludes, so a first sight can never
+        // pick a just-retired node and a retire's orphan scan can never
+        // miss this insert
+        let live = self.membership.read().unwrap();
+        let (c1, c2) = two_choices_candidates_in(hash, &live);
+        let pick = if loads.decayed(c2) < loads.decayed(c1) {
+            c2 as u32
+        } else {
+            c1 as u32
+        };
+        // a racing first-router wins the CAS; we adopt its choice
+        self.table.insert_or_get(hash, pick) as usize
     }
 
     fn redistribute(&mut self, target: usize, loads: &Loads) -> RouteDelta {
-        let mut st = self.state.write().unwrap();
-        let pinned: Vec<u32> = st
-            .assignments
-            .iter()
-            .filter(|&(_, &n)| n as usize == target)
-            .map(|(&k, _)| k)
+        let live = self.membership.write().unwrap();
+        let mut pinned: Vec<u32> = self
+            .table
+            .entries()
+            .into_iter()
+            .filter(|&(_, n)| n as usize == target)
+            .map(|(k, _)| k)
             .collect();
+        // ascending hash order, matching the old BTreeMap scan — keeps
+        // the every-other-key selection below deterministic
+        pinned.sort_unstable();
         let mut moved = 0u64;
         for (i, k) in pinned.iter().enumerate() {
             // re-home every other key: relieve ~half the load, like halving
             if i % 2 != 0 {
                 continue;
             }
-            let (c1, c2) = two_choices_candidates_in(*k, &st.live);
+            let (c1, c2) = two_choices_candidates_in(*k, &live);
             let alt = if c1 == target { c2 } else { c1 };
             if alt == target {
                 continue; // both candidates collide on the target
@@ -762,10 +959,10 @@ impl Router for TwoChoicesRouter {
                 // ping-pong the key back next round)
                 continue;
             }
-            st.assignments.insert(*k, alt as u32);
+            self.table.rewrite(*k, alt as u32);
             moved += 1;
         }
-        drop(st);
+        drop(live);
         if moved == 0 {
             return RouteDelta::unchanged();
         }
@@ -779,10 +976,10 @@ impl Router for TwoChoicesRouter {
 
     fn add_node(&mut self, id: usize) -> RouteDelta {
         assert_eq!(id, self.id_space, "node ids are dense and never reused");
-        let mut st = self.state.write().unwrap();
-        st.live.push(id as u32); // fresh max id keeps the list ascending
+        let mut live = self.membership.write().unwrap();
+        live.push(id as u32); // fresh max id keeps the list ascending
         self.id_space += 1;
-        drop(st);
+        drop(live);
         self.epoch.fetch_add(1, Ordering::AcqRel);
         // sticky assignments hold, so NO existing key moves at all — the
         // joiner receives load only through first sights of unseen keys
@@ -791,32 +988,34 @@ impl Router for TwoChoicesRouter {
     }
 
     fn retire_node(&mut self, id: usize, loads: &Loads) -> RouteDelta {
-        let mut st = self.state.write().unwrap();
-        if st.live.len() <= 1 {
+        let mut live = self.membership.write().unwrap();
+        if live.len() <= 1 {
             return RouteDelta::unchanged(); // the last live node must stay
         }
-        let Ok(at) = st.live.binary_search(&(id as u32)) else {
+        let Ok(at) = live.binary_search(&(id as u32)) else {
             return RouteDelta::unchanged(); // already retired
         };
-        st.live.remove(at);
+        live.remove(at);
         // sticky-table rewrite restricted to the retired owner: each of
         // its keys re-homes to the less-loaded of its candidates under
         // the NEW membership (the retired node is no candidate anymore);
         // every other entry is untouched
-        let orphaned: Vec<u32> = st
-            .assignments
-            .iter()
-            .filter(|&(_, &n)| n as usize == id)
-            .map(|(&k, _)| k)
+        let mut orphaned: Vec<u32> = self
+            .table
+            .entries()
+            .into_iter()
+            .filter(|&(_, n)| n as usize == id)
+            .map(|(k, _)| k)
             .collect();
+        orphaned.sort_unstable(); // old BTreeMap scan order
         let mut moved = 0u64;
         for k in orphaned {
-            let (c1, c2) = two_choices_candidates_in(k, &st.live);
+            let (c1, c2) = two_choices_candidates_in(k, &live);
             let n = if loads.decayed(c2) < loads.decayed(c1) { c2 } else { c1 };
-            st.assignments.insert(k, n as u32);
+            self.table.rewrite(k, n as u32);
             moved += 1;
         }
-        drop(st);
+        drop(live);
         self.epoch.fetch_add(1, Ordering::AcqRel);
         RouteDelta {
             changed: true,
@@ -827,11 +1026,11 @@ impl Router for TwoChoicesRouter {
     }
 
     fn is_live(&self, id: usize) -> bool {
-        self.state.read().unwrap().live.binary_search(&(id as u32)).is_ok()
+        self.membership.read().unwrap().binary_search(&(id as u32)).is_ok()
     }
 
     fn live_count(&self) -> usize {
-        self.state.read().unwrap().live.len()
+        self.membership.read().unwrap().len()
     }
 
     fn snapshot(&self, loads: &Loads) -> RouteSnapshot {
@@ -840,18 +1039,16 @@ impl Router for TwoChoicesRouter {
         // bit-identical to the scalar router at this epoch
         let mut frozen = loads.decayed_vec();
         frozen.resize(self.id_space, 0);
-        let st = self.state.read().unwrap();
+        let live = self.membership.read().unwrap().clone();
+        let mut assignments = self.table.entries();
+        // ascending by key hash — the sort order the compiled table
+        // lookup requires (the old BTreeMap iterated this way for free)
+        assignments.sort_unstable_by_key(|&(k, _)| k);
         RouteSnapshot {
             router: self.name(),
             epoch: self.epoch(),
             nodes: self.id_space,
-            state: SnapshotState::Assignment {
-                // BTreeMap iteration is ascending by key hash — the sort
-                // order the compiled table lookup requires
-                assignments: st.assignments.iter().map(|(&k, &n)| (k, n)).collect(),
-                live: st.live.clone(),
-                loads: frozen,
-            },
+            state: SnapshotState::Assignment { assignments, live, loads: frozen },
         }
     }
 
@@ -859,17 +1056,19 @@ impl Router for TwoChoicesRouter {
         if assignments.is_empty() {
             return;
         }
-        let mut st = self.state.write().unwrap();
+        // read side of the membership lock: a concurrent retire can't
+        // slip between the live-check and the insert
+        let live = self.membership.read().unwrap();
         for &(k, n) in assignments {
             // skip owners retired since the snapshot was taken — recording
             // one would pin the key to a node routing no longer returns
-            if st.live.binary_search(&n).is_err() {
+            if live.binary_search(&n).is_err() {
                 continue;
             }
             // first writer wins: a racing scalar route (which inserts
             // under live loads) keeps its choice; ours is dropped and the
             // stale send is forwarded by the normal mechanism
-            st.assignments.entry(k).or_insert(n);
+            self.table.insert_or_get(k, n);
         }
     }
 
@@ -878,16 +1077,30 @@ impl Router for TwoChoicesRouter {
     }
 
     fn route_is_shared(&self) -> bool {
-        true // the sticky assignment table sits behind an RwLock
+        // the sticky table is shared across clones; memoizing hot keys in
+        // the cache is still cheaper than re-probing it per record
+        true
     }
 }
 
 /// Shared, epoch-versioned router handle — the trait-layer successor of
 /// `SharedRing`. The balancer is the only redistribute caller; mappers
 /// and reducers read through [`RouterCache`] clones.
+///
+/// Reads and mutations are decoupled arc-swap style: mutators serialize
+/// on a `Mutex`-guarded writer copy, do all their work there, and then
+/// *publish* — an O(1) swap of the `published` snapshot followed by the
+/// epoch store (in that order, so any reader that observes the new epoch
+/// finds the new snapshot already in place). Readers grab the published
+/// `Arc` under a momentary `RwLock` read — never contended by in-flight
+/// redistribution work, only by the final pointer swap — so the read
+/// path never waits out a redistribution.
 #[derive(Clone)]
 pub struct RouterHandle {
-    inner: Arc<RwLock<Box<dyn Router>>>,
+    /// Mutation side: redistribute/add/retire run here, then publish.
+    writer: Arc<Mutex<Box<dyn Router>>>,
+    /// Read side: the last published router snapshot.
+    published: Arc<RwLock<Arc<dyn Router>>>,
     epoch: Arc<AtomicU64>,
     loads: Loads,
 }
@@ -924,11 +1137,28 @@ impl RouterHandle {
     fn with_loads(router: Box<dyn Router>, mk: impl FnOnce(usize) -> Loads) -> Self {
         let epoch = router.epoch();
         let loads = mk(router.nodes());
+        let published: Arc<dyn Router> = Arc::from(router.clone_router());
         RouterHandle {
-            inner: Arc::new(RwLock::new(router)),
+            writer: Arc::new(Mutex::new(router)),
+            published: Arc::new(RwLock::new(published)),
             epoch: Arc::new(AtomicU64::new(epoch)),
             loads,
         }
+    }
+
+    /// The last published router snapshot (shared, immutable-by-readers).
+    /// Hot paths clone this `Arc` once per epoch via [`RouterCache`].
+    pub fn published_router(&self) -> Arc<dyn Router> {
+        self.published.read().unwrap().clone()
+    }
+
+    /// Swap in a fresh snapshot of the writer copy, then bump the
+    /// published epoch. Snapshot first, epoch second: a reader that sees
+    /// the new epoch is guaranteed to find the new snapshot.
+    fn publish(&self, w: &dyn Router) {
+        let fresh: Arc<dyn Router> = Arc::from(w.clone_router());
+        *self.published.write().unwrap() = fresh;
+        self.epoch.store(w.epoch(), Ordering::Release);
     }
 
     /// Convenience: a token-ring router over `ring` applying `op`.
@@ -937,11 +1167,11 @@ impl RouterHandle {
     }
 
     pub fn name(&self) -> &'static str {
-        self.inner.read().unwrap().name()
+        self.published_router().name()
     }
 
     pub fn nodes(&self) -> usize {
-        self.inner.read().unwrap().nodes()
+        self.published_router().nodes()
     }
 
     /// Published epoch without taking the lock.
@@ -954,9 +1184,10 @@ impl RouterHandle {
         &self.loads
     }
 
-    /// Route a raw key hash (locks; hot paths use [`RouterCache`]).
+    /// Route a raw key hash through the published snapshot (hot paths
+    /// amortize the snapshot grab via [`RouterCache`]).
     pub fn route_hash(&self, h: u32) -> usize {
-        self.inner.read().unwrap().route(h, &self.loads)
+        self.published_router().route(h, &self.loads)
     }
 
     /// Route a key's bytes.
@@ -965,21 +1196,24 @@ impl RouterHandle {
     }
 
     pub fn snapshot(&self) -> RouteSnapshot {
-        self.inner.read().unwrap().snapshot(&self.loads)
+        self.published_router().snapshot(&self.loads)
     }
 
     /// Write back first-sight assignments computed by the compiled batch
-    /// route path (no-op for routers without a sticky table).
+    /// route path (no-op for routers without a sticky table). Goes
+    /// through the published snapshot — sticky tables are shared across
+    /// clones, so the writer copy sees the same entries.
     pub fn record_assignments(&self, assignments: &[(u32, u32)]) {
-        self.inner.read().unwrap().record_assignments(assignments);
+        self.published_router().record_assignments(assignments);
     }
 
     /// Apply the router's redistribution for an overloaded node and
-    /// publish the new epoch.
+    /// publish the new epoch. All rewrite work happens on the writer
+    /// copy; readers only ever see the O(1) publish at the end.
     pub fn redistribute(&self, target: usize) -> RouteDelta {
-        let mut g = self.inner.write().unwrap();
+        let mut g = self.writer.lock().unwrap();
         let delta = g.redistribute(target, &self.loads);
-        self.epoch.store(g.epoch(), Ordering::Release);
+        self.publish(&**g);
         delta
     }
 
@@ -989,14 +1223,14 @@ impl RouterHandle {
     /// [`Self::with_signal_capacity`]) is exhausted. The new node joins
     /// the load signal with a clean history.
     pub fn add_node(&self) -> Option<(usize, RouteDelta)> {
-        let mut g = self.inner.write().unwrap();
+        let mut g = self.writer.lock().unwrap();
         let id = g.nodes();
         if id >= self.loads.nodes() {
-            return None; // out of pre-allocated slots
+            return None; // out of pre-allocated slots; nothing published
         }
         let delta = g.add_node(id);
         self.loads.activate(id);
-        self.epoch.store(g.epoch(), Ordering::Release);
+        self.publish(&**g);
         Some((id, delta))
     }
 
@@ -1006,28 +1240,28 @@ impl RouterHandle {
     /// node also leaves the load signal's mean/flag computation. No-op
     /// delta when `id` is already retired or is the last live node.
     pub fn retire_node(&self, id: usize) -> RouteDelta {
-        let mut g = self.inner.write().unwrap();
+        let mut g = self.writer.lock().unwrap();
         let delta = g.retire_node(id, &self.loads);
         if delta.changed {
             self.loads.retire(id);
         }
-        self.epoch.store(g.epoch(), Ordering::Release);
+        self.publish(&**g);
         delta
     }
 
     /// Is `id` currently routable?
     pub fn is_live(&self, id: usize) -> bool {
-        self.inner.read().unwrap().is_live(id)
+        self.published_router().is_live(id)
     }
 
     /// Number of currently routable nodes (`<= nodes()`).
     pub fn live_count(&self) -> usize {
-        self.inner.read().unwrap().live_count()
+        self.published_router().live_count()
     }
 
     /// Ascending ids of the currently routable nodes.
     pub fn live_nodes(&self) -> Vec<usize> {
-        let g = self.inner.read().unwrap();
+        let g = self.published_router();
         (0..g.nodes()).filter(|&n| g.is_live(n)).collect()
     }
 
@@ -1039,20 +1273,21 @@ impl RouterHandle {
     /// Mutate the underlying token ring directly (elastic scale-out, test
     /// surgery). `None` when the router is not ring-based.
     pub fn update_ring<R>(&self, f: impl FnOnce(&mut Ring) -> R) -> Option<R> {
-        let mut g = self.inner.write().unwrap();
+        let mut g = self.writer.lock().unwrap();
         let out = g.as_token_ring_mut().map(f);
-        self.epoch.store(g.epoch(), Ordering::Release);
+        self.publish(&**g);
         out
     }
 
     /// Read the underlying token ring. `None` when not ring-based.
     pub fn with_ring<R>(&self, f: impl FnOnce(&Ring) -> R) -> Option<R> {
-        self.inner.read().unwrap().as_token_ring().map(f)
+        let g = self.published_router();
+        g.as_token_ring().map(f)
     }
 
     /// Clone the current router state for a local cache.
     pub fn clone_router(&self) -> Box<dyn Router> {
-        self.inner.read().unwrap().clone_router()
+        self.published_router().clone_router()
     }
 
     /// A per-actor epoch-validated cache over this handle.
@@ -1063,15 +1298,17 @@ impl RouterHandle {
 
 /// Epoch-validated local router snapshot — the trait-layer successor of
 /// `RingCache`. Routing hot paths (mappers route every record; reducers
-/// check ownership on every dequeue) re-clone only when the published
-/// epoch moves; between LB events lookups run on a local router with no
-/// shared lock. For routers whose `route` itself takes a shared lock
-/// (sticky assignment tables), the cache additionally memoizes
-/// `(hash → owner)` for the current epoch — routing is a pure function
-/// of `(hash, epoch)`, so repeat lookups of hot keys bypass the lock.
+/// check ownership on every dequeue) re-grab the published `Arc` only
+/// when the epoch atomic moves; between LB events lookups run on the
+/// local snapshot, and the staleness check itself is a single relaxed
+/// atomic load (amortized to once per batch on the batched path). For
+/// routers whose table is shared across clones (sticky assignment
+/// tables), the cache additionally memoizes `(hash → owner)` for the
+/// current epoch — routing is a pure function of `(hash, epoch)`, so
+/// repeat lookups of hot keys skip even the lock-free table probe.
 pub struct RouterCache {
     handle: RouterHandle,
-    local: Box<dyn Router>,
+    local: Arc<dyn Router>,
     epoch: u64,
     memo: std::collections::HashMap<u32, usize>,
     memoize: bool,
@@ -1079,7 +1316,7 @@ pub struct RouterCache {
 
 impl RouterCache {
     pub fn new(handle: RouterHandle) -> Self {
-        let local = handle.clone_router();
+        let local = handle.published_router();
         let epoch = handle.epoch();
         let memoize = local.route_is_shared();
         RouterCache {
@@ -1095,16 +1332,16 @@ impl RouterCache {
     fn refresh(&mut self) {
         let e = self.handle.epoch();
         if e != self.epoch {
-            self.local = self.handle.clone_router();
+            self.local = self.handle.published_router();
             self.memoize = self.local.route_is_shared();
             self.memo.clear();
             self.epoch = e;
         }
     }
 
+    /// Route against the already-refreshed local snapshot.
     #[inline]
-    pub fn route_hash(&mut self, h: u32) -> usize {
-        self.refresh();
+    fn route_local(&mut self, h: u32) -> usize {
         if self.memoize {
             if let Some(&n) = self.memo.get(&h) {
                 return n;
@@ -1114,6 +1351,25 @@ impl RouterCache {
             n
         } else {
             self.local.route(h, self.handle.loads())
+        }
+    }
+
+    #[inline]
+    pub fn route_hash(&mut self, h: u32) -> usize {
+        self.refresh();
+        self.route_local(h)
+    }
+
+    /// Route a whole slice of hashes with ONE epoch staleness check —
+    /// the batched mapper path. Destinations are appended to `dests`
+    /// (cleared first) in input order.
+    pub fn route_batch(&mut self, hashes: &[u32], dests: &mut Vec<usize>) {
+        self.refresh();
+        dests.clear();
+        dests.reserve(hashes.len());
+        for &h in hashes {
+            let n = self.route_local(h);
+            dests.push(n);
         }
     }
 
@@ -1139,6 +1395,60 @@ mod tests {
 
     fn keys(n: usize) -> Vec<String> {
         (0..n).map(|i| format!("key-{i}")).collect()
+    }
+
+    #[test]
+    fn assign_table_insert_get_rewrite() {
+        let t = AssignTable::new();
+        assert_eq!(t.get(42), None);
+        assert_eq!(t.insert_or_get(42, 3), 3);
+        assert_eq!(t.get(42), Some(3));
+        // first writer wins: a second insert for the same hash is a no-op
+        assert_eq!(t.insert_or_get(42, 7), 3);
+        assert_eq!(t.get(42), Some(3));
+        // hash 0 is a valid key (emptiness is encoded in the owner half)
+        assert_eq!(t.insert_or_get(0, 1), 1);
+        assert_eq!(t.get(0), Some(1));
+        t.rewrite(42, 9);
+        assert_eq!(t.get(42), Some(9));
+        t.rewrite(999, 5); // absent key: rewrite is a no-op, not an insert
+        assert_eq!(t.get(999), None);
+        let mut es = t.entries();
+        es.sort_unstable();
+        assert_eq!(es, vec![(0, 1), (42, 9)]);
+    }
+
+    #[test]
+    fn assign_table_chains_segments_past_first_capacity() {
+        // far more distinct hashes than FIRST_SEGMENT_SLOTS: forces probe
+        // windows to fill and the table to descend into chained segments
+        let t = AssignTable::new();
+        let n = 100_000u32;
+        for h in 0..n {
+            assert_eq!(t.insert_or_get(h, h % 7), h % 7);
+        }
+        for h in 0..n {
+            assert_eq!(t.get(h), Some(h % 7), "hash {h}");
+        }
+        assert_eq!(t.entries().len(), n as usize);
+    }
+
+    #[test]
+    fn router_cache_route_batch_matches_scalar() {
+        let handle = RouterHandle::new(Box::new(TwoChoicesRouter::new(4)));
+        let hashes: Vec<u32> =
+            keys(300).iter().map(|k| murmur3_x86_32(k.as_bytes())).collect();
+        let mut scalar = handle.cache();
+        let expect: Vec<usize> = hashes.iter().map(|&h| scalar.route_hash(h)).collect();
+        let mut batched = handle.cache();
+        let mut dests = Vec::new();
+        batched.route_batch(&hashes, &mut dests);
+        assert_eq!(dests, expect);
+        // batch across an epoch bump still matches the scalar path
+        handle.redistribute(expect[0]);
+        let expect2: Vec<usize> = hashes.iter().map(|&h| scalar.route_hash(h)).collect();
+        batched.route_batch(&hashes, &mut dests);
+        assert_eq!(dests, expect2);
     }
 
     #[test]

@@ -79,15 +79,22 @@ impl MapperCore {
 
     /// Process a whole task. With a route runtime attached, the task's
     /// records are hashed *and* routed in one batched XLA call per `B`
-    /// records; otherwise this is the per-item scalar path.
+    /// records; otherwise the scalar router runs over the whole task as
+    /// one [`RouterCache::route_batch`] slice — a single epoch staleness
+    /// check per task instead of one per record.
     pub fn process_task(&mut self, task: &Task) -> Vec<(usize, Record)> {
         if self.route_runtime.is_none() {
             self.tasks_in += 1;
-            let mut out = Vec::with_capacity(task.items.len());
+            self.items_in += task.items.len() as u64;
+            let mut recs = Vec::with_capacity(task.items.len());
             for item in task.items.iter() {
-                out.extend(self.process_item(item));
+                recs.extend(self.exec.map(item));
             }
-            return out;
+            self.emitted += recs.len() as u64;
+            let hashes: Vec<u32> = recs.iter().map(|r| r.hash()).collect();
+            let mut dests = Vec::new();
+            self.router.route_batch(&hashes, &mut dests);
+            return dests.into_iter().zip(recs).map(|(d, r)| (d, r)).collect();
         }
         self.tasks_in += 1;
         let mut recs = Vec::with_capacity(task.items.len());

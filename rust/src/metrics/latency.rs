@@ -1,0 +1,197 @@
+//! Per-record latency histogram — HDR-style bucketed, allocation-free on
+//! the record path. The hot path does ONE relaxed `fetch_add` per record
+//! (no locks, no per-record allocation), so the measurement substrate the
+//! throughput bench relies on cannot itself perturb the hot path it
+//! measures.
+//!
+//! Bucketing: values below 32 get exact unit buckets; above that, each
+//! power-of-two group is split into 32 log-linear subbuckets (5 bits of
+//! precision, ≤ ~3% relative error) — the classic HdrHistogram layout,
+//! sized here for `u64` values (µs on the threads driver, virtual ticks
+//! on the sim).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// 5 bits of subbucket precision per power-of-two group.
+const SUB_BITS: u32 = 5;
+const SUB_COUNT: usize = 1 << SUB_BITS; // 32
+/// Unit buckets 0..32, then groups for msb 5..=63 → 60 groups of 32.
+const BUCKETS: usize = SUB_COUNT * 60;
+
+#[inline]
+fn bucket_index(v: u64) -> usize {
+    if v < SUB_COUNT as u64 {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros(); // >= SUB_BITS
+    let group = (msb - SUB_BITS + 1) as usize; // 1..=59
+    // top 6 bits of v are in [32, 64); subtracting 32 yields the subbucket
+    let sub = (v >> (msb - SUB_BITS)) as usize - SUB_COUNT;
+    group * SUB_COUNT + sub
+}
+
+/// Lower edge of a bucket — the value `percentile` reports for it.
+#[inline]
+fn bucket_value(index: usize) -> u64 {
+    if index < SUB_COUNT {
+        return index as u64;
+    }
+    let group = index / SUB_COUNT; // >= 1
+    let sub = index % SUB_COUNT;
+    ((SUB_COUNT + sub) as u64) << (group - 1)
+}
+
+/// Concurrent latency histogram. `record` is safe to call from any number
+/// of reducer threads simultaneously; readers (`percentile`, `stats`)
+/// take an unsynchronized snapshot, which is exact once the run is over.
+pub struct Histogram {
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        let buckets: Box<[AtomicU64]> =
+            (0..BUCKETS).map(|_| AtomicU64::new(0)).collect();
+        Histogram { buckets, count: AtomicU64::new(0) }
+    }
+
+    /// Record one latency sample — one relaxed `fetch_add`, no allocation.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count() == 0
+    }
+
+    /// Value at percentile `p` in [0, 100] (lower bucket edge, ≤ ~3%
+    /// relative error). 0 for an empty histogram.
+    pub fn percentile(&self, p: f64) -> u64 {
+        let counts: Vec<u64> =
+            self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0 * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_value(i);
+            }
+        }
+        bucket_value(BUCKETS - 1)
+    }
+
+    /// The count/p50/p99 summary reports carry.
+    pub fn stats(&self) -> LatencyStats {
+        LatencyStats {
+            count: self.count(),
+            p50: self.percentile(50.0),
+            p99: self.percentile(99.0),
+        }
+    }
+}
+
+/// Frozen latency summary attached to a
+/// [`RunReport`](crate::metrics::RunReport). Units follow the driver
+/// clock: µs on threads, virtual ticks on the sim.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LatencyStats {
+    pub count: u64,
+    pub p50: u64,
+    pub p99: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_values_are_exact() {
+        let h = Histogram::new();
+        for v in 0..32u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 32);
+        assert_eq!(h.percentile(0.0), 0);
+        assert_eq!(h.percentile(100.0), 31);
+        // rank 16 of 32 → value 15 exactly (unit buckets)
+        assert_eq!(h.percentile(50.0), 15);
+    }
+
+    #[test]
+    fn large_values_within_relative_error() {
+        let h = Histogram::new();
+        for &v in &[1_000u64, 50_000, 1_000_000, u64::MAX / 2] {
+            h.record(v);
+            let got = bucket_value(bucket_index(v));
+            assert!(got <= v, "edge {got} above sample {v}");
+            assert!(
+                (v - got) as f64 / v as f64 <= 1.0 / SUB_COUNT as f64,
+                "error too big for {v}: edge {got}"
+            );
+        }
+    }
+
+    #[test]
+    fn bucket_index_is_monotone_on_edges() {
+        for i in 0..BUCKETS {
+            assert_eq!(bucket_index(bucket_value(i)), i, "bucket {i}");
+        }
+    }
+
+    #[test]
+    fn percentiles_split_a_bimodal_set() {
+        let h = Histogram::new();
+        for _ in 0..99 {
+            h.record(10);
+        }
+        h.record(1_000_000);
+        let s = h.stats();
+        assert_eq!(s.count, 100);
+        assert_eq!(s.p50, 10);
+        assert!(s.p99 == 10, "p99 rank 99 still lands on the mode");
+        assert!(h.percentile(100.0) >= 970_000);
+    }
+
+    #[test]
+    fn empty_histogram_is_zeroes() {
+        let h = Histogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.percentile(50.0), 0);
+        assert_eq!(h.stats(), LatencyStats::default());
+    }
+
+    #[test]
+    fn concurrent_recording_conserves_count() {
+        let h = std::sync::Arc::new(Histogram::new());
+        let mut joins = Vec::new();
+        for t in 0..4 {
+            let h = h.clone();
+            joins.push(std::thread::spawn(move || {
+                for i in 0..10_000u64 {
+                    h.record(t * 1000 + i);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(h.count(), 40_000);
+    }
+}

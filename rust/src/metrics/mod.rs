@@ -1,8 +1,11 @@
-//! Metrics: the paper's skew metric `S` (§6.1.1), per-reducer counters and
-//! the run report produced by every pipeline execution.
+//! Metrics: the paper's skew metric `S` (§6.1.1), per-reducer counters,
+//! the per-record latency histogram and the run report produced by every
+//! pipeline execution.
 
+pub mod latency;
 pub mod skew;
 pub mod report;
 
+pub use latency::{Histogram, LatencyStats};
 pub use report::{LbEvent, MembershipChange, RunReport};
 pub use skew::skew;

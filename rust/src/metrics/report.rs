@@ -6,6 +6,7 @@ use std::time::Duration;
 use crate::hash::{RouteDelta, Strategy};
 use crate::util::table::{f2, Table};
 
+use super::latency::LatencyStats;
 use super::skew::skew;
 
 /// An elastic reducer-membership change carried by an [`LbEvent`].
@@ -66,6 +67,10 @@ pub struct RunReport {
     pub peak_qlen: Vec<usize>,
     /// Total items of input consumed.
     pub input_items: u64,
+    /// Per-record map-enqueue → reduce latency summary (µs on the threads
+    /// driver, virtual ticks on the sim); `None` when no record carried a
+    /// stamp.
+    pub latency: Option<LatencyStats>,
 }
 
 impl RunReport {
@@ -163,6 +168,13 @@ impl RunReport {
                 "wall = {:?}  throughput = {:.0} msg/s\n",
                 self.wall,
                 self.throughput()
+            ));
+        }
+        if let Some(lat) = self.latency {
+            let unit = if self.virtual_end > 0 { "ticks" } else { "µs" };
+            out.push_str(&format!(
+                "latency p50 = {} {unit}  p99 = {} {unit}  ({} records)\n",
+                lat.p50, lat.p99, lat.count
             ));
         }
         let mut t = Table::new(["reducer", "processed", "forwarded", "peak qlen"]);

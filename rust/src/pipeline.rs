@@ -113,6 +113,9 @@ pub struct PipelineConfig {
     /// idle reducer waits before re-checking shutdown / §7 extraction
     /// duties.
     pub pop_timeout_ms: u64,
+    /// Threads driver: max envelopes a reducer drains per queue lock
+    /// acquisition (1 = the old one-pop-per-lock hot path).
+    pub batch_max: usize,
     /// Post-repartition consistency: merge-at-end (paper) or §7 state
     /// forwarding (either driver).
     pub mode: ConsistencyMode,
@@ -141,6 +144,7 @@ impl Default for PipelineConfig {
             map_delay_us: 0,
             reduce_delay_us: 200,
             pop_timeout_ms: 2,
+            batch_max: 32,
             mode: ConsistencyMode::MergeAtEnd,
         }
     }
@@ -243,6 +247,9 @@ impl PipelineConfig {
                 "threads.pop_timeout_ms" => {
                     self.pop_timeout_ms = doc.get_int(key).context("pop_timeout_ms")? as u64
                 }
+                "threads.batch_max" => {
+                    self.batch_max = doc.get_int(key).context("batch_max")? as usize
+                }
                 other => bail!("unknown config key '{other}'"),
             }
         }
@@ -289,6 +296,9 @@ impl PipelineConfig {
         }
         if self.pop_timeout_ms == 0 {
             bail!("threads.pop_timeout_ms must be at least 1 (idle reducers would busy-spin)");
+        }
+        if self.batch_max == 0 {
+            bail!("threads.batch_max must be at least 1 (reducers must pop something)");
         }
         self.signal.validate().map_err(anyhow::Error::msg)?;
         Ok(())
@@ -453,6 +463,7 @@ impl Pipeline {
                     map_delay_us: self.cfg.map_delay_us,
                     reduce_delay_us: self.cfg.reduce_delay_us,
                     pop_timeout: std::time::Duration::from_millis(self.cfg.pop_timeout_ms),
+                    batch_max: self.cfg.batch_max,
                     mode: self.cfg.mode,
                     route_runtime: self.route_runtime.clone(),
                     max_reducers: self.cfg.reducer_capacity(),
@@ -575,6 +586,19 @@ max_rounds = 3
         let mut cfg = PipelineConfig::default();
         cfg.apply_document(&doc).unwrap();
         assert_eq!(cfg.pop_timeout_ms, 7);
+    }
+
+    #[test]
+    fn batch_max_config_key_applies_and_validates() {
+        let doc = crate::config::parse("[threads]\nbatch_max = 8\n").unwrap();
+        let mut cfg = PipelineConfig::default();
+        cfg.apply_document(&doc).unwrap();
+        assert_eq!(cfg.batch_max, 8);
+        assert_eq!(PipelineConfig::default().batch_max, 32);
+
+        let mut bad = PipelineConfig::default();
+        bad.batch_max = 0;
+        assert!(bad.validate().is_err(), "batch_max = 0 would pop nothing");
     }
 
     #[test]

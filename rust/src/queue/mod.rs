@@ -154,25 +154,76 @@ impl<T> DataQueue<T> {
         self.not_empty.notify_one();
     }
 
+    /// Batch [`Self::requeue_front`]: put drained-but-unprocessed items
+    /// back at the front of the data lane in one lock acquisition,
+    /// preserving the given order (`items[0]` pops first). Ignores the
+    /// capacity bound for the same no-deadlock reason as `requeue_front`.
+    pub fn requeue_front_batch(&self, items: Vec<T>) {
+        if items.is_empty() {
+            return;
+        }
+        let mut q = self.inner.lock().unwrap();
+        for item in items.into_iter().rev() {
+            q.data.push_front(item);
+        }
+        self.bump_len(q.len());
+        drop(q);
+        self.not_empty.notify_all();
+    }
+
     /// Pop with timeout — reducers poll so they can also check shutdown
     /// conditions while idle (§2.3: a reducer can never stop on its own).
     ///
-    /// Deadline-loop implementation: every wakeup (signal, spurious, or
-    /// timeout) re-attempts the pop first, so a push landing right at the
-    /// timeout boundary is returned instead of dropped on the floor.
+    /// Single wait loop shared with [`Self::pop_batch`]: each wakeup
+    /// (signal, spurious, or timeout) checks *both* lanes under the one
+    /// mutex acquisition the condvar hands back, so a push landing right
+    /// at the timeout boundary is returned instead of dropped, and an
+    /// empty priority lane costs no extra re-lock.
     pub fn pop_timeout(&self, timeout: Duration) -> Option<T> {
+        self.pop_batch(1, timeout).pop()
+    }
+
+    /// Pop up to `max` items in ONE lock acquisition — the batched
+    /// reducer drain. The priority lane empties first (state transfers
+    /// must be applied before any data at the new owner), then the data
+    /// lane up to `max`. Blocks until the deadline for the *first* item;
+    /// returns an empty vec on timeout, and never waits for a full batch
+    /// — whatever is queued when the first item lands comes along.
+    pub fn pop_batch(&self, max: usize, timeout: Duration) -> Vec<T> {
+        if max == 0 {
+            return Vec::new();
+        }
         let deadline = Instant::now() + timeout;
         let mut q = self.inner.lock().unwrap();
         loop {
-            if let Some(item) = q.pop() {
+            if q.len() > 0 {
+                let mut out = Vec::with_capacity(max.min(q.len()));
+                let mut from_data = 0usize;
+                while out.len() < max {
+                    // priority items free no capacity; only data-lane
+                    // removals count toward producer wakeups
+                    let from_priority = !q.priority.is_empty();
+                    if let Some(item) = q.pop() {
+                        if !from_priority {
+                            from_data += 1;
+                        }
+                        out.push(item);
+                    } else {
+                        break;
+                    }
+                }
                 self.len.store(q.len(), Ordering::Relaxed);
                 drop(q);
-                self.not_full.notify_one();
-                return Some(item);
+                match from_data {
+                    0 => {}
+                    1 => self.not_full.notify_one(),
+                    _ => self.not_full.notify_all(),
+                }
+                return out;
             }
             let now = Instant::now();
             if now >= deadline {
-                return None;
+                return Vec::new();
             }
             let (guard, _res) = self.not_empty.wait_timeout(q, deadline - now).unwrap();
             q = guard;
@@ -346,6 +397,52 @@ mod tests {
         let total: u64 = consumers.into_iter().map(|c| c.join().unwrap()).sum();
         assert_eq!(total, 4 * n_per as u64);
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn pop_batch_drains_priority_first_up_to_max() {
+        let q = DataQueue::new(16);
+        q.push(Record::new("d1", 1));
+        q.push(Record::new("d2", 2));
+        q.push_priority(Record::new("s1", 3));
+        let got = q.pop_batch(2, Duration::from_millis(10));
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].key, "s1");
+        assert_eq!(got[1].key, "d1");
+        let rest = q.pop_batch(8, Duration::from_millis(10));
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].key, "d2");
+        assert!(q.pop_batch(8, Duration::from_millis(5)).is_empty());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn pop_batch_frees_backpressured_producer() {
+        let q = Arc::new(DataQueue::new(2));
+        q.push(Record::new("a", 1));
+        q.push(Record::new("b", 2));
+        let q2 = q.clone();
+        let producer = std::thread::spawn(move || {
+            q2.push(Record::new("c", 3)); // blocks on the full lane
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        let got = q.pop_batch(2, Duration::from_millis(100));
+        assert_eq!(got.len(), 2);
+        producer.join().unwrap();
+        assert_eq!(q.try_pop().unwrap().key, "c");
+    }
+
+    #[test]
+    fn requeue_front_batch_preserves_order() {
+        let q = DataQueue::new(2);
+        q.push(Record::new("x", 1));
+        let batch =
+            vec![Record::new("a", 1), Record::new("b", 2), Record::new("c", 3)];
+        // over capacity on purpose: requeue must not block
+        q.requeue_front_batch(batch);
+        for want in ["a", "b", "c", "x"] {
+            assert_eq!(q.try_pop().unwrap().key, want);
+        }
     }
 
     #[test]

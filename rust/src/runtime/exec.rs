@@ -29,7 +29,7 @@ use crate::coordinator::{merge_states, TaskPool};
 use crate::exec::{Record, ReduceFactory};
 use crate::hash::RouterHandle;
 use crate::mapper::MapperCore;
-use crate::metrics::{LbEvent, MembershipChange, RunReport};
+use crate::metrics::{Histogram, LbEvent, MembershipChange, RunReport};
 use crate::queue::DataQueue;
 use crate::reducer::{Handled, ReducerCore};
 
@@ -96,6 +96,10 @@ pub struct ExecCore {
     pub tracker: StageTracker,
     pub mode: ConsistencyMode,
     pub report_interval: u64,
+    /// Per-record map-enqueue → reduce latency (all reducers share it:
+    /// recording is one relaxed fetch_add, and a single histogram keeps
+    /// the report assembly trivial).
+    pub latency: Histogram,
     input_items: u64,
     coordinated_stop: bool,
     stop: AtomicBool,
@@ -127,6 +131,7 @@ impl ExecCore {
             tracker: StageTracker::with_capacity(n_reducers, capacity, router.epoch()),
             mode: params.mode,
             report_interval: params.report_interval,
+            latency: Histogram::new(),
             input_items,
             coordinated_stop: params.coordinated_stop,
             stop: AtomicBool::new(false),
@@ -160,9 +165,11 @@ impl ExecCore {
     /// The reducer step state-machine (§3 + §7) both drivers share.
     ///
     /// `pop` is the only driver-specific ingredient: the sim passes a
-    /// non-blocking [`DataQueue::try_pop`], the threads driver a
-    /// [`DataQueue::pop_timeout`].
-    pub fn reducer_step<F>(&self, rc: &mut ReducerCore, i: usize, pop: F) -> ReducerStep
+    /// non-blocking [`DataQueue::try_pop`], the threads driver a batched
+    /// [`DataQueue::pop_batch`] drain. `now` is the driver clock (virtual
+    /// ticks / elapsed µs) — a reduced record's stamp subtracted from it
+    /// is the per-record latency sample.
+    pub fn reducer_step<F>(&self, rc: &mut ReducerCore, i: usize, now: u64, pop: F) -> ReducerStep
     where
         F: FnOnce(&DataQueue<Envelope>) -> Option<Envelope>,
     {
@@ -195,8 +202,14 @@ impl ExecCore {
                     self.queues[i].requeue_front(Envelope::Data(rec));
                     return ReducerStep::Deferred;
                 }
+                // stamp before handle() consumes the record; unstamped
+                // (0) records — direct core tests — record no sample
+                let stamp = rec.stamp();
                 match rc.handle(rec) {
                     Handled::Reduced => {
+                        if stamp > 0 {
+                            self.latency.record(now.saturating_sub(stamp));
+                        }
                         self.monitor.consumed();
                         ReducerStep::Reduced
                     }
@@ -292,6 +305,7 @@ impl ExecCore {
             // more slots than ever activate)
             peak_qlen: self.queues.iter().take(reducers.len()).map(|q| q.peak()).collect(),
             input_items: self.input_items,
+            latency: (!self.latency.is_empty()).then(|| self.latency.stats()),
         }
     }
 }
@@ -345,11 +359,11 @@ mod tests {
         c.push_mapped(1, Record::new(key, 1));
         c.push_mapped(1, Record::new(other, 1)); // stale-routed
         assert!(matches!(
-            c.reducer_step(&mut rc, 1, |q| q.try_pop()),
+            c.reducer_step(&mut rc, 1, 0, |q| q.try_pop()),
             ReducerStep::Reduced
         ));
         assert!(matches!(
-            c.reducer_step(&mut rc, 1, |q| q.try_pop()),
+            c.reducer_step(&mut rc, 1, 0, |q| q.try_pop()),
             ReducerStep::Forwarded
         ));
         assert_eq!(c.queues[2].len(), 1, "forward landed at the owner");
@@ -363,12 +377,12 @@ mod tests {
         let c = core(ConsistencyMode::MergeAtEnd, &router, vec![]);
         let mut rc = ReducerCore::new(0, Box::new(WordCount::new()), router.clone());
         // mapper still running → no stop
-        match c.reducer_step(&mut rc, 0, |q| q.try_pop()) {
+        match c.reducer_step(&mut rc, 0, 0, |q| q.try_pop()) {
             ReducerStep::Idle { stop } => assert!(!stop),
             s => panic!("expected Idle, got {s:?}"),
         }
         c.monitor.mapper_done();
-        match c.reducer_step(&mut rc, 0, |q| q.try_pop()) {
+        match c.reducer_step(&mut rc, 0, 0, |q| q.try_pop()) {
             ReducerStep::Idle { stop } => assert!(stop),
             s => panic!("expected Idle, got {s:?}"),
         }
@@ -381,12 +395,12 @@ mod tests {
         c.coordinated_stop = true;
         c.monitor.mapper_done();
         let mut rc = ReducerCore::new(0, Box::new(WordCount::new()), router.clone());
-        match c.reducer_step(&mut rc, 0, |q| q.try_pop()) {
+        match c.reducer_step(&mut rc, 0, 0, |q| q.try_pop()) {
             ReducerStep::Idle { stop } => assert!(!stop, "no stop before request"),
             s => panic!("expected Idle, got {s:?}"),
         }
         c.request_stop();
-        match c.reducer_step(&mut rc, 0, |q| q.try_pop()) {
+        match c.reducer_step(&mut rc, 0, 0, |q| q.try_pop()) {
             ReducerStep::Idle { stop } => assert!(stop),
             s => panic!("expected Idle, got {s:?}"),
         }
@@ -406,8 +420,8 @@ mod tests {
 
         c.push_mapped(0, Record::new(key.clone(), 1));
         c.push_mapped(0, Record::new(key.clone(), 1));
-        assert!(matches!(c.reducer_step(&mut r0, 0, |q| q.try_pop()), ReducerStep::Reduced));
-        assert!(matches!(c.reducer_step(&mut r0, 0, |q| q.try_pop()), ReducerStep::Reduced));
+        assert!(matches!(c.reducer_step(&mut r0, 0, 0, |q| q.try_pop()), ReducerStep::Reduced));
+        assert!(matches!(c.reducer_step(&mut r0, 0, 0, |q| q.try_pop()), ReducerStep::Reduced));
 
         // move the key off node 0, then open the epoch like apply_report
         let mut moved = false;
@@ -422,13 +436,13 @@ mod tests {
         c.tracker.begin_epoch(router.epoch());
 
         // every reducer runs substage 1; node 0 ships its count
-        match c.reducer_step(&mut r0, 0, |q| q.try_pop()) {
+        match c.reducer_step(&mut r0, 0, 0, |q| q.try_pop()) {
             ReducerStep::StateExtracted { sent } => assert_eq!(sent, 1),
             s => panic!("expected extraction, got {s:?}"),
         }
         for rc in others.iter_mut() {
             let id = rc.id;
-            match c.reducer_step(rc, id, |q| q.try_pop()) {
+            match c.reducer_step(rc, id, 0, |q| q.try_pop()) {
                 ReducerStep::StateExtracted { sent } => assert_eq!(sent, 0),
                 s => panic!("expected extraction, got {s:?}"),
             }
@@ -439,7 +453,7 @@ mod tests {
         let owner = router.route_key(key.as_bytes());
         let rc = others.iter_mut().find(|r| r.id == owner).unwrap();
         assert!(matches!(
-            c.reducer_step(rc, owner, |q| q.try_pop()),
+            c.reducer_step(rc, owner, 0, |q| q.try_pop()),
             ReducerStep::StateAbsorbed
         ));
         assert!(c.synced());
@@ -459,10 +473,10 @@ mod tests {
         // extraction first (empty state), then the queued data defers
         // until the OTHER reducer also extracts
         assert!(matches!(
-            c.reducer_step(&mut r0, 0, |q| q.try_pop()),
+            c.reducer_step(&mut r0, 0, 0, |q| q.try_pop()),
             ReducerStep::StateExtracted { sent: 0 }
         ));
-        assert!(matches!(c.reducer_step(&mut r0, 0, |q| q.try_pop()), ReducerStep::Deferred));
+        assert!(matches!(c.reducer_step(&mut r0, 0, 0, |q| q.try_pop()), ReducerStep::Deferred));
         assert_eq!(c.queues[0].len(), 1, "deferred data stays local");
     }
 

@@ -203,6 +203,7 @@ impl SimDriver {
                                 let routed = mappers[i].process_item(&task.items[*cursor]);
                                 *cursor += 1;
                                 for (dest, rec) in routed {
+                                    rec.set_stamp(now); // virtual enqueue time
                                     core.push_mapped(dest, rec);
                                 }
                                 let c = jitter(&mut rng, p.costs.map_cost, p.costs.cost_jitter);
@@ -215,7 +216,7 @@ impl SimDriver {
                     }
                 }
                 ActorId::Reducer(i) => {
-                    match core.reducer_step(&mut reducers[i], i, |q| q.try_pop()) {
+                    match core.reducer_step(&mut reducers[i], i, now, |q| q.try_pop()) {
                         ReducerStep::StateExtracted { .. } | ReducerStep::StateAbsorbed => {
                             let c = jitter(&mut rng, p.costs.forward_cost, p.costs.cost_jitter);
                             push(&mut heap, &mut seq, now + c, actor);

@@ -48,6 +48,24 @@ pub fn zipf(n_items: usize, n_keys: usize, s: f64, seed: u64) -> Workload {
         .with_description(format!("{n_items} items zipf(s={s}) over {n_keys} keys, seed {seed}"))
 }
 
+/// Zipf(`s`) over a *synthetic* key space of `n_keys` ranked keys
+/// (`k0`, `k1`, …) instead of the 702-entry letter pool — production-scale
+/// workloads for the throughput bench, where the key cardinality itself
+/// (sticky-table growth, route-cache memo pressure) is what is being
+/// measured. Scales to million-key spaces: cost is one `f64` CDF entry
+/// per key plus the sampled items.
+pub fn zipf_keyspace(n_items: usize, n_keys: usize, s: f64, seed: u64) -> Workload {
+    assert!(n_keys > 0, "zipf_keyspace needs a non-empty key space");
+    let dist = Zipf::new(n_keys, s);
+    let mut rng = Xoshiro256::new(seed);
+    let items = (0..n_items)
+        .map(|_| format!("k{}", dist.sample(&mut rng)))
+        .collect();
+    Workload::new(format!("zipfkeys{s}-{n_items}x{n_keys}"), items).with_description(
+        format!("{n_items} items zipf(s={s}) over {n_keys} synthetic keys, seed {seed}"),
+    )
+}
+
 /// A stream where a fraction `hot_frac` of items share one hot key and the
 /// rest are uniform over `n_cold_keys` cold keys.
 pub fn hot_key(n_items: usize, hot_frac: f64, n_cold_keys: usize, seed: u64) -> Workload {
@@ -153,5 +171,24 @@ mod tests {
     fn generators_are_deterministic() {
         assert_eq!(zipf(100, 50, 1.1, 7).items, zipf(100, 50, 1.1, 7).items);
         assert_ne!(zipf(100, 50, 1.1, 7).items, zipf(100, 50, 1.1, 8).items);
+    }
+
+    #[test]
+    fn zipf_keyspace_scales_past_the_letter_pool() {
+        let w = zipf_keyspace(20_000, 1_000_000, 1.1, 5);
+        assert_eq!(w.items.len(), 20_000);
+        let distinct = w.distinct_keys().len();
+        assert!(
+            distinct > 702,
+            "only {distinct} distinct keys — stuck at letter-pool scale"
+        );
+        // rank-0 is the hottest key under Zipf
+        let hot = w.items.iter().filter(|i| i.as_str() == "k0").count();
+        let cold = w.items.iter().filter(|i| i.as_str() == "k999").count();
+        assert!(hot > cold, "zipf head not hot: k0={hot} k999={cold}");
+        assert_eq!(
+            zipf_keyspace(100, 10_000, 1.3, 9).items,
+            zipf_keyspace(100, 10_000, 1.3, 9).items
+        );
     }
 }

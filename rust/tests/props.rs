@@ -457,6 +457,151 @@ fn prop_migration_gain_guard_is_antisymmetric_on_skew() {
 }
 
 #[test]
+fn prop_lockfree_two_choices_matches_locked_reference() {
+    // ISSUE 6 tentpole: the lock-free sticky table + epoch-published
+    // router must be *bit-identical* to the old `RwLock<TwoChoicesState>`
+    // path. The reference model below IS that old path — a BTreeMap of
+    // assignments mutated under exclusive access with the old selection
+    // rules (first sight by decayed loads; redistribute re-homes every
+    // other pinned key in ascending hash order behind the gain guard;
+    // retire re-homes exactly the orphans under the shrunk membership) —
+    // driven with the same op sequence across several epochs.
+    use std::collections::BTreeMap;
+
+    use dpa::hash::{two_choices_candidates_in, Loads};
+
+    fn model_route(
+        model: &mut BTreeMap<u32, u32>,
+        live: &[u32],
+        loads: &Loads,
+        h: u32,
+    ) -> usize {
+        if let Some(&n) = model.get(&h) {
+            return n as usize;
+        }
+        let (c1, c2) = two_choices_candidates_in(h, live);
+        let pick = if loads.decayed(c2) < loads.decayed(c1) { c2 } else { c1 };
+        model.insert(h, pick as u32);
+        pick
+    }
+
+    forall("lock-free two-choices == locked reference model", 25, |g| {
+        let nodes = g.usize_in(2, 6);
+        let capacity = nodes + 3;
+        let handle = RouterHandle::with_signal_capacity(
+            StrategySpec::TwoChoices.build_router(nodes, 8, None),
+            &dpa::balancer::signal::SignalConfig::legacy(),
+            capacity,
+        );
+        let mut model: BTreeMap<u32, u32> = BTreeMap::new();
+        let mut live: Vec<u32> = (0..nodes as u32).collect();
+        let mut id_space = nodes;
+
+        for step in 0..g.usize_in(10, 40) {
+            match g.usize_in(0, 9) {
+                // mostly: route a mix of fresh and already-seen hashes
+                0..=5 => {
+                    for _ in 0..12 {
+                        let h = if g.bool() || model.is_empty() {
+                            g.u32()
+                        } else {
+                            // revisit a sighted key: must be a sticky HIT
+                            *model.keys().nth(g.usize_in(0, model.len() - 1)).unwrap()
+                        };
+                        let ours = handle.route_hash(h);
+                        let reference = model_route(&mut model, &live, handle.loads(), h);
+                        prop_assert!(
+                            ours == reference,
+                            "hash {h:#x} step {step}: lock-free {ours} != locked {reference}"
+                        );
+                    }
+                }
+                // shift the load signal (route-time input, no key moves)
+                6 => {
+                    for &n in &live {
+                        handle.loads().set(n as usize, g.usize_in(0, 200) as u64);
+                    }
+                }
+                // redistribute: every-other pinned key, ascending hashes
+                7 => {
+                    let target = live[g.usize_in(0, live.len() - 1)] as usize;
+                    let delta = handle.redistribute(target);
+                    let loads = handle.loads();
+                    let pinned: Vec<u32> = model
+                        .iter()
+                        .filter(|&(_, &n)| n as usize == target)
+                        .map(|(&k, _)| k)
+                        .collect(); // BTreeMap iterates ascending
+                    let mut moved = 0u64;
+                    for (i, k) in pinned.iter().enumerate() {
+                        if i % 2 != 0 {
+                            continue;
+                        }
+                        let (c1, c2) = two_choices_candidates_in(*k, &live);
+                        let alt = if c1 == target { c2 } else { c1 };
+                        if alt == target || !loads.migration_gain_ok(target, alt) {
+                            continue;
+                        }
+                        model.insert(*k, alt as u32);
+                        moved += 1;
+                    }
+                    prop_assert!(
+                        delta.keys_reassigned == moved,
+                        "step {step}: redistribute moved {} keys, reference moved {moved}",
+                        delta.keys_reassigned
+                    );
+                }
+                // membership: scale up (until capacity), mirrored exactly
+                8 => {
+                    let ours = handle.add_node();
+                    if id_space < capacity {
+                        prop_assert!(
+                            ours.map(|(id, _)| id) == Some(id_space),
+                            "join id mismatch at {id_space}"
+                        );
+                        live.push(id_space as u32);
+                        id_space += 1;
+                    } else {
+                        prop_assert!(ours.is_none(), "join beyond reserved capacity");
+                    }
+                }
+                // membership: retire a random node, orphan rewrite mirrored
+                _ => {
+                    let victim = g.usize_in(0, id_space - 1);
+                    let delta = handle.retire_node(victim);
+                    let at = live.binary_search(&(victim as u32));
+                    if live.len() <= 1 || at.is_err() {
+                        prop_assert!(!delta.changed, "retire of {victim} should be refused");
+                        continue;
+                    }
+                    live.remove(at.unwrap());
+                    let loads = handle.loads();
+                    let orphaned: Vec<u32> = model
+                        .iter()
+                        .filter(|&(_, &n)| n as usize == victim)
+                        .map(|(&k, _)| k)
+                        .collect();
+                    for k in orphaned {
+                        let (c1, c2) = two_choices_candidates_in(k, &live);
+                        let n = if loads.decayed(c2) < loads.decayed(c1) { c2 } else { c1 };
+                        model.insert(k, n as u32);
+                    }
+                    prop_assert!(delta.changed && delta.nodes_retired == 1, "{delta:?}");
+                }
+            }
+        }
+        // final sweep: every sighted key agrees, and so does a fresh batch
+        for (&h, &n) in &model {
+            prop_assert!(
+                handle.route_hash(h) == n as usize,
+                "final sweep: hash {h:#x} diverged"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_pipeline_correct_on_random_workloads() {
     forall("pipeline == serial oracle on random input", 12, |g| {
         let n = g.usize_in(1, 300);
