@@ -1,0 +1,7 @@
+// Declare `--cfg loom` (set via RUSTFLAGS by the loom CI job and the
+// model suite's docs) as an expected cfg, so `unexpected_cfgs` stays
+// clean under `-D warnings` on modern toolchains. Older cargos (the MSRV
+// leg) treat the unknown directive as inert metadata.
+fn main() {
+    println!("cargo:rustc-check-cfg=cfg(loom)");
+}

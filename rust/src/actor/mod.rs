@@ -5,9 +5,12 @@
 //! deterministically-scheduled state machine (sim driver) over the same
 //! core logic.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Arc;
+#![forbid(unsafe_code)]
+
 use std::thread;
+
+use crate::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use crate::sync::Arc;
 
 use crate::exec::Record;
 
@@ -37,10 +40,17 @@ impl Envelope {
 /// Reducers may stop exactly when all mappers are done **and** nothing is
 /// in flight — at that point no queue holds data and no forward can ever
 /// arrive, so the condition is stable.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct ShutdownMonitor {
     mappers_running: AtomicUsize,
     in_flight: AtomicU64,
+}
+
+// manual (not derived): loom's atomics don't implement `Default`
+impl Default for ShutdownMonitor {
+    fn default() -> Self {
+        Self::new(0)
+    }
 }
 
 impl ShutdownMonitor {
@@ -99,9 +109,16 @@ where
 
 /// A cancellation flag shared across actors (error propagation: any actor
 /// hitting a fatal error trips it so the others unwind promptly).
-#[derive(Clone, Default)]
+#[derive(Clone)]
 pub struct CancelToken {
-    flag: Arc<std::sync::atomic::AtomicBool>,
+    flag: Arc<AtomicBool>,
+}
+
+// manual (not derived): loom's atomics don't implement `Default`
+impl Default for CancelToken {
+    fn default() -> Self {
+        CancelToken { flag: Arc::new(AtomicBool::new(false)) }
+    }
 }
 
 impl CancelToken {

@@ -40,8 +40,10 @@
 //! raw value in fixed point, the flag is the old strictly-above-mean
 //! classification, and the gain guard is disabled.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+#![forbid(unsafe_code)]
+
+use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::sync::Arc;
 
 /// Fractional bits of the fixed-point decayed load. Every consumer of the
 /// decayed signal (routers, snapshot tensors, the compiled kernels'

@@ -27,7 +27,9 @@
 //! one reducer* — is asserted in `rust/tests/lb_behavior.rs` and exercised
 //! on both drivers by `rust/tests/driver_parity.rs`.
 
-use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, AtomicUsize, Ordering};
+#![forbid(unsafe_code)]
+
+use crate::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, AtomicUsize, Ordering};
 
 /// How the pipeline keeps per-key state consistent across repartitions.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -25,8 +25,8 @@ pub mod strategy;
 pub use murmur3::murmur3_x86_32;
 pub use ring::{Ring, SharedRing, Token};
 pub use router::{
-    probe_route, two_choices_candidates, two_choices_candidates_in, Loads, MultiProbeRouter,
-    RingOp, RouteDelta, RouteSnapshot, Router, RouterCache, RouterHandle, SnapshotState,
-    TokenRingRouter, TwoChoicesRouter,
+    probe_route, two_choices_candidates, two_choices_candidates_in, AssignTable, Loads,
+    MultiProbeRouter, RingOp, RouteDelta, RouteSnapshot, Router, RouterCache, RouterHandle,
+    SnapshotState, TokenRingRouter, TwoChoicesRouter,
 };
 pub use strategy::{Strategy, StrategySpec, DEFAULT_PROBES};

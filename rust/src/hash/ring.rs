@@ -12,8 +12,10 @@
 //! redistribution strategies; [`Ring::add_node`] supports the paper's §7
 //! elastic scale-out extension (a new reducer claims tokens at runtime).
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+#![forbid(unsafe_code)]
+
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::{Arc, RwLock};
 
 use super::murmur3::murmur3_x86_32;
 use super::strategy::Strategy;

@@ -37,8 +37,14 @@
 //! concurrent map ([`AssignTable`]), so the steady-state route read path
 //! (hits, probe and token routing) acquires **no** `RwLock` at all.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+// All synchronization goes through the crate::sync shim so the loom model
+// suite (`tests/loom_models.rs`) can exhaustively check the lock-free
+// paths below; docs/ARCHITECTURE.md ("Memory-ordering contracts") lists
+// each atomic's ordering and the invariant it upholds.
+#![forbid(unsafe_code)]
+
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::{Arc, Mutex, RwLock};
 
 use once_cell::sync::OnceCell;
 
@@ -725,17 +731,37 @@ impl Segment {
 /// CASing it, and a slot's key half is write-once — so the second writer
 /// must either lose the CAS at the first claimable slot (and adopt) or
 /// observe the first writer's entry before reaching any later slot.
-struct AssignTable {
+///
+/// The prose argument above is *checked*, not just reviewed: the type is
+/// `pub` (an internal structure, not a stable API) so the bounded loom
+/// models in `tests/loom_models.rs` can exhaustively verify
+/// first-writer-wins, the colliding-key probe walk and the
+/// no-torn-`(hash, owner)` read, and the `tests/lockfree_router.rs`
+/// stress suite can sample the same invariants at scale.
+pub struct AssignTable {
     head: Segment,
 }
 
+impl Default for AssignTable {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl AssignTable {
-    fn new() -> Self {
+    pub fn new() -> Self {
         AssignTable { head: Segment::new(FIRST_SEGMENT_SLOTS) }
     }
 
+    /// First-segment probe start for `hash` — exposed so the loom models
+    /// can craft colliding key pairs deterministically.
+    #[doc(hidden)]
+    pub fn probe_start(&self, hash: u32) -> usize {
+        self.head.start(hash)
+    }
+
     /// Lock-free lookup (the steady-state route *hit* path).
-    fn get(&self, hash: u32) -> Option<u32> {
+    pub fn get(&self, hash: u32) -> Option<u32> {
         let mut seg = &self.head;
         loop {
             let start = seg.start(hash);
@@ -758,7 +784,7 @@ impl AssignTable {
 
     /// Insert `hash → owner` unless the key is already present; returns
     /// the winning owner either way.
-    fn insert_or_get(&self, hash: u32, owner: u32) -> u32 {
+    pub fn insert_or_get(&self, hash: u32, owner: u32) -> u32 {
         let packed = pack_slot(hash, owner);
         let mut seg = &self.head;
         loop {
@@ -792,8 +818,13 @@ impl AssignTable {
 
     /// Re-point the existing entry for `hash` at `owner` (no-op if the
     /// key was never inserted). Callers serialize through the membership
-    /// write lock; the single-word store keeps lock-free readers un-torn.
-    fn rewrite(&self, hash: u32, owner: u32) {
+    /// write lock; the single-word `Release` store keeps lock-free
+    /// readers un-torn — proven by the `assign_table_rewrite_is_never_torn` loom
+    /// model, which pins that a racing `get` observes the old owner or
+    /// the new one and never a mixed `(hash, owner)` word. A CAS is not
+    /// needed *because* of that serialization; the model is the regression
+    /// guard on the claim.
+    pub fn rewrite(&self, hash: u32, owner: u32) {
         let mut seg = &self.head;
         loop {
             let start = seg.start(hash);
@@ -819,7 +850,7 @@ impl AssignTable {
     /// the membership *write* lock this is an exact point-in-time view
     /// (first sights hold the read side); without it, entries landing
     /// mid-scan may or may not be included, each individually valid.
-    fn entries(&self) -> Vec<(u32, u32)> {
+    pub fn entries(&self) -> Vec<(u32, u32)> {
         let mut out = Vec::new();
         let mut seg = Some(&self.head);
         while let Some(s) = seg {

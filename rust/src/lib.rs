@@ -55,6 +55,14 @@
 // paper's sweeps override one knob at a time); rewriting every site into
 // struct-update syntax would obscure which knob each experiment varies.
 #![allow(clippy::field_reassign_with_default)]
+// Concurrency-correctness gate: unsafe code is banned crate-wide except
+// where explicitly allowed with a SAFETY contract (the sole escape hatch
+// is `runtime::programs::SharedRuntime`'s Send/Sync impls), and any
+// allowed unsafe must carry a `// SAFETY:` comment or clippy rejects it.
+#![deny(unsafe_code)]
+#![deny(clippy::undocumented_unsafe_blocks)]
+
+pub mod sync;
 
 pub mod util;
 pub mod hash;

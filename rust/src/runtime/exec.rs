@@ -18,9 +18,12 @@
 //! balancer thread by the threads driver, so the reducer hot path never
 //! takes a global balancer lock.
 
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+#![forbid(unsafe_code)]
+
 use std::time::Duration;
+
+use crate::sync::atomic::{AtomicBool, Ordering};
+use crate::sync::Arc;
 
 use crate::actor::{Envelope, ShutdownMonitor};
 use crate::balancer::state_forward::{ConsistencyMode, Stage, StageTracker};

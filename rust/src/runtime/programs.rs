@@ -568,10 +568,22 @@ pub struct SharedRuntime {
     manifest: Manifest,
 }
 
-// SAFETY: all access to the inner Runtime (and its Rc-based wrappers) is
-// serialized by the mutex; the raw PJRT objects themselves are documented
-// thread-safe in the PJRT C API.
+// The crate denies `unsafe_code`; these two impls are the ONLY escape
+// hatch, narrowly allowed here. Everything else in the crate is
+// `#![forbid(unsafe_code)]` at module level.
+//
+// SAFETY: `Runtime`'s fields are `!Send` only because the `xla` wrappers
+// hold non-atomic `Rc` bookkeeping. The mutex serializes every access —
+// construction happens on one thread, and afterwards no `Rc` clone or
+// drop can race because no reference ever escapes the guard. The raw
+// PJRT objects behind the wrappers are documented thread-safe in the
+// PJRT C API.
+#[allow(unsafe_code)]
 unsafe impl Send for SharedRuntime {}
+// SAFETY: `&SharedRuntime` only exposes `lock`-guarded methods plus the
+// `Copy` manifest; shared references can therefore never reach the inner
+// `Rc` counts concurrently (same serialization argument as `Send`).
+#[allow(unsafe_code)]
 unsafe impl Sync for SharedRuntime {}
 
 impl std::fmt::Debug for SharedRuntime {

@@ -1,0 +1,80 @@
+//! The concurrency shim every hot-path module imports its primitives
+//! through — the seam that makes the whole concurrent core
+//! **model-checkable**.
+//!
+//! Under a normal build this module is a zero-cost re-export of
+//! `std::sync`; under `RUSTFLAGS="--cfg loom"` it re-exports
+//! [loom](https://docs.rs/loom)'s API-compatible doubles instead, so the
+//! bounded model suite (`rust/tests/loom_models.rs`) can *exhaustively*
+//! explore every thread interleaving and memory-ordering outcome of the
+//! structures built on top: the lock-free `AssignTable`, the
+//! snapshot-before-epoch `RouterHandle` publication, the two-lane
+//! `DataQueue`, the relaxed `Histogram` counters, the `ShutdownMonitor`
+//! drain condition and the `LoadSignal`/`StageTracker` counters.
+//!
+//! **Rules of the shim** (enforced by `tools/sync_lint.py` in CI):
+//!
+//! * No module under `rust/src` may name `std::sync::atomic` (or use a
+//!   memory-`Ordering` constant without importing it from here) except
+//!   this file and the explicit allowlist. Raw atomics that bypass the
+//!   shim are invisible to loom — they would silently shrink the verified
+//!   surface.
+//! * The core concurrent modules take `Mutex`/`RwLock`/`Condvar` from
+//!   here too, so lock interleavings are explored as well.
+//! * `loom::` itself must not be imported outside this file (tests may —
+//!   the model suite drives `loom::model`/`loom::thread` directly).
+//!
+//! **What stays `std` even under loom, and why:**
+//!
+//! * [`Arc`] — loom's `Arc` cannot coerce to `Arc<dyn Trait>` on stable
+//!   (unsized coercion is not implementable outside `std`), and the crate
+//!   publishes `Arc<dyn Router>` snapshots. `Arc` is used strictly for
+//!   reference-counted *sharing*, never as a publication primitive on its
+//!   own: every cross-thread hand-off of an `Arc` pointer goes through a
+//!   shim lock or atomic (e.g. `RouterHandle::publish` swaps the
+//!   published `Arc` under the `RwLock` re-exported here), so the
+//!   orderings that matter are still modeled.
+//! * `cell::Cell`/`cell::RefCell` — `!Sync` by construction, so no
+//!   interleaving exists for loom to explore; `Record`'s enqueue stamp
+//!   rides through queues by value. (`UnsafeCell` is deliberately *not*
+//!   re-exported: loom's `UnsafeCell` has a different, closure-based API.
+//!   If hot-path code ever needs one, add it here with the loom access
+//!   protocol, not at the use site.)
+//! * `once_cell::sync::OnceCell` (the `AssignTable` segment-growth
+//!   latch) — not loom-aware; the loom models bound their key counts far
+//!   below one probe window so the growth path is never taken inside a
+//!   model. A loom-visible replacement is the first thing to reach for if
+//!   a future model needs to cross a segment boundary.
+
+#![forbid(unsafe_code)]
+
+/// Atomic integer/bool types and the memory-`Ordering` enum.
+///
+/// Import orderings as `use crate::sync::atomic::Ordering` — the lint
+/// treats a bare `Ordering::Acquire` in a file without that import as a
+/// shim bypass.
+pub mod atomic {
+    #[cfg(not(loom))]
+    pub use std::sync::atomic::{
+        AtomicBool, AtomicI64, AtomicU32, AtomicU64, AtomicUsize, Ordering,
+    };
+
+    #[cfg(loom)]
+    pub use loom::sync::atomic::{
+        AtomicBool, AtomicI64, AtomicU32, AtomicU64, AtomicUsize, Ordering,
+    };
+}
+
+/// Single-threaded interior mutability (`!Sync`: nothing to model).
+pub mod cell {
+    pub use std::cell::{Cell, RefCell};
+}
+
+// Reference counting stays `std` under loom — see the module docs.
+pub use std::sync::Arc;
+
+#[cfg(not(loom))]
+pub use std::sync::{Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+#[cfg(loom)]
+pub use loom::sync::{Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};

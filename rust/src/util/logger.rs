@@ -5,6 +5,8 @@
 //! examples and the CLI alike.
 
 use std::io::Write;
+// sync-lint allowlist: the install latch is a `static`, and loom atomics
+// are not const-constructible. Nothing here is hot-path or modeled.
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Instant;
 

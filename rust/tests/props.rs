@@ -649,3 +649,59 @@ fn prop_workload_generators_conserve_length() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_histogram_concurrent_equals_sequential_merge() {
+    use dpa::metrics::Histogram;
+    use std::sync::Arc;
+
+    forall("N threads over disjoint value sets == sequential merge", 10, |g| {
+        // disjoint per-thread value sets: thread t draws from its own
+        // decade so any cross-thread increment lost or misrouted by the
+        // relaxed hot path would show up as a bucket-sum mismatch
+        let per_thread = g.usize_in(50, 400);
+        let sets: Vec<Vec<u64>> = (0..4)
+            .map(|t| {
+                (0..per_thread)
+                    .map(|_| (t as u64) * 1_000_000 + g.u64() % 900_000)
+                    .collect()
+            })
+            .collect();
+
+        let concurrent = Arc::new(Histogram::new());
+        let mut joins = Vec::new();
+        for set in &sets {
+            let h = concurrent.clone();
+            let set = set.clone();
+            joins.push(std::thread::spawn(move || {
+                for v in set {
+                    h.record(v);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().map_err(|_| "recorder thread panicked".to_string())?;
+        }
+
+        let sequential = Histogram::new();
+        for set in &sets {
+            for &v in set {
+                sequential.record(v);
+            }
+        }
+
+        prop_assert!(
+            concurrent.count() == sequential.count(),
+            "total count diverged: {} vs {}",
+            concurrent.count(),
+            sequential.count()
+        );
+        let (cb, sb) = (concurrent.bucket_counts(), sequential.bucket_counts());
+        prop_assert!(cb == sb, "per-bucket counts diverged from sequential merge");
+        prop_assert!(
+            concurrent.stats() == sequential.stats(),
+            "percentile summary diverged"
+        );
+        Ok(())
+    });
+}

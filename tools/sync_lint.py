@@ -1,0 +1,155 @@
+#!/usr/bin/env python3
+"""Memory-ordering lint: every atomic in the Rust crate goes through the
+`crate::sync` shim.
+
+The shim (`rust/src/sync/mod.rs`) is what lets the loom CI job compile
+the whole crate with loom's permutation-exploring primitives under
+`--cfg loom`. An atomic that bypasses it is invisible to the model
+checker — the worst kind of concurrency bug surface: code that LOOKS
+verified. This lint keeps the escape hatch shut:
+
+  R1  `std::sync::atomic` may appear only in the shim itself or in an
+      allowlisted file, and an allowlisted use must carry a
+      `sync-lint allowlist` comment within the three lines above it
+      explaining WHY it cannot go through the shim (e.g. `static`
+      initializers — loom atomics are not const-constructible).
+  R2  `loom::` may appear only in the shim. Product code must never
+      name loom directly, or non-loom builds break and the cfg fence
+      leaks.
+  R3  A file that names `Ordering::` must import it from
+      `crate::sync::atomic` (allowlisted files may import it from
+      `std::sync::atomic` instead). This catches the subtle bypass
+      `use std::sync::atomic as atomics` dodging R1's literal match.
+
+Scope: `rust/src/**/*.rs`. Tests, benches and examples run only on real
+threads (loom models live in `rust/tests/loom_models.rs` behind
+`#![cfg(loom)]`), so std atomics are fine there.
+
+Comment-only mentions are ignored (docs legitimately discuss orderings).
+Exit status: 0 clean, 1 violations (printed as `path:line: message`).
+
+Usage: tools/sync_lint.py [--root REPO_ROOT]
+"""
+
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+from pathlib import Path
+
+# Files (relative to rust/src) where the rules do not apply.
+SHIM = "sync/mod.rs"
+
+# Files (relative to rust/src) allowed to use std::sync::atomic directly,
+# provided each use site carries a marker comment justifying it.
+ALLOWLIST = {
+    # `static INSTALLED: AtomicBool` — loom atomics have no const `new`.
+    "util/logger.rs",
+}
+
+MARKER = "sync-lint allowlist"
+# How many lines above a use site the marker comment may sit.
+MARKER_WINDOW = 3
+
+RE_STD_ATOMIC = re.compile(r"std::sync::atomic")
+RE_LOOM = re.compile(r"\bloom::")
+RE_ORDERING_USE = re.compile(r"\bOrdering::(Relaxed|Acquire|Release|AcqRel|SeqCst)\b")
+RE_SHIM_IMPORT = re.compile(r"crate::sync::atomic")
+
+
+def strip_comment(line: str) -> str:
+    """Drop a trailing `//` comment. Crude (ignores string literals), but
+    orderings never appear inside strings in this codebase, and cutting a
+    URL out of a string can only *suppress* a match, never invent one."""
+    idx = line.find("//")
+    return line if idx < 0 else line[:idx]
+
+
+def is_marked(lines: list[str], i: int) -> bool:
+    """Is there a marker comment within MARKER_WINDOW lines above lines[i]?"""
+    lo = max(0, i - MARKER_WINDOW)
+    return any(MARKER in lines[j] for j in range(lo, i + 1))
+
+
+def lint_file(path: Path, rel: str) -> list[tuple[str, int, str]]:
+    if rel == SHIM:
+        return []
+    text = path.read_text(encoding="utf-8")
+    lines = text.splitlines()
+    violations: list[tuple[str, int, str]] = []
+    allowlisted = rel in ALLOWLIST
+
+    uses_ordering = False
+    imports_shim = False
+    imports_std_atomic = False
+
+    for i, raw in enumerate(lines):
+        line = strip_comment(raw)
+        if RE_STD_ATOMIC.search(line):
+            imports_std_atomic = True
+            if not allowlisted:
+                violations.append(
+                    (rel, i + 1,
+                     "raw `std::sync::atomic` outside the crate::sync shim — "
+                     "import from `crate::sync::atomic` so loom models cover "
+                     "this code, or add the file to the allowlist in "
+                     "tools/sync_lint.py with a justifying comment"))
+            elif not is_marked(lines, i):
+                violations.append(
+                    (rel, i + 1,
+                     f"allowlisted file uses `std::sync::atomic` without a "
+                     f"`{MARKER}` comment within {MARKER_WINDOW} lines "
+                     f"explaining why the shim cannot be used"))
+        if RE_LOOM.search(line):
+            violations.append(
+                (rel, i + 1,
+                 "`loom::` outside the crate::sync shim — product code must "
+                 "stay loom-agnostic; route through `crate::sync`"))
+        if RE_ORDERING_USE.search(line):
+            uses_ordering = True
+        if RE_SHIM_IMPORT.search(line):
+            imports_shim = True
+
+    if uses_ordering and not imports_shim:
+        if not (allowlisted and imports_std_atomic):
+            violations.append(
+                (rel, 1,
+                 "file names `Ordering::…` but never imports "
+                 "`crate::sync::atomic` — atomics here bypass the loom shim "
+                 "(aliased import?)"))
+    return violations
+
+
+def run(root: Path) -> list[tuple[str, int, str]]:
+    src = root / "rust" / "src"
+    if not src.is_dir():
+        raise SystemExit(f"sync_lint: no rust/src under {root}")
+    violations: list[tuple[str, int, str]] = []
+    for path in sorted(src.rglob("*.rs")):
+        rel = path.relative_to(src).as_posix()
+        violations.extend(lint_file(path, rel))
+    return violations
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--root",
+        type=Path,
+        default=Path(__file__).resolve().parent.parent,
+        help="repo root (default: the checkout containing this script)",
+    )
+    args = ap.parse_args()
+    violations = run(args.root)
+    for rel, lineno, msg in violations:
+        print(f"rust/src/{rel}:{lineno}: {msg}")
+    if violations:
+        print(f"sync_lint: {len(violations)} violation(s)", file=sys.stderr)
+        return 1
+    print("sync_lint: clean — all atomics go through crate::sync")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

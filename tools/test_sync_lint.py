@@ -1,0 +1,130 @@
+#!/usr/bin/env python3
+"""Self-test for tools/sync_lint.py — including the mandated negative
+cases proving the lint FAILS on raw atomic usage outside the shim."""
+
+from __future__ import annotations
+
+import sys
+import tempfile
+import unittest
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+import sync_lint  # noqa: E402
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+class FixtureTree:
+    """A throwaway repo root with a rust/src layout."""
+
+    def __init__(self, tmp: str):
+        self.root = Path(tmp)
+        (self.root / "rust" / "src").mkdir(parents=True)
+
+    def write(self, rel: str, content: str) -> None:
+        p = self.root / "rust" / "src" / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(content, encoding="utf-8")
+
+
+SHIM_SOURCE = """\
+pub mod atomic {
+    #[cfg(not(loom))]
+    pub use std::sync::atomic::{AtomicU64, Ordering};
+    #[cfg(loom)]
+    pub use loom::sync::atomic::{AtomicU64, Ordering};
+}
+"""
+
+CLEAN_SOURCE = """\
+use crate::sync::atomic::{AtomicU64, Ordering};
+pub fn f(x: &AtomicU64) -> u64 {
+    x.load(Ordering::Acquire)
+}
+"""
+
+
+class SyncLintTest(unittest.TestCase):
+    def lint(self, build) -> list[tuple[str, int, str]]:
+        with tempfile.TemporaryDirectory() as tmp:
+            tree = FixtureTree(tmp)
+            tree.write("sync/mod.rs", SHIM_SOURCE)
+            build(tree)
+            return sync_lint.run(tree.root)
+
+    def test_clean_tree_passes(self):
+        violations = self.lint(lambda t: t.write("queue/mod.rs", CLEAN_SOURCE))
+        self.assertEqual(violations, [])
+
+    def test_shim_itself_may_use_std_and_loom(self):
+        violations = self.lint(lambda t: None)
+        self.assertEqual(violations, [])
+
+    # --- the negative tests: the lint MUST fail on these -----------------
+
+    def test_raw_std_atomic_fails(self):
+        violations = self.lint(lambda t: t.write(
+            "hash/router.rs",
+            "use std::sync::atomic::{AtomicU64, Ordering};\n"))
+        self.assertEqual(len(violations), 1)
+        rel, line, msg = violations[0]
+        self.assertEqual((rel, line), ("hash/router.rs", 1))
+        self.assertIn("crate::sync", msg)
+
+    def test_loom_outside_shim_fails(self):
+        violations = self.lint(lambda t: t.write(
+            "queue/mod.rs",
+            "use loom::sync::atomic::AtomicUsize;\n"))
+        self.assertEqual(len(violations), 1)
+        self.assertIn("loom-agnostic", violations[0][2])
+
+    def test_aliased_bypass_fails(self):
+        # `use std::sync::atomic as x` dodged? R1 catches the literal path;
+        # R3 catches orderings arriving through any other alias
+        violations = self.lint(lambda t: t.write(
+            "metrics/latency.rs",
+            "use core::sync::atomic::Ordering;\n"
+            "pub fn f() { let _ = Ordering::Relaxed; }\n"))
+        self.assertEqual(len(violations), 1)
+        self.assertIn("bypass", violations[0][2])
+
+    def test_allowlisted_file_without_marker_fails(self):
+        violations = self.lint(lambda t: t.write(
+            "util/logger.rs",
+            "use std::sync::atomic::{AtomicBool, Ordering};\n"))
+        self.assertEqual(len(violations), 1)
+        self.assertIn("sync-lint allowlist", violations[0][2])
+
+    # --- allow / ignore paths --------------------------------------------
+
+    def test_allowlisted_file_with_marker_passes(self):
+        violations = self.lint(lambda t: t.write(
+            "util/logger.rs",
+            "// sync-lint allowlist: static latch, loom has no const new\n"
+            "use std::sync::atomic::{AtomicBool, Ordering};\n"
+            "pub fn f(b: &AtomicBool) -> bool { b.load(Ordering::SeqCst) }\n"))
+        self.assertEqual(violations, [])
+
+    def test_comment_mentions_are_ignored(self):
+        violations = self.lint(lambda t: t.write(
+            "hash/ring.rs",
+            "// docs may discuss std::sync::atomic and loom:: freely,\n"
+            "// and even Ordering::Release semantics, without tripping R3\n"
+            "pub fn f() {}\n"))
+        self.assertEqual(violations, [])
+
+    def test_ordering_with_shim_import_passes(self):
+        violations = self.lint(lambda t: t.write(
+            "balancer/signal.rs", CLEAN_SOURCE))
+        self.assertEqual(violations, [])
+
+    # --- the real tree ----------------------------------------------------
+
+    def test_actual_repo_is_clean(self):
+        self.assertEqual(sync_lint.run(REPO_ROOT), [])
+
+
+if __name__ == "__main__":
+    unittest.main(verbosity=2)
