@@ -35,6 +35,11 @@
 //! identical scale-up + scale-down schedule on the sim and the threads
 //! driver.
 
+// Scaling decisions ripple through every lane (router membership, queue
+// pre-allocation, §7 state transfer) — the public policy surface must
+// say exactly what it promises.
+#![warn(missing_docs)]
+
 use crate::balancer::signal::FRAC_BITS;
 use crate::hash::Loads;
 
@@ -69,6 +74,17 @@ impl Default for ElasticConfig {
 }
 
 impl ElasticConfig {
+    /// Reject watermark pairs that cannot form a hysteresis band and
+    /// bounds that cannot hold a live reducer set. Run before the
+    /// controller is built — a bad config caught here is a one-line
+    /// error instead of a run that flaps membership forever.
+    ///
+    /// ```
+    /// use dpa::balancer::elastic::ElasticConfig;
+    /// assert!(ElasticConfig::default().validate().is_ok());
+    /// let inverted = ElasticConfig { scale_up: 1.0, scale_down: 4.0, ..Default::default() };
+    /// assert!(inverted.validate().unwrap_err().contains("hysteresis"));
+    /// ```
     pub fn validate(&self) -> Result<(), String> {
         if self.scale_up.is_nan() || self.scale_down.is_nan() {
             return Err("balancer.scale_up/scale_down must not be NaN".into());

@@ -41,6 +41,10 @@
 //! classification, and the gain guard is disabled.
 
 #![forbid(unsafe_code)]
+// Every public item here is a contract some other lane (router, snapshot
+// tensor, kernel) must replay bit-for-bit — undocumented surface is how
+// those lanes drift.
+#![warn(missing_docs)]
 
 use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use crate::sync::Arc;
@@ -81,6 +85,16 @@ impl SignalConfig {
         SignalConfig { decay_alpha: 1.0, hysteresis: 0.0, min_gain: 0.0 }
     }
 
+    /// Range-check the knobs; the `Err` message names the offending
+    /// TOML key so config typos fail loudly.
+    ///
+    /// ```
+    /// use dpa::balancer::signal::SignalConfig;
+    ///
+    /// assert!(SignalConfig::default().validate().is_ok());
+    /// let bad = SignalConfig { decay_alpha: 0.0, ..SignalConfig::default() };
+    /// assert!(bad.validate().unwrap_err().contains("decay_alpha"));
+    /// ```
     pub fn validate(&self) -> Result<(), String> {
         // NaN fails every branch explicitly — a NaN knob must not slip
         // through as "not less than zero"
@@ -154,6 +168,17 @@ struct SignalInner {
 ///
 /// This type *is* the `hash::Loads` view the [`Router`](crate::hash::Router)
 /// trait routes against — `Loads` is an alias for it.
+///
+/// ```
+/// use dpa::balancer::signal::{LoadSignal, SignalConfig, FRAC_BITS};
+///
+/// let cfg = SignalConfig { decay_alpha: 0.5, hysteresis: 0.0, min_gain: 0.0 };
+/// let s = LoadSignal::with_config(2, &cfg);
+/// s.set(0, 100);
+/// // half-weight EWMA in FRAC_BITS fixed point
+/// assert_eq!(s.decayed(0), 50u64 << FRAC_BITS);
+/// assert_eq!(s.get(0), 100, "the raw lane keeps the instantaneous value");
+/// ```
 #[derive(Clone, Debug)]
 pub struct LoadSignal {
     inner: Arc<SignalInner>,

@@ -26,6 +26,14 @@
 //! The invariant it buys — *at shutdown every key's state lives on exactly
 //! one reducer* — is asserted in `rust/tests/lb_behavior.rs` and exercised
 //! on both drivers by `rust/tests/driver_parity.rs`.
+//!
+//! That single-homing invariant only holds under a
+//! [`MergeContract::Disjoint`](crate::hash::MergeContract) router. The
+//! split-key family relaxes it: a promoted key keeps a partial on each of
+//! its `d` candidate homes (the reducer-side may-own check deliberately
+//! leaves shards resident through substage 1), and the final merge folds
+//! those partials associatively instead of asserting disjointness. See
+//! `docs/ARCHITECTURE.md` §"merge contracts".
 
 #![forbid(unsafe_code)]
 

@@ -37,7 +37,7 @@ USAGE:
 OPTIONS (table1):
   --seeds N         runs per cell (mean)                     [default: 3]
   --strategies L    comma list of strategies to compare
-                    (halving|doubling|multiprobe[:K]|twochoices)
+                    (halving|doubling|multiprobe[:K]|twochoices|splitkey[:D])
                                                   [default: halving,doubling]
   --throughput      add hot-path columns to the LB runs: records/sec
                     (host wall clock) and p50/p99 per-record latency
@@ -46,10 +46,13 @@ OPTIONS (table1):
 OPTIONS (run):
   --workload WL     wl1|wl2|wl3|wl4|wl5|zipf|uniform|corpus|hot or a trace
                     file path                                [default: wl4]
-  --strategy S      none|halving|doubling|multiprobe[:K]|twochoices
-                                                             [default: doubling]
+  --strategy S      none|halving|doubling|multiprobe[:K]|twochoices|
+                    splitkey[:D]                             [default: doubling]
   --rounds N        max LB rounds per reducer                [default: 1]
   --tau F           Eq.1 threshold τ                         [default: 0.2]
+  --split-watermark F
+                    splitkey only: decayed load a single key
+                    must carry before it splits d-way        [default: 4.0]
   --decay-alpha F   EWMA weight of new load samples (0,1]    [default: 0.5]
   --hysteresis F    overload-flag band around the mean       [default: 0.25]
   --min-gain F      min fractional gain to re-home a key     [default: 0.1]
@@ -143,6 +146,9 @@ pub fn parse(argv: &[String]) -> crate::Result<Command> {
             }
             if let Some(v) = args.take_opt_parse("tau")? {
                 cfg.tau = v;
+            }
+            if let Some(v) = args.take_opt_parse("split-watermark")? {
+                cfg.split_watermark = v;
             }
             if let Some(v) = args.take_opt_parse("decay-alpha")? {
                 cfg.signal.decay_alpha = v;
@@ -685,6 +691,28 @@ mod tests {
             Command::Run(o) => assert_eq!(o.cfg.strategy, Strategy::TwoChoices),
             _ => panic!("expected Run"),
         }
+    }
+
+    #[test]
+    fn parse_run_split_key_strategy() {
+        let cmd = parse(&sv(&[
+            "run",
+            "--strategy",
+            "splitkey:4",
+            "--split-watermark",
+            "1.5",
+            "--quiet",
+        ]))
+        .unwrap();
+        match cmd {
+            Command::Run(o) => {
+                assert_eq!(o.cfg.strategy, Strategy::SplitKey { d: 4 });
+                assert!((o.cfg.split_watermark - 1.5).abs() < 1e-12);
+            }
+            _ => panic!("expected Run"),
+        }
+        // d outside 2..=8 is rejected at parse time
+        assert!(parse(&sv(&["run", "--strategy", "splitkey:1", "--quiet"])).is_err());
     }
 
     #[test]

@@ -14,6 +14,13 @@ pub use tasks::{chunk_items, TaskPool};
 /// For [`ConsistencyMode::StateForward`](crate::balancer::state_forward::ConsistencyMode)
 /// runs the snapshots are key-disjoint and this is a plain union; the
 /// `expect_disjoint` flag asserts that invariant.
+///
+/// Callers must pass `expect_disjoint = false` when the router carries
+/// [`MergeContract::Associative`](crate::hash::MergeContract) (the
+/// split-key family): a promoted key deliberately has partials on up to
+/// `d` reducers, and the merge folds them associatively instead of
+/// asserting single-homing. `ExecCore::finish` derives the flag from
+/// the contract captured at build time.
 pub fn merge_states(
     snaps: Vec<Vec<(String, i64)>>,
     op: MergeOp,

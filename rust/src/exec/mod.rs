@@ -163,6 +163,19 @@ impl MergeOp {
             MergeOp::Last => b,
         }
     }
+
+    /// May shards of ONE key, partially aggregated on several reducers,
+    /// be folded with this op in any order and still equal the
+    /// single-reducer result? True for the associative, commutative ops
+    /// (`Sum`/`Min`/`Max`); false for `Last`, which depends on fold
+    /// order. Routers with an associative merge contract (split-key) are
+    /// rejected at pipeline build time when the executor's merge op is
+    /// not splittable — under disjoint routing the question never arises,
+    /// because each key is folded exactly once.
+    #[inline]
+    pub fn splittable(&self) -> bool {
+        !matches!(self, MergeOp::Last)
+    }
 }
 
 impl fmt::Display for MergeOp {
@@ -251,6 +264,11 @@ mod tests {
         assert_eq!(MergeOp::Min.apply(2, 3), 2);
         assert_eq!(MergeOp::Max.apply(2, 3), 3);
         assert_eq!(MergeOp::Last.apply(2, 3), 3);
+        // order-sensitive ops cannot merge split-key shards
+        assert!(MergeOp::Sum.splittable());
+        assert!(MergeOp::Min.splittable());
+        assert!(MergeOp::Max.splittable());
+        assert!(!MergeOp::Last.splittable());
     }
 
     #[test]

@@ -13,9 +13,11 @@
 //! [`router`] lifts the routing/redistribution surface into the pluggable
 //! [`Router`] trait: the token ring is one implementation
 //! ([`TokenRingRouter`]) next to multi-probe hashing
-//! ([`MultiProbeRouter`]) and power-of-two-choices
-//! ([`TwoChoicesRouter`]); [`strategy`] holds the parsed specs that
-//! construct them.
+//! ([`MultiProbeRouter`]), power-of-two-choices ([`TwoChoicesRouter`])
+//! and d-way partial key grouping ([`SplitKeyRouter`], the one family
+//! with an [`MergeContract::Associative`] merge contract); [`strategy`]
+//! holds the parsed specs that construct them. `docs/ROUTING.md` is the
+//! family-by-family decision guide.
 
 pub mod murmur3;
 pub mod ring;
@@ -25,8 +27,9 @@ pub mod strategy;
 pub use murmur3::murmur3_x86_32;
 pub use ring::{Ring, SharedRing, Token};
 pub use router::{
-    probe_route, two_choices_candidates, two_choices_candidates_in, AssignTable, Loads,
-    MultiProbeRouter, RingOp, RouteDelta, RouteSnapshot, Router, RouterCache, RouterHandle,
-    SnapshotState, TokenRingRouter, TwoChoicesRouter,
+    probe_route, split_candidates_in, two_choices_candidates, two_choices_candidates_in,
+    AssignTable, Loads, MergeContract, MultiProbeRouter, RingOp, RouteDelta, RouteSnapshot,
+    Router, RouterCache, RouterHandle, SnapshotState, SplitKeyRouter, TokenRingRouter,
+    TwoChoicesRouter, MAX_SPLIT_D, SPLIT_SENTINEL,
 };
-pub use strategy::{Strategy, StrategySpec, DEFAULT_PROBES};
+pub use strategy::{Strategy, StrategySpec, DEFAULT_PROBES, DEFAULT_SPLIT_D};

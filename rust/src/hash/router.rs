@@ -26,6 +26,17 @@
 //!   the merge disjointness assertion) stay correct. `redistribute`
 //!   re-homes about half of the overloaded node's keys to their alternate
 //!   candidates.
+//! * [`SplitKeyRouter`] — d-way partial key grouping ("When Two Choices
+//!   Are not Enough", Katsipoulakis et al.): cold keys stay sticky
+//!   exactly like two-choices, but a key whose estimated decayed load
+//!   exceeds the split watermark is *promoted to split* — every later
+//!   record of that key goes to the least-loaded of its `d` candidate
+//!   nodes, so one mega-hot key finally spreads across reducers. The
+//!   price is the merge contract: split shards of one key hold partial
+//!   state on several reducers, so the router declares
+//!   [`MergeContract::Associative`] and the §7 disjoint-merge assertion
+//!   is relaxed to associative partial aggregation (see
+//!   `docs/ARCHITECTURE.md`, "§7 merge contracts").
 //!
 //! Concurrency mirrors the old `SharedRing`/`RingCache` split:
 //! [`RouterHandle`] is the shared, epoch-versioned writer handle the
@@ -42,13 +53,17 @@
 // paths below; docs/ARCHITECTURE.md ("Memory-ordering contracts") lists
 // each atomic's ordering and the invariant it upholds.
 #![forbid(unsafe_code)]
+// Every pub item in the routing layer is documented; the CI doc gate
+// (`cargo doc` under -D warnings) turns an undocumented addition into a
+// build failure rather than silent doc rot.
+#![warn(missing_docs)]
 
 use crate::sync::atomic::{AtomicU64, Ordering};
 use crate::sync::{Arc, Mutex, RwLock};
 
 use once_cell::sync::OnceCell;
 
-use crate::balancer::signal::{LoadSignal, SignalConfig};
+use crate::balancer::signal::{LoadSignal, SignalConfig, FRAC_BITS};
 
 use super::murmur3::{murmur3_x86_32, murmur3_x86_32_seed};
 use super::ring::{Ring, Token};
@@ -73,8 +88,10 @@ pub struct RouteDelta {
     pub tokens_added: u32,
     /// Tokens removed on the ring (halving family, token-ring retires).
     pub tokens_removed: u32,
-    /// Keys explicitly re-homed (two-choices family).
+    /// Keys explicitly re-homed (two-choices / split-key families).
     pub keys_reassigned: u64,
+    /// Keys promoted from sticky to d-way split (split-key family).
+    pub keys_split: u64,
     /// Nodes that joined the routable set (elastic scale-up).
     pub nodes_added: u32,
     /// Nodes that left the routable set (elastic scale-down).
@@ -82,6 +99,7 @@ pub struct RouteDelta {
 }
 
 impl RouteDelta {
+    /// The all-zero delta of a redistribute that changed nothing.
     pub fn unchanged() -> Self {
         RouteDelta::default()
     }
@@ -99,9 +117,13 @@ impl RouteDelta {
 /// [`crate::runtime::programs::snapshot_tensors`]).
 #[derive(Clone, Debug)]
 pub struct RouteSnapshot {
+    /// The producing router family's [`Router::name`].
     pub router: &'static str,
+    /// The epoch this snapshot was frozen at.
     pub epoch: u64,
+    /// Total id space (live ∪ retired) of the producing router.
     pub nodes: usize,
+    /// The family-tagged routing state.
     pub state: SnapshotState,
 }
 
@@ -137,6 +159,23 @@ pub enum SnapshotState {
         assignments: Vec<(u32, u32)>,
         live: Vec<u32>,
         loads: Vec<u64>,
+    },
+    /// Split-key family: the sticky `(key_hash, owner)` table sorted by
+    /// key hash, where an owner equal to [`SPLIT_SENTINEL`] marks a key
+    /// *promoted to split* — its records go to the least-loaded of its
+    /// `d` candidates instead of a single sticky owner. Carries the
+    /// ascending live node id list, the per-node EWMA-decayed loads
+    /// (fixed point) frozen at snapshot time, and the split fan-out `d`.
+    /// This family has **no compiled lowering**: split routing is
+    /// load-adaptive per record, so
+    /// [`snapshot_tensors`](crate::runtime::programs::snapshot_tensors)
+    /// refuses it with a typed error and the mapper permanently falls
+    /// back to the scalar lane (documented in `docs/ROUTING.md`).
+    Split {
+        assignments: Vec<(u32, u32)>,
+        live: Vec<u32>,
+        loads: Vec<u64>,
+        d: u32,
     },
 }
 
@@ -198,6 +237,32 @@ impl RouteSnapshot {
                     }
                 }
             }
+            SnapshotState::Split { assignments, live, loads, d } => {
+                match assignments.binary_search_by_key(&hash, |&(k, _)| k) {
+                    Ok(i) if assignments[i].1 != SPLIT_SENTINEL => {
+                        assignments[i].1 as usize
+                    }
+                    // split key or first sight: deterministic least
+                    // frozen load among the d candidates (strict `<`, so
+                    // the earliest candidate wins ties — the same rule
+                    // the scalar router applies at first sight; for a
+                    // *split* key the live router additionally rotates
+                    // among tied candidates, which a frozen snapshot
+                    // cannot reproduce and does not need to — any
+                    // candidate is a legitimate shard home)
+                    _ => {
+                        let cands = split_candidates_in(hash, live, *d as usize);
+                        let l = |n: usize| loads.get(n).copied().unwrap_or(0);
+                        let mut best = cands[0];
+                        for &c in &cands[1..] {
+                            if l(c) < l(best) {
+                                best = c;
+                            }
+                        }
+                        best
+                    }
+                }
+            }
         }
     }
 }
@@ -205,8 +270,14 @@ impl RouteSnapshot {
 /// The redistribution layer's trait. Implementations must route
 /// deterministically for a fixed `(hash, epoch)` — reducers re-check
 /// ownership on every dequeue and forward on mismatch, so an owner that
-/// drifted *between* redistributions would make records ping-pong.
+/// drifted *between* redistributions would make records ping-pong. The
+/// one sanctioned exception is a key [`SplitKeyRouter`] has promoted to
+/// split: its records deliberately spread over the key's `d` candidates,
+/// and the ownership check goes through [`Router::is_owner`] (true for
+/// *every* candidate) so the shards never ping-pong either.
 pub trait Router: Send + Sync {
+    /// Stable family name (`"token-ring"`, `"multi-probe"`,
+    /// `"two-choices"`, `"split-key"`) — the snapshot/metrics tag.
     fn name(&self) -> &'static str;
 
     /// Number of routable nodes.
@@ -217,6 +288,26 @@ pub trait Router: Send + Sync {
 
     /// Map a raw 32-bit key hash to its owning node.
     fn route(&self, hash: u32, loads: &Loads) -> usize;
+
+    /// May records of `hash` legitimately be reduced on `id` at the
+    /// current epoch? For single-homed routers this is exactly
+    /// `route(hash) == id`; [`SplitKeyRouter`] overrides it so *every*
+    /// live candidate of a split key answers `true`. Reducers gate their
+    /// forward-on-mismatch check on this — routing a split key twice
+    /// would return two different candidates and make its records
+    /// ping-pong forever.
+    fn is_owner(&self, hash: u32, id: usize, loads: &Loads) -> bool {
+        self.route(hash, loads) == id
+    }
+
+    /// What the end-of-run merge may assume about how this router
+    /// distributed key state (see `docs/ARCHITECTURE.md`, "§7 merge
+    /// contracts"). Single-homed families keep the paper's
+    /// [`MergeContract::Disjoint`] default; [`SplitKeyRouter`] declares
+    /// [`MergeContract::Associative`].
+    fn merge_contract(&self) -> MergeContract {
+        MergeContract::Disjoint
+    }
 
     /// Relieve an overloaded node. Returns what changed.
     fn redistribute(&mut self, target: usize, loads: &Loads) -> RouteDelta;
@@ -282,9 +373,40 @@ pub trait Router: Send + Sync {
         None
     }
 
+    /// Mutable form of [`Router::as_token_ring`].
     fn as_token_ring_mut(&mut self) -> Option<&mut Ring> {
         None
     }
+}
+
+/// What the end-of-run merge may assume about how reducer states overlap
+/// — carried by the router ([`Router::merge_contract`]), captured by the
+/// execution core at build time, and enforced when the final snapshots
+/// are assembled (`docs/ARCHITECTURE.md`, "§7 merge contracts").
+///
+/// ```
+/// use dpa::hash::MergeContract;
+///
+/// // the paper's default: every router family is disjoint unless it
+/// // explicitly relaxes the contract
+/// assert_eq!(MergeContract::default(), MergeContract::Disjoint);
+/// assert_ne!(MergeContract::Disjoint, MergeContract::Associative);
+/// ```
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum MergeContract {
+    /// The paper's §7 invariant: every key's state lives on **exactly
+    /// one** reducer at end of run, so merging is pure disjoint union.
+    /// Under StateForward the runtime *asserts* this — a key appearing
+    /// in two final snapshots is a forwarding bug, not data.
+    #[default]
+    Disjoint,
+    /// Partial-aggregation relaxation: shards of one key may live on
+    /// several reducers and the merge folds them with the pipeline's
+    /// associative, commutative [`MergeOp`](crate::exec::MergeOp)
+    /// (`Sum`/`Min`/`Max`; order-sensitive ops like `Last` are rejected
+    /// at pipeline build time). The disjointness assertion is disarmed —
+    /// overlap is the design, not a bug.
+    Associative,
 }
 
 /// Which §4.2 token operation a [`TokenRingRouter`] applies on
@@ -313,6 +435,7 @@ pub struct TokenRingRouter {
 }
 
 impl TokenRingRouter {
+    /// Wrap `ring`, applying `op` on every redistribute.
     pub fn new(ring: Ring, op: RingOp) -> Self {
         let join_tokens = (0..ring.nodes())
             .map(|n| ring.tokens_of(n))
@@ -523,6 +646,7 @@ pub struct MultiProbeRouter {
 }
 
 impl MultiProbeRouter {
+    /// `nodes` ring positions (one per node), `probes` probes per key.
     pub fn new(nodes: usize, probes: u32) -> Self {
         assert!(nodes > 0, "multi-probe router needs at least one node");
         assert!(probes >= 1, "need at least one probe");
@@ -749,6 +873,7 @@ impl Default for AssignTable {
 }
 
 impl AssignTable {
+    /// An empty table (one pre-sized head segment; grows by chaining).
     pub fn new() -> Self {
         AssignTable { head: Segment::new(FIRST_SEGMENT_SLOTS) }
     }
@@ -903,6 +1028,7 @@ pub struct TwoChoicesRouter {
 }
 
 impl TwoChoicesRouter {
+    /// `nodes` candidates in the id space, all initially live.
     pub fn new(nodes: usize) -> Self {
         assert!(nodes > 0, "two-choices router needs at least one node");
         TwoChoicesRouter {
@@ -1114,6 +1240,552 @@ impl Router for TwoChoicesRouter {
     }
 }
 
+/// Seeds for the up-to-[`MAX_SPLIT_D`] candidate hash functions of the
+/// split-key router. The first two are the two-choices seeds, so a
+/// `d = 2` split router draws the same primary candidate pair as
+/// [`TwoChoicesRouter`].
+const SPLIT_SEEDS: [u32; 8] = [
+    0x517c_c1b7,
+    0x9e37_79b9,
+    0x85eb_ca6b,
+    0xc2b2_ae35,
+    0x27d4_eb2f,
+    0x1656_67b1,
+    0xb554_6a3d,
+    0x94d0_49bb,
+];
+
+/// Largest supported split fan-out `d` (the number of candidate seeds).
+pub const MAX_SPLIT_D: usize = SPLIT_SEEDS.len();
+
+/// The owner value marking a key as *split* in a [`SplitKeyRouter`]'s
+/// assignment table. Not `u32::MAX`: the [`AssignTable`] packs
+/// `owner + 1` into the low slot half so `0` means empty, and the
+/// sentinel must survive that encoding. Real node ids are dense small
+/// integers, so the sentinel can never collide with one.
+pub const SPLIT_SENTINEL: u32 = u32::MAX - 1;
+
+/// The up-to-`d` **distinct** candidate nodes of a key hash over an
+/// explicit ascending live node id list — the split-key analogue of
+/// [`two_choices_candidates_in`]. Candidates are drawn seed by seed
+/// (first two seeds = the two-choices pair) and deduplicated in draw
+/// order; if the seeds collide below `d` distinct nodes, the list is
+/// completed by walking the live list clockwise from the primary
+/// candidate. The result is a pure function of `(hash, live, d)` with
+/// `min(d, live.len())` entries, shared by the scalar router, the
+/// snapshot fallback lane and the ownership check.
+///
+/// ```
+/// use dpa::hash::split_candidates_in;
+///
+/// let live = [0, 1, 2, 3];
+/// let cands = split_candidates_in(0xDEAD_BEEF, &live, 4);
+/// assert_eq!(cands.len(), 4, "d <= live: full fan-out");
+/// let mut sorted = cands.clone();
+/// sorted.sort_unstable();
+/// assert_eq!(sorted, vec![0, 1, 2, 3], "distinct, all live");
+/// // deterministic: same inputs, same candidates
+/// assert_eq!(split_candidates_in(0xDEAD_BEEF, &live, 4), cands);
+/// ```
+pub fn split_candidates_in(hash: u32, live: &[u32], d: usize) -> Vec<usize> {
+    let mut buf = [0usize; MAX_SPLIT_D];
+    let n = split_candidates_into(hash, live, d, &mut buf);
+    buf[..n].to_vec()
+}
+
+/// Allocation-free core of [`split_candidates_in`] — the route hot path
+/// fills a stack buffer instead of a `Vec`.
+fn split_candidates_into(
+    hash: u32,
+    live: &[u32],
+    d: usize,
+    out: &mut [usize; MAX_SPLIT_D],
+) -> usize {
+    let b = hash.to_le_bytes();
+    let want = d.min(MAX_SPLIT_D).min(live.len()).max(1);
+    let mut len = 0usize;
+    for &seed in SPLIT_SEEDS.iter() {
+        if len == want {
+            return len;
+        }
+        let c = live[murmur3_x86_32_seed(&b, seed) as usize % live.len()] as usize;
+        if !out[..len].contains(&c) {
+            out[len] = c;
+            len += 1;
+        }
+    }
+    // the seeds collided below `want` distinct nodes: complete the set
+    // deterministically by walking the live list clockwise from the
+    // primary candidate's position
+    let start = murmur3_x86_32_seed(&b, SPLIT_SEEDS[0]) as usize % live.len();
+    let mut i = 0usize;
+    while len < want {
+        let c = live[(start + i) % live.len()] as usize;
+        i += 1;
+        if !out[..len].contains(&c) {
+            out[len] = c;
+            len += 1;
+        }
+    }
+    len
+}
+
+/// Slots in the split router's per-key hit sketch.
+const SKETCH_SLOTS: usize = 1 << 12;
+
+/// One-row count-min sketch of per-key record hits — the split router's
+/// per-*key* load estimator (the [`LoadSignal`] is per-*node*). Hash
+/// collisions only ever **over**-estimate a key's hit share, which for
+/// the promotion decision errs toward splitting a key that shares a slot
+/// with a genuinely hot one — safe, because split routing still load
+/// balances correctly for cold keys, it just costs them stickiness.
+/// Counters are `Relaxed`: they are statistics consulted under the
+/// membership write lock at redistribute time, ordering nothing.
+struct HitSketch {
+    counts: Box<[AtomicU64]>,
+}
+
+impl HitSketch {
+    fn new() -> Self {
+        HitSketch { counts: (0..SKETCH_SLOTS).map(|_| AtomicU64::new(0)).collect() }
+    }
+
+    #[inline]
+    fn slot(hash: u32) -> usize {
+        hash as usize & (SKETCH_SLOTS - 1)
+    }
+
+    #[inline]
+    fn bump(&self, hash: u32) {
+        self.counts[Self::slot(hash)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    fn estimate(&self, hash: u32) -> u64 {
+        self.counts[Self::slot(hash)].load(Ordering::Relaxed)
+    }
+
+    /// Halve every counter — called once per redistribute so a key that
+    /// *was* hot long ago decays back below the promotion threshold
+    /// estimate instead of looking hot forever.
+    fn decay(&self) {
+        for c in self.counts.iter() {
+            let cur = c.load(Ordering::Relaxed);
+            if cur != 0 {
+                c.store(cur >> 1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// d-way partial key grouping with a split watermark ("When Two Choices
+/// Are not Enough", Katsipoulakis et al.; "The Power of Both Choices",
+/// Nasir et al.).
+///
+/// Cold keys behave exactly like [`TwoChoicesRouter`]: the first route
+/// picks the least decayed-loaded of the key's candidates and *records*
+/// it in the shared lock-free [`AssignTable`]; every later route returns
+/// the sticky owner with one lock-free probe. What's new is the hot
+/// tier: `redistribute` estimates each sticky key's share of the
+/// overloaded node's decayed load (via a hit sketch) and **promotes**
+/// any key whose estimated load alone crosses the split watermark —
+/// its table entry is rewritten to [`SPLIT_SENTINEL`], and from then on
+/// every record of that key is routed to the least-loaded of its `d`
+/// candidate nodes ([`split_candidates_in`]), ties broken round-robin
+/// so a uniform load spreads a mega-hot key evenly.
+///
+/// Split routing is deliberately **not** a pure function of
+/// `(hash, epoch)` — that is the point — so this family:
+///
+/// * answers `false` from [`Router::route_is_shared`] (memoizing a
+///   split key would pin all its records to one shard again),
+/// * overrides [`Router::is_owner`] so every live candidate of a split
+///   key is a legitimate home (no forward ping-pong),
+/// * declares [`MergeContract::Associative`]: shards of a split key
+///   hold partial aggregates on several reducers and the end-of-run
+///   merge folds them with the pipeline's associative merge op instead
+///   of asserting §7 disjointness,
+/// * has no compiled kernel lowering — the snapshot is tagged
+///   [`SnapshotState::Split`] and the mapper permanently falls back to
+///   the scalar route lane (see `docs/ROUTING.md`).
+///
+/// ```
+/// use dpa::hash::{Loads, MergeContract, Router, SplitKeyRouter};
+///
+/// let mut r = SplitKeyRouter::new(4, 2);
+/// assert_eq!(r.merge_contract(), MergeContract::Associative);
+/// let loads = Loads::new(4);
+/// let h = 0x5EED_CAFE;
+/// let owner = r.route(h, &loads);
+/// // cold keys are sticky, exactly like two-choices
+/// assert_eq!(r.route(h, &loads), owner);
+/// assert!(r.is_owner(h, owner, &loads));
+/// // force-promote the key: every live candidate now owns it
+/// assert!(r.promote(h));
+/// assert!(r.is_split(h));
+/// assert!(r.is_owner(h, r.route(h, &loads), &loads));
+/// ```
+#[derive(Clone)]
+pub struct SplitKeyRouter {
+    /// Total id space (live ∪ retired), as in [`TwoChoicesRouter`].
+    id_space: usize,
+    /// Split fan-out: a promoted key spreads over `min(d, live)` nodes.
+    d: usize,
+    /// Fixed-point ([`FRAC_BITS`] fractional bits) decayed-load threshold
+    /// a key's estimated load must cross to be promoted.
+    watermark_fp: u64,
+    /// Sticky `key hash → owner` assignments; owner [`SPLIT_SENTINEL`]
+    /// marks a split key. Shared (lock-free) across clones.
+    table: Arc<AssignTable>,
+    /// Ascending live node ids (shared across clones).
+    membership: Arc<RwLock<Vec<u32>>>,
+    epoch: Arc<AtomicU64>,
+    /// Per-key hit estimator feeding the promotion decision.
+    hits: Arc<HitSketch>,
+    /// Round-robin tie-breaker for split picks under equal loads.
+    rotation: Arc<AtomicU64>,
+}
+
+impl SplitKeyRouter {
+    /// Default split watermark (in decayed-load units — queue-length
+    /// scale): a key estimated to carry this much load alone is split.
+    pub const DEFAULT_WATERMARK: f64 = 4.0;
+
+    /// `nodes` candidates, fan-out `d`, the default watermark.
+    pub fn new(nodes: usize, d: usize) -> Self {
+        Self::with_watermark(nodes, d, Self::DEFAULT_WATERMARK)
+    }
+
+    /// `nodes` candidates, fan-out `d` (clamped to
+    /// `2..=`[`MAX_SPLIT_D`]), splitting keys whose estimated decayed
+    /// load exceeds `watermark` (must be positive).
+    pub fn with_watermark(nodes: usize, d: usize, watermark: f64) -> Self {
+        assert!(nodes > 0, "split-key router needs at least one node");
+        assert!(
+            (2..=MAX_SPLIT_D).contains(&d),
+            "split fan-out d must be in 2..={MAX_SPLIT_D}, got {d}"
+        );
+        assert!(watermark > 0.0, "split watermark must be positive");
+        let watermark_fp = (watermark * (1u64 << FRAC_BITS) as f64) as u64;
+        SplitKeyRouter {
+            id_space: nodes,
+            d,
+            watermark_fp: watermark_fp.max(1),
+            table: Arc::new(AssignTable::new()),
+            membership: Arc::new(RwLock::new((0..nodes as u32).collect())),
+            epoch: Arc::new(AtomicU64::new(1)),
+            hits: Arc::new(HitSketch::new()),
+            rotation: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// The configured split fan-out `d`.
+    pub fn fanout(&self) -> usize {
+        self.d
+    }
+
+    /// Number of keys currently sticky-pinned to `node`.
+    pub fn assigned_to(&self, node: usize) -> usize {
+        self.table
+            .entries()
+            .iter()
+            .filter(|&&(_, n)| n as usize == node)
+            .count()
+    }
+
+    /// Number of keys currently promoted to split.
+    pub fn split_count(&self) -> usize {
+        self.table
+            .entries()
+            .iter()
+            .filter(|&&(_, n)| n == SPLIT_SENTINEL)
+            .count()
+    }
+
+    /// Is `hash` currently promoted to split?
+    pub fn is_split(&self, hash: u32) -> bool {
+        self.table.get(hash) == Some(SPLIT_SENTINEL)
+    }
+
+    /// Force-promote a *seen* key to split (tests, diagnostics; the
+    /// production path promotes inside `redistribute` when the key's
+    /// estimated load crosses the watermark). Returns `false` for a key
+    /// not in the table — promotion rewrites an existing entry; an
+    /// unseen key has no entry to rewrite. Bumps the epoch on success so
+    /// shared-table clones drop their memo; when driven through a
+    /// [`RouterHandle`], prefer promoting before the handle is built or
+    /// via `redistribute`, which also republishes.
+    pub fn promote(&self, hash: u32) -> bool {
+        let _live = self.membership.write().unwrap();
+        if self.table.get(hash).is_none() {
+            return false;
+        }
+        self.table.rewrite(hash, SPLIT_SENTINEL);
+        self.epoch.fetch_add(1, Ordering::AcqRel);
+        true
+    }
+
+    /// Deterministic first-sight pick: the least decayed-loaded
+    /// candidate, earliest in candidate order on ties (the rule the
+    /// snapshot fallback lane replays bit-for-bit).
+    fn least_decayed(cands: &[usize], loads: &Loads) -> usize {
+        let mut best = cands[0];
+        for &c in &cands[1..] {
+            if loads.decayed(c) < loads.decayed(best) {
+                best = c;
+            }
+        }
+        best
+    }
+
+    /// Per-record pick for a split key: least decayed-loaded candidate,
+    /// rotating round-robin among ties so equal loads spread evenly.
+    fn split_pick(&self, hash: u32, live: &[u32], loads: &Loads) -> usize {
+        let mut buf = [0usize; MAX_SPLIT_D];
+        let n = split_candidates_into(hash, live, self.d, &mut buf);
+        let cands = &buf[..n];
+        let min = cands.iter().map(|&c| loads.decayed(c)).min().unwrap_or(0);
+        let mut tied = [0usize; MAX_SPLIT_D];
+        let mut t = 0usize;
+        for &c in cands {
+            if loads.decayed(c) == min {
+                tied[t] = c;
+                t += 1;
+            }
+        }
+        if t <= 1 {
+            tied[0]
+        } else {
+            let r = self.rotation.fetch_add(1, Ordering::Relaxed) as usize;
+            tied[r % t]
+        }
+    }
+}
+
+impl Router for SplitKeyRouter {
+    fn name(&self) -> &'static str {
+        "split-key"
+    }
+
+    fn nodes(&self) -> usize {
+        self.id_space
+    }
+
+    fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    fn route(&self, hash: u32, loads: &Loads) -> usize {
+        self.hits.bump(hash);
+        // steady-state: one lock-free table probe, no RwLock at all
+        match self.table.get(hash) {
+            Some(SPLIT_SENTINEL) => {
+                // split key: least-loaded-of-d per record
+                let live = self.membership.read().unwrap();
+                self.split_pick(hash, &live, loads)
+            }
+            Some(n) => n as usize,
+            None => {
+                // first sight under the membership read lock, exactly
+                // like two-choices: pick, then first-writer-wins record
+                let live = self.membership.read().unwrap();
+                let mut buf = [0usize; MAX_SPLIT_D];
+                let n = split_candidates_into(hash, &live, self.d, &mut buf);
+                let pick = Self::least_decayed(&buf[..n], loads);
+                self.table.insert_or_get(hash, pick as u32) as usize
+            }
+        }
+    }
+
+    fn is_owner(&self, hash: u32, id: usize, loads: &Loads) -> bool {
+        match self.table.get(hash) {
+            Some(SPLIT_SENTINEL) => {
+                // every live candidate of a split key is a legitimate
+                // shard home — forwarding between them would ping-pong
+                let live = self.membership.read().unwrap();
+                let mut buf = [0usize; MAX_SPLIT_D];
+                let n = split_candidates_into(hash, &live, self.d, &mut buf);
+                buf[..n].contains(&id)
+            }
+            Some(n) => n as usize == id,
+            None => {
+                // unseen key: replay the deterministic first-sight pick
+                // WITHOUT recording — an ownership probe must not grow
+                // the table
+                let live = self.membership.read().unwrap();
+                let mut buf = [0usize; MAX_SPLIT_D];
+                let n = split_candidates_into(hash, &live, self.d, &mut buf);
+                Self::least_decayed(&buf[..n], loads) == id
+            }
+        }
+    }
+
+    fn merge_contract(&self) -> MergeContract {
+        MergeContract::Associative
+    }
+
+    fn redistribute(&mut self, target: usize, loads: &Loads) -> RouteDelta {
+        let live = self.membership.write().unwrap();
+        let mut sticky: Vec<u32> = self
+            .table
+            .entries()
+            .into_iter()
+            .filter(|&(_, n)| n as usize == target)
+            .map(|(k, _)| k)
+            .collect();
+        sticky.sort_unstable(); // deterministic every-other selection
+        let mut split = 0u64;
+        let node_fp = loads.decayed(target);
+        if node_fp >= self.watermark_fp {
+            // promotion pass: apportion the node's decayed load over its
+            // sticky keys by sketch hit share; a key estimated to carry
+            // the watermark's worth of load *alone* goes d-way
+            let hits: Vec<u64> = sticky.iter().map(|&k| self.hits.estimate(k)).collect();
+            let total: u128 = hits.iter().map(|&h| h as u128).sum::<u128>().max(1);
+            let mut keep = Vec::with_capacity(sticky.len());
+            for (&k, &h) in sticky.iter().zip(&hits) {
+                let est = (node_fp as u128).saturating_mul(h as u128) / total;
+                if est >= self.watermark_fp as u128 {
+                    self.table.rewrite(k, SPLIT_SENTINEL);
+                    split += 1;
+                } else {
+                    keep.push(k);
+                }
+            }
+            sticky = keep;
+        }
+        // two-choices-style relief for the keys that stayed sticky:
+        // re-home every other one to its least-loaded other candidate,
+        // gated by the signal's migration-gain guard
+        let mut moved = 0u64;
+        for (i, &k) in sticky.iter().enumerate() {
+            if i % 2 != 0 {
+                continue;
+            }
+            let mut buf = [0usize; MAX_SPLIT_D];
+            let n = split_candidates_into(k, &live, self.d, &mut buf);
+            let alt = buf[..n]
+                .iter()
+                .copied()
+                .filter(|&c| c != target)
+                .min_by_key(|&c| loads.decayed(c));
+            let Some(alt) = alt else {
+                continue; // every candidate collides on the target
+            };
+            if !loads.migration_gain_ok(target, alt) {
+                continue;
+            }
+            self.table.rewrite(k, alt as u32);
+            moved += 1;
+        }
+        // halve the sketch so stale hot history decays across LB rounds
+        self.hits.decay();
+        drop(live);
+        if split == 0 && moved == 0 {
+            return RouteDelta::unchanged();
+        }
+        self.epoch.fetch_add(1, Ordering::AcqRel);
+        RouteDelta {
+            changed: true,
+            keys_reassigned: moved,
+            keys_split: split,
+            ..RouteDelta::default()
+        }
+    }
+
+    fn add_node(&mut self, id: usize) -> RouteDelta {
+        assert_eq!(id, self.id_space, "node ids are dense and never reused");
+        let mut live = self.membership.write().unwrap();
+        live.push(id as u32); // fresh max id keeps the list ascending
+        self.id_space += 1;
+        drop(live);
+        self.epoch.fetch_add(1, Ordering::AcqRel);
+        // sticky assignments hold; split keys pick the joiner up
+        // automatically once it enters their candidate set
+        RouteDelta { changed: true, nodes_added: 1, ..RouteDelta::default() }
+    }
+
+    fn retire_node(&mut self, id: usize, loads: &Loads) -> RouteDelta {
+        let mut live = self.membership.write().unwrap();
+        if live.len() <= 1 {
+            return RouteDelta::unchanged(); // the last live node must stay
+        }
+        let Ok(at) = live.binary_search(&(id as u32)) else {
+            return RouteDelta::unchanged(); // already retired
+        };
+        live.remove(at);
+        // sticky orphans re-home to the least-loaded candidate under the
+        // NEW membership; split entries are untouched — their candidate
+        // sets recompute over the shrunken live list on the next route
+        let mut orphaned: Vec<u32> = self
+            .table
+            .entries()
+            .into_iter()
+            .filter(|&(_, n)| n as usize == id)
+            .map(|(k, _)| k)
+            .collect();
+        orphaned.sort_unstable();
+        let mut moved = 0u64;
+        for k in orphaned {
+            let mut buf = [0usize; MAX_SPLIT_D];
+            let n = split_candidates_into(k, &live, self.d, &mut buf);
+            let pick = Self::least_decayed(&buf[..n], loads);
+            self.table.rewrite(k, pick as u32);
+            moved += 1;
+        }
+        drop(live);
+        self.epoch.fetch_add(1, Ordering::AcqRel);
+        RouteDelta {
+            changed: true,
+            keys_reassigned: moved,
+            nodes_retired: 1,
+            ..RouteDelta::default()
+        }
+    }
+
+    fn is_live(&self, id: usize) -> bool {
+        self.membership.read().unwrap().binary_search(&(id as u32)).is_ok()
+    }
+
+    fn live_count(&self) -> usize {
+        self.membership.read().unwrap().len()
+    }
+
+    fn snapshot(&self, loads: &Loads) -> RouteSnapshot {
+        // freeze the decayed view the scalar router consults, as
+        // two-choices does; split (sentinel) entries are carried so the
+        // host fallback lane can tell split keys from first sights
+        let mut frozen = loads.decayed_vec();
+        frozen.resize(self.id_space, 0);
+        let live = self.membership.read().unwrap().clone();
+        let mut assignments = self.table.entries();
+        assignments.sort_unstable_by_key(|&(k, _)| k);
+        RouteSnapshot {
+            router: self.name(),
+            epoch: self.epoch(),
+            nodes: self.id_space,
+            state: SnapshotState::Split {
+                assignments,
+                live,
+                loads: frozen,
+                d: self.d as u32,
+            },
+        }
+    }
+
+    fn clone_router(&self) -> Box<dyn Router> {
+        Box::new(self.clone())
+    }
+
+    fn route_is_shared(&self) -> bool {
+        // the table IS shared across clones, but split routing is not a
+        // pure function of (hash, epoch) — memoizing a split key's pick
+        // would pin every record of the hottest key to one shard again,
+        // defeating the family. The cache must re-route per record.
+        false
+    }
+}
+
 /// Shared, epoch-versioned router handle — the trait-layer successor of
 /// `SharedRing`. The balancer is the only redistribute caller; mappers
 /// and reducers read through [`RouterCache`] clones.
@@ -1197,12 +1869,21 @@ impl RouterHandle {
         Self::new(Box::new(TokenRingRouter::new(ring, op)))
     }
 
+    /// The published router's family name.
     pub fn name(&self) -> &'static str {
         self.published_router().name()
     }
 
+    /// Total id space of the published router.
     pub fn nodes(&self) -> usize {
         self.published_router().nodes()
+    }
+
+    /// The published router's merge contract — captured by the execution
+    /// core at build time to decide whether the §7 disjoint-merge
+    /// assertion is armed for the run.
+    pub fn merge_contract(&self) -> MergeContract {
+        self.published_router().merge_contract()
     }
 
     /// Published epoch without taking the lock.
@@ -1226,6 +1907,7 @@ impl RouterHandle {
         self.route_hash(murmur3_x86_32(key))
     }
 
+    /// Family-tagged routing state of the published router.
     pub fn snapshot(&self) -> RouteSnapshot {
         self.published_router().snapshot(&self.loads)
     }
@@ -1346,6 +2028,7 @@ pub struct RouterCache {
 }
 
 impl RouterCache {
+    /// A cache over `handle`, initialized at its current epoch.
     pub fn new(handle: RouterHandle) -> Self {
         let local = handle.published_router();
         let epoch = handle.epoch();
@@ -1385,10 +2068,24 @@ impl RouterCache {
         }
     }
 
+    /// Route a raw key hash through the epoch-validated local snapshot.
     #[inline]
     pub fn route_hash(&mut self, h: u32) -> usize {
         self.refresh();
         self.route_local(h)
+    }
+
+    /// May records of `h` legitimately be reduced on `id` at the current
+    /// epoch? The reducers' dequeue-time ownership check: single-homed
+    /// families answer `route(h) == id`; a split key answers `true` for
+    /// every live candidate, so shards are reduced where they land
+    /// instead of ping-ponging between candidates. Deliberately NOT
+    /// memoized — the memo stores one owner per hash, which is exactly
+    /// the single-homing assumption split keys break.
+    #[inline]
+    pub fn may_own_hash(&mut self, h: u32, id: usize) -> bool {
+        self.refresh();
+        self.local.is_owner(h, id, self.handle.loads())
     }
 
     /// Route a whole slice of hashes with ONE epoch staleness check —
@@ -1404,6 +2101,7 @@ impl RouterCache {
         }
     }
 
+    /// Route a key's bytes (hashes, then [`Self::route_hash`]).
     #[inline]
     pub fn route_key(&mut self, key: &[u8]) -> usize {
         self.route_hash(murmur3_x86_32(key))
@@ -1415,6 +2113,7 @@ impl RouterCache {
         self.local.snapshot(self.handle.loads())
     }
 
+    /// The shared handle this cache reads through.
     pub fn handle(&self) -> &RouterHandle {
         &self.handle
     }
@@ -1803,6 +2502,7 @@ mod tests {
             Box::new(TokenRingRouter::new(Ring::new(5, 4), RingOp::Halve)),
             Box::new(MultiProbeRouter::new(5, 3)),
             Box::new(TwoChoicesRouter::new(5)),
+            Box::new(SplitKeyRouter::new(5, 3)),
         ];
         for r in routers.iter_mut() {
             // include a post-redistribute epoch
@@ -2108,5 +2808,158 @@ mod tests {
             }
         }
         assert!(differing > 50, "hash functions collapsed");
+    }
+
+    #[test]
+    fn split_candidates_are_distinct_live_and_share_the_primary_seed() {
+        let live: Vec<u32> = (0..10).collect();
+        for k in keys(500) {
+            let h = murmur3_x86_32(k.as_bytes());
+            for d in 2..=MAX_SPLIT_D {
+                let cands = split_candidates_in(h, &live, d);
+                assert_eq!(cands.len(), d, "short candidate set for d={d}");
+                let mut sorted = cands.clone();
+                sorted.sort_unstable();
+                sorted.dedup();
+                assert_eq!(sorted.len(), d, "duplicate candidates for d={d}");
+                assert!(cands.iter().all(|&c| c < 10), "dead candidate");
+            }
+            // the primary candidate is the two-choices first draw, so a
+            // d=2 split router shares two-choices' primary placement
+            let (c1, _) = two_choices_candidates_in(h, &live);
+            assert_eq!(split_candidates_in(h, &live, 2)[0], c1);
+        }
+        // d capped by the live set: all live nodes, no repeats
+        let small: Vec<u32> = vec![3, 7];
+        for k in keys(50) {
+            let h = murmur3_x86_32(k.as_bytes());
+            let mut cands = split_candidates_in(h, &small, 5);
+            cands.sort_unstable();
+            assert_eq!(cands, vec![3, 7]);
+        }
+    }
+
+    #[test]
+    fn split_key_promotes_hot_key_and_keeps_cold_keys_sticky() {
+        // the AssignTable interaction pinned by ISSUE 8: the mega-hot key
+        // is promoted to SPLIT_SENTINEL while cold keys keep their
+        // first-writer-wins sticky entries
+        let loads = Loads::new(4);
+        let mut r = SplitKeyRouter::with_watermark(4, 4, 2.0);
+        let ks = keys(200);
+        let cold: Vec<(u32, usize)> = ks
+            .iter()
+            .map(|k| {
+                let h = murmur3_x86_32(k.as_bytes());
+                (h, r.route(h, &loads))
+            })
+            .collect();
+        let hot = murmur3_x86_32(b"mega-hot-key");
+        let hot_home = r.route(hot, &loads);
+        for _ in 0..2000 {
+            assert_eq!(r.route(hot, &loads), hot_home, "pre-split key not sticky");
+        }
+        loads.set(hot_home, 100);
+        let d = r.redistribute(hot_home, &loads);
+        assert!(d.changed);
+        assert!(d.keys_split >= 1, "the mega-hot key was not promoted");
+        assert!(r.is_split(hot));
+        // cold keys: at most sketch-collision casualties get split
+        let split_cold = cold.iter().filter(|&&(h, _)| r.is_split(h)).count();
+        assert!(split_cold <= 5, "{split_cold} cold keys were promoted");
+        // surviving sticky keys stay sticky under wild load swings
+        loads.set(hot_home, 0);
+        for &(h, _) in cold.iter().filter(|&&(h, _)| !r.is_split(h)) {
+            let now = r.route(h, &loads);
+            loads.set(now, 10_000);
+            assert_eq!(r.route(h, &loads), now, "cold key not sticky");
+            loads.set(now, 0);
+        }
+    }
+
+    #[test]
+    fn split_key_spreads_a_mega_hot_key_across_all_candidates() {
+        let loads = Loads::new(4);
+        let r = SplitKeyRouter::with_watermark(4, 4, 1.0);
+        let hot = murmur3_x86_32(b"the-one-key");
+        let home = r.route(hot, &loads);
+        loads.set(home, 50);
+        let mut writer = r.clone(); // shares the table, like clone_router
+        let delta = writer.redistribute(home, &loads);
+        assert_eq!(delta.keys_split, 1);
+        assert!(r.is_split(hot), "clones share the split promotion");
+        // equal loads: the rotating tie-break spreads records evenly
+        // over all d=4 candidates (the fill rule covers every node)
+        loads.set(home, 0);
+        let mut counts = [0usize; 4];
+        for _ in 0..100 {
+            counts[r.route(hot, &loads)] += 1;
+        }
+        for (n, c) in counts.iter().enumerate() {
+            assert!(*c >= 20, "shard {n} starved: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn split_key_is_owner_accepts_exactly_the_candidates() {
+        let loads = Loads::new(4);
+        let r = SplitKeyRouter::new(4, 2);
+        let hot = murmur3_x86_32(b"owned-by-two");
+        let home = r.route(hot, &loads);
+        // sticky: exactly the recorded owner
+        for n in 0..4 {
+            assert_eq!(r.is_owner(hot, n, &loads), n == home);
+        }
+        assert!(r.promote(hot));
+        let live: Vec<u32> = (0..4).collect();
+        let cands = split_candidates_in(hot, &live, 2);
+        for n in 0..4 {
+            assert_eq!(
+                r.is_owner(hot, n, &loads),
+                cands.contains(&n),
+                "node {n} vs candidates {cands:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn split_key_ownership_probe_does_not_record() {
+        let loads = Loads::new(4);
+        let r = SplitKeyRouter::new(4, 2);
+        let h = murmur3_x86_32(b"probe-only-key");
+        let _ = r.is_owner(h, 0, &loads);
+        let sticky: usize = (0..4).map(|n| r.assigned_to(n)).sum();
+        assert_eq!(sticky + r.split_count(), 0, "ownership probe grew the table");
+        // and promote() of an unseen key refuses rather than inserting
+        assert!(!r.promote(h));
+    }
+
+    #[test]
+    fn split_key_membership_rehomes_sticky_and_keeps_split_live() {
+        let loads = Loads::new(4);
+        let mut r = SplitKeyRouter::new(4, 2);
+        let ks = keys(400);
+        for k in &ks {
+            r.route(murmur3_x86_32(k.as_bytes()), &loads);
+        }
+        let hot = murmur3_x86_32(b"split-me");
+        r.route(hot, &loads);
+        assert!(r.promote(hot));
+        // join: sticky holds, split keys may pick the joiner up
+        let d = r.add_node(4);
+        assert!(d.changed && d.zero_token_churn());
+        assert_eq!(d.keys_reassigned, 0);
+        // retire: only the victim's sticky keys move; the split key
+        // keeps routing, never to the retired node
+        let victim = 2usize;
+        let owned = r.assigned_to(victim);
+        let d = r.retire_node(victim, &loads);
+        assert!(d.changed);
+        assert_eq!(d.keys_reassigned as usize, owned);
+        assert_eq!(r.assigned_to(victim), 0);
+        assert!(r.is_split(hot), "retire must not demote a split key");
+        for _ in 0..50 {
+            assert_ne!(r.route(hot, &loads), victim, "shard on a retired node");
+        }
     }
 }

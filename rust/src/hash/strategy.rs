@@ -19,6 +19,11 @@
 //!   zero-token-churn.
 //! * [`StrategySpec::TwoChoices`] — per-key power of two choices with a
 //!   sticky assignment table (the key-splitting guard).
+//! * [`StrategySpec::SplitKey`] — d-way partial key grouping: cold keys
+//!   sticky like two-choices, mega-hot keys promoted to split across `d`
+//!   candidates once their estimated decayed load crosses the split
+//!   watermark (`balancer.split_watermark`). The one family with an
+//!   [`MergeContract::Associative`] merge contract.
 //!
 //! `Strategy` remains as an alias — the spec is the same value that used
 //! to be the closed strategy enum, so TOML/CLI round-trips and existing
@@ -28,12 +33,21 @@ use std::fmt;
 use std::str::FromStr;
 
 use super::ring::Ring;
-use super::router::{MultiProbeRouter, RingOp, Router, TokenRingRouter, TwoChoicesRouter};
+use super::router::{
+    MergeContract, MultiProbeRouter, RingOp, Router, SplitKeyRouter, TokenRingRouter,
+    TwoChoicesRouter, MAX_SPLIT_D,
+};
 
 /// Default probe count for [`StrategySpec::MultiProbe`]. The MPCH paper
 /// suggests ~21 probes for a 1.05 peak-to-average ratio on large
 /// clusters; for the paper's 4-reducer topology a handful suffices.
 pub const DEFAULT_PROBES: u32 = 5;
+
+/// Default split fan-out for [`StrategySpec::SplitKey`] — the classic
+/// partial-key-grouping d=2 ("The Power of Both Choices"); WL3-style
+/// single-mega-key workloads on small topologies profit from `splitkey:4`
+/// (fan out across every reducer).
+pub const DEFAULT_SPLIT_D: u32 = 2;
 
 /// Parsed redistribution-strategy specification.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -43,6 +57,7 @@ pub enum StrategySpec {
     Doubling,
     MultiProbe { probes: u32 },
     TwoChoices,
+    SplitKey { d: u32 },
 }
 
 /// Historical name: the spec used to be the closed strategy enum.
@@ -67,7 +82,20 @@ impl StrategySpec {
                 halving_init
             }
             StrategySpec::Doubling => 1,
-            StrategySpec::MultiProbe { .. } | StrategySpec::TwoChoices => 1,
+            StrategySpec::MultiProbe { .. }
+            | StrategySpec::TwoChoices
+            | StrategySpec::SplitKey { .. } => 1,
+        }
+    }
+
+    /// What the end-of-run merge may assume under this spec's router —
+    /// the pipeline consults this at build time to reject order-sensitive
+    /// merge ops before any record flows (see `docs/ARCHITECTURE.md`,
+    /// "§7 merge contracts").
+    pub fn merge_contract(&self) -> MergeContract {
+        match self {
+            StrategySpec::SplitKey { .. } => MergeContract::Associative,
+            _ => MergeContract::Disjoint,
         }
     }
 
@@ -83,11 +111,30 @@ impl StrategySpec {
     /// Construct the router this spec describes. `initial_tokens`
     /// overrides the ring layout (used to run the no-LB baseline on a
     /// specific method's initial layout); probe routers ignore it.
+    /// Split-key routers get their default watermark — the pipeline goes
+    /// through [`Self::build_router_tuned`] to thread the configured one.
     pub fn build_router(
         &self,
         nodes: usize,
         halving_init: u32,
         initial_tokens: Option<u32>,
+    ) -> Box<dyn Router> {
+        self.build_router_tuned(
+            nodes,
+            halving_init,
+            initial_tokens,
+            SplitKeyRouter::DEFAULT_WATERMARK,
+        )
+    }
+
+    /// [`Self::build_router`] with the split watermark threaded through
+    /// (`balancer.split_watermark`); only the split-key family reads it.
+    pub fn build_router_tuned(
+        &self,
+        nodes: usize,
+        halving_init: u32,
+        initial_tokens: Option<u32>,
+        split_watermark: f64,
     ) -> Box<dyn Router> {
         match self {
             StrategySpec::None | StrategySpec::Halving | StrategySpec::Doubling => {
@@ -103,17 +150,21 @@ impl StrategySpec {
                 Box::new(MultiProbeRouter::new(nodes, *probes))
             }
             StrategySpec::TwoChoices => Box::new(TwoChoicesRouter::new(nodes)),
+            StrategySpec::SplitKey { d } => {
+                Box::new(SplitKeyRouter::with_watermark(nodes, *d as usize, split_watermark))
+            }
         }
     }
 
     /// Every spec (one representative per family parameterization).
-    pub fn all() -> [StrategySpec; 5] {
+    pub fn all() -> [StrategySpec; 6] {
         [
             StrategySpec::None,
             StrategySpec::Halving,
             StrategySpec::Doubling,
             StrategySpec::MultiProbe { probes: DEFAULT_PROBES },
             StrategySpec::TwoChoices,
+            StrategySpec::SplitKey { d: DEFAULT_SPLIT_D },
         ]
     }
 
@@ -143,6 +194,8 @@ impl fmt::Display for StrategySpec {
             }
             StrategySpec::MultiProbe { probes } => write!(f, "multiprobe:{probes}"),
             StrategySpec::TwoChoices => write!(f, "twochoices"),
+            StrategySpec::SplitKey { d } if *d == DEFAULT_SPLIT_D => write!(f, "splitkey"),
+            StrategySpec::SplitKey { d } => write!(f, "splitkey:{d}"),
         }
     }
 }
@@ -163,6 +216,17 @@ impl FromStr for StrategySpec {
                     }
                     Ok(StrategySpec::MultiProbe { probes })
                 }
+                "splitkey" | "split-key" | "pkg" => {
+                    let d: u32 = arg
+                        .parse()
+                        .map_err(|e| format!("invalid split fan-out '{arg}': {e}"))?;
+                    if !(2..=MAX_SPLIT_D as u32).contains(&d) {
+                        return Err(format!(
+                            "split fan-out must be in 2..={MAX_SPLIT_D}, got {d}"
+                        ));
+                    }
+                    Ok(StrategySpec::SplitKey { d })
+                }
                 other => Err(format!("strategy '{other}' takes no ':' parameter")),
             };
         }
@@ -174,9 +238,12 @@ impl FromStr for StrategySpec {
                 Ok(StrategySpec::MultiProbe { probes: DEFAULT_PROBES })
             }
             "twochoices" | "two-choices" | "2choices" => Ok(StrategySpec::TwoChoices),
+            "splitkey" | "split-key" | "pkg" => {
+                Ok(StrategySpec::SplitKey { d: DEFAULT_SPLIT_D })
+            }
             other => Err(format!(
                 "unknown strategy '{other}' \
-                 (expected none|halving|doubling|multiprobe[:K]|twochoices)"
+                 (expected none|halving|doubling|multiprobe[:K]|twochoices|splitkey[:D])"
             )),
         }
     }
@@ -203,6 +270,32 @@ mod tests {
         assert!("bogus".parse::<StrategySpec>().is_err());
         assert!("multiprobe:0".parse::<StrategySpec>().is_err());
         assert!("halving:2".parse::<StrategySpec>().is_err());
+        assert_eq!(
+            "splitkey".parse::<StrategySpec>().unwrap(),
+            StrategySpec::SplitKey { d: DEFAULT_SPLIT_D }
+        );
+        assert_eq!(
+            "split-key:4".parse::<StrategySpec>().unwrap(),
+            StrategySpec::SplitKey { d: 4 }
+        );
+        assert_eq!(StrategySpec::SplitKey { d: 4 }.to_string(), "splitkey:4");
+        assert!("splitkey:1".parse::<StrategySpec>().is_err(), "d < 2");
+        assert!("splitkey:9".parse::<StrategySpec>().is_err(), "d > seeds");
+    }
+
+    #[test]
+    fn merge_contract_per_family() {
+        for s in StrategySpec::all() {
+            let expect = matches!(s, StrategySpec::SplitKey { .. });
+            assert_eq!(
+                s.merge_contract() == MergeContract::Associative,
+                expect,
+                "{s}"
+            );
+            // the spec-level contract agrees with the built router's
+            let r = s.build_router(4, 8, None);
+            assert_eq!(r.merge_contract(), s.merge_contract(), "{s}");
+        }
     }
 
     #[test]

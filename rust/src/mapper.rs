@@ -113,7 +113,12 @@ impl MapperCore {
         let epoch = self.router.handle().epoch();
         let refresh = match &self.snapshot_cache {
             Some((e, snap)) => {
-                *e != epoch || matches!(snap.state, crate::hash::SnapshotState::Assignment { .. })
+                *e != epoch
+                    || matches!(
+                        snap.state,
+                        crate::hash::SnapshotState::Assignment { .. }
+                            | crate::hash::SnapshotState::Split { .. }
+                    )
             }
             None => true,
         };
@@ -247,5 +252,17 @@ mod tests {
         // sticky: re-mapping the same key lands on the same reducer
         assert_eq!(m.process_item("some-key")[0].0, dest);
         assert_eq!(router.route_key(b"some-key"), dest);
+    }
+
+    #[test]
+    fn routes_through_split_key_router_scalar() {
+        let router = RouterHandle::new(
+            crate::hash::StrategySpec::SplitKey { d: 2 }.build_router(4, 8, None),
+        );
+        let mut m = MapperCore::new(0, Arc::new(IdentityMap), router.clone());
+        let dest = m.process_item("cold-key")[0].0;
+        assert!(dest < 4);
+        // cold keys stay sticky until the watermark promotes them
+        assert_eq!(m.process_item("cold-key")[0].0, dest);
     }
 }

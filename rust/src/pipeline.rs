@@ -15,7 +15,7 @@ use crate::config::Document;
 use crate::driver::{ThreadDriver, ThreadParams};
 use crate::exec::builtin::{Distinct, IdentityMap, KeyValueMap, TokenizeMap, TopK, WordCount};
 use crate::exec::{MapExecutor, ReduceFactory};
-use crate::hash::{Ring, RouterHandle, Strategy};
+use crate::hash::{MergeContract, Ring, RouterHandle, Strategy};
 use crate::metrics::RunReport;
 use crate::sim::{SimCosts, SimDriver, SimParams};
 
@@ -80,6 +80,11 @@ pub struct PipelineConfig {
     pub min_trigger_qlen: usize,
     /// Min driver-time between LB events (sim: ticks; threads: µs).
     pub cooldown: u64,
+    /// Split-key only (`splitkey[:D]`): decayed-load threshold (queue
+    /// length scale) a single key's estimated load must cross before the
+    /// router promotes it from sticky to d-way split. Other strategies
+    /// ignore it. TOML: `balancer.split_watermark`.
+    pub split_watermark: f64,
     /// The adaptive load-signal knobs (EWMA decay, hysteresis band,
     /// migration-gain guard) the routers consume. The Eq. 1 *trigger*
     /// keeps evaluating raw queue lengths — the paper's policy semantics
@@ -133,6 +138,7 @@ impl Default for PipelineConfig {
             max_rounds: 1,
             min_trigger_qlen: 8,
             cooldown: 50,
+            split_watermark: crate::hash::SplitKeyRouter::DEFAULT_WATERMARK,
             signal: SignalConfig::default(),
             elastic: None,
             report_interval: 2,
@@ -190,6 +196,9 @@ impl PipelineConfig {
                     self.min_trigger_qlen = doc.get_int(key).context("min_trigger_qlen")? as usize
                 }
                 "balancer.cooldown" => self.cooldown = doc.get_int(key).context("cooldown")? as u64,
+                "balancer.split_watermark" => {
+                    self.split_watermark = doc.get_float(key).context("split_watermark")?
+                }
                 "balancer.decay_alpha" => {
                     self.signal.decay_alpha = doc.get_float(key).context("decay_alpha")?
                 }
@@ -294,6 +303,9 @@ impl PipelineConfig {
         if !self.halving_init_tokens.is_power_of_two() {
             bail!("halving_init_tokens must be a power of two (§4.2)");
         }
+        if self.split_watermark <= 0.0 {
+            bail!("balancer.split_watermark must be positive");
+        }
         if self.pop_timeout_ms == 0 {
             bail!("threads.pop_timeout_ms must be at least 1 (idle reducers would busy-spin)");
         }
@@ -318,10 +330,11 @@ impl PipelineConfig {
     /// under elastic membership — slots pre-allocated up to
     /// `max_reducers`.
     pub fn build_router(&self) -> RouterHandle {
-        let router = self.strategy.build_router(
+        let router = self.strategy.build_router_tuned(
             self.reducers,
             self.halving_init_tokens,
             self.initial_tokens,
+            self.split_watermark,
         );
         match &self.elastic {
             Some(e) => RouterHandle::with_signal_capacity(router, &self.signal, e.max_reducers),
@@ -355,9 +368,10 @@ impl Pipeline {
 
     /// Route whole tasks through the compiled XLA route program of the
     /// configured router's family (threads driver; the sim models
-    /// per-item costs and keeps the scalar path). Works for every
-    /// strategy — token-ring, multi-probe and two-choices snapshots all
-    /// lower to tensors.
+    /// per-item costs and keeps the scalar path). Token-ring, multi-probe
+    /// and two-choices snapshots all lower to tensors; split-key has no
+    /// compiled lowering and routes through the documented scalar
+    /// fallback (see `docs/ROUTING.md`).
     pub fn with_route_runtime(
         mut self,
         rt: Arc<crate::runtime::programs::SharedRuntime>,
@@ -436,6 +450,23 @@ impl Pipeline {
 
     fn run_shared(&self, items: Arc<[String]>) -> crate::Result<RunReport> {
         self.cfg.validate()?;
+        // merge-contract enforcement, before any record flows: an
+        // associative-contract router (split-key) leaves shards of a hot
+        // key on several reducers, which only merges correctly under an
+        // associative, commutative op (docs/ARCHITECTURE.md, "§7 merge
+        // contracts")
+        if self.cfg.strategy.merge_contract() == MergeContract::Associative {
+            let op = (self.reduce_factory)(0).merge_op();
+            if !op.splittable() {
+                bail!(
+                    "strategy '{}' splits hot keys across reducers, but the \
+                     executor's merge op '{op}' is order-sensitive — pick a \
+                     disjoint-contract strategy or a splittable (sum/min/max) \
+                     reduction",
+                    self.cfg.strategy
+                );
+            }
+        }
         let balancer = self.build_balancer();
         let report = match self.cfg.driver {
             DriverKind::Sim => {
@@ -732,6 +763,64 @@ max_rounds = 3
         for (_, c) in &r.result {
             assert_eq!(*c, 10);
         }
+    }
+
+    #[test]
+    fn split_watermark_key_applies_and_validates() {
+        let doc = crate::config::parse(
+            "[balancer]\nstrategy = \"splitkey:4\"\nsplit_watermark = 2.5\n",
+        )
+        .unwrap();
+        let mut cfg = PipelineConfig::default();
+        cfg.apply_document(&doc).unwrap();
+        assert_eq!(cfg.strategy, Strategy::SplitKey { d: 4 });
+        assert!((cfg.split_watermark - 2.5).abs() < 1e-12);
+        assert_eq!(cfg.build_router().name(), "split-key");
+        assert_eq!(
+            PipelineConfig::default().split_watermark,
+            crate::hash::SplitKeyRouter::DEFAULT_WATERMARK
+        );
+
+        let mut bad = PipelineConfig::default();
+        bad.split_watermark = 0.0;
+        assert!(bad.validate().is_err(), "watermark must be positive");
+    }
+
+    #[test]
+    fn split_key_rejects_order_sensitive_merge_ops_at_build() {
+        use crate::exec::{MergeOp, Record, ReduceExecutor};
+
+        // a word count that (wrongly for splitting) merges last-wins
+        struct LastWins(crate::exec::builtin::WordCount);
+        impl ReduceExecutor for LastWins {
+            fn reduce(&mut self, rec: Record) {
+                self.0.reduce(rec)
+            }
+            fn snapshot(&mut self) -> Vec<(String, i64)> {
+                self.0.snapshot()
+            }
+            fn merge_op(&self) -> MergeOp {
+                MergeOp::Last
+            }
+            fn extract_key(&mut self, key: &str) -> Option<i64> {
+                self.0.extract_key(key)
+            }
+        }
+
+        let mut cfg = PipelineConfig::default();
+        cfg.strategy = Strategy::SplitKey { d: 2 };
+        let items: Vec<String> = (0..10).map(|i| format!("k{i}")).collect();
+        let p = Pipeline::new(
+            cfg.clone(),
+            Arc::new(IdentityMap),
+            Arc::new(|_| Box::new(LastWins(WordCount::new())) as _),
+        );
+        let err = p.run(items.clone()).unwrap_err();
+        assert!(err.to_string().contains("order-sensitive"), "{err}");
+
+        // the same strategy with a splittable op (sum) runs fine
+        let r = Pipeline::wordcount(cfg).run(items).unwrap();
+        assert_eq!(r.result.len(), 10);
     }
 
     #[test]

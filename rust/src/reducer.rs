@@ -53,17 +53,24 @@ impl ReducerCore {
     /// Handle one data record: check the current partitioning first (§3:
     /// "before it processes a piece of data, it checks the load balancer
     /// to see if it is indeed assigned to this key").
+    ///
+    /// The check is *may-own*, not owner-equality: a split key has up to
+    /// `d` legitimate homes, and a shard that landed on any of them must
+    /// be reduced in place — re-routing it would ping-pong records
+    /// between candidates. Single-owner families answer may-own exactly
+    /// as `route == id` did.
     pub fn handle(&mut self, rec: Record) -> Handled {
         self.handled_since_report += 1;
         // hash memoized at map time — the check costs one route lookup
-        let owner = self.router.route_hash(rec.hash());
-        if owner != self.id {
-            self.forwarded += 1;
-            Handled::Forward(owner, rec)
-        } else {
+        let h = rec.hash();
+        if self.router.may_own_hash(h, self.id) {
             self.exec.reduce(rec);
             self.processed += 1;
             Handled::Reduced
+        } else {
+            let owner = self.router.route_hash(h);
+            self.forwarded += 1;
+            Handled::Forward(owner, rec)
         }
     }
 
@@ -93,16 +100,21 @@ impl ReducerCore {
     /// §7 state forwarding, substage 1 — extract state for every key this
     /// reducer no longer owns (the snapshot-vs-router ownership diff);
     /// returns `(new_owner, state_record)` pairs.
+    ///
+    /// Ownership is the same *may-own* question [`Self::handle`] asks, so
+    /// a split key's shard partial stays resident on each of its `d`
+    /// candidate homes — shipping shards to one "owner" would silently
+    /// restore the single-homed hot spot the split exists to break.
     pub fn extract_disowned(&mut self) -> Vec<(usize, Record)> {
         self.exec.flush();
         let snapshot = self.exec.snapshot();
         let mut out = Vec::new();
         for (key, _) in snapshot {
-            let owner = self.router.route_key(key.as_bytes());
-            if owner != self.id {
+            let h = crate::hash::murmur3_x86_32(key.as_bytes());
+            if !self.router.may_own_hash(h, self.id) {
                 if let Some(v) = self.exec.extract_key(&key) {
                     self.state_extracted += 1;
-                    out.push((owner, Record::new(key, v)));
+                    out.push((self.router.route_hash(h), Record::new(key, v)));
                 }
             }
         }
@@ -211,6 +223,36 @@ mod tests {
         r.absorb_state(Record::new(key.clone(), 5));
         assert_eq!(r.final_snapshot(), vec![(key, 6)]);
         assert_eq!(r.state_absorbed, 1);
+    }
+
+    #[test]
+    fn split_shards_reduce_in_place_and_survive_extraction() {
+        // a promoted key's shards have d legitimate homes: candidates
+        // reduce in place, non-candidates forward to a candidate, and §7
+        // extraction never ships a shard partial anywhere
+        let sk = crate::hash::SplitKeyRouter::new(4, 2);
+        let router = RouterHandle::new(Box::new(sk.clone()));
+        let hot = "mega-hot-key";
+        let hot_h = crate::hash::murmur3_x86_32(hot.as_bytes());
+        let shard = router.route_key(hot.as_bytes()); // records the sticky home
+        assert!(sk.promote(hot_h), "seen key promotes");
+        let cands = crate::hash::split_candidates_in(hot_h, &[0, 1, 2, 3], 2);
+        assert!(cands.contains(&shard));
+
+        let mut r = ReducerCore::new(shard, Box::new(WordCount::new()), router.clone());
+        match r.handle(Record::new(hot, 1)) {
+            Handled::Reduced => {}
+            h => panic!("split shard must reduce in place, got {h:?}"),
+        }
+        assert!(r.extract_disowned().is_empty(), "shard partial stays resident");
+        assert_eq!(r.final_snapshot(), vec![(hot.to_string(), 1)]);
+
+        let outsider = (0..4).find(|i| !cands.contains(i)).unwrap();
+        let mut o = ReducerCore::new(outsider, Box::new(WordCount::new()), router);
+        match o.handle(Record::new(hot, 1)) {
+            Handled::Forward(dest, _) => assert!(cands.contains(&dest)),
+            h => panic!("non-candidate must forward, got {h:?}"),
+        }
     }
 
     #[test]

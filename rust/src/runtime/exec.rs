@@ -30,7 +30,7 @@ use crate::balancer::state_forward::{ConsistencyMode, Stage, StageTracker};
 use crate::balancer::BalancerCore;
 use crate::coordinator::{merge_states, TaskPool};
 use crate::exec::{Record, ReduceFactory};
-use crate::hash::RouterHandle;
+use crate::hash::{MergeContract, RouterHandle};
 use crate::mapper::MapperCore;
 use crate::metrics::{Histogram, LbEvent, MembershipChange, RunReport};
 use crate::queue::DataQueue;
@@ -105,6 +105,12 @@ pub struct ExecCore {
     pub latency: Histogram,
     input_items: u64,
     coordinated_stop: bool,
+    /// The router family's merge contract, captured at build time. Under
+    /// [`MergeContract::Disjoint`] the §7 final merge asserts that no key
+    /// has state on more than one reducer; [`MergeContract::Associative`]
+    /// (split-key) relaxes that to an order-independent fold of per-shard
+    /// partials, so the disjointness assertion is skipped.
+    merge_contract: MergeContract,
     stop: AtomicBool,
 }
 
@@ -137,6 +143,7 @@ impl ExecCore {
             latency: Histogram::new(),
             input_items,
             coordinated_stop: params.coordinated_stop,
+            merge_contract: router.merge_contract(),
             stop: AtomicBool::new(false),
         }
     }
@@ -277,8 +284,10 @@ impl ExecCore {
     }
 
     /// Final-snapshot → state-merge → report assembly (§2), identical for
-    /// every driver. Under §7 with a pure-state executor the snapshots
-    /// must be key-disjoint and [`merge_states`] asserts it.
+    /// every driver. Under §7 with a pure-state executor *and* a disjoint
+    /// merge contract the snapshots must be key-disjoint and
+    /// [`merge_states`] asserts it; an associative contract (split-key
+    /// routing) folds per-shard partials instead.
     pub fn finish(
         &self,
         mappers: &[MapperCore],
@@ -292,8 +301,12 @@ impl ExecCore {
             reducers.iter_mut().map(|r| r.final_snapshot()).collect();
         let probe = reduce_factory(0);
         let op = probe.merge_op();
-        let expect_disjoint =
-            self.mode == ConsistencyMode::StateForward && probe.snapshot_is_state();
+        // §7 disjointness is only an invariant under a disjoint merge
+        // contract: split-key routers deliberately leave shards of one
+        // mega-hot key on several reducers, to be folded associatively.
+        let expect_disjoint = self.mode == ConsistencyMode::StateForward
+            && probe.snapshot_is_state()
+            && self.merge_contract == MergeContract::Disjoint;
         let result = merge_states(snaps, op, expect_disjoint);
 
         RunReport {
@@ -340,6 +353,21 @@ mod tests {
             .into_iter()
             .find(|k| router.route_key(k.as_bytes()) == node)
             .expect("pool has a key for every node")
+    }
+
+    #[test]
+    fn merge_contract_captured_at_build() {
+        let ring = RouterHandle::token_ring(Ring::new(2, 8), RingOp::NoOp);
+        let c = core(ConsistencyMode::StateForward, &ring, vec![]);
+        assert_eq!(c.merge_contract, MergeContract::Disjoint);
+
+        let split = RouterHandle::new(Strategy::SplitKey { d: 2 }.build_router(2, 8, None));
+        let c = core(ConsistencyMode::StateForward, &split, vec![]);
+        assert_eq!(
+            c.merge_contract,
+            MergeContract::Associative,
+            "split-key runs must skip the §7 disjointness assertion"
+        );
     }
 
     #[test]

@@ -6,7 +6,11 @@
 //! token table (`route`), probe table (`route_probe`) or assignment
 //! table (`route_assign`) — and [`Runtime::route_batch_snapshot`]
 //! dispatches on the tag, so every router the `hash::router` layer can
-//! build routes in one batched XLA call.
+//! build routes in one batched XLA call. The one exception is the
+//! split-key family: its per-record least-loaded-of-d decision has no
+//! compiled lowering, so [`snapshot_tensors`] returns a typed
+//! [`Error::UnsupportedSnapshot`] and the mapper drops to the documented
+//! scalar fallback (see `docs/ROUTING.md`).
 
 use std::path::{Path, PathBuf};
 
@@ -193,6 +197,18 @@ pub fn snapshot_tensors(snap: &RouteSnapshot, m: &Manifest) -> crate::Result<Sna
                 n_live: live.len() as i32,
             })
         }
+        // No compiled lowering: the split decision is least-loaded-of-d
+        // with a rotation tie-break, i.e. per-record mutable state the
+        // pure batched kernel cannot express. The mapper downcasts this
+        // and permanently disables the compiled lane for the run
+        // (documented scalar fallback; see docs/ROUTING.md).
+        SnapshotState::Split { .. } => Err(Error::UnsupportedSnapshot {
+            router: snap.router.to_string(),
+            reason: "the split-key family has no compiled route program; \
+                     records route through the scalar fallback"
+                .to_string(),
+        }
+        .into()),
     }
 }
 
@@ -835,6 +851,20 @@ mod tests {
             err.downcast_ref::<Error>(),
             Some(Error::CapacityExceeded { program: "route", .. })
         ));
+    }
+
+    #[test]
+    fn snapshot_tensors_split_family_is_typed_unsupported() {
+        use crate::hash::{RouterHandle, StrategySpec};
+        let handle = RouterHandle::new(StrategySpec::SplitKey { d: 2 }.build_router(3, 8, None));
+        let err = snapshot_tensors(&handle.snapshot(), &mini_manifest()).unwrap_err();
+        match err.downcast_ref::<Error>() {
+            Some(Error::UnsupportedSnapshot { router, reason }) => {
+                assert_eq!(router, "split-key");
+                assert!(reason.contains("scalar fallback"), "{reason}");
+            }
+            other => panic!("expected UnsupportedSnapshot, got {other:?}"),
+        }
     }
 
     #[test]

@@ -77,6 +77,43 @@ fn state_forward_on_threads_wl1_skewed() {
 }
 
 #[test]
+fn wl3_split_key_breaks_the_single_key_floor_on_both_drivers() {
+    // ISSUE 8 acceptance: WL3 (one key × 100) is the workload no
+    // relocating balancer can help — every disjoint-contract family has
+    // S = 1 as a floor, because at best the whole key migrates. splitkey:4
+    // promotes the mega-hot key to a 4-way split once its decayed load
+    // crosses the watermark, so records routed after the promotion fan out
+    // across candidate reducers: the measured skew must drop below 1 while
+    // the associative merge still reproduces the serial oracle exactly,
+    // on the deterministic sim AND on real threads under §7 state
+    // forwarding (shard partials stay resident through the sync epochs).
+    let w = paperwl::wl3();
+    let oracle = wordcount_oracle(&w.items);
+    for driver in [DriverKind::Sim, DriverKind::Threads] {
+        let mut cfg = PipelineConfig::default();
+        cfg.driver = driver;
+        cfg.strategy = Strategy::SplitKey { d: 4 };
+        cfg.mode = ConsistencyMode::StateForward;
+        cfg.split_watermark = 1.0; // promote on the first genuine backlog
+        cfg.max_rounds = 2;
+        cfg.seed = 7;
+        // threads: slow both stages so the split lands while most of the
+        // stream is still unrouted (the sim's costs already interleave)
+        cfg.map_delay_us = 400;
+        cfg.reduce_delay_us = 500;
+        let r = Pipeline::wordcount(cfg).run(w.items.clone()).unwrap();
+        r.check_conservation().unwrap();
+        assert_eq!(r.result, oracle, "{driver:?}: split merge diverged from the oracle");
+        assert!(
+            r.skew() < 1.0,
+            "{driver:?}: splitkey left WL3 at S = {} (processed {:?})",
+            r.skew(),
+            r.processed
+        );
+    }
+}
+
+#[test]
 fn elastic_scale_schedule_parity_state_forward_wl1() {
     // ISSUE 5 satellite: an identical scale-up + scale-down SCHEDULE (the
     // deterministic elastic controller) on WL1 under §7 state forwarding,

@@ -651,6 +651,52 @@ fn prop_workload_generators_conserve_length() {
 }
 
 #[test]
+fn prop_split_shard_merge_is_order_independent() {
+    // ISSUE 8 tentpole: the associative merge contract. A stream sharded
+    // d ways — each record folded on an arbitrary one of d candidate
+    // homes, which is exactly what least-loaded-of-d degenerates to over
+    // a run — must merge back, under ANY shard permutation, to the same
+    // totals a single-homed reference reducer produces.
+    use dpa::exec::builtin::WordCount;
+    use dpa::exec::{merge_snapshots, MergeOp, Record, ReduceExecutor};
+
+    forall("d-way shard fold == single-homed fold, any order", 30, |g| {
+        let d = g.usize_in(2, 8);
+        let keyspace = g.usize_in(1, 12);
+        let n = g.usize_in(1, 300);
+        let mut shards: Vec<WordCount> = (0..d).map(|_| WordCount::new()).collect();
+        let mut single = WordCount::new();
+        for _ in 0..n {
+            let key = format!("k{}", g.usize_in(0, keyspace));
+            shards[g.usize_in(0, d - 1)].reduce(Record::new(key.clone(), 1));
+            single.reduce(Record::new(key, 1));
+        }
+        single.flush();
+        let mut expect = single.snapshot();
+        expect.sort();
+        let mut partials: Vec<Vec<(String, i64)>> = shards
+            .iter_mut()
+            .map(|s| {
+                s.flush();
+                s.snapshot()
+            })
+            .collect();
+        // shuffle the shard order: an associative+commutative fold must
+        // not care which reducer's partial the coordinator sees first
+        for i in (1..partials.len()).rev() {
+            partials.swap(i, g.usize_in(0, i));
+        }
+        let mut merged = merge_snapshots(partials, MergeOp::Sum);
+        merged.sort();
+        prop_assert!(
+            merged == expect,
+            "shard merge diverged from the single-homed oracle (d={d}, n={n})"
+        );
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_histogram_concurrent_equals_sequential_merge() {
     use dpa::metrics::Histogram;
     use std::sync::Arc;

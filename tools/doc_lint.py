@@ -1,0 +1,151 @@
+#!/usr/bin/env python3
+"""Documentation link lint: every relative link in the prose docs
+resolves.
+
+`cargo doc` already fails on broken *intra-rustdoc* links, but nothing
+guarded the prose layer — `README.md` and `docs/*.md` cross-reference
+each other (and files in the tree) heavily, and a renamed heading or
+moved file silently strands readers. This lint closes that gap:
+
+  R1  A relative link target (`[x](docs/ROUTING.md)`, `[x](../README.md)`)
+      must exist on disk, resolved against the linking file's directory.
+  R2  A fragment (`[x](ARCHITECTURE.md#the-router-layer)`, `[x](#local)`)
+      must match a heading in the target file under GitHub's anchor
+      rules: lowercase; drop everything but word characters, spaces and
+      hyphens; spaces become hyphens; duplicate slugs get `-1`, `-2`, …
+      suffixes. (`## §7 merge contracts` → `#7-merge-contracts`.)
+  R3  Absolute URLs (`http:`, `https:`, `mailto:`) are out of scope —
+      external rot is not something CI should gate merges on.
+
+Fenced code blocks are skipped (ASCII diagrams and sample code may
+contain `[…](…)`-shaped text that is not a link).
+
+Scope: `README.md` and `docs/**/*.md`. Exit status: 0 clean, 1
+violations (printed as `path:line: message`).
+
+Usage: tools/doc_lint.py [--root REPO_ROOT]
+"""
+
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+from pathlib import Path
+
+RE_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+RE_HEADING = re.compile(r"^#{1,6}\s+(.*)$")
+RE_FENCE = re.compile(r"^\s*(```|~~~)")
+# Schemes whose targets live outside the repository (R3).
+RE_EXTERNAL = re.compile(r"^[a-zA-Z][a-zA-Z0-9+.-]*:")
+
+
+def anchor_slug(heading: str) -> str:
+    """GitHub's heading→anchor rule (sans the duplicate suffix)."""
+    text = heading.strip().lower()
+    # inline code/emphasis markers vanish, their contents stay
+    text = text.replace("`", "").replace("*", "")
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def anchors_of(text: str) -> set[str]:
+    """Every anchor the rendered file exposes, duplicate-suffixed."""
+    seen: dict[str, int] = {}
+    anchors: set[str] = set()
+    in_fence = False
+    for line in text.splitlines():
+        if RE_FENCE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = RE_HEADING.match(line)
+        if not m:
+            continue
+        slug = anchor_slug(m.group(1))
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        anchors.add(slug if n == 0 else f"{slug}-{n}")
+    return anchors
+
+
+def links_of(text: str) -> list[tuple[int, str]]:
+    """(lineno, target) for every markdown link outside code fences."""
+    out: list[tuple[int, str]] = []
+    in_fence = False
+    for i, line in enumerate(text.splitlines(), start=1):
+        if RE_FENCE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in RE_LINK.finditer(line):
+            out.append((i, m.group(1)))
+    return out
+
+
+def lint_file(path: Path, root: Path) -> list[tuple[str, int, str]]:
+    rel = path.relative_to(root).as_posix()
+    text = path.read_text(encoding="utf-8")
+    violations: list[tuple[str, int, str]] = []
+    for lineno, target in links_of(text):
+        if RE_EXTERNAL.match(target):
+            continue  # R3
+        base, _, fragment = target.partition("#")
+        dest = path if not base else (path.parent / base)
+        if base and not dest.exists():
+            violations.append(
+                (rel, lineno,
+                 f"broken link '{target}': '{base}' does not exist "
+                 f"relative to {path.parent.relative_to(root).as_posix() or '.'}/"))
+            continue
+        if not fragment:
+            continue
+        if dest.is_dir() or dest.suffix.lower() != ".md":
+            violations.append(
+                (rel, lineno,
+                 f"fragment link '{target}' into a non-markdown target — "
+                 f"anchors only exist in rendered markdown"))
+            continue
+        if fragment not in anchors_of(dest.read_text(encoding="utf-8")):
+            violations.append(
+                (rel, lineno,
+                 f"broken anchor '{target}': no heading in "
+                 f"'{base or rel}' renders to '#{fragment}'"))
+    return violations
+
+
+def run(root: Path) -> list[tuple[str, int, str]]:
+    docs = sorted((root / "docs").rglob("*.md")) if (root / "docs").is_dir() else []
+    readme = root / "README.md"
+    targets = ([readme] if readme.is_file() else []) + docs
+    if not targets:
+        raise SystemExit(f"doc_lint: no README.md or docs/*.md under {root}")
+    violations: list[tuple[str, int, str]] = []
+    for path in targets:
+        violations.extend(lint_file(path, root))
+    return violations
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--root",
+        type=Path,
+        default=Path(__file__).resolve().parent.parent,
+        help="repo root (default: the checkout containing this script)",
+    )
+    args = ap.parse_args()
+    violations = run(args.root)
+    for rel, lineno, msg in violations:
+        print(f"{rel}:{lineno}: {msg}")
+    if violations:
+        print(f"doc_lint: {len(violations)} violation(s)", file=sys.stderr)
+        return 1
+    print("doc_lint: clean — every relative link and anchor resolves")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

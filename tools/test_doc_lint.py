@@ -1,0 +1,119 @@
+#!/usr/bin/env python3
+"""Self-test for tools/doc_lint.py — including the mandated negative
+cases proving the lint FAILS on broken links and anchors."""
+
+from __future__ import annotations
+
+import sys
+import tempfile
+import unittest
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+import doc_lint  # noqa: E402
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+class FixtureTree:
+    """A throwaway repo root with a README + docs/ layout."""
+
+    def __init__(self, tmp: str):
+        self.root = Path(tmp)
+        (self.root / "docs").mkdir(parents=True)
+
+    def write(self, rel: str, content: str) -> None:
+        p = self.root / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(content, encoding="utf-8")
+
+
+class DocLintTest(unittest.TestCase):
+    def lint(self, build) -> list[tuple[str, int, str]]:
+        with tempfile.TemporaryDirectory() as tmp:
+            tree = FixtureTree(tmp)
+            build(tree)
+            return doc_lint.run(tree.root)
+
+    # --- the anchor rule itself ------------------------------------------
+
+    def test_github_slugging(self):
+        self.assertEqual(doc_lint.anchor_slug("The Router layer"),
+                         "the-router-layer")
+        self.assertEqual(doc_lint.anchor_slug("§7 merge contracts"),
+                         "7-merge-contracts")
+        self.assertEqual(doc_lint.anchor_slug("Split-key in one page"),
+                         "split-key-in-one-page")
+        self.assertEqual(doc_lint.anchor_slug("`code` and *emphasis*"),
+                         "code-and-emphasis")
+
+    def test_duplicate_headings_get_suffixes(self):
+        anchors = doc_lint.anchors_of("# A\n## Setup\n## Setup\n")
+        self.assertEqual(anchors, {"a", "setup", "setup-1"})
+
+    # --- clean trees pass -------------------------------------------------
+
+    def test_clean_tree_passes(self):
+        violations = self.lint(lambda t: (
+            t.write("README.md",
+                    "see [arch](docs/ARCH.md) and "
+                    "[routers](docs/ARCH.md#the-router-layer) and "
+                    "[web](https://example.com/x#frag)\n"),
+            t.write("docs/ARCH.md",
+                    "## The Router layer\nback to [readme](../README.md) "
+                    "and [here](#the-router-layer)\n"),
+        ))
+        self.assertEqual(violations, [])
+
+    def test_code_fences_are_skipped(self):
+        violations = self.lint(lambda t: t.write(
+            "README.md",
+            "```\n[not a link](nowhere.md)\n## not a heading\n```\nok\n"))
+        self.assertEqual(violations, [])
+
+    # --- the negative tests: the lint MUST fail on these -----------------
+
+    def test_broken_file_link_fails(self):
+        violations = self.lint(lambda t: t.write(
+            "README.md", "x\n\nsee [gone](docs/MISSING.md)\n"))
+        self.assertEqual(len(violations), 1)
+        rel, line, msg = violations[0]
+        self.assertEqual((rel, line), ("README.md", 3))
+        self.assertIn("does not exist", msg)
+
+    def test_broken_anchor_fails(self):
+        violations = self.lint(lambda t: (
+            t.write("README.md", "see [x](docs/ARCH.md#no-such-heading)\n"),
+            t.write("docs/ARCH.md", "## Real heading\n"),
+        ))
+        self.assertEqual(len(violations), 1)
+        self.assertIn("broken anchor", violations[0][2])
+
+    def test_broken_local_fragment_fails(self):
+        violations = self.lint(lambda t: t.write(
+            "README.md", "# Only\nsee [x](#absent)\n"))
+        self.assertEqual(len(violations), 1)
+        self.assertIn("#absent", violations[0][2])
+
+    def test_fragment_into_non_markdown_fails(self):
+        violations = self.lint(lambda t: (
+            t.write("README.md", "see [x](docs/diagram.txt#part)\n"),
+            t.write("docs/diagram.txt", "part\n"),
+        ))
+        self.assertEqual(len(violations), 1)
+        self.assertIn("non-markdown", violations[0][2])
+
+    def test_image_links_are_checked_too(self):
+        violations = self.lint(lambda t: t.write(
+            "README.md", "![shiny](docs/missing.png)\n"))
+        self.assertEqual(len(violations), 1)
+
+    # --- the real tree ----------------------------------------------------
+
+    def test_actual_repo_is_clean(self):
+        self.assertEqual(doc_lint.run(REPO_ROOT), [])
+
+
+if __name__ == "__main__":
+    unittest.main(verbosity=2)
