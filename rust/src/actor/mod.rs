@@ -17,16 +17,33 @@ use crate::exec::Record;
 /// What travels through a reducer queue. `Data` is a routed record;
 /// `State` is a §7 state-forwarding transfer (key + extracted state) that
 /// must be applied before any data processing.
+/// `Checkpoint` is a replicated-state snapshot (testkit::chaos) riding
+/// the same priority lane as `State`: it installs into the run's chaos
+/// controller at the receiving peer and is never folded into a reducer.
 #[derive(Clone, Debug)]
 pub enum Envelope {
     Data(Record),
     State(Record),
+    Checkpoint {
+        /// Reducer whose state this snapshot replicates.
+        origin: usize,
+        /// Checkpoint sequence number (higher wins at install time).
+        seq: u64,
+        /// Full (key, partial) snapshot covering WAL tags `< seq`.
+        state: Vec<(String, i64)>,
+    },
 }
 
 impl Envelope {
+    /// The routed record inside a `Data`/`State` envelope. `Checkpoint`
+    /// envelopes carry replicated state, not a record — no caller routes
+    /// them by key, so asking is a logic error.
     pub fn record(&self) -> &Record {
         match self {
             Envelope::Data(r) | Envelope::State(r) => r,
+            Envelope::Checkpoint { origin, .. } => {
+                unreachable!("checkpoint from reducer {origin} carries no record")
+            }
         }
     }
 }

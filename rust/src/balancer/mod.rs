@@ -217,6 +217,65 @@ impl BalancerCore {
         Some(event)
     }
 
+    /// Crash recovery (testkit::chaos): retire the dead reducer's slot
+    /// and bring a replacement up in a fresh slot, as one membership
+    /// surgery over the elastic `retire_node`/`add_node` lifecycle — so
+    /// every router family's minimal-movement paths apply and the
+    /// victim's keyspace re-homes exactly like a scale-down.
+    ///
+    /// Must be called from `Synchronized` (the driver gates recovery on
+    /// it). The victim's *state* is not this method's business: the
+    /// caller re-injects it from the replication lane after the routing
+    /// has settled. Returns the respawn's reducer id, or `None` when the
+    /// victim was already retired or the id space is exhausted — the
+    /// recovery then re-homes onto the survivors alone.
+    pub fn replace_faulted(&mut self, victim: usize, now: u64) -> Option<usize> {
+        let retire = self.router.retire_node(victim);
+        if !retire.changed {
+            return None;
+        }
+        // the corpse's last reported backlog is being re-routed; leaving
+        // it in the load vector would steer the policy at a ghost
+        if victim < self.qlens.len() {
+            self.qlens[victim] = 0;
+        }
+        self.router.loads().set(victim, 0);
+        self.events.push(LbEvent {
+            at: now,
+            target: victim as u32,
+            qlens: self.qlens.clone(),
+            epoch: self.router.epoch(),
+            strategy: self.spec,
+            delta: retire,
+            membership: Some(MembershipChange::Retired { id: victim as u32 }),
+        });
+        // stale queue lengths either way: arm the cooldowns like any
+        // membership change
+        self.last_event_at = Some(now);
+        if let Some(e) = self.elastic.as_mut() {
+            e.arm_cooldown(now);
+        }
+        let (id, delta) = self.router.add_node()?;
+        self.qlens.resize(id + 1, 0);
+        self.rounds.resize(id + 1, 0);
+        // the respawn joins cold: warm-up gating holds until it reports
+        self.reported.resize(id + 1, false);
+        let event = LbEvent {
+            at: now,
+            target: id as u32,
+            qlens: self.qlens.clone(),
+            epoch: self.router.epoch(),
+            strategy: self.spec,
+            delta,
+            membership: Some(MembershipChange::Added { id: id as u32 }),
+        };
+        log::info!(
+            "crash recovery at {now}: reducer {victim} fail-stopped, respawned as {id}"
+        );
+        self.events.push(event);
+        Some(id)
+    }
+
     /// Evaluate the elastic membership policy and apply the scale
     /// decision through the router. Returns the membership event when the
     /// routable set changed.
@@ -458,6 +517,48 @@ mod tests {
         // floor: no retire below min_reducers
         assert!(b.report(1, 0, 80).is_none());
         assert_eq!(b.router().live_count(), 2);
+    }
+
+    #[test]
+    fn replace_faulted_retires_and_respawns_in_one_surgery() {
+        use crate::metrics::MembershipChange;
+        let router = RouterHandle::with_signal_capacity(
+            Strategy::Doubling.build_router(4, 8, Some(1)),
+            &crate::balancer::signal::SignalConfig::default(),
+            6,
+        );
+        let mut b =
+            BalancerCore::new(router, Strategy::Doubling, 0.2, 4, 1, 10).without_warmup();
+        b.observe(2, 50);
+        let id = b.replace_faulted(2, 5).expect("capacity for the respawn");
+        assert_eq!(id, 4, "respawn takes the next fresh slot");
+        assert!(!b.router().is_live(2), "the corpse left the routable set");
+        assert!(b.router().is_live(4));
+        assert_eq!(b.router().live_count(), 4);
+        assert_eq!(b.router().loads().get(2), 0, "ghost load cleared");
+        let memberships: Vec<_> =
+            b.events().iter().filter_map(|e| e.membership).collect();
+        assert_eq!(
+            memberships,
+            vec![
+                MembershipChange::Retired { id: 2 },
+                MembershipChange::Added { id: 4 },
+            ]
+        );
+        // a second fail-stop of the same slot is a no-op
+        assert!(b.replace_faulted(2, 6).is_none());
+    }
+
+    #[test]
+    fn replace_faulted_without_capacity_still_retires() {
+        // id space exhausted: the victim retires (keys re-home onto the
+        // survivors) but no respawn joins
+        let router = RouterHandle::new(Strategy::Doubling.build_router(4, 8, Some(1)));
+        let mut b =
+            BalancerCore::new(router, Strategy::Doubling, 0.2, 4, 1, 10).without_warmup();
+        assert!(b.replace_faulted(1, 0).is_none());
+        assert!(!b.router().is_live(1));
+        assert_eq!(b.router().live_count(), 3);
     }
 
     #[test]

@@ -102,6 +102,12 @@ pub struct StageTracker {
     extracted_count: AtomicUsize,
     /// Total state transfers performed (metrics).
     transfers: AtomicU64,
+    /// Per-slot fail-stop flag (testkit::chaos). A faulted slot leaves the
+    /// extraction quorum immediately — a dead reducer can never extract —
+    /// and stays faulted forever (respawns take a fresh slot). The drivers'
+    /// drain/quorum checks consult this set so a stalled-but-alive reducer
+    /// is counted and a dead one is not.
+    faulted: Vec<AtomicBool>,
 }
 
 impl StageTracker {
@@ -123,6 +129,7 @@ impl StageTracker {
             active_count: AtomicUsize::new(reducers),
             extracted_count: AtomicUsize::new(reducers),
             transfers: AtomicU64::new(0),
+            faulted: (0..capacity).map(|_| AtomicBool::new(false)).collect(),
         }
     }
 
@@ -236,6 +243,74 @@ impl StageTracker {
         }
     }
 
+    /// Fail-stop: reducer `i` died (testkit::chaos `Kill`) and leaves the
+    /// protocol *now*, even mid-epoch — a dead reducer can never run its
+    /// extraction, so waiting on it would wedge the pending epoch (and
+    /// with it the recovery, which is gated on `Synchronized`).
+    ///
+    /// Unlike [`Self::activate`] this is legal from `Synchronizing`:
+    /// * if the victim had already extracted this epoch, its contribution
+    ///   is removed from both sides of the quorum equality;
+    /// * if it had not, it is excused (its un-extracted state is rebuilt
+    ///   from the replication lane at recovery and re-homed to whichever
+    ///   reducer owns each key *then*);
+    /// * either way the quorum shrinks, which may complete the epoch —
+    ///   so the finish check runs.
+    pub fn retire_faulted(&self, reducer: usize) {
+        assert!(reducer < self.active.len(), "reducer {reducer} beyond tracker capacity");
+        let was_faulted = self.faulted[reducer].swap(true, Ordering::SeqCst);
+        assert!(!was_faulted, "reducer {reducer} fail-stopped twice");
+        if self.active[reducer].swap(false, Ordering::SeqCst) {
+            self.active_count.fetch_sub(1, Ordering::SeqCst);
+        }
+        if self.pending_epoch.load(Ordering::SeqCst) != 0 {
+            if self.extracted[reducer].swap(true, Ordering::SeqCst) {
+                // its extraction was counted; the quorum shrank, so the
+                // count must shrink with it or equality can never hold
+                self.extracted_count.fetch_sub(1, Ordering::SeqCst);
+            }
+            self.maybe_finish();
+        } else {
+            self.extracted[reducer].store(true, Ordering::SeqCst);
+        }
+    }
+
+    /// Has reducer `i` been fail-stopped?
+    pub fn is_faulted(&self, reducer: usize) -> bool {
+        self.faulted[reducer].load(Ordering::SeqCst)
+    }
+
+    /// Book `sent` state transfers outside an extraction epoch — the
+    /// recovery path re-homes a rebuilt victim state as ordinary transfer
+    /// envelopes from `Synchronized`, and each will call
+    /// [`Self::transfer_landed`] when absorbed; crediting `outstanding`
+    /// first keeps the counter zero-sum so the *next* epoch's completion
+    /// check still starts from a clean slate.
+    pub fn transfers_booked(&self, sent: u64) {
+        self.outstanding.fetch_add(sent as i64, Ordering::SeqCst);
+        self.transfers.fetch_add(sent, Ordering::SeqCst);
+    }
+
+    /// All booked transfers have landed. Recovery re-homes rebuilt state
+    /// *outside* an epoch; the balancer must not open a new epoch until
+    /// those transfers settle, or a reducer could run its extraction
+    /// before absorbing a re-homed key it no longer owns and strand the
+    /// state at a non-owner.
+    pub fn transfers_settled(&self) -> bool {
+        self.outstanding.load(Ordering::SeqCst) == 0
+    }
+
+    /// Smallest live (active, not faulted) slot other than `i` — the
+    /// checkpoint-to-peer destination. `None` when `i` is the only
+    /// survivor (the checkpoint then installs locally).
+    pub fn next_live_peer(&self, i: usize) -> Option<usize> {
+        (0..self.active.len()).find(|&j| {
+            j != i
+                && self.active[j].load(Ordering::SeqCst)
+                && !self.faulted[j].load(Ordering::SeqCst)
+        })
+    }
+
     /// Number of active (spawned) reducer slots.
     pub fn active_count(&self) -> usize {
         self.active_count.load(Ordering::SeqCst)
@@ -339,6 +414,90 @@ mod tests {
         // re-activating an active slot is idempotent
         t.activate(2);
         assert_eq!(t.active_count(), 3);
+    }
+
+    #[test]
+    fn faulted_reducer_leaves_the_quorum_before_extracting() {
+        // the victim dies mid-epoch having NOT extracted: the epoch must
+        // still retire on the survivors' extractions alone
+        let t = StageTracker::new(3, 1);
+        t.begin_epoch(2);
+        t.extraction_done(0, 1);
+        t.extraction_done(1, 0);
+        assert_eq!(t.stage(), Stage::Synchronizing, "reducer 2 still owed");
+        t.retire_faulted(2);
+        assert!(t.is_faulted(2));
+        assert!(!t.needs_extraction(2), "dead reducers owe nothing");
+        assert_eq!(t.stage(), Stage::Synchronizing, "1 transfer outstanding");
+        t.transfer_landed();
+        assert_eq!(t.stage(), Stage::Synchronized);
+        assert_eq!(t.active_count(), 2);
+    }
+
+    #[test]
+    fn faulted_reducer_after_extracting_shrinks_both_counts() {
+        // the victim extracted, then died: its counted extraction must
+        // leave with it or extracted_count == active_count never holds
+        let t = StageTracker::new(3, 1);
+        t.begin_epoch(2);
+        t.extraction_done(2, 0);
+        t.retire_faulted(2);
+        assert_eq!(t.stage(), Stage::Synchronizing);
+        t.extraction_done(0, 0);
+        t.extraction_done(1, 0);
+        assert_eq!(t.stage(), Stage::Synchronized);
+    }
+
+    #[test]
+    fn fault_completing_the_quorum_retires_the_epoch() {
+        // everyone else already extracted; the kill itself is the event
+        // that completes the round
+        let t = StageTracker::new(2, 1);
+        t.begin_epoch(2);
+        t.extraction_done(0, 0);
+        t.retire_faulted(1);
+        assert_eq!(t.stage(), Stage::Synchronized);
+        assert_eq!(t.synced_epoch(), 2);
+    }
+
+    #[test]
+    fn faulted_slot_is_excused_from_later_epochs() {
+        let t = StageTracker::new(2, 1);
+        t.retire_faulted(1);
+        t.begin_epoch(2);
+        assert!(!t.needs_extraction(1), "dead slot must stay excused");
+        t.extraction_done(0, 0);
+        assert_eq!(t.stage(), Stage::Synchronized);
+    }
+
+    #[test]
+    fn next_live_peer_skips_the_dead_and_inactive() {
+        let t = StageTracker::with_capacity(3, 4, 1);
+        assert_eq!(t.next_live_peer(0), Some(1));
+        t.retire_faulted(1);
+        assert_eq!(t.next_live_peer(0), Some(2));
+        t.retire_faulted(2);
+        assert_eq!(t.next_live_peer(0), None, "slot 3 never activated");
+        t.activate(3);
+        assert_eq!(t.next_live_peer(0), Some(3));
+    }
+
+    #[test]
+    fn recovery_transfers_keep_outstanding_zero_sum() {
+        let t = StageTracker::new(2, 1);
+        // recovery re-homes 3 rebuilt records from Synchronized
+        t.transfers_booked(3);
+        t.transfer_landed();
+        t.transfer_landed();
+        t.transfer_landed();
+        assert_eq!(t.transfers(), 3);
+        // a later epoch still completes on its own arithmetic
+        t.begin_epoch(2);
+        t.extraction_done(0, 1);
+        t.extraction_done(1, 0);
+        assert_eq!(t.stage(), Stage::Synchronizing);
+        t.transfer_landed();
+        assert_eq!(t.stage(), Stage::Synchronized);
     }
 
     #[test]

@@ -11,6 +11,7 @@ use crate::balancer::state_forward::ConsistencyMode;
 use crate::hash::Strategy;
 use crate::metrics::RunReport;
 use crate::pipeline::{DriverKind, ExecutorKind, Pipeline, PipelineConfig};
+use crate::testkit::chaos::ChaosPlan;
 use crate::util::stats::Summary;
 use crate::util::table::{delta2, f2, Table};
 use crate::workload::{generators, paperwl, trace, Workload};
@@ -31,6 +32,15 @@ USAGE:
                                  phase scales the reducer set up, the cool
                                  tail scales it back down — run on BOTH
                                  drivers, parity-checked against the oracle
+  dpa chaos [--seeds N] [--items N] [--faults a,b] [--strategies a,b,c]
+            [--json PATH]
+                                 chaos acceptance matrix: seeded fault plans
+                                 (kill/slow/stall/drop) injected into reducers
+                                 mid-run on BOTH drivers under §7 state
+                                 forwarding — kills recover via retire +
+                                 respawn with checkpoint/WAL restore, and
+                                 every cell is checked against the serial
+                                 oracle and for sim/threads parity
   dpa workloads                  describe the five paper workloads
   dpa help
 
@@ -42,6 +52,14 @@ OPTIONS (table1):
   --throughput      add hot-path columns to the LB runs: records/sec
                     (host wall clock) and p50/p99 per-record latency
                     (sim: virtual ticks, threads: µs)
+
+OPTIONS (chaos):
+  --seeds N         fault plans per (strategy, fault) cell     [default: 2]
+  --items N         uniform workload size per run              [default: 400]
+  --faults L        comma list of kill|slow|stall|drop         [default: kill,slow,stall]
+  --strategies L    router families under test
+                                      [default: doubling,multiprobe,twochoices]
+  --json PATH       also write the matrix as flat JSON
 
 OPTIONS (run):
   --workload WL     wl1|wl2|wl3|wl4|wl5|zipf|uniform|corpus|hot or a trace
@@ -69,6 +87,11 @@ OPTIONS (run):
   --items N         generated workload size                  [default: 100]
   --executor E      wordcount|tokenized|sum|distinct|topk    [default: wordcount]
   --state-forward   use §7 state forwarding (sim or threads driver)
+  --chaos SPEC      fault plan, e.g. \"kill@1:40,slow:4@0:20\" (kill
+                    events need --state-forward and 2+ reducers)
+  --checkpoint-interval N
+                    chaos replication cadence: checkpoint to a peer
+                    every N folded records per reducer     [default: 16]
   --config PATH     TOML config file (see configs/)
   --save-trace PATH write the workload to a trace file
   --quiet           one-line report
@@ -80,6 +103,13 @@ pub enum Command {
     Table1 { seeds: usize, strategies: Vec<Strategy>, throughput: bool },
     Fig3 { max_rounds: u32 },
     Elastic { strategy: Strategy, items: usize },
+    Chaos {
+        seeds: usize,
+        items: usize,
+        faults: Vec<String>,
+        strategies: Vec<Strategy>,
+        json: Option<PathBuf>,
+    },
     Workloads,
     Help,
 }
@@ -129,6 +159,39 @@ pub fn parse(argv: &[String]) -> crate::Result<Command> {
             let items = args.take_opt_parse("items")?.unwrap_or(400usize);
             args.finish()?;
             Ok(Command::Elastic { strategy, items })
+        }
+        "chaos" => {
+            let seeds = args.take_opt_parse("seeds")?.unwrap_or(2usize);
+            let items = args.take_opt_parse("items")?.unwrap_or(400usize);
+            let faults: Vec<String> = args
+                .take_opt("faults")
+                .unwrap_or_else(|| "kill,slow,stall".into())
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+            if faults.is_empty() {
+                bail!("--faults needs at least one fault kind");
+            }
+            for f in &faults {
+                // seeded() owns the fault-name registry; probe it so
+                // typos die at parse time, not mid-matrix
+                ChaosPlan::seeded(f, 0, 1).map_err(anyhow::Error::msg)?;
+            }
+            let strategies = match args.take_opt("strategies") {
+                Some(list) => Strategy::parse_list(&list).map_err(anyhow::Error::msg)?,
+                None => vec![
+                    Strategy::Doubling,
+                    Strategy::MultiProbe { probes: crate::hash::DEFAULT_PROBES },
+                    Strategy::TwoChoices,
+                ],
+            };
+            if strategies.is_empty() {
+                bail!("--strategies needs at least one strategy");
+            }
+            let json = args.take_opt("json").map(PathBuf::from);
+            args.finish()?;
+            Ok(Command::Chaos { seeds, items, faults, strategies, json })
         }
         "run" => {
             let mut cfg = PipelineConfig::default();
@@ -185,6 +248,12 @@ pub fn parse(argv: &[String]) -> crate::Result<Command> {
             }
             if args.take_flag("state-forward") {
                 cfg.mode = ConsistencyMode::StateForward;
+            }
+            if let Some(v) = args.take_opt("chaos") {
+                cfg.chaos = Some(v);
+            }
+            if let Some(v) = args.take_opt_parse("checkpoint-interval")? {
+                cfg.checkpoint_interval = v;
             }
             let executor = match args.take_opt("executor").as_deref() {
                 None | Some("wordcount") => ExecutorKind::WordCount,
@@ -290,6 +359,15 @@ pub fn execute(cmd: Command) -> crate::Result<i32> {
             print!("{out}");
             Ok(i32::from(!ok))
         }
+        Command::Chaos { seeds, items, faults, strategies, json } => {
+            let (out, report_json, ok) = chaos_demo(seeds, items, &faults, &strategies)?;
+            print!("{out}");
+            if let Some(path) = json {
+                std::fs::write(&path, report_json)
+                    .with_context(|| format!("writing {}", path.display()))?;
+            }
+            Ok(i32::from(!ok))
+        }
     }
 }
 
@@ -387,6 +465,171 @@ pub fn elastic_demo(strategy: Strategy, items: usize) -> crate::Result<(String, 
         ok = false;
     }
     Ok((out, ok))
+}
+
+/// The `dpa chaos` acceptance matrix: for every router family × fault
+/// kind × seed, derive a deterministic fault plan
+/// ([`ChaosPlan::seeded`]), inject it mid-run on BOTH drivers under §7
+/// state forwarding (checkpoint-to-peer every 8 folds), and hold the
+/// line on exactness:
+///
+/// * each driver's merged output equals the serial oracle — a kill loses
+///   zero state (checkpoint restore + WAL tail replay), slow/stall/drop
+///   perturb only the schedule;
+/// * sim and threads agree with each other;
+/// * the scheduled fault actually fired (a plan that never triggers
+///   would make the cell vacuous);
+/// * a kill cell recovered: every kill produced exactly one respawn.
+///
+/// Returns the rendered table, a flat-JSON matrix (for CI artifacts) and
+/// whether every cell held.
+pub fn chaos_demo(
+    seeds: usize,
+    items: usize,
+    faults: &[String],
+    strategies: &[Strategy],
+) -> crate::Result<(String, String, bool)> {
+    let mut ok = true;
+    let mut out = format!(
+        "chaos acceptance — {} router families × {} fault kinds × {} seeds, \
+         both drivers, §7 state forwarding, checkpoint interval 8\n\n",
+        strategies.len(),
+        faults.len(),
+        seeds
+    );
+    let mut t = Table::new([
+        "strategy", "fault", "seed", "plan", "driver", "kills", "respawns", "ckpts", "requeued",
+        "rec p99", "oracle",
+    ]);
+    let mut fail_lines = Vec::new();
+    let mut entries: Vec<(String, String)> = Vec::new();
+    let mut cells = 0u64;
+    let mut failures = 0u64;
+    for &strategy in strategies {
+        for fault in faults {
+            for seed in 0..seeds as u64 {
+                let mut base = PipelineConfig::default();
+                let plan = ChaosPlan::seeded(fault, seed, base.reducers)
+                    .map_err(anyhow::Error::msg)?;
+                base.strategy = strategy;
+                if strategy.is_token_ring() {
+                    // dense halving layout: every reducer owns enough of
+                    // the ring that the seed-derived trigger point (a
+                    // per-victim folded-record count) is reliably reached
+                    base.initial_tokens = Some(base.halving_init_tokens);
+                }
+                base.mode = ConsistencyMode::StateForward;
+                base.max_rounds = 2;
+                base.seed = seed;
+                base.chaos = Some(plan.spec());
+                base.checkpoint_interval = 8;
+                let w = generators::uniform(items, 60, seed);
+                let oracle = {
+                    let mut m = std::collections::HashMap::new();
+                    for i in &w.items {
+                        *m.entry(i.clone()).or_insert(0i64) += 1;
+                    }
+                    let mut v: Vec<(String, i64)> = m.into_iter().collect();
+                    v.sort();
+                    v
+                };
+                cells += 1;
+                let mut results = Vec::new();
+                let mut cell_ok = true;
+                for driver in [DriverKind::Sim, DriverKind::Threads] {
+                    let name = match driver {
+                        DriverKind::Sim => "sim",
+                        DriverKind::Threads => "threads",
+                    };
+                    let mut cfg = base.clone();
+                    cfg.driver = driver;
+                    if driver == DriverKind::Threads {
+                        cfg.reduce_delay_us = 150;
+                    }
+                    let r = Pipeline::wordcount(cfg).run(w.items.clone())?;
+                    let oracle_ok = r.result == oracle;
+                    if !oracle_ok {
+                        fail_lines.push(format!(
+                            "FAIL [{strategy}/{fault}/s{seed}/{name}] merged \
+                             output != serial oracle"
+                        ));
+                    }
+                    if r.fault_events.is_empty() {
+                        fail_lines.push(format!(
+                            "FAIL [{strategy}/{fault}/s{seed}/{name}] plan \
+                             '{}' never fired",
+                            plan.spec()
+                        ));
+                        cell_ok = false;
+                    }
+                    if fault == "kill"
+                        && (r.recovery.kills < 1 || r.recovery.respawns != r.recovery.kills)
+                    {
+                        fail_lines.push(format!(
+                            "FAIL [{strategy}/{fault}/s{seed}/{name}] kill did \
+                             not recover (kills {}, respawns {})",
+                            r.recovery.kills, r.recovery.respawns
+                        ));
+                        cell_ok = false;
+                    }
+                    cell_ok &= oracle_ok;
+                    t.row([
+                        strategy.to_string(),
+                        fault.clone(),
+                        seed.to_string(),
+                        plan.spec(),
+                        name.to_string(),
+                        r.recovery.kills.to_string(),
+                        r.recovery.respawns.to_string(),
+                        r.recovery.checkpoints.to_string(),
+                        r.recovery.requeued.to_string(),
+                        r.recovery_latency.map_or_else(|| "-".into(), |l| l.p99.to_string()),
+                        if oracle_ok { "ok".into() } else { "FAIL".to_string() },
+                    ]);
+                    let pfx = format!("{strategy}.{fault}.s{seed}.{name}");
+                    entries.push((format!("{pfx}.kills"), r.recovery.kills.to_string()));
+                    entries.push((format!("{pfx}.respawns"), r.recovery.respawns.to_string()));
+                    entries
+                        .push((format!("{pfx}.checkpoints"), r.recovery.checkpoints.to_string()));
+                    entries.push((format!("{pfx}.requeued"), r.recovery.requeued.to_string()));
+                    entries.push((format!("{pfx}.ok"), u8::from(oracle_ok).to_string()));
+                    results.push(r.result);
+                }
+                if results[0] != results[1] {
+                    fail_lines.push(format!(
+                        "FAIL [{strategy}/{fault}/s{seed}] sim and threads \
+                         merged outputs differ"
+                    ));
+                    cell_ok = false;
+                }
+                if !cell_ok {
+                    failures += 1;
+                    ok = false;
+                }
+            }
+        }
+    }
+    out.push_str(&t.render());
+    for line in &fail_lines {
+        out.push_str(line);
+        out.push('\n');
+    }
+    if ok {
+        out.push_str(
+            "\nall cells oracle-exact and driver-identical; every kill \
+             recovered with zero state loss ✓\n",
+        );
+    }
+    entries.push(("cells".into(), cells.to_string()));
+    entries.push(("failures".into(), failures.to_string()));
+    entries.push(("ok".into(), u8::from(ok).to_string()));
+    let mut json = String::from("{\n");
+    for (i, (k, v)) in entries.iter().enumerate() {
+        let comma = if i + 1 == entries.len() { "" } else { "," };
+        json.push_str(&format!("  \"{k}\": {v}{comma}\n"));
+    }
+    json.push_str("}\n");
+    Ok((out, json, ok))
 }
 
 /// One experiment cell's configuration under `strategy` on `driver`.
@@ -781,6 +1024,83 @@ mod tests {
             Command::Run(o) => assert!(o.cfg.elastic.is_none()),
             _ => panic!("expected Run"),
         }
+    }
+
+    #[test]
+    fn parse_chaos_command() {
+        match parse(&sv(&["chaos"])).unwrap() {
+            Command::Chaos { seeds, items, faults, strategies, json } => {
+                assert_eq!(seeds, 2);
+                assert_eq!(items, 400);
+                assert_eq!(faults, vec!["kill", "slow", "stall"]);
+                assert_eq!(
+                    strategies,
+                    vec![
+                        Strategy::Doubling,
+                        Strategy::MultiProbe { probes: crate::hash::DEFAULT_PROBES },
+                        Strategy::TwoChoices,
+                    ],
+                    "default matrix spans three router families"
+                );
+                assert!(json.is_none());
+            }
+            _ => panic!("expected Chaos"),
+        }
+        let cmd = parse(&sv(&[
+            "chaos",
+            "--seeds",
+            "1",
+            "--items",
+            "200",
+            "--faults",
+            "drop",
+            "--strategies",
+            "halving",
+            "--json",
+            "out.json",
+        ]))
+        .unwrap();
+        match cmd {
+            Command::Chaos { seeds, items, faults, strategies, json } => {
+                assert_eq!((seeds, items), (1, 200));
+                assert_eq!(faults, vec!["drop"]);
+                assert_eq!(strategies, vec![Strategy::Halving]);
+                assert_eq!(json, Some(PathBuf::from("out.json")));
+            }
+            _ => panic!("expected Chaos"),
+        }
+        // typo'd fault kinds die at parse time, not mid-matrix
+        assert!(parse(&sv(&["chaos", "--faults", "explode"])).is_err());
+        assert!(parse(&sv(&["chaos", "--faults", ","])).is_err());
+        // `dpa run` carries the plan + replication cadence knobs too
+        let cmd = parse(&sv(&[
+            "run",
+            "--chaos",
+            "slow:2@0:5",
+            "--checkpoint-interval",
+            "4",
+            "--quiet",
+        ]))
+        .unwrap();
+        match cmd {
+            Command::Run(o) => {
+                assert_eq!(o.cfg.chaos.as_deref(), Some("slow:2@0:5"));
+                assert_eq!(o.cfg.checkpoint_interval, 4);
+            }
+            _ => panic!("expected Run"),
+        }
+    }
+
+    #[test]
+    fn chaos_demo_single_cell_passes() {
+        // one slow-fault cell on the doubling family, both drivers: the
+        // answer must match the oracle and the fault must actually fire
+        let faults = vec!["slow".to_string()];
+        let (out, json, ok) = chaos_demo(1, 300, &faults, &[Strategy::Doubling]).unwrap();
+        assert!(ok, "{out}");
+        assert!(json.contains("\"cells\": 1"), "{json}");
+        assert!(json.contains("\"failures\": 0"), "{json}");
+        assert!(json.contains("\"doubling.slow.s0.sim.ok\": 1"), "{json}");
     }
 
     #[test]

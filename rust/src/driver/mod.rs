@@ -29,6 +29,7 @@ use crate::mapper::MapperCore;
 use crate::metrics::{MembershipChange, RunReport};
 use crate::reducer::ReducerCore;
 use crate::runtime::exec::{ExecCore, ExecParams, LoadReport, ReducerStep};
+use crate::testkit::chaos::{ChaosConfig, ChaosController, FaultAction};
 
 /// Threads-driver parameters.
 #[derive(Clone, Debug)]
@@ -60,6 +61,9 @@ pub struct ThreadParams {
     /// thread spawns a new reducer thread when it applies an `Added`
     /// membership event.
     pub max_reducers: usize,
+    /// Fault-injection plan + checkpoint cadence (testkit::chaos).
+    /// `None` = no chaos hooks on the step loop at all.
+    pub chaos: Option<ChaosConfig>,
 }
 
 impl Default for ThreadParams {
@@ -75,6 +79,7 @@ impl Default for ThreadParams {
             mode: ConsistencyMode::MergeAtEnd,
             route_runtime: None,
             max_reducers: 0,
+            chaos: None,
         }
     }
 }
@@ -112,7 +117,7 @@ impl ThreadDriver {
         let router = balancer.router().clone();
         let n_reducers = router.nodes();
 
-        let core = Arc::new(ExecCore::build(
+        let mut core = ExecCore::build(
             &router,
             n_mappers,
             items,
@@ -124,7 +129,14 @@ impl ThreadDriver {
                 coordinated_stop: true,
                 max_reducers: p.max_reducers,
             },
-        ));
+        );
+        if let Some(cfg) = &p.chaos {
+            // one WAL/slot per pre-allocated queue, so respawns and
+            // elastic joiners log from their first step
+            let cap = core.queues.len();
+            core = core.with_chaos(Arc::new(ChaosController::new(cfg, cap)));
+        }
+        let core = Arc::new(core);
         let (report_tx, report_rx) = mpsc::channel::<LoadReport>();
         let t0 = Instant::now();
 
@@ -198,11 +210,11 @@ impl ThreadDriver {
                 let core = core.clone();
                 let tx = report_tx.clone();
                 let router = router.clone();
-                let exec = factory(i);
+                let factory = factory.clone();
                 std::thread::Builder::new()
                     .name(format!("dpa-reducer-{i}"))
                     .spawn(move || {
-                        let mut rc = ReducerCore::new(i, exec, router);
+                        let mut rc = ReducerCore::new(i, factory(i), router);
                         // batched drain: refill `pending` with one queue
                         // lock per `batch_max` envelopes; the core still
                         // steps one envelope at a time, so its §7 logic is
@@ -211,6 +223,33 @@ impl ThreadDriver {
                             std::collections::VecDeque::with_capacity(batch_max);
                         let mut batching = true;
                         loop {
+                            if let Some(ch) = core.chaos() {
+                                match ch.poll_fault(i, t0.elapsed().as_micros() as u64) {
+                                    Some(FaultAction::Kill) => {
+                                        // fail-stop at the step boundary:
+                                        // hand batched leftovers back (they
+                                        // were never processed), then exit —
+                                        // executor state dies with the actor;
+                                        // the checkpoint + WAL lane is now
+                                        // the only copy
+                                        let mut data = Vec::with_capacity(pending.len());
+                                        for env in pending.drain(..) {
+                                            match env {
+                                                Envelope::Data(_) => data.push(env),
+                                                env => core.queues[i].push_priority(env),
+                                            }
+                                        }
+                                        core.queues[i].requeue_front_batch(data);
+                                        core.chaos_fail_stop(i);
+                                        rc.exec = factory(i);
+                                        break;
+                                    }
+                                    Some(FaultAction::Stall(ms)) => {
+                                        std::thread::sleep(Duration::from_millis(ms));
+                                    }
+                                    None => {}
+                                }
+                            }
                             let step = core.reducer_step(
                                 &mut rc,
                                 i,
@@ -231,7 +270,12 @@ impl ThreadDriver {
                                 ReducerStep::Reduced | ReducerStep::Forwarded => {
                                     batching = true; // data processing resumed
                                     if matches!(step, ReducerStep::Reduced) {
-                                        spin_us(reduce_delay);
+                                        // a Slow fault multiplies the
+                                        // per-record compute cost
+                                        let slow = core
+                                            .chaos()
+                                            .map_or(1, |c| c.slow_factor(i));
+                                        spin_us(reduce_delay.saturating_mul(slow));
                                     }
                                     if rc.due_report(core.report_interval) {
                                         let _ = tx.send(LoadReport {
@@ -257,7 +301,8 @@ impl ThreadDriver {
                                         let mut data = Vec::with_capacity(pending.len());
                                         for env in pending.drain(..) {
                                             match env {
-                                                Envelope::State(_) => {
+                                                Envelope::State(_)
+                                                | Envelope::Checkpoint { .. } => {
                                                     core.queues[i].push_priority(env)
                                                 }
                                                 Envelope::Data(_) => data.push(env),
@@ -306,6 +351,7 @@ impl ThreadDriver {
         // membership change can start after a reducer was released.
         let bal_core = core.clone();
         let bal_handles = reducer_handles.clone();
+        let bal_factory = reduce_factory.clone();
         let balancer_handle = std::thread::Builder::new()
             .name("dpa-balancer".into())
             .spawn(move || {
@@ -326,21 +372,77 @@ impl ThreadDriver {
                         Err(RecvTimeoutError::Timeout) => {}
                         Err(RecvTimeoutError::Disconnected) => break,
                     }
+                    // crash recovery: a queued kill retires-and-respawns
+                    // once the §7 tracker is synchronized and no prior
+                    // re-homed transfer is still in flight; while waiting,
+                    // keep settling the corpses' queues so a mid-kill
+                    // epoch cannot wedge on them
+                    if let Some(ch) = bal_core.chaos() {
+                        if ch.recovery_queued() {
+                            for v in 0..bal_core.queues.len() {
+                                if ch.was_killed(v) {
+                                    bal_core.chaos_drain_dead(v);
+                                }
+                            }
+                            if bal_core.synced() && bal_core.tracker.transfers_settled() {
+                                if let Some(rec) = ch.take_recovery() {
+                                    let now = t0.elapsed().as_micros() as u64;
+                                    if let Some(id) =
+                                        balancer.replace_faulted(rec.victim, now)
+                                    {
+                                        bal_core.tracker.activate(id);
+                                        bal_handles.lock().unwrap().push(spawn_reducer(id));
+                                    }
+                                    if bal_core.mode == ConsistencyMode::StateForward {
+                                        // survivors may now hold state the
+                                        // respawn owns: re-home it the §7 way
+                                        bal_core.tracker.begin_epoch(balancer.router().epoch());
+                                    }
+                                    bal_core.chaos_requeue_dead(rec.victim, balancer.router());
+                                    bal_core.chaos_rehome(
+                                        rec.victim,
+                                        balancer.router(),
+                                        &bal_factory,
+                                    );
+                                    ch.recovery_done(rec.at, now);
+                                }
+                            }
+                        } else {
+                            // post-recovery stragglers: a mapper holding a
+                            // stale route cache may still land data on a
+                            // corpse's queue — sweep it to the live owners
+                            for v in 0..bal_core.queues.len() {
+                                if ch.was_killed(v) {
+                                    bal_core.chaos_requeue_dead(v, balancer.router());
+                                }
+                            }
+                        }
+                    }
                     if bal_core.monitor.drained()
                         && bal_core.synced()
+                        && bal_core.chaos().map_or(true, |c| c.quiescent())
                         && bal_core.all_queues_empty()
                     {
                         bal_core.request_stop();
                         break;
                     }
-                    // a reducer may only exit after request_stop, so a
-                    // finished handle here means it PANICKED. Holding the
-                    // spawner (and its report sender) in this thread makes
-                    // the channel-disconnect fallback unreachable, so this
+                    // a reducer may only exit after request_stop — or by
+                    // chaos fail-stop — so a finished handle that was NOT
+                    // killed means it PANICKED. Holding the spawner (and
+                    // its report sender) in this thread makes the
+                    // channel-disconnect fallback unreachable, so this
                     // liveness check is what turns a dead reducer into a
                     // propagated panic at join() instead of a silent hang
-                    // of the drain condition.
-                    if bal_handles.lock().unwrap().iter().any(|h| h.is_finished()) {
+                    // of the drain condition. Handles sit at their reducer
+                    // id (spawn order = dense id order), so the index is
+                    // the id the kill check needs.
+                    let panicked = bal_handles.lock().unwrap().iter().enumerate().any(
+                        |(id, h)| {
+                            h.is_finished()
+                                && !bal_core.chaos().is_some_and(|c| c.was_killed(id))
+                        },
+                    );
+                    if panicked {
                         bal_core.request_stop(); // release the survivors
                         break;
                     }

@@ -7,5 +7,5 @@ pub mod skew;
 pub mod report;
 
 pub use latency::{Histogram, LatencyStats};
-pub use report::{LbEvent, MembershipChange, RunReport};
+pub use report::{FaultRecord, LbEvent, MembershipChange, RecoveryCounts, RunReport};
 pub use skew::skew;

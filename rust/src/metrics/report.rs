@@ -22,6 +22,37 @@ pub enum MembershipChange {
     Retired { id: u32 },
 }
 
+/// One injected fault, as logged by the chaos controller
+/// (`testkit::chaos`) when it fired.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultRecord {
+    /// Driver clock when the fault fired (virtual ticks on the sim,
+    /// elapsed µs on threads).
+    pub at: u64,
+    /// Victim reducer id.
+    pub reducer: usize,
+    /// Fault kind name: `kill`, `slow`, `stall` or `drop`.
+    pub kind: String,
+}
+
+/// Crash-recovery accounting for a chaos run (all zeros on fault-free
+/// runs).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RecoveryCounts {
+    /// Reducers fail-stopped by the plan.
+    pub kills: u64,
+    /// Retire-and-respawn sequences completed.
+    pub respawns: u64,
+    /// Checkpoints cut to a peer over the priority lane.
+    pub checkpoints: u64,
+    /// (key, partial) pairs rebuilt and re-homed during recoveries.
+    pub state_restored: u64,
+    /// Write-ahead-log entries replayed on top of checkpoints.
+    pub wal_replayed: u64,
+    /// Envelopes re-routed out of dead reducers' queues.
+    pub requeued: u64,
+}
+
 /// One load-balancing event — a `redistribute(node)` call that changed
 /// the routing, or an elastic membership change — recorded by the
 /// balancer.
@@ -71,6 +102,13 @@ pub struct RunReport {
     /// driver, virtual ticks on the sim); `None` when no record carried a
     /// stamp.
     pub latency: Option<LatencyStats>,
+    /// Injected faults in firing order (chaos runs only).
+    pub fault_events: Vec<FaultRecord>,
+    /// Crash-recovery counters (zeros for fault-free runs).
+    pub recovery: RecoveryCounts,
+    /// Kill → respawn-complete latency summary (same units as `latency`);
+    /// `None` when the run had no kills.
+    pub recovery_latency: Option<LatencyStats>,
 }
 
 impl RunReport {
@@ -177,6 +215,26 @@ impl RunReport {
                 lat.p50, lat.p99, lat.count
             ));
         }
+        if !self.fault_events.is_empty() {
+            out.push_str(&format!(
+                "faults = {}  kills = {}  respawns = {}  checkpoints = {}  \
+                 wal replayed = {}  state restored = {}  requeued = {}\n",
+                self.fault_events.len(),
+                self.recovery.kills,
+                self.recovery.respawns,
+                self.recovery.checkpoints,
+                self.recovery.wal_replayed,
+                self.recovery.state_restored,
+                self.recovery.requeued,
+            ));
+            if let Some(lat) = self.recovery_latency {
+                let unit = if self.virtual_end > 0 { "ticks" } else { "µs" };
+                out.push_str(&format!(
+                    "recovery p50 = {} {unit}  p99 = {} {unit}  ({} kills)\n",
+                    lat.p50, lat.p99, lat.count
+                ));
+            }
+        }
         let mut t = Table::new(["reducer", "processed", "forwarded", "peak qlen"]);
         for i in 0..self.processed.len() {
             t.row([
@@ -187,6 +245,9 @@ impl RunReport {
             ]);
         }
         out.push_str(&t.render());
+        for f in &self.fault_events {
+            out.push_str(&format!("CHAOS@{} {} reducer {}\n", f.at, f.kind, f.reducer));
+        }
         for e in &self.lb_events {
             match e.membership {
                 Some(MembershipChange::Added { id }) => out.push_str(&format!(

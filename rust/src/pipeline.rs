@@ -18,6 +18,7 @@ use crate::exec::{MapExecutor, ReduceFactory};
 use crate::hash::{MergeContract, Ring, RouterHandle, Strategy};
 use crate::metrics::RunReport;
 use crate::sim::{SimCosts, SimDriver, SimParams};
+use crate::testkit::chaos::{ChaosConfig, ChaosPlan};
 
 /// Which execution driver runs the actors.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -124,6 +125,14 @@ pub struct PipelineConfig {
     /// Post-repartition consistency: merge-at-end (paper) or §7 state
     /// forwarding (either driver).
     pub mode: ConsistencyMode,
+    /// Fault-injection schedule (chaos testkit spec, e.g.
+    /// `"kill@1:40,slow:4@0:20"`). `None` = no fault hooks installed —
+    /// the hot path stays untouched. TOML: `chaos.plan`.
+    pub chaos: Option<String>,
+    /// Under chaos, cut a checkpoint of each reducer's state to a live
+    /// peer every N folded records (smaller = tighter replication lag =
+    /// shorter WAL replays on recovery). TOML: `chaos.checkpoint_interval`.
+    pub checkpoint_interval: u64,
 }
 
 impl Default for PipelineConfig {
@@ -152,6 +161,8 @@ impl Default for PipelineConfig {
             pop_timeout_ms: 2,
             batch_max: 32,
             mode: ConsistencyMode::MergeAtEnd,
+            chaos: None,
+            checkpoint_interval: 16,
         }
     }
 }
@@ -259,6 +270,13 @@ impl PipelineConfig {
                 "threads.batch_max" => {
                     self.batch_max = doc.get_int(key).context("batch_max")? as usize
                 }
+                "chaos.plan" => {
+                    self.chaos = Some(doc.get_str(key).context("chaos plan")?.to_string())
+                }
+                "chaos.checkpoint_interval" => {
+                    self.checkpoint_interval =
+                        doc.get_int(key).context("checkpoint_interval")? as u64
+                }
                 other => bail!("unknown config key '{other}'"),
             }
         }
@@ -313,7 +331,47 @@ impl PipelineConfig {
             bail!("threads.batch_max must be at least 1 (reducers must pop something)");
         }
         self.signal.validate().map_err(anyhow::Error::msg)?;
+        if self.checkpoint_interval == 0 {
+            bail!("chaos.checkpoint_interval must be at least 1");
+        }
+        if let Some(spec) = &self.chaos {
+            let plan = ChaosPlan::parse(spec).map_err(anyhow::Error::msg)?;
+            if let Some(v) = plan.max_victim() {
+                if v >= self.reducers {
+                    bail!(
+                        "chaos plan targets reducer {v} but the run starts \
+                         with {} reducers",
+                        self.reducers
+                    );
+                }
+            }
+            if plan.kill_count() > 0 {
+                if self.mode != ConsistencyMode::StateForward {
+                    bail!(
+                        "chaos kill events need mode = state-forward — crash \
+                         recovery re-homes the victim's keys through the §7 \
+                         transfer lane"
+                    );
+                }
+                if self.reducers < 2 {
+                    bail!(
+                        "chaos kill events need at least 2 reducers (a live \
+                         peer holds the checkpoint replica)"
+                    );
+                }
+            }
+        }
         Ok(())
+    }
+
+    /// The parsed chaos configuration, if fault injection is enabled.
+    /// Callers run [`validate`](Self::validate) first (the drivers do),
+    /// so the spec is known to parse.
+    pub fn chaos_config(&self) -> Option<ChaosConfig> {
+        self.chaos.as_deref().map(|spec| {
+            let plan = ChaosPlan::parse(spec).expect("chaos plan validated");
+            ChaosConfig { plan, checkpoint_interval: self.checkpoint_interval }
+        })
     }
 
     /// The ring this configuration starts from (token-ring strategies;
@@ -336,16 +394,27 @@ impl PipelineConfig {
             self.initial_tokens,
             self.split_watermark,
         );
-        match &self.elastic {
-            Some(e) => RouterHandle::with_signal_capacity(router, &self.signal, e.max_reducers),
-            None => RouterHandle::with_signal(router, &self.signal),
+        match self.reducer_capacity() {
+            0 => RouterHandle::with_signal(router, &self.signal),
+            cap => RouterHandle::with_signal_capacity(router, &self.signal, cap),
         }
     }
 
     /// Reducer-id ceiling the drivers pre-allocate for (0 = fixed
     /// membership; the drivers then size everything off `reducers`).
+    /// Every scheduled kill reserves one extra slot so the respawned
+    /// replacement gets a fresh dense id.
     pub fn reducer_capacity(&self) -> usize {
-        self.elastic.as_ref().map_or(0, |e| e.max_reducers)
+        let kills = self
+            .chaos
+            .as_deref()
+            .and_then(|s| ChaosPlan::parse(s).ok())
+            .map_or(0, |p| p.kill_count());
+        match &self.elastic {
+            Some(e) => e.max_reducers + kills,
+            None if kills > 0 => self.reducers + kills,
+            None => 0,
+        }
     }
 }
 
@@ -477,6 +546,7 @@ impl Pipeline {
                     chunk_size: self.cfg.chunk_size,
                     mode: self.cfg.mode,
                     max_reducers: self.cfg.reducer_capacity(),
+                    chaos: self.cfg.chaos_config(),
                 });
                 driver.run(
                     self.map_exec.clone(),
@@ -498,6 +568,7 @@ impl Pipeline {
                     mode: self.cfg.mode,
                     route_runtime: self.route_runtime.clone(),
                     max_reducers: self.cfg.reducer_capacity(),
+                    chaos: self.cfg.chaos_config(),
                 });
                 driver.run(
                     self.map_exec.clone(),
@@ -821,6 +892,87 @@ max_rounds = 3
         // the same strategy with a splittable op (sum) runs fine
         let r = Pipeline::wordcount(cfg).run(items).unwrap();
         assert_eq!(r.result.len(), 10);
+    }
+
+    #[test]
+    fn chaos_config_keys_round_trip() {
+        let doc = crate::config::parse(
+            "[chaos]\nplan = \"slow:3@0:10,stall:40@1:5\"\ncheckpoint_interval = 4\n",
+        )
+        .unwrap();
+        let mut cfg = PipelineConfig::default();
+        cfg.apply_document(&doc).unwrap();
+        assert_eq!(cfg.chaos.as_deref(), Some("slow:3@0:10,stall:40@1:5"));
+        assert_eq!(cfg.checkpoint_interval, 4);
+        let cc = cfg.chaos_config().expect("plan set");
+        assert_eq!(cc.plan.events.len(), 2);
+        assert_eq!(cc.checkpoint_interval, 4);
+        // defaults: no fault hooks, paper cadence
+        assert!(PipelineConfig::default().chaos.is_none());
+        assert!(PipelineConfig::default().chaos_config().is_none());
+        assert_eq!(PipelineConfig::default().checkpoint_interval, 16);
+    }
+
+    #[test]
+    fn chaos_validation_guards() {
+        // unparseable plan fails loudly
+        let mut cfg = PipelineConfig::default();
+        cfg.chaos = Some("explode@1:2".into());
+        assert!(cfg.validate().is_err());
+
+        // kills need the §7 state-forwarding lane for recovery
+        let mut cfg = PipelineConfig::default();
+        cfg.chaos = Some("kill@1:10".into());
+        assert!(cfg.validate().is_err(), "kill under merge-at-end must be rejected");
+        cfg.mode = ConsistencyMode::StateForward;
+        assert!(cfg.validate().is_ok());
+
+        // victim beyond the starting membership
+        cfg.chaos = Some("kill@9:10".into());
+        assert!(cfg.validate().is_err());
+
+        // a kill needs a live peer to hold the replica
+        let mut cfg = PipelineConfig::default();
+        cfg.mode = ConsistencyMode::StateForward;
+        cfg.reducers = 1;
+        cfg.chaos = Some("kill@0:10".into());
+        assert!(cfg.validate().is_err());
+
+        // zero checkpoint cadence would never cut a checkpoint
+        let mut cfg = PipelineConfig::default();
+        cfg.checkpoint_interval = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn kill_plans_reserve_respawn_headroom() {
+        let mut cfg = PipelineConfig::default();
+        cfg.mode = ConsistencyMode::StateForward;
+        cfg.chaos = Some("kill@1:10,kill@2:20".into());
+        assert_eq!(cfg.reducer_capacity(), 6, "4 starters + 2 respawn slots");
+        let router = cfg.build_router();
+        assert_eq!(router.capacity(), 6);
+        assert_eq!(router.nodes(), 4);
+        // elastic ceilings stack with the kill headroom
+        cfg.elastic_mut().max_reducers = 8;
+        assert_eq!(cfg.reducer_capacity(), 10);
+    }
+
+    #[test]
+    fn chaos_plan_threads_through_the_pipeline() {
+        // a slow+drop plan must leave the answer untouched and surface
+        // its fired faults in the report
+        let items: Vec<String> = (0..290).map(|i| format!("w{}", i % 29)).collect();
+        let mut cfg = PipelineConfig::default();
+        cfg.chaos = Some("slow:4@0:5,drop:2@1:3".into());
+        let r = Pipeline::wordcount(cfg).run(items).unwrap();
+        assert_eq!(r.total_processed(), 290);
+        assert_eq!(r.result.len(), 29);
+        for (_, c) in &r.result {
+            assert_eq!(*c, 10);
+        }
+        assert_eq!(r.fault_events.len(), 2, "both scheduled faults fired");
+        assert_eq!(r.recovery.kills, 0);
     }
 
     #[test]

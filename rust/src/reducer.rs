@@ -126,6 +126,15 @@ impl ReducerCore {
         self.exec.flush();
         self.exec.snapshot()
     }
+
+    /// Flush + *non-destructive* snapshot for a replication checkpoint
+    /// (testkit::chaos). Unlike §7 extraction nothing leaves the
+    /// executor: the copy ships to a peer while this reducer keeps
+    /// reducing, so a later kill can restore from it.
+    pub fn checkpoint_snapshot(&mut self) -> Vec<(String, i64)> {
+        self.exec.flush();
+        self.exec.snapshot()
+    }
 }
 
 #[cfg(test)]

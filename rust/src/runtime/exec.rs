@@ -32,9 +32,10 @@ use crate::coordinator::{merge_states, TaskPool};
 use crate::exec::{Record, ReduceFactory};
 use crate::hash::{MergeContract, RouterHandle};
 use crate::mapper::MapperCore;
-use crate::metrics::{Histogram, LbEvent, MembershipChange, RunReport};
+use crate::metrics::{Histogram, LbEvent, MembershipChange, RecoveryCounts, RunReport};
 use crate::queue::DataQueue;
 use crate::reducer::{Handled, ReducerCore};
+use crate::testkit::chaos::ChaosController;
 
 /// Driver-agnostic knobs for one pipeline execution.
 #[derive(Clone, Debug)]
@@ -111,6 +112,11 @@ pub struct ExecCore {
     /// (split-key) relaxes that to an order-independent fold of per-shard
     /// partials, so the disjointness assertion is skipped.
     merge_contract: MergeContract,
+    /// Fault-injection controller (testkit::chaos). `None` — the default —
+    /// keeps every hook on the hot path a single branch on an unset
+    /// `Option`; a chaos run threads WAL logging, checkpoint cadence and
+    /// the kill/recovery protocol through the same step state-machine.
+    chaos: Option<Arc<ChaosController>>,
     stop: AtomicBool,
 }
 
@@ -144,8 +150,22 @@ impl ExecCore {
             input_items,
             coordinated_stop: params.coordinated_stop,
             merge_contract: router.merge_contract(),
+            chaos: None,
             stop: AtomicBool::new(false),
         }
+    }
+
+    /// Attach a fault-injection controller (testkit::chaos). The
+    /// controller must have been built with at least this core's queue
+    /// capacity so every pre-allocated slot has a WAL.
+    pub fn with_chaos(mut self, chaos: Arc<ChaosController>) -> Self {
+        self.chaos = Some(chaos);
+        self
+    }
+
+    /// The attached fault-injection controller, if any.
+    pub fn chaos(&self) -> Option<&Arc<ChaosController>> {
+        self.chaos.as_ref()
     }
 
     /// Is the §7 protocol (if active) in substage 2? Always `true` under
@@ -188,6 +208,11 @@ impl ExecCore {
             let transfers = rc.extract_disowned();
             let sent = transfers.len();
             for (dest, rec) in transfers {
+                if let Some(ch) = &self.chaos {
+                    // WAL the departure: a later crash replay must not
+                    // resurrect state that legally moved away
+                    ch.on_extracted(i, &rec.key);
+                }
                 // state rides the priority lane: destinations apply it
                 // before any queued data
                 self.queues[dest].push_priority(Envelope::State(rec));
@@ -198,8 +223,19 @@ impl ExecCore {
 
         match pop(&self.queues[i]) {
             Some(Envelope::State(rec)) => {
+                if let Some(ch) = &self.chaos {
+                    ch.on_absorbed(i, &rec.key, rec.value);
+                }
                 rc.absorb_state(rec);
                 self.tracker.transfer_landed();
+                ReducerStep::StateAbsorbed
+            }
+            Some(Envelope::Checkpoint { origin, seq, state }) => {
+                // replicated-state snapshot from a peer: install into the
+                // run's controller, never into this reducer's executor
+                if let Some(ch) = &self.chaos {
+                    ch.install_checkpoint(origin, seq, state);
+                }
                 ReducerStep::StateAbsorbed
             }
             Some(Envelope::Data(rec)) => {
@@ -215,12 +251,18 @@ impl ExecCore {
                 // stamp before handle() consumes the record; unstamped
                 // (0) records — direct core tests — record no sample
                 let stamp = rec.stamp();
+                let logged = self.chaos.as_ref().map(|_| (rec.key.clone(), rec.value));
                 match rc.handle(rec) {
                     Handled::Reduced => {
                         if stamp > 0 {
                             self.latency.record(now.saturating_sub(stamp));
                         }
                         self.monitor.consumed();
+                        if let (Some(ch), Some((key, value))) = (&self.chaos, logged) {
+                            if ch.on_reduced(i, &key, value) {
+                                self.cut_checkpoint(ch, rc, i);
+                            }
+                        }
                         ReducerStep::Reduced
                     }
                     Handled::Forward(dest, rec) => {
@@ -235,12 +277,31 @@ impl ExecCore {
 
     /// §2.3: a reducer can never stop on its own — only when the global
     /// drain condition holds (and, under §7, no synchronization is in
-    /// flight that could still route state or deferred data to it).
+    /// flight that could still route state or deferred data to it, and no
+    /// kill is due or mid-recovery that could still re-home state to it).
     fn reducer_can_stop(&self, i: usize) -> bool {
         if self.coordinated_stop {
             self.stop.load(Ordering::Acquire) && self.queues[i].is_empty()
         } else {
-            self.monitor.drained() && self.synced() && self.queues[i].is_empty()
+            self.monitor.drained()
+                && self.synced()
+                && self.chaos.as_ref().map_or(true, |c| c.quiescent())
+                && self.queues[i].is_empty()
+        }
+    }
+
+    /// Cut a replication checkpoint for reducer `i` and ship it to the
+    /// nearest live peer over the §7 priority lane. With no live peer
+    /// left the snapshot installs locally — degenerate but still exact,
+    /// since a controller outlives every reducer.
+    fn cut_checkpoint(&self, ch: &ChaosController, rc: &mut ReducerCore, i: usize) {
+        let seq = ch.begin_checkpoint(i);
+        let state = rc.checkpoint_snapshot();
+        match self.tracker.next_live_peer(i) {
+            Some(peer) => {
+                self.queues[peer].push_priority(Envelope::Checkpoint { origin: i, seq, state });
+            }
+            None => ch.install_checkpoint(i, seq, state),
         }
     }
 
@@ -252,6 +313,98 @@ impl ExecCore {
 
     pub fn all_queues_empty(&self) -> bool {
         self.queues.iter().all(|q| q.is_empty())
+    }
+
+    /// Fail-stop bookkeeping at the instant a [`FaultAction::Kill`]
+    /// (testkit::chaos) fires: the victim leaves the §7 extraction quorum
+    /// — a pending epoch must not wait on a corpse — and its queue's
+    /// protocol traffic is absorbed on its behalf.
+    ///
+    /// [`FaultAction::Kill`]: crate::testkit::chaos::FaultAction::Kill
+    pub fn chaos_fail_stop(&self, i: usize) {
+        self.tracker.retire_faulted(i);
+        self.chaos_drain_dead(i);
+    }
+
+    /// Absorb the §7 protocol traffic sitting in a dead reducer's queue.
+    ///
+    /// Peers that were already extracting when the kill fired may have
+    /// shipped `State` at the victim; nobody will ever pop it, so the
+    /// epoch would wedge on `outstanding` forever. Settling it here —
+    /// into the victim's WAL, so recovery re-homes it — unwedges the
+    /// epoch without losing a single key. Data records are put back:
+    /// they re-route only after the membership surgery. Call this at kill
+    /// time and again on every wait iteration while recovery is queued.
+    pub fn chaos_drain_dead(&self, i: usize) {
+        let Some(ch) = &self.chaos else { return };
+        let drained = self.queues[i].drain();
+        if drained.is_empty() {
+            return;
+        }
+        let mut data = Vec::new();
+        for env in drained {
+            match env {
+                Envelope::State(rec) => {
+                    ch.on_absorbed(i, &rec.key, rec.value);
+                    self.tracker.transfer_landed();
+                }
+                Envelope::Checkpoint { origin, seq, state } => {
+                    ch.install_checkpoint(origin, seq, state);
+                }
+                env @ Envelope::Data(_) => data.push(env),
+            }
+        }
+        if !data.is_empty() {
+            self.queues[i].push_batch(data);
+        }
+    }
+
+    /// After the membership surgery: re-route the dead reducer's queued
+    /// data to its post-recovery owners. The records are already in
+    /// flight — they only change queues, so the shutdown monitor is not
+    /// touched. Returns how many records moved. Safe to call repeatedly:
+    /// a mapper holding a stale route cache may land data on the corpse
+    /// after the first sweep.
+    pub fn chaos_requeue_dead(&self, i: usize, router: &RouterHandle) -> u64 {
+        let Some(ch) = &self.chaos else { return 0 };
+        let mut n = 0;
+        for env in self.queues[i].drain() {
+            match env {
+                Envelope::State(rec) => {
+                    ch.on_absorbed(i, &rec.key, rec.value);
+                    self.tracker.transfer_landed();
+                }
+                Envelope::Checkpoint { origin, seq, state } => {
+                    ch.install_checkpoint(origin, seq, state);
+                }
+                Envelope::Data(rec) => {
+                    let dest = router.route_key(rec.key.as_bytes());
+                    self.queues[dest].push(Envelope::Data(rec));
+                    n += 1;
+                }
+            }
+        }
+        if n > 0 {
+            ch.note_requeued(n);
+        }
+        n
+    }
+
+    /// Re-home the victim's recovered state (checkpoint + WAL-tail
+    /// replay) onto its post-surgery owners, via the same priority lane
+    /// §7 transfers ride. Books the transfers with the tracker so no new
+    /// epoch opens until every one has landed (see [`Self::apply_report`]).
+    pub fn chaos_rehome(&self, victim: usize, router: &RouterHandle, factory: &ReduceFactory) {
+        let Some(ch) = &self.chaos else { return };
+        let state = ch.recovered_state(victim, factory);
+        if state.is_empty() {
+            return;
+        }
+        self.tracker.transfers_booked(state.len() as u64);
+        for (key, value) in state {
+            let dest = router.route_key(key.as_bytes());
+            self.queues[dest].push_priority(Envelope::State(Record::new(key, value)));
+        }
     }
 
     /// Apply one load report to the balancer, honouring the §7 gating: no
@@ -266,8 +419,22 @@ impl ExecCore {
     /// returned event's [`MembershipChange::Added`] to actually spawn the
     /// reducer actor; its queue already exists and may legally receive
     /// records before the actor starts stepping.
+    /// Chaos runs add two more gates. A `DropReports` fault swallows the
+    /// report entirely (not even an observation — the wire ate it). And
+    /// no new epoch may open while a kill is unrecovered or a recovery's
+    /// re-homed state is still in flight: extraction diffs ownership
+    /// against the *current* router, so state still travelling under the
+    /// old assignment would strand at a non-owner.
     pub fn apply_report(&self, balancer: &mut BalancerCore, r: LoadReport) -> Option<LbEvent> {
-        if !r.evaluate || !self.synced() {
+        if let Some(ch) = &self.chaos {
+            if r.evaluate && ch.should_drop_report(r.reducer) {
+                return None;
+            }
+        }
+        let quiet = self.chaos.as_ref().map_or(true, |c| c.quiescent());
+        let settled =
+            self.mode != ConsistencyMode::StateForward || self.tracker.transfers_settled();
+        if !r.evaluate || !self.synced() || !quiet || !settled {
             balancer.observe(r.reducer, r.qlen);
             return None;
         }
@@ -309,7 +476,7 @@ impl ExecCore {
             && self.merge_contract == MergeContract::Disjoint;
         let result = merge_states(snaps, op, expect_disjoint);
 
-        RunReport {
+        let mut report = RunReport {
             processed: reducers.iter().map(|r| r.processed).collect(),
             forwarded: reducers.iter().map(|r| r.forwarded).collect(),
             mapped: mappers.iter().map(|m| m.emitted).collect(),
@@ -322,7 +489,17 @@ impl ExecCore {
             peak_qlen: self.queues.iter().take(reducers.len()).map(|q| q.peak()).collect(),
             input_items: self.input_items,
             latency: (!self.latency.is_empty()).then(|| self.latency.stats()),
+            fault_events: Vec::new(),
+            recovery: RecoveryCounts::default(),
+            recovery_latency: None,
+        };
+        if let Some(ch) = &self.chaos {
+            let (fault_events, recovery, recovery_latency) = ch.summary();
+            report.fault_events = fault_events;
+            report.recovery = recovery;
+            report.recovery_latency = recovery_latency;
         }
+        report
     }
 }
 
@@ -573,6 +750,86 @@ mod tests {
         assert_eq!(c.tracker.active_count(), 3, "joiner in the extraction quorum");
         assert_eq!(c.tracker.stage(), Stage::Synchronizing, "membership opened the epoch");
         assert_eq!(router.nodes(), 3);
+    }
+
+    fn chaos_core(
+        router: &RouterHandle,
+        plan: &str,
+        interval: u64,
+    ) -> (ExecCore, Arc<ChaosController>) {
+        use crate::testkit::chaos::{ChaosConfig, ChaosPlan};
+        let mut cfg = ChaosConfig::new(ChaosPlan::parse(plan).expect("test plan parses"));
+        cfg.checkpoint_interval = interval;
+        let ch = Arc::new(ChaosController::new(&cfg, router.nodes()));
+        let c = core(ConsistencyMode::MergeAtEnd, router, vec![]).with_chaos(Arc::clone(&ch));
+        (c, ch)
+    }
+
+    fn wordcount_factory() -> ReduceFactory {
+        Arc::new(|_| Box::new(WordCount::new()) as Box<dyn crate::exec::ReduceExecutor>)
+    }
+
+    #[test]
+    fn chaos_checkpoint_rides_the_priority_lane_to_a_peer() {
+        let router = RouterHandle::token_ring(Ring::new(2, 8), RingOp::NoOp);
+        let (c, ch) = chaos_core(&router, "", 2);
+        let key = owned_key(&router, 0);
+        let mut r0 = ReducerCore::new(0, Box::new(WordCount::new()), router.clone());
+        c.push_mapped(0, Record::new(key.clone(), 1));
+        c.push_mapped(0, Record::new(key.clone(), 1));
+        assert!(matches!(c.reducer_step(&mut r0, 0, 0, |q| q.try_pop()), ReducerStep::Reduced));
+        assert!(matches!(c.reducer_step(&mut r0, 0, 0, |q| q.try_pop()), ReducerStep::Reduced));
+        // the second reduce crossed the cadence: a checkpoint sits on the
+        // peer's priority lane, and installing it makes the origin's full
+        // state recoverable
+        assert_eq!(c.queues[1].len(), 1);
+        let mut r1 = ReducerCore::new(1, Box::new(WordCount::new()), router.clone());
+        assert!(matches!(
+            c.reducer_step(&mut r1, 1, 0, |q| q.try_pop()),
+            ReducerStep::StateAbsorbed
+        ));
+        assert!(r1.final_snapshot().is_empty(), "checkpoints never fold into a peer");
+        assert_eq!(ch.recovered_state(0, &wordcount_factory()), vec![(key, 2)]);
+    }
+
+    #[test]
+    fn chaos_kill_drain_and_rehome_preserves_state() {
+        use crate::testkit::chaos::FaultAction;
+        let router = RouterHandle::token_ring(Ring::new(2, 8), RingOp::NoOp);
+        // kill reducer 0 after one step; interval 100 = WAL-only recovery
+        let (c, ch) = chaos_core(&router, "kill@0:1", 100);
+        let key = owned_key(&router, 0);
+        let mut r0 = ReducerCore::new(0, Box::new(WordCount::new()), router.clone());
+        c.push_mapped(0, Record::new(key.clone(), 1));
+        c.push_mapped(0, Record::new(key.clone(), 1)); // still queued at the kill
+        assert!(matches!(c.reducer_step(&mut r0, 0, 0, |q| q.try_pop()), ReducerStep::Reduced));
+        assert!(matches!(ch.poll_fault(0, 5), Some(FaultAction::Kill)));
+        assert!(!ch.quiescent(), "an unrecovered kill holds the run open");
+        c.chaos_fail_stop(0);
+        assert!(c.tracker.is_faulted(0));
+
+        // membership surgery (no respawn capacity here: survivors absorb),
+        // then the dead queue re-routes and the WAL re-homes
+        assert!(router.retire_node(0).changed);
+        assert_eq!(c.chaos_requeue_dead(0, &router), 1, "queued data re-routed");
+        c.chaos_rehome(0, &router, &wordcount_factory());
+        let rec = ch.take_recovery().expect("kill queued a recovery");
+        assert_eq!(rec.victim, 0);
+        ch.recovery_done(rec.at, 9);
+        assert!(ch.quiescent());
+
+        // survivor sees: re-homed state (priority lane) then the record
+        let mut r1 = ReducerCore::new(1, Box::new(WordCount::new()), router.clone());
+        assert!(matches!(
+            c.reducer_step(&mut r1, 1, 9, |q| q.try_pop()),
+            ReducerStep::StateAbsorbed
+        ));
+        assert!(matches!(c.reducer_step(&mut r1, 1, 9, |q| q.try_pop()), ReducerStep::Reduced));
+        assert_eq!(r1.final_snapshot(), vec![(key, 2)], "nothing lost to the kill");
+        let (_, counts, _) = ch.summary();
+        assert_eq!(counts.kills, 1);
+        assert_eq!(counts.state_restored, 1);
+        assert_eq!(counts.requeued, 1);
     }
 
     #[test]

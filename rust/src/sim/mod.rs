@@ -26,6 +26,7 @@ use crate::mapper::MapperCore;
 use crate::metrics::{MembershipChange, RunReport};
 use crate::reducer::ReducerCore;
 use crate::runtime::exec::{ExecCore, ExecParams, LoadReport, ReducerStep};
+use crate::testkit::chaos::{ChaosConfig, ChaosController, FaultAction};
 use crate::util::prng::Xoshiro256;
 
 /// Virtual-time costs for the simulation.
@@ -78,6 +79,9 @@ pub struct SimParams {
     /// spawns a new reducer actor when the balancer emits an `Added`
     /// membership event.
     pub max_reducers: usize,
+    /// Fault-injection plan + checkpoint cadence (testkit::chaos).
+    /// `None` = no chaos hooks on the step loop at all.
+    pub chaos: Option<ChaosConfig>,
 }
 
 impl Default for SimParams {
@@ -89,6 +93,7 @@ impl Default for SimParams {
             chunk_size: 10,
             mode: ConsistencyMode::MergeAtEnd,
             max_reducers: 0,
+            chaos: None,
         }
     }
 }
@@ -139,6 +144,15 @@ impl SimDriver {
                 max_reducers: p.max_reducers,
             },
         );
+        let core = match &p.chaos {
+            Some(cfg) => {
+                // one WAL/slot per pre-allocated queue, so respawns and
+                // elastic joiners log from their first step
+                let cap = core.queues.len();
+                core.with_chaos(Arc::new(ChaosController::new(cfg, cap)))
+            }
+            None => core,
+        };
         let mut rng = Xoshiro256::new(p.seed);
 
         // actors
@@ -177,6 +191,42 @@ impl SimDriver {
         let mut now: u64 = 0;
         while let Some(Reverse((t, _, actor))) = heap.pop() {
             now = t;
+            // crash recovery: a queued kill retires-and-respawns once the
+            // §7 tracker is synchronized and no prior re-homed transfer is
+            // still in flight; while waiting, keep settling the corpse's
+            // queue so a mid-kill epoch cannot wedge on it
+            if let Some(ch) = core.chaos() {
+                if ch.recovery_queued() {
+                    for v in 0..core.queues.len() {
+                        if ch.was_killed(v) {
+                            core.chaos_drain_dead(v);
+                        }
+                    }
+                    if core.synced() && core.tracker.transfers_settled() {
+                        if let Some(rec) = ch.take_recovery() {
+                            if let Some(id) = balancer.replace_faulted(rec.victim, now) {
+                                debug_assert_eq!(id, reducers.len());
+                                core.tracker.activate(id);
+                                reducers.push(ReducerCore::new(
+                                    id,
+                                    reduce_factory(id),
+                                    router.clone(),
+                                ));
+                                reducers_running += 1;
+                                push(&mut heap, &mut seq, now + 1, ActorId::Reducer(id));
+                            }
+                            if p.mode == ConsistencyMode::StateForward {
+                                // survivors may now hold state the respawn
+                                // owns: re-home it the §7 way
+                                core.tracker.begin_epoch(router.epoch());
+                            }
+                            core.chaos_requeue_dead(rec.victim, &router);
+                            core.chaos_rehome(rec.victim, &router, reduce_factory);
+                            ch.recovery_done(rec.at, now);
+                        }
+                    }
+                }
+            }
             match actor {
                 ActorId::Mapper(i) => {
                     if mapper_done[i] {
@@ -216,6 +266,25 @@ impl SimDriver {
                     }
                 }
                 ActorId::Reducer(i) => {
+                    if let Some(ch) = core.chaos() {
+                        match ch.poll_fault(i, now) {
+                            Some(FaultAction::Kill) => {
+                                // fail-stop at the step boundary (the
+                                // paper's fault model): the executor state
+                                // dies with the actor — the checkpoint +
+                                // WAL lane is now the only copy
+                                core.chaos_fail_stop(i);
+                                reducers[i].exec = reduce_factory(i);
+                                reducers_running -= 1;
+                                continue; // dead: never rescheduled
+                            }
+                            Some(FaultAction::Stall(ticks)) => {
+                                push(&mut heap, &mut seq, now + ticks.max(1), actor);
+                                continue;
+                            }
+                            None => {}
+                        }
+                    }
                     match core.reducer_step(&mut reducers[i], i, now, |q| q.try_pop()) {
                         ReducerStep::StateExtracted { .. } | ReducerStep::StateAbsorbed => {
                             let c = jitter(&mut rng, p.costs.forward_cost, p.costs.cost_jitter);
@@ -229,6 +298,9 @@ impl SimDriver {
                                 ReducerStep::Reduced => p.costs.reduce_cost,
                                 _ => p.costs.forward_cost,
                             };
+                            // a Slow fault multiplies this reducer's costs
+                            let base =
+                                core.chaos().map_or(base, |c| base * c.slow_factor(i));
                             let c = jitter(&mut rng, base, p.costs.cost_jitter);
                             push(&mut heap, &mut seq, now + c, actor);
                             // periodic load report (§3), applied inline —
@@ -422,5 +494,64 @@ mod tests {
         let r = run(vec!["x".into()], Strategy::Halving, 5);
         assert_eq!(r.total_processed(), 1);
         assert_eq!(r.result, vec![("x".into(), 1)]);
+    }
+
+    #[test]
+    fn chaos_kill_recovers_exactly_with_checkpointing() {
+        use crate::testkit::chaos::{ChaosConfig, ChaosPlan};
+        let items: Vec<String> = (0..400).map(|i| format!("k{}", i % 29)).collect();
+        let mut cfg = ChaosConfig::new(ChaosPlan::parse("kill@1:10").unwrap());
+        cfg.checkpoint_interval = 8;
+        let router = RouterHandle::with_signal_capacity(
+            Strategy::Doubling.build_router(4, 8, None),
+            &crate::balancer::signal::SignalConfig::default(),
+            5, // one slot of respawn headroom
+        );
+        let balancer = BalancerCore::new(router, Strategy::Doubling, 0.2, 8, 2, 50);
+        let driver = SimDriver::new(SimParams {
+            seed: 11,
+            mode: ConsistencyMode::StateForward,
+            max_reducers: 5,
+            chaos: Some(cfg),
+            ..Default::default()
+        });
+        let r = driver.run(
+            Arc::new(IdentityMap),
+            &wordcount_factory(),
+            4,
+            balancer,
+            items.clone(),
+        );
+        assert_eq!(r.result, wordcount_oracle(&items), "kill lost state");
+        assert!(r.check_conservation().is_ok());
+        assert_eq!(r.recovery.kills, 1);
+        assert_eq!(r.recovery.respawns, 1);
+        assert!(r.recovery.checkpoints >= 1, "cadence 8 must have cut checkpoints");
+        assert!(r.recovery_latency.is_some());
+        assert_eq!(r.fault_events.len(), 1);
+        assert_eq!(r.fault_events[0].reducer, 1);
+    }
+
+    #[test]
+    fn chaos_slow_and_stall_never_change_the_answer() {
+        use crate::testkit::chaos::{ChaosConfig, ChaosPlan};
+        // uniform spread: every reducer sees plenty of steps, so both
+        // latency faults reliably cross their thresholds and fire
+        let items: Vec<String> = (0..400).map(|i| format!("k{}", i % 29)).collect();
+        let baseline = run(items.clone(), Strategy::Doubling, 3);
+        let cfg = ChaosConfig::new(ChaosPlan::parse("slow:4@0:5,stall:60@2:8").unwrap());
+        let driver =
+            SimDriver::new(SimParams { seed: 3, chaos: Some(cfg), ..Default::default() });
+        let r = driver.run(
+            Arc::new(IdentityMap),
+            &wordcount_factory(),
+            4,
+            balancer(Strategy::Doubling, 1),
+            items.clone(),
+        );
+        assert_eq!(r.result, baseline.result, "latency faults must not lose records");
+        assert_eq!(r.result, wordcount_oracle(&items));
+        assert_eq!(r.recovery.kills, 0);
+        assert_eq!(r.fault_events.len(), 2, "both faults fired");
     }
 }

@@ -1,0 +1,771 @@
+//! Fault injection for both drivers: deterministic, seeded chaos plans
+//! (`Kill`, `Slow`, `Stall`, `DropReports`) plus the replication machinery
+//! that makes a `Kill` survivable — a per-reducer write-ahead log of every
+//! fold, periodic checkpoint-to-peer over the §7 priority transfer lane,
+//! and the recovery bookkeeping the drivers' retire-and-respawn sequence
+//! consumes.
+//!
+//! The paper's fault model is fail-stop at a step boundary (§7): a reducer
+//! dies *between* records, never mid-fold. [`ChaosPlan`] events therefore
+//! trigger on per-victim handled-record counts, not wall clock — the same
+//! plan is meaningful on the deterministic sim and on real threads, and a
+//! plan's *output* effect (none, for Slow/Stall/DropReports; none for Kill
+//! when checkpointing is on) is testable on both.
+//!
+//! Recovery correctness argument, in one paragraph: every mutation of a
+//! reducer's state is one of {fold a data record, absorb a §7 transfer,
+//! extract a disowned key}. The first two are logged as [`WalEntry::Fold`]
+//! *before* the driver can observe the step boundary; the third as
+//! [`WalEntry::Extract`]. A checkpoint with sequence number S snapshots
+//! the state covering exactly the entries tagged `< S`. Replaying the
+//! newest installed checkpoint plus the `>= S` log tail into a fresh
+//! executor ([`ChaosController::recovered_state`]) therefore reproduces
+//! the victim's state at the kill boundary exactly — for *any*
+//! [`ReduceExecutor`](crate::exec::ReduceExecutor), not just sums —
+//! and the driver re-homes it through ordinary `Envelope::State`
+//! transfers. Records still queued at the victim were never folded, so
+//! they are not in the log: the driver re-routes the queue itself.
+
+use crate::exec::ReduceFactory;
+use crate::metrics::{FaultRecord, Histogram, LatencyStats, RecoveryCounts};
+use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::sync::Mutex;
+
+/// One fault, as scheduled by a [`ChaosPlan`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Fail-stop the victim at its next step boundary. Its state is lost
+    /// (recovered from the replication lane) and the driver runs the
+    /// retire-and-respawn sequence.
+    Kill,
+    /// Multiply the victim's per-record reduce cost from this point on
+    /// (a chaos-induced straggler — indistinguishable, to the balancer,
+    /// from data skew).
+    Slow {
+        /// Cost multiplier (≥ 2 to matter).
+        factor: u32,
+    },
+    /// One-shot pause: the victim goes silent for this long, then
+    /// resumes untouched. Units are driver ticks on the sim and
+    /// milliseconds on threads.
+    Stall {
+        /// Pause length (sim ticks / threads ms).
+        ticks: u64,
+    },
+    /// Suppress the victim's next N evaluated load reports (the balancer
+    /// flies blind on that reducer).
+    DropReports {
+        /// How many reports to swallow.
+        count: u32,
+    },
+}
+
+impl FaultKind {
+    /// Short stable name (fault logs, CLI tables, JSON keys).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Kill => "kill",
+            FaultKind::Slow { .. } => "slow",
+            FaultKind::Stall { .. } => "stall",
+            FaultKind::DropReports { .. } => "drop",
+        }
+    }
+}
+
+/// One scheduled fault: `kind` fires once `reducer` has handled
+/// `after_steps` data records.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// Victim reducer id (initial id space).
+    pub reducer: usize,
+    /// Handled-record count at which the fault triggers.
+    pub after_steps: u64,
+    /// What happens.
+    pub kind: FaultKind,
+}
+
+/// A deterministic schedule of faults. Parsed from a spec string
+/// (`kill@1:40,slow:3@0:20`), generated from a seed
+/// ([`ChaosPlan::seeded`]), or built directly (property tests).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ChaosPlan {
+    /// The scheduled faults (order irrelevant; each triggers on its own
+    /// victim's step count).
+    pub events: Vec<FaultEvent>,
+}
+
+impl ChaosPlan {
+    /// Parse a comma-separated spec. Each event is
+    /// `KIND[:ARG]@REDUCER:STEPS`:
+    ///
+    /// * `kill@1:40` — kill reducer 1 after it handled 40 records
+    /// * `slow:4@0:20` — 4× reduce cost on reducer 0 from record 20 on
+    /// * `stall:80@2:10` — reducer 2 pauses 80 ticks (sim) / ms (threads)
+    /// * `drop:3@1:5` — swallow reducer 1's next 3 load reports
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let mut events = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (head, target) = part
+                .split_once('@')
+                .ok_or_else(|| format!("chaos event '{part}': expected KIND[:ARG]@REDUCER:STEPS"))?;
+            let (reducer, steps) = target
+                .split_once(':')
+                .ok_or_else(|| format!("chaos event '{part}': expected REDUCER:STEPS after '@'"))?;
+            let reducer: usize = reducer
+                .trim()
+                .parse()
+                .map_err(|e| format!("chaos event '{part}': bad reducer id: {e}"))?;
+            let after_steps: u64 = steps
+                .trim()
+                .parse()
+                .map_err(|e| format!("chaos event '{part}': bad step count: {e}"))?;
+            let (kind, arg) = match head.split_once(':') {
+                Some((k, a)) => (k.trim(), Some(a.trim())),
+                None => (head.trim(), None),
+            };
+            let parse_arg = |what: &str| -> Result<u64, String> {
+                arg.ok_or_else(|| format!("chaos event '{part}': '{kind}' needs :{what}"))?
+                    .parse()
+                    .map_err(|e| format!("chaos event '{part}': bad {what}: {e}"))
+            };
+            let kind = match kind {
+                "kill" => {
+                    if arg.is_some() {
+                        return Err(format!("chaos event '{part}': 'kill' takes no argument"));
+                    }
+                    FaultKind::Kill
+                }
+                "slow" => FaultKind::Slow { factor: parse_arg("factor")?.max(1) as u32 },
+                "stall" => FaultKind::Stall { ticks: parse_arg("ticks")? },
+                "drop" => FaultKind::DropReports { count: parse_arg("count")?.max(1) as u32 },
+                other => {
+                    return Err(format!(
+                        "chaos event '{part}': unknown kind '{other}' \
+                         (expected kill|slow|stall|drop)"
+                    ))
+                }
+            };
+            events.push(FaultEvent { reducer, after_steps, kind });
+        }
+        Ok(ChaosPlan { events })
+    }
+
+    /// Render back to the spec grammar `parse` accepts (round-trips).
+    pub fn spec(&self) -> String {
+        self.events
+            .iter()
+            .map(|e| {
+                let head = match e.kind {
+                    FaultKind::Kill => "kill".to_string(),
+                    FaultKind::Slow { factor } => format!("slow:{factor}"),
+                    FaultKind::Stall { ticks } => format!("stall:{ticks}"),
+                    FaultKind::DropReports { count } => format!("drop:{count}"),
+                };
+                format!("{head}@{}:{}", e.reducer, e.after_steps)
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// A deterministic single-fault plan derived from a seed — the `dpa
+    /// chaos` matrix cell generator. `fault` is a [`FaultKind::name`];
+    /// the victim and trigger point are seed-derived so different seeds
+    /// hit different reducers at different phases of the run.
+    pub fn seeded(fault: &str, seed: u64, reducers: usize) -> Result<Self, String> {
+        let mut s = seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut next = move || {
+            // splitmix64: tiny, seedable, no external deps
+            s = s.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            let mut z = s;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+            z ^ (z >> 31)
+        };
+        let reducer = (next() % reducers.max(1) as u64) as usize;
+        let after_steps = 8 + next() % 24;
+        let kind = match fault {
+            "kill" => FaultKind::Kill,
+            "slow" => FaultKind::Slow { factor: 2 + (next() % 3) as u32 },
+            "stall" => FaultKind::Stall { ticks: 30 + next() % 60 },
+            "drop" => FaultKind::DropReports { count: 1 + (next() % 3) as u32 },
+            other => return Err(format!("unknown fault kind '{other}'")),
+        };
+        Ok(ChaosPlan { events: vec![FaultEvent { reducer, after_steps, kind }] })
+    }
+
+    /// How many kills the plan schedules (the extra reducer-id capacity a
+    /// run must pre-allocate: every kill consumes one respawn id).
+    pub fn kill_count(&self) -> usize {
+        self.events.iter().filter(|e| e.kind == FaultKind::Kill).count()
+    }
+
+    /// Largest victim id any event targets.
+    pub fn max_victim(&self) -> Option<usize> {
+        self.events.iter().map(|e| e.reducer).max()
+    }
+}
+
+/// Chaos knobs a run carries (driver params / pipeline config).
+#[derive(Clone, Debug)]
+pub struct ChaosConfig {
+    /// The fault schedule.
+    pub plan: ChaosPlan,
+    /// Cut a checkpoint to a peer every N folded records per reducer.
+    /// Smaller = tighter replication lag = shorter WAL replays.
+    pub checkpoint_interval: u64,
+}
+
+impl ChaosConfig {
+    /// A plan with the default checkpoint cadence.
+    pub fn new(plan: ChaosPlan) -> Self {
+        ChaosConfig { plan, checkpoint_interval: 16 }
+    }
+}
+
+/// What the driver must do about a fault that just fired on its reducer.
+/// `Slow`/`DropReports` are absorbed inside the controller (they only
+/// change multipliers the hooks read); `Kill` and `Stall` need the
+/// scheduler's cooperation, so they surface here.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Fail-stop this reducer now (step boundary). The driver must not
+    /// process further envelopes on it and must clear its executor state.
+    Kill,
+    /// Pause this reducer (sim: reschedule `ticks` later; threads: sleep
+    /// that many ms), then resume normally.
+    Stall(u64),
+}
+
+/// A kill awaiting retire-and-respawn. Queued at kill time; the driver
+/// pops it once the §7 tracker is synchronized (membership surgery is
+/// illegal mid-epoch).
+#[derive(Clone, Copy, Debug)]
+pub struct Recovery {
+    /// The killed reducer id.
+    pub victim: usize,
+    /// Driver clock at the kill (recovery latency = done − this).
+    pub at: u64,
+}
+
+/// One entry of a reducer's write-ahead log, tagged with the checkpoint
+/// sequence number current at append time.
+#[derive(Clone, Debug)]
+enum WalEntry {
+    /// A record (or absorbed §7 transfer) folded into the state.
+    Fold { seq: u64, key: String, value: i64 },
+    /// A key extracted away by §7 state forwarding (its partial now lives
+    /// on another reducer — replaying it here would double count).
+    Extract { seq: u64, key: String },
+}
+
+/// A checkpoint installed on the replication lane.
+#[derive(Clone, Debug)]
+struct Installed {
+    seq: u64,
+    state: Vec<(String, i64)>,
+}
+
+/// Per-reducer-slot fault state, pre-allocated to the run's id capacity.
+struct Slot {
+    /// Fast-path gate: false once no events can ever fire on this slot.
+    armed: AtomicBool,
+    /// Data records folded so far (the fault trigger clock).
+    steps: AtomicU64,
+    /// Current reduce-cost multiplier (1 = healthy).
+    slow: AtomicU64,
+    /// Evaluated load reports still to swallow.
+    drop_reports: AtomicU64,
+    /// Fail-stopped?
+    killed: AtomicBool,
+    /// Checkpoint sequence number (entries tag with the current value;
+    /// a checkpoint with seq S covers exactly tags < S).
+    seq: AtomicU64,
+}
+
+impl Slot {
+    fn new(armed: bool) -> Self {
+        Slot {
+            armed: AtomicBool::new(armed),
+            steps: AtomicU64::new(0),
+            slow: AtomicU64::new(1),
+            drop_reports: AtomicU64::new(0),
+            killed: AtomicBool::new(false),
+            seq: AtomicU64::new(0),
+        }
+    }
+}
+
+/// The shared fault-injection and replication controller. One per run,
+/// `Arc`-shared between the drivers' reducer loops, the balancer's
+/// recovery sequence and [`ExecCore`](crate::runtime::exec::ExecCore)'s
+/// step function. All state goes through `crate::sync` so the hooks stay
+/// loom-modelable.
+pub struct ChaosController {
+    interval: u64,
+    slots: Vec<Slot>,
+    events: Mutex<Vec<FaultEvent>>,
+    queued: Mutex<Vec<Recovery>>,
+    /// Kills not yet fully recovered — quiescence gate for shutdown.
+    unrecovered: AtomicU64,
+    wal: Mutex<Vec<Vec<WalEntry>>>,
+    checkpoints: Mutex<Vec<Option<Installed>>>,
+    log: Mutex<Vec<FaultRecord>>,
+    latency: Histogram,
+    kills: AtomicU64,
+    respawns: AtomicU64,
+    checkpoints_cut: AtomicU64,
+    state_restored: AtomicU64,
+    wal_replayed: AtomicU64,
+    requeued: AtomicU64,
+}
+
+impl ChaosController {
+    /// Build the controller for a run with `capacity` reducer-id slots
+    /// (initial reducers + respawn/elastic headroom).
+    pub fn new(cfg: &ChaosConfig, capacity: usize) -> Self {
+        let slots = (0..capacity)
+            .map(|i| Slot::new(cfg.plan.events.iter().any(|e| e.reducer == i)))
+            .collect();
+        ChaosController {
+            interval: cfg.checkpoint_interval.max(1),
+            slots,
+            events: Mutex::new(cfg.plan.events.clone()),
+            queued: Mutex::new(Vec::new()),
+            unrecovered: AtomicU64::new(0),
+            wal: Mutex::new(vec![Vec::new(); capacity]),
+            checkpoints: Mutex::new(vec![None; capacity]),
+            log: Mutex::new(Vec::new()),
+            latency: Histogram::new(),
+            kills: AtomicU64::new(0),
+            respawns: AtomicU64::new(0),
+            checkpoints_cut: AtomicU64::new(0),
+            state_restored: AtomicU64::new(0),
+            wal_replayed: AtomicU64::new(0),
+            requeued: AtomicU64::new(0),
+        }
+    }
+
+    /// Check for a fault due on reducer `i` at driver time `now`.
+    /// `Slow`/`DropReports` are applied internally and return `None`;
+    /// `Kill`/`Stall` are returned for the scheduler to act on. At most
+    /// one action per call; remaining due events fire on later polls
+    /// (a killed slot's leftovers are discarded).
+    pub fn poll_fault(&self, i: usize, now: u64) -> Option<FaultAction> {
+        let slot = self.slots.get(i)?;
+        if !slot.armed.load(Ordering::Acquire) {
+            return None;
+        }
+        let steps = slot.steps.load(Ordering::Acquire);
+        let mut events = self.events.lock().unwrap();
+        let mut action = None;
+        let mut fired = Vec::new();
+        events.retain(|e| {
+            if e.reducer != i || action.is_some() {
+                return true;
+            }
+            if slot.killed.load(Ordering::Acquire) {
+                return false; // dead slots drop their leftover schedule
+            }
+            if steps < e.after_steps {
+                return true;
+            }
+            match e.kind {
+                FaultKind::Slow { factor } => {
+                    slot.slow.store(u64::from(factor), Ordering::Release);
+                }
+                FaultKind::DropReports { count } => {
+                    slot.drop_reports.fetch_add(u64::from(count), Ordering::AcqRel);
+                }
+                FaultKind::Stall { ticks } => action = Some(FaultAction::Stall(ticks)),
+                FaultKind::Kill => {
+                    slot.killed.store(true, Ordering::Release);
+                    self.kills.fetch_add(1, Ordering::Relaxed);
+                    self.unrecovered.fetch_add(1, Ordering::AcqRel);
+                    self.queued.lock().unwrap().push(Recovery { victim: i, at: now });
+                    action = Some(FaultAction::Kill);
+                }
+            }
+            fired.push(e.kind);
+            false
+        });
+        if !events.iter().any(|e| e.reducer == i) {
+            slot.armed.store(false, Ordering::Release);
+        }
+        drop(events);
+        if !fired.is_empty() {
+            let mut log = self.log.lock().unwrap();
+            for kind in fired {
+                log.push(FaultRecord { at: now, reducer: i, kind: kind.name().to_string() });
+            }
+        }
+        action
+    }
+
+    /// Log a folded data record on reducer `i` and advance its fault
+    /// clock. Returns true when a checkpoint is due (the caller cuts it
+    /// via [`begin_checkpoint`](Self::begin_checkpoint) + a snapshot
+    /// shipped over the peer's priority lane).
+    pub fn on_reduced(&self, i: usize, key: &str, value: i64) -> bool {
+        let slot = &self.slots[i];
+        let seq = slot.seq.load(Ordering::Acquire);
+        self.wal.lock().unwrap()[i].push(WalEntry::Fold {
+            seq,
+            key: key.to_string(),
+            value,
+        });
+        let steps = slot.steps.fetch_add(1, Ordering::AcqRel) + 1;
+        steps % self.interval == 0
+    }
+
+    /// Log a §7 state transfer absorbed by reducer `i` (also replayed on
+    /// recovery — absorbed partials are part of the victim's state).
+    pub fn on_absorbed(&self, i: usize, key: &str, value: i64) {
+        let slot = &self.slots[i];
+        let seq = slot.seq.load(Ordering::Acquire);
+        self.wal.lock().unwrap()[i].push(WalEntry::Fold {
+            seq,
+            key: key.to_string(),
+            value,
+        });
+    }
+
+    /// Log a key extracted away from reducer `i` by §7 forwarding: its
+    /// partial left, so a replay must remove it again.
+    pub fn on_extracted(&self, i: usize, key: &str) {
+        let slot = &self.slots[i];
+        let seq = slot.seq.load(Ordering::Acquire);
+        self.wal.lock().unwrap()[i].push(WalEntry::Extract { seq, key: key.to_string() });
+    }
+
+    /// Open checkpoint `seq+1` on reducer `i`: entries logged from now on
+    /// tag with the new sequence number and are NOT covered by the
+    /// snapshot the caller is about to cut. Returns the new sequence.
+    pub fn begin_checkpoint(&self, i: usize) -> u64 {
+        self.checkpoints_cut.fetch_add(1, Ordering::Relaxed);
+        self.slots[i].seq.fetch_add(1, Ordering::AcqRel) + 1
+    }
+
+    /// Install a checkpoint shipped over the transfer lane (higher seq
+    /// wins; the covered WAL prefix is pruned).
+    pub fn install_checkpoint(&self, origin: usize, seq: u64, state: Vec<(String, i64)>) {
+        let mut cps = self.checkpoints.lock().unwrap();
+        let cur = &mut cps[origin];
+        if cur.as_ref().is_some_and(|c| c.seq >= seq) {
+            return;
+        }
+        *cur = Some(Installed { seq, state });
+        drop(cps);
+        self.wal.lock().unwrap()[origin].retain(|e| match e {
+            WalEntry::Fold { seq: s, .. } | WalEntry::Extract { seq: s, .. } => *s >= seq,
+        });
+    }
+
+    /// Rebuild the victim's state at its kill boundary: newest installed
+    /// checkpoint + the WAL tail, replayed in order into a fresh executor
+    /// from the run's factory. The returned records are what the driver
+    /// re-homes as ordinary `Envelope::State` transfers.
+    pub fn recovered_state(&self, victim: usize, factory: &ReduceFactory) -> Vec<(String, i64)> {
+        let mut ghost = factory(victim);
+        let base_seq = {
+            let cps = self.checkpoints.lock().unwrap();
+            match &cps[victim] {
+                Some(cp) => {
+                    for (k, v) in &cp.state {
+                        ghost.absorb_key(k, *v);
+                    }
+                    cp.seq
+                }
+                None => 0,
+            }
+        };
+        let mut replayed = 0u64;
+        for entry in self.wal.lock().unwrap()[victim].iter() {
+            match entry {
+                WalEntry::Fold { seq, key, value } if *seq >= base_seq => {
+                    ghost.absorb_key(key, *value);
+                    replayed += 1;
+                }
+                WalEntry::Extract { seq, key } if *seq >= base_seq => {
+                    ghost.extract_key(key);
+                    replayed += 1;
+                }
+                _ => {}
+            }
+        }
+        self.wal_replayed.fetch_add(replayed, Ordering::Relaxed);
+        ghost.flush();
+        let state = ghost.snapshot();
+        self.state_restored.fetch_add(state.len() as u64, Ordering::Relaxed);
+        state
+    }
+
+    /// Current reduce-cost multiplier for reducer `i` (1 = healthy).
+    pub fn slow_factor(&self, i: usize) -> u64 {
+        self.slots.get(i).map_or(1, |s| s.slow.load(Ordering::Acquire))
+    }
+
+    /// Swallow one of reducer `i`'s evaluated load reports?
+    pub fn should_drop_report(&self, i: usize) -> bool {
+        let Some(slot) = self.slots.get(i) else { return false };
+        loop {
+            let n = slot.drop_reports.load(Ordering::Acquire);
+            if n == 0 {
+                return false;
+            }
+            if slot
+                .drop_reports
+                .compare_exchange(n, n - 1, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                return true;
+            }
+        }
+    }
+
+    /// Was reducer `i` fail-stopped? (A finished thread on a killed slot
+    /// is the fault model working, not a panic.)
+    pub fn was_killed(&self, i: usize) -> bool {
+        self.slots.get(i).is_some_and(|s| s.killed.load(Ordering::Acquire))
+    }
+
+    /// No kill is pending, due, or mid-recovery — the shutdown gates (sim
+    /// `reducer_can_stop`, threads balancer stop check) require this so a
+    /// run can't declare itself drained while a victim's state is still
+    /// in the replication lane. "Due" matters: a kill whose step
+    /// threshold has been crossed but whose victim has not polled yet
+    /// must hold the peers open, or they could exit in the instant before
+    /// the kill fires and leave nobody to absorb the recovered state.
+    pub fn quiescent(&self) -> bool {
+        if self.unrecovered.load(Ordering::Acquire) != 0 {
+            return false;
+        }
+        let events = self.events.lock().unwrap();
+        !events.iter().any(|e| {
+            e.kind == FaultKind::Kill
+                && self.slots.get(e.reducer).is_some_and(|s| {
+                    s.steps.load(Ordering::Acquire) >= e.after_steps
+                        && !s.killed.load(Ordering::Acquire)
+                })
+        })
+    }
+
+    /// Pop one queued recovery (the driver calls this only once the §7
+    /// tracker is synchronized). The quiescence gate stays up until
+    /// [`recovery_done`](Self::recovery_done).
+    pub fn take_recovery(&self) -> Option<Recovery> {
+        let mut q = self.queued.lock().unwrap();
+        if q.is_empty() {
+            None
+        } else {
+            Some(q.remove(0))
+        }
+    }
+
+    /// A kill is queued but not yet popped.
+    pub fn recovery_queued(&self) -> bool {
+        !self.queued.lock().unwrap().is_empty()
+    }
+
+    /// Retire-and-respawn for `victim` finished at driver time `now`
+    /// (kill happened at `at`): records the recovery latency and drops
+    /// the quiescence gate.
+    pub fn recovery_done(&self, at: u64, now: u64) {
+        self.respawns.fetch_add(1, Ordering::Relaxed);
+        self.latency.record(now.saturating_sub(at));
+        self.unrecovered.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    /// Count envelopes re-routed out of a dead reducer's queue.
+    pub fn note_requeued(&self, n: u64) {
+        self.requeued.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Freeze the run's fault history for the [`RunReport`]
+    /// (`fault_events`, `recovery` counts, recovery-latency percentiles).
+    ///
+    /// [`RunReport`]: crate::metrics::RunReport
+    pub fn summary(&self) -> (Vec<FaultRecord>, RecoveryCounts, Option<LatencyStats>) {
+        let events = self.log.lock().unwrap().clone();
+        let counts = RecoveryCounts {
+            kills: self.kills.load(Ordering::Relaxed),
+            respawns: self.respawns.load(Ordering::Relaxed),
+            checkpoints: self.checkpoints_cut.load(Ordering::Relaxed),
+            state_restored: self.state_restored.load(Ordering::Relaxed),
+            wal_replayed: self.wal_replayed.load(Ordering::Relaxed),
+            requeued: self.requeued.load(Ordering::Relaxed),
+        };
+        let latency = if self.latency.is_empty() { None } else { Some(self.latency.stats()) };
+        (events, counts, latency)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::builtin::WordCount;
+    use crate::sync::Arc;
+
+    fn factory() -> ReduceFactory {
+        Arc::new(|_| Box::new(WordCount::new()) as _)
+    }
+
+    #[test]
+    fn plan_spec_round_trips() {
+        let spec = "kill@1:40,slow:4@0:20,stall:80@2:10,drop:3@1:5";
+        let plan = ChaosPlan::parse(spec).unwrap();
+        assert_eq!(plan.events.len(), 4);
+        assert_eq!(plan.events[0].kind, FaultKind::Kill);
+        assert_eq!(plan.events[1].kind, FaultKind::Slow { factor: 4 });
+        assert_eq!(plan.events[2].kind, FaultKind::Stall { ticks: 80 });
+        assert_eq!(plan.events[3].kind, FaultKind::DropReports { count: 3 });
+        assert_eq!(plan.kill_count(), 1);
+        assert_eq!(plan.max_victim(), Some(2));
+        assert_eq!(ChaosPlan::parse(&plan.spec()).unwrap(), plan);
+    }
+
+    #[test]
+    fn plan_parse_rejects_malformed_specs() {
+        for bad in [
+            "kill",            // no target
+            "kill@1",          // no step count
+            "kill:2@1:5",      // kill takes no argument
+            "slow@1:5",        // slow needs a factor
+            "frob@1:5",        // unknown kind
+            "kill@x:5",        // bad reducer id
+            "kill@1:y",        // bad steps
+        ] {
+            assert!(ChaosPlan::parse(bad).is_err(), "'{bad}' should be rejected");
+        }
+        assert!(ChaosPlan::parse("").unwrap().events.is_empty());
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic_and_seed_sensitive() {
+        for fault in ["kill", "slow", "stall", "drop"] {
+            let a = ChaosPlan::seeded(fault, 7, 4).unwrap();
+            let b = ChaosPlan::seeded(fault, 7, 4).unwrap();
+            assert_eq!(a, b, "{fault}: same seed must reproduce");
+            assert_eq!(a.events.len(), 1);
+            assert!(a.events[0].reducer < 4);
+        }
+        let seeds: Vec<ChaosPlan> =
+            (0..16).map(|s| ChaosPlan::seeded("kill", s, 4).unwrap()).collect();
+        assert!(
+            seeds.windows(2).any(|w| w[0] != w[1]),
+            "16 consecutive seeds produced identical plans"
+        );
+        assert!(ChaosPlan::seeded("meteor", 0, 4).is_err());
+    }
+
+    #[test]
+    fn kill_fires_at_step_threshold_and_queues_recovery() {
+        let cfg = ChaosConfig::new(ChaosPlan::parse("kill@1:3").unwrap());
+        let c = ChaosController::new(&cfg, 4);
+        assert_eq!(c.poll_fault(1, 0), None, "not enough steps yet");
+        for step in 0..3 {
+            assert!(!c.on_reduced(1, &format!("k{step}"), 1));
+        }
+        assert_eq!(c.poll_fault(0, 5), None, "wrong reducer");
+        assert_eq!(c.poll_fault(1, 5), Some(FaultAction::Kill));
+        assert!(c.was_killed(1));
+        assert!(!c.quiescent());
+        assert!(c.recovery_queued());
+        let rec = c.take_recovery().unwrap();
+        assert_eq!((rec.victim, rec.at), (1, 5));
+        assert!(!c.quiescent(), "gate holds until recovery_done");
+        c.recovery_done(rec.at, 25);
+        assert!(c.quiescent());
+        let (events, counts, latency) = c.summary();
+        assert_eq!(events.len(), 1);
+        assert_eq!((counts.kills, counts.respawns), (1, 1));
+        assert_eq!(latency.unwrap().count, 1);
+    }
+
+    #[test]
+    fn slow_and_drop_apply_internally() {
+        let cfg = ChaosConfig::new(ChaosPlan::parse("slow:5@0:1,drop:2@0:1").unwrap());
+        let c = ChaosController::new(&cfg, 2);
+        assert_eq!(c.slow_factor(0), 1);
+        c.on_reduced(0, "k", 1);
+        assert_eq!(c.poll_fault(0, 0), None, "slow/drop absorb internally");
+        assert_eq!(c.poll_fault(0, 0), None);
+        assert_eq!(c.slow_factor(0), 5);
+        assert!(c.should_drop_report(0));
+        assert!(c.should_drop_report(0));
+        assert!(!c.should_drop_report(0), "budget of 2 exhausted");
+        assert!(c.quiescent(), "no kills: run may stop freely");
+    }
+
+    #[test]
+    fn recovery_replays_checkpoint_plus_wal_tail_exactly() {
+        let cfg = ChaosConfig { plan: ChaosPlan::default(), checkpoint_interval: 4 };
+        let c = ChaosController::new(&cfg, 2);
+        // 4 folds -> checkpoint due; cut it and install on the peer lane
+        for i in 0..4 {
+            let due = c.on_reduced(0, &format!("k{}", i % 2), 1);
+            assert_eq!(due, i == 3);
+        }
+        let seq = c.begin_checkpoint(0);
+        assert_eq!(seq, 1);
+        // the snapshot covering tags < 1 (k0: 2, k1: 2)
+        c.install_checkpoint(0, seq, vec![("k0".into(), 2), ("k1".into(), 2)]);
+        // post-checkpoint activity: folds, an absorbed transfer, an extract
+        c.on_reduced(0, "k0", 1);
+        c.on_absorbed(0, "k2", 7);
+        c.on_extracted(0, "k1");
+        let mut state = c.recovered_state(0, &factory());
+        state.sort();
+        assert_eq!(
+            state,
+            vec![("k0".to_string(), 3), ("k2".to_string(), 7)],
+            "checkpoint + tail replay must be exact (k1 extracted away)"
+        );
+        let (_, counts, _) = c.summary();
+        assert_eq!(counts.checkpoints, 1);
+        assert_eq!(counts.wal_replayed, 3, "only the >= seq tail replays");
+        assert_eq!(counts.state_restored, 2);
+    }
+
+    #[test]
+    fn recovery_without_any_checkpoint_replays_the_whole_wal() {
+        let cfg = ChaosConfig::new(ChaosPlan::default());
+        let c = ChaosController::new(&cfg, 1);
+        c.on_reduced(0, "a", 1);
+        c.on_reduced(0, "a", 1);
+        c.on_reduced(0, "b", 1);
+        let mut state = c.recovered_state(0, &factory());
+        state.sort();
+        assert_eq!(state, vec![("a".to_string(), 2), ("b".to_string(), 1)]);
+    }
+
+    #[test]
+    fn install_checkpoint_keeps_the_newest_and_prunes_the_wal() {
+        let cfg = ChaosConfig { plan: ChaosPlan::default(), checkpoint_interval: 2 };
+        let c = ChaosController::new(&cfg, 1);
+        c.on_reduced(0, "a", 1);
+        c.on_reduced(0, "a", 1);
+        let s1 = c.begin_checkpoint(0);
+        c.on_reduced(0, "a", 1);
+        c.on_reduced(0, "a", 1);
+        let s2 = c.begin_checkpoint(0);
+        assert_eq!((s1, s2), (1, 2));
+        c.install_checkpoint(0, s2, vec![("a".into(), 4)]);
+        // a stale checkpoint arriving late must not clobber the newer one
+        c.install_checkpoint(0, s1, vec![("a".into(), 2)]);
+        c.on_reduced(0, "a", 1);
+        let state = c.recovered_state(0, &factory());
+        assert_eq!(state, vec![("a".to_string(), 5)]);
+    }
+
+    #[test]
+    fn stall_is_one_shot() {
+        let cfg = ChaosConfig::new(ChaosPlan::parse("stall:40@0:0").unwrap());
+        let c = ChaosController::new(&cfg, 1);
+        assert_eq!(c.poll_fault(0, 0), Some(FaultAction::Stall(40)));
+        assert_eq!(c.poll_fault(0, 1), None, "stall consumed");
+    }
+}

@@ -11,6 +11,8 @@
 //! results (both equal to the serial word-count oracle) for the same
 //! workload × strategy × consistency mode.
 
+pub mod chaos;
+
 use crate::balancer::state_forward::ConsistencyMode;
 use crate::hash::Strategy;
 use crate::pipeline::{DriverKind, Pipeline, PipelineConfig};

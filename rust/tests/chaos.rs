@@ -1,0 +1,86 @@
+//! Chaos integration on the threads driver — the nondeterministic end of
+//! the fault-injection testkit. The deterministic sim-side equivalents
+//! live in `sim::tests`; the cross-driver kill-recovery parity row lives
+//! in `driver_parity.rs`.
+
+// experiment configs override one default knob at a time (see lib.rs)
+#![allow(clippy::field_reassign_with_default)]
+
+use dpa::balancer::state_forward::ConsistencyMode;
+use dpa::hash::Strategy;
+use dpa::pipeline::{DriverKind, Pipeline, PipelineConfig};
+use dpa::testkit::chaos::ChaosPlan;
+use dpa::testkit::wordcount_oracle;
+
+fn uniform_items(n: usize, keys: usize) -> Vec<String> {
+    (0..n).map(|i| format!("k{}", i % keys)).collect()
+}
+
+#[test]
+fn threads_stall_longer_than_pop_timeout_is_not_mistaken_for_shutdown() {
+    // ISSUE 9 satellite fix: a chaos Stall parks a reducer for far
+    // longer than the queue-poll timeout. The peers' pop_timeout-based
+    // loops and the balancer thread's drain/quorum checks must consult
+    // the live-and-not-faulted set instead of reading the silence as
+    // idle shutdown (or a panicked thread): the run completes with the
+    // exact answer rather than hanging or stopping early.
+    let items = uniform_items(300, 29);
+    let oracle = wordcount_oracle(&items);
+    let mut cfg = PipelineConfig::default();
+    cfg.driver = DriverKind::Threads;
+    cfg.strategy = Strategy::Doubling;
+    cfg.initial_tokens = Some(8);
+    cfg.mode = ConsistencyMode::StateForward;
+    cfg.chaos = Some("stall:40@1:5,stall:40@1:25".into());
+    cfg.pop_timeout_ms = 2; // each stall is 20× the poll timeout
+    cfg.reduce_delay_us = 100;
+    let r = Pipeline::wordcount(cfg).run(items.clone()).unwrap();
+    r.check_conservation().unwrap();
+    assert_eq!(r.result, oracle, "stalls changed the answer");
+    assert_eq!(r.recovery.kills, 0);
+    assert_eq!(r.fault_events.len(), 2, "fault log wrong: {:?}", r.fault_events);
+}
+
+#[test]
+fn threads_kill_loses_zero_state_with_checkpointing() {
+    // ISSUE 9 acceptance: a mid-run kill on real threads loses nothing —
+    // the victim's folded partials come back from the peer-held
+    // checkpoint plus WAL tail replay, and the respawned reducer picks
+    // up the re-homed keys through the §7 transfer lane.
+    let items = uniform_items(400, 29);
+    let oracle = wordcount_oracle(&items);
+    let mut cfg = PipelineConfig::default();
+    cfg.driver = DriverKind::Threads;
+    cfg.strategy = Strategy::TwoChoices;
+    cfg.mode = ConsistencyMode::StateForward;
+    cfg.max_rounds = 2;
+    cfg.chaos = Some("kill@0:12".into());
+    cfg.checkpoint_interval = 4;
+    cfg.reduce_delay_us = 150;
+    let r = Pipeline::wordcount(cfg).run(items.clone()).unwrap();
+    r.check_conservation().unwrap();
+    assert_eq!(r.result, oracle, "the kill lost or duplicated state");
+    assert_eq!(r.recovery.kills, 1, "the scheduled kill never fired");
+    assert_eq!(r.recovery.respawns, 1, "the victim never respawned");
+    assert!(r.recovery.checkpoints >= 1, "the checkpoint lane was never used");
+    assert!(
+        r.recovery.state_restored > 0 || r.recovery.wal_replayed > 0,
+        "recovery rebuilt no state at all: {:?}",
+        r.recovery
+    );
+    assert!(r.recovery_latency.is_some(), "no recovery latency recorded");
+}
+
+#[test]
+fn seeded_plans_are_deterministic() {
+    // the `dpa chaos` matrix relies on seed → plan being a pure function
+    for fault in ["kill", "slow", "stall", "drop"] {
+        for seed in 0..4 {
+            let a = ChaosPlan::seeded(fault, seed, 4).unwrap();
+            let b = ChaosPlan::seeded(fault, seed, 4).unwrap();
+            assert_eq!(a.spec(), b.spec(), "{fault} seed {seed}");
+            assert!(a.max_victim().unwrap() < 4);
+        }
+    }
+    assert!(ChaosPlan::seeded("explode", 0, 4).is_err());
+}

@@ -172,6 +172,37 @@ fn elastic_scale_schedule_parity_state_forward_wl1() {
 }
 
 #[test]
+fn mid_run_reducer_kill_recovers_and_matches_the_no_fault_oracle() {
+    // ISSUE 9 tentpole: a reducer killed mid-run under §7 state
+    // forwarding recovers via retire + respawn with checkpoint restore —
+    // on BOTH drivers — and the merged output still equals the serial
+    // oracle, i.e. the answer a fault-free run produces.
+    let items: Vec<String> = (0..400).map(|i| format!("k{}", i % 29)).collect();
+    let oracle = wordcount_oracle(&items);
+    for driver in [DriverKind::Sim, DriverKind::Threads] {
+        let mut cfg = PipelineConfig::default();
+        cfg.driver = driver;
+        cfg.strategy = Strategy::Doubling;
+        cfg.initial_tokens = Some(8); // dense ring: every reducer folds plenty
+        cfg.mode = ConsistencyMode::StateForward;
+        cfg.max_rounds = 2;
+        cfg.chaos = Some("kill@2:10".into());
+        cfg.checkpoint_interval = 4;
+        if driver == DriverKind::Threads {
+            cfg.reduce_delay_us = 150;
+        }
+        let r = Pipeline::wordcount(cfg).run(items.clone()).unwrap();
+        r.check_conservation().unwrap();
+        assert_eq!(r.result, oracle, "{driver:?}: kill-recovery run diverged from the oracle");
+        assert_eq!(r.recovery.kills, 1, "{driver:?}: the scheduled kill never fired");
+        assert_eq!(r.recovery.respawns, 1, "{driver:?}: the victim never respawned");
+        assert!(r.recovery_latency.is_some(), "{driver:?}: no recovery latency recorded");
+        assert_eq!(r.fault_events.len(), 1, "{driver:?}: fault log wrong: {:?}", r.fault_events);
+        assert_eq!(r.fault_events[0].reducer, 2);
+    }
+}
+
+#[test]
 fn shared_input_runs_do_not_clone_per_seed() {
     // run_seeds shares one Arc'd input across seeds; results stay exact
     let w = paperwl::wl4();

@@ -7,6 +7,7 @@
 #![allow(clippy::field_reassign_with_default)]
 
 use dpa::balancer::policy::{LbPolicy, ThresholdPolicy};
+use dpa::balancer::state_forward::ConsistencyMode;
 use dpa::hash::{murmur3_x86_32, Ring, RingOp, RouterHandle, Strategy, StrategySpec};
 use dpa::metrics::skew;
 use dpa::pipeline::{Pipeline, PipelineConfig};
@@ -629,6 +630,56 @@ fn prop_pipeline_correct_on_random_workloads() {
         let mut expect: Vec<(String, i64)> = oracle.into_iter().collect();
         expect.sort();
         prop_assert!(r.result == expect, "result mismatch on {n} items");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_slow_stall_plans_never_change_the_answer() {
+    // ISSUE 9 satellite: any chaos plan made only of Slow / Stall /
+    // DropReports events perturbs the *schedule*, never the data — the
+    // merged output must equal the no-fault serial oracle for every
+    // random plan, under either consistency mode.
+    forall("slow/stall-only chaos plans preserve output", 10, |g| {
+        let n = g.usize_in(50, 300);
+        let keyspace = g.usize_in(5, 40);
+        let items: Vec<String> =
+            (0..n).map(|_| format!("k{}", g.usize_in(0, keyspace))).collect();
+        let reducers = 4;
+        let mut plan = Vec::new();
+        for _ in 0..g.usize_in(1, 4) {
+            let victim = g.usize_in(0, reducers - 1);
+            let steps = g.usize_in(1, 30);
+            plan.push(match g.usize_in(0, 2) {
+                0 => format!("slow:{}@{victim}:{steps}", 2 + g.usize_in(0, 4)),
+                1 => format!("stall:{}@{victim}:{steps}", 10 + g.usize_in(0, 80)),
+                _ => format!("drop:{}@{victim}:{steps}", 1 + g.usize_in(0, 3)),
+            });
+        }
+        let spec = plan.join(",");
+        let mut cfg = PipelineConfig::default();
+        cfg.strategy = Strategy::Doubling;
+        cfg.initial_tokens = Some(8);
+        cfg.mode = if g.bool() {
+            ConsistencyMode::StateForward
+        } else {
+            ConsistencyMode::MergeAtEnd
+        };
+        cfg.seed = g.u64();
+        cfg.max_rounds = 1 + g.usize_in(0, 2) as u32;
+        cfg.chaos = Some(spec.clone());
+        let r = Pipeline::wordcount(cfg)
+            .run(items.clone())
+            .map_err(|e| format!("pipeline error under plan '{spec}': {e}"))?;
+        r.check_conservation()?;
+        let mut oracle = std::collections::HashMap::new();
+        for i in &items {
+            *oracle.entry(i.clone()).or_insert(0i64) += 1;
+        }
+        let mut expect: Vec<(String, i64)> = oracle.into_iter().collect();
+        expect.sort();
+        prop_assert!(r.result == expect, "plan '{spec}' changed the answer");
+        prop_assert!(r.recovery.kills == 0, "plan '{spec}' reported a kill");
         Ok(())
     });
 }
