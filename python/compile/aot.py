@@ -5,8 +5,9 @@ Run once at build time (``make artifacts``):
     cd python && python -m compile.aot --out ../artifacts
 
 Emits ``hash_only.hlo.txt``, ``route.hlo.txt``, ``route_probe.hlo.txt``,
-``route_assign.hlo.txt``, ``reduce_count.hlo.txt``, ``merge_state.hlo.txt``
-and ``manifest.json`` (the static shapes rust pads batches to).
+``route_assign.hlo.txt``, ``route_table.hlo.txt``, ``reduce_count.hlo.txt``,
+``merge_state.hlo.txt`` and ``manifest.json`` (the static shapes rust pads
+batches to).
 
 HLO **text**, not ``.serialize()``: jax >= 0.5 emits HloModuleProto with
 64-bit instruction ids which the image's xla_extension 0.5.1 rejects
@@ -32,6 +33,7 @@ V = 4096  # vocab slots per reducer
 P = 64    # node/position capacity (route_probe tables, route_assign loads)
 K = 8     # probe capacity (route_probe unrolls this many seeded probes)
 A = 4096  # sticky-assignment table capacity (route_assign)
+PT = 1024  # partition-table capacity (route_table; max 2^B table entries)
 
 
 def to_hlo_text(lowered, return_tuple=True) -> str:
@@ -93,6 +95,15 @@ def programs():
                 spec((), i32),
             ),
         ),
+        "route_table": (
+            model.route_table,
+            (
+                spec((B, W), u32),
+                spec((B,), i32),
+                spec((PT,), i32),
+                spec((), i32),
+            ),
+        ),
         "reduce_count": (model.reduce_count, (spec((V,), u32), spec((B,), i32))),
         "merge_state": (model.merge_state, (spec((V,), u32), spec((V,), u32))),
     }
@@ -129,7 +140,10 @@ def main() -> None:
     # AV = route_assign ABI version: 2 added the live-node-id tensors
     # (elastic membership); rust treats AV < 2 artifacts' route_assign as
     # unsupported and routes two-choices scalar instead of shape-erroring
-    manifest = {"B": B, "W": W, "T": T, "V": V, "P": P, "K": K, "A": A, "AV": 2}
+    manifest = {
+        "B": B, "W": W, "T": T, "V": V, "P": P, "K": K, "A": A, "AV": 2,
+        "PT": PT,
+    }
     mpath = os.path.join(args.out, "manifest.json")
     with open(mpath, "w") as f:
         json.dump(manifest, f)

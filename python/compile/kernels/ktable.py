@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: flat partition-table routing (ptable router).
+
+The rust `PartitionTableRouter` (`rust/src/hash/ptable.rs`) routes a key
+by one indexed load: the top ``bits`` bits of the 32-bit key hash select
+a partition, and a flat ``2^bits``-entry table maps the partition to its
+primary node — no ring walk, no probing. This kernel is the batched,
+compiled form of that gather and must agree bit-for-bit with the scalar
+implementation (`rust/tests/xla_parity.rs` pins the two against each
+other through the AOT artifact).
+
+Contract (shared with `rust/src/runtime/programs.rs::snapshot_tensors`):
+
+- ``table``: the partition→node table, ``2^bits`` live entries padded to
+  the static ``PT`` capacity with ``0``. Only the first ``2^bits``
+  entries are ever gathered (the partition index is ``hash >> (32 -
+  bits)`` < ``2^bits``), so the padding value is unobservable.
+- ``bits``: scalar i32 partition bit count, ``1 ≤ bits`` and ``2^bits ≤
+  PT`` (rust checks the table length against the manifest's PT before
+  calling).
+
+TPU shape notes (§Hardware-Adaptation in DESIGN.md): per block this is a
+``(TB,)`` shift plus one ``(TB,)`` gather from a VMEM-resident table
+(PT=1024 → 4 KiB) — strictly cheaper than any other route family.
+``interpret=True``: the CPU PJRT plugin cannot execute Mosaic
+custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(hash_ref, table_ref, bits_ref, out_ref):
+    h = hash_ref[...]                       # (TB,) uint32 key hashes
+    table = table_ref[...]                  # (PT,) int32 partition owners
+    bits = bits_ref[0]                      # int32 partition bit count
+    shift = jnp.uint32(32) - bits.astype(jnp.uint32)
+    part = jnp.right_shift(h, shift).astype(jnp.int32)
+    out_ref[...] = table[part]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def ktable_kernel(hashes, table, bits, *, block_b=64):
+    """Batched partition-table owner lookup via ``pl.pallas_call``.
+
+    ``hashes``: (B,) uint32 key hashes; ``table``: (PT,) padded
+    partition→node table; ``bits``: scalar i32 partition bit count. B
+    must be a multiple of ``block_b``.
+    """
+    (b,) = hashes.shape
+    assert b % block_b == 0, f"batch {b} not a multiple of block {block_b}"
+    pt_cap = table.shape[0]
+    grid = (b // block_b,)
+    full = lambda i: (0,)  # noqa: E731 — whole-table blocks, every step
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((pt_cap,), full),
+            pl.BlockSpec((1,), full),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(
+        hashes,
+        jnp.asarray(table, jnp.int32),
+        jnp.reshape(jnp.asarray(bits, jnp.int32), (1,)),
+    )

@@ -91,6 +91,20 @@ def kprobe_ref(hashes, pos_hashes, pos_nodes, pos_len, overloaded, probes):
     return np.array(out, dtype=np.int32)
 
 
+def ktable_ref(hashes, table, bits):
+    """Plain-python partition-table routing — a transcription of rust's
+    ``PartitionTableRouter::route`` (``table[hash >> (32 - bits)]``, one
+    indexed load per key)."""
+    import numpy as np
+
+    bits = int(bits)
+    tbl = [int(x) for x in np.asarray(table)]
+    out = []
+    for h in np.asarray(hashes):
+        out.append(tbl[(int(h) & MASK) >> (32 - bits)])
+    return np.array(out, dtype=np.int32)
+
+
 def assign_ref(hashes, keys, owners, live, loads, live_nodes, n_live):
     """Plain-python sticky-table lookup with the two-choices first-sight
     fallback on frozen loads over the live node id list — mirrors rust's

@@ -1,6 +1,6 @@
 """L2: the JAX data-plane programs lowered to the rust runtime.
 
-Six programs (shapes fixed at AOT time, see ``aot.py``):
+Seven programs (shapes fixed at AOT time, see ``aot.py``):
 
 - ``hash_only(words, lens)``                      -> (hashes,)
 - ``route(words, lens, ring_hashes, ring_owners, ring_len)``
@@ -9,14 +9,16 @@ Six programs (shapes fixed at AOT time, see ``aot.py``):
   probes)``                                       -> (hashes, owners)
 - ``route_assign(words, lens, keys, owners, live, loads, live_nodes,
   n_live)``                                       -> (hashes, owners)
+- ``route_table(words, lens, table, bits)``       -> (hashes, owners)
 - ``reduce_count(counts, ids)``                   -> (counts',)
 - ``merge_state(a, b)``                           -> (a + b,)
 
-The three ``route*`` programs compose the L1 murmur3 Pallas kernel with
+The four ``route*`` programs compose the L1 murmur3 Pallas kernel with
 one lookup per router family (`rust/src/hash/router.rs`): ``route``
 serves the token-ring family, ``route_probe`` the multi-probe family
 (`kernels/kprobe.py`), ``route_assign`` the two-choices sticky table
-(`kernels/assign.py`). In each case the routing state is a *runtime
+(`kernels/assign.py`), ``route_table`` the flat partition table
+(`kernels/ktable.py`, one gather per key). In each case the routing state is a *runtime
 input* — padded tables plus live lengths — so one compiled executable
 serves every epoch the load balancer publishes; the rust side
 (`runtime::programs::snapshot_tensors`) just feeds the current
@@ -34,6 +36,7 @@ import jax.numpy as jnp
 from .kernels.assign import assign_kernel
 from .kernels.histogram import histogram_kernel
 from .kernels.kprobe import kprobe_kernel
+from .kernels.ktable import ktable_kernel
 from .kernels.murmur3 import murmur3_kernel
 
 
@@ -81,6 +84,17 @@ def route_assign(words, lens, keys, owners, live, loads, live_nodes, n_live):
     hashes = murmur3_kernel(words, lens)
     out = assign_kernel(hashes, keys, owners, live, loads, live_nodes, n_live)
     return hashes, out
+
+
+def route_table(words, lens, table, bits):
+    """Hash + flat-table gather: the partition-table decision, batched.
+
+    ``table`` is the padded partition→node table and ``bits`` the
+    partition bit count; the owner is ``table[hash >> (32 - bits)]`` —
+    one indexed load, no search."""
+    hashes = murmur3_kernel(words, lens)
+    owners = ktable_kernel(hashes, table, bits)
+    return hashes, owners
 
 
 def reduce_count(counts, ids):

@@ -1,0 +1,118 @@
+"""Partition-table kernel vs the plain-python transcription of rust's
+``PartitionTableRouter::route``: boundary partitions, non-default bit
+counts, stale-epoch tables, gapped live node ids."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.ktable import ktable_kernel
+from compile.kernels.ref import ktable_ref, murmur3_py
+
+PT_CAP = 1024
+BLOCK = 64
+
+
+def run(hashes, table, bits, pt_cap=PT_CAP):
+    """Pad inputs to kernel shapes and run one batch."""
+    tbl = np.zeros(pt_cap, np.int32)
+    tbl[: len(table)] = np.asarray(table, np.int32)
+    b = max(BLOCK, -(-len(hashes) // BLOCK) * BLOCK)
+    hs = np.zeros(b, np.uint32)
+    hs[: len(hashes)] = np.asarray(hashes, np.uint32)
+    got = ktable_kernel(jnp.asarray(hs), jnp.asarray(tbl), jnp.int32(bits))
+    ref = ktable_ref(hs, tbl, bits)
+    return np.array(got)[: len(hashes)], ref[: len(hashes)]
+
+
+def round_robin_table(bits, nodes):
+    """Rust's fresh-table layout: partition p starts on node p % n."""
+    return [p % nodes for p in range(1 << bits)]
+
+
+def test_matches_reference_default_bits():
+    table = round_robin_table(10, 7)
+    hashes = [murmur3_py(f"key-{i}".encode()) for i in range(200)]
+    got, ref = run(hashes, table, bits=10)
+    np.testing.assert_array_equal(got, ref)
+    assert len(set(got.tolist())) > 1, "table routing collapsed to one node"
+
+
+def test_partition_boundaries_are_exact():
+    # hashes straddling every partition edge: hash >> (32-B) must floor
+    # into the lower partition at edge-1 and the upper at the edge
+    bits = 6
+    table = round_robin_table(bits, 5)
+    width = 1 << (32 - bits)
+    hashes = []
+    for p in range(1 << bits):
+        edge = p * width
+        hashes += [edge, edge + 1, edge + width - 1]
+    got, ref = run(hashes, table, bits=bits)
+    np.testing.assert_array_equal(got, ref)
+    # first/last hash of partition p land on table[p]
+    expect = np.repeat(np.asarray(table, np.int32), 3)
+    np.testing.assert_array_equal(got, expect)
+
+
+@pytest.mark.parametrize("bits", [1, 2, 4, 8, 10])
+def test_non_default_bit_counts(bits):
+    table = round_robin_table(bits, 3)
+    hashes = [murmur3_py(f"key-{i}".encode()) for i in range(100)]
+    got, ref = run(hashes, table, bits=bits)
+    np.testing.assert_array_equal(got, ref)
+    assert set(got.tolist()) <= {0, 1, 2}
+
+
+def test_extreme_hashes():
+    table = round_robin_table(10, 4)
+    got, ref = run([0, 1, 0x7FFFFFFF, 0x80000000, 0xFFFFFFFE, 0xFFFFFFFF],
+                   table, bits=10)
+    np.testing.assert_array_equal(got, ref)
+    assert got[0] == table[0], "hash 0 is partition 0"
+    assert got[-1] == table[-1], "hash MAX is the last partition"
+
+
+def test_stale_epoch_table_still_gathers_exactly():
+    # a rebalanced (non-round-robin) table from an older epoch: the
+    # kernel must gather whatever owners the snapshot froze, not recompute
+    rng = np.random.default_rng(7)
+    table = rng.integers(0, 9, 1 << 10).astype(np.int32)
+    hashes = rng.integers(0, 2**32, 2 * BLOCK).astype(np.uint32)
+    got, ref = run(hashes, table, bits=10)
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_gapped_live_node_ids():
+    # after retire_node the table holds non-contiguous ids (e.g. node 1
+    # retired): routing must surface the exact surviving ids
+    table = [[0, 2, 3][p % 3] for p in range(1 << 8)]
+    hashes = [murmur3_py(f"key-{i}".encode()) for i in range(150)]
+    got, ref = run(hashes, table, bits=8)
+    np.testing.assert_array_equal(got, ref)
+    assert set(got.tolist()) <= {0, 2, 3}
+    assert 1 not in got.tolist()
+
+
+def test_padding_is_unobservable():
+    # entries past 2^bits can hold anything — no hash reaches them
+    bits = 4
+    table = np.full(PT_CAP, 99, np.int32)
+    table[: 1 << bits] = round_robin_table(bits, 3)
+    hashes = np.asarray(
+        [murmur3_py(f"key-{i}".encode()) for i in range(100)]
+        + [0xFFFFFFFF], np.uint32)
+    got, ref = run(hashes, table, bits=bits)
+    np.testing.assert_array_equal(got, ref)
+    assert not np.any(got == 99), "gather escaped the live table prefix"
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_matches_reference_random(seed):
+    rng = np.random.default_rng(seed)
+    bits = int(rng.integers(1, 11))
+    nodes = int(rng.integers(1, 17))
+    table = rng.integers(0, nodes, 1 << bits).astype(np.int32)
+    hashes = rng.integers(0, 2**32, BLOCK).astype(np.uint32)
+    got, ref = run(hashes, table, bits=bits)
+    np.testing.assert_array_equal(got, ref)

@@ -138,6 +138,10 @@ fn main() {
         Strategy::Doubling,
         Strategy::MultiProbe { probes: dpa::hash::DEFAULT_PROBES },
         Strategy::TwoChoices,
+        Strategy::Ptable {
+            bits: dpa::hash::DEFAULT_PTABLE_BITS,
+            replicas: dpa::hash::DEFAULT_PTABLE_REPLICAS,
+        },
     ];
     // uniform vs skew: same length, same synthetic key space — the skewed
     // stream hammers one reducer's queue and the sticky table's hot keys,

@@ -490,11 +490,10 @@ mod tests {
         use crate::metrics::MembershipChange;
         let cfg =
             ElasticConfig { scale_up: 4.0, scale_down: 1.0, min_reducers: 2, max_reducers: 4 };
-        let router = RouterHandle::with_signal_capacity(
-            Strategy::Doubling.build_router(2, 8, None),
-            &crate::balancer::signal::SignalConfig::legacy(),
-            cfg.max_reducers,
-        );
+        let router = RouterHandle::builder(Strategy::Doubling.build_router(2, 8, None))
+            .signal(&crate::balancer::signal::SignalConfig::legacy())
+            .capacity(cfg.max_reducers)
+            .build();
         let mut b = BalancerCore::new(router, Strategy::Doubling, 0.2, 4, 1, 10)
             .with_elastic(ElasticController::from_watermarks(cfg, 10))
             .without_warmup();
@@ -522,11 +521,10 @@ mod tests {
     #[test]
     fn replace_faulted_retires_and_respawns_in_one_surgery() {
         use crate::metrics::MembershipChange;
-        let router = RouterHandle::with_signal_capacity(
-            Strategy::Doubling.build_router(4, 8, Some(1)),
-            &crate::balancer::signal::SignalConfig::default(),
-            6,
-        );
+        let router = RouterHandle::builder(Strategy::Doubling.build_router(4, 8, Some(1)))
+            .signal(&crate::balancer::signal::SignalConfig::default())
+            .capacity(6)
+            .build();
         let mut b =
             BalancerCore::new(router, Strategy::Doubling, 0.2, 4, 1, 10).without_warmup();
         b.observe(2, 50);
@@ -588,10 +586,9 @@ mod tests {
     fn observe_feeds_the_decayed_signal() {
         use crate::balancer::signal::{FRAC_BITS, SignalConfig};
         let cfg = SignalConfig { decay_alpha: 0.5, hysteresis: 0.0, min_gain: 0.0 };
-        let router = RouterHandle::with_signal(
-            Strategy::TwoChoices.build_router(4, 8, None),
-            &cfg,
-        );
+        let router = RouterHandle::builder(Strategy::TwoChoices.build_router(4, 8, None))
+            .signal(&cfg)
+            .build();
         let mut b =
             BalancerCore::new(router, Strategy::TwoChoices, 0.2, 4, 1, 10).without_warmup();
         b.observe(2, 100);

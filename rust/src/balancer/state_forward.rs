@@ -108,6 +108,11 @@ pub struct StageTracker {
     /// drain/quorum checks consult this set so a stalled-but-alive reducer
     /// is counted and a dead one is not.
     faulted: Vec<AtomicBool>,
+    /// Failure-domain map (slot → zone;
+    /// [`effective_zone`](crate::hash::effective_zone) resolves slots the
+    /// map does not name). Installed once by [`Self::set_zones`] before
+    /// the tracker is shared; empty = no zones configured.
+    zones: Vec<u32>,
 }
 
 impl StageTracker {
@@ -130,7 +135,16 @@ impl StageTracker {
             extracted_count: AtomicUsize::new(reducers),
             transfers: AtomicU64::new(0),
             faulted: (0..capacity).map(|_| AtomicBool::new(false)).collect(),
+            zones: Vec::new(),
         }
+    }
+
+    /// Install the failure-domain map (`&mut` — called once at build
+    /// time, before the tracker is shared across threads). The
+    /// checkpoint-to-peer destination pick ([`Self::next_live_peer`])
+    /// then prefers a cross-zone replica.
+    pub fn set_zones(&mut self, zone_of: &[u32]) {
+        self.zones = zone_of.to_vec();
     }
 
     pub fn stage(&self) -> Stage {
@@ -300,15 +314,24 @@ impl StageTracker {
         self.outstanding.load(Ordering::SeqCst) == 0
     }
 
-    /// Smallest live (active, not faulted) slot other than `i` — the
-    /// checkpoint-to-peer destination. `None` when `i` is the only
-    /// survivor (the checkpoint then installs locally).
+    /// Live (active, not faulted) slot other than `i` to hold `i`'s
+    /// checkpoint replica: the smallest live slot in a *different*
+    /// failure domain when one exists (a zone outage then cannot take
+    /// both the primary and its replica), else the smallest live slot.
+    /// With no zones configured every slot is its own singleton domain,
+    /// so the preference degrades exactly to the historical
+    /// smallest-live-peer pick. `None` when `i` is the only survivor
+    /// (the checkpoint then installs locally).
     pub fn next_live_peer(&self, i: usize) -> Option<usize> {
-        (0..self.active.len()).find(|&j| {
+        let live = |j: usize| {
             j != i
                 && self.active[j].load(Ordering::SeqCst)
                 && !self.faulted[j].load(Ordering::SeqCst)
-        })
+        };
+        let zone_i = crate::hash::effective_zone(&self.zones, i);
+        (0..self.active.len())
+            .find(|&j| live(j) && crate::hash::effective_zone(&self.zones, j) != zone_i)
+            .or_else(|| (0..self.active.len()).find(|&j| live(j)))
     }
 
     /// Number of active (spawned) reducer slots.
@@ -480,6 +503,26 @@ mod tests {
         assert_eq!(t.next_live_peer(0), None, "slot 3 never activated");
         t.activate(3);
         assert_eq!(t.next_live_peer(0), Some(3));
+    }
+
+    #[test]
+    fn next_live_peer_prefers_a_cross_zone_replica() {
+        // zones {0,1} and {2,3}: reducer 0's checkpoint must leave its
+        // failure domain even though slot 1 is the smaller live peer
+        let mut t = StageTracker::with_capacity(4, 4, 1);
+        t.set_zones(&[0, 0, 1, 1]);
+        assert_eq!(t.next_live_peer(0), Some(2));
+        assert_eq!(t.next_live_peer(2), Some(0));
+        // the whole other zone dies → fall back to the same-zone peer
+        t.retire_faulted(2);
+        t.retire_faulted(3);
+        assert_eq!(t.next_live_peer(0), Some(1), "same-zone beats no replica");
+        // a slot beyond the zone map gets a singleton domain, so it
+        // counts as cross-zone for everyone
+        let mut t = StageTracker::with_capacity(2, 3, 1);
+        t.set_zones(&[0, 0]);
+        t.activate(2);
+        assert_eq!(t.next_live_peer(0), Some(2));
     }
 
     #[test]

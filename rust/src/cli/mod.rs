@@ -47,7 +47,8 @@ USAGE:
 OPTIONS (table1):
   --seeds N         runs per cell (mean)                     [default: 3]
   --strategies L    comma list of strategies to compare
-                    (halving|doubling|multiprobe[:K]|twochoices|splitkey[:D])
+                    (halving|doubling|multiprobe[:K]|twochoices|splitkey[:D]|
+                     ptable[:B][:R]; unknown names are a hard error)
                                                   [default: halving,doubling]
   --throughput      add hot-path columns to the LB runs: records/sec
                     (host wall clock) and p50/p99 per-record latency
@@ -59,13 +60,16 @@ OPTIONS (chaos):
   --faults L        comma list of kill|slow|stall|drop         [default: kill,slow,stall]
   --strategies L    router families under test
                                       [default: doubling,multiprobe,twochoices]
+  --zones SPEC      failure-domain map, `;`-separated zone groups of
+                    `,`-separated reducer ids (e.g. \"0,1;2,3\");
+                    checkpoint replicas prefer a cross-zone peer
   --json PATH       also write the matrix as flat JSON
 
 OPTIONS (run):
   --workload WL     wl1|wl2|wl3|wl4|wl5|zipf|uniform|corpus|hot or a trace
                     file path                                [default: wl4]
   --strategy S      none|halving|doubling|multiprobe[:K]|twochoices|
-                    splitkey[:D]                             [default: doubling]
+                    splitkey[:D]|ptable[:B][:R]              [default: doubling]
   --rounds N        max LB rounds per reducer                [default: 1]
   --tau F           Eq.1 threshold τ                         [default: 0.2]
   --split-watermark F
@@ -92,6 +96,9 @@ OPTIONS (run):
   --checkpoint-interval N
                     chaos replication cadence: checkpoint to a peer
                     every N folded records per reducer     [default: 16]
+  --zones SPEC      failure-domain map (see chaos above); zone-aware
+                    strategies (ptable[:B][:R]) place replicas across
+                    distinct zones
   --config PATH     TOML config file (see configs/)
   --save-trace PATH write the workload to a trace file
   --quiet           one-line report
@@ -108,6 +115,7 @@ pub enum Command {
         items: usize,
         faults: Vec<String>,
         strategies: Vec<Strategy>,
+        zones: Option<String>,
         json: Option<PathBuf>,
     },
     Workloads,
@@ -189,9 +197,13 @@ pub fn parse(argv: &[String]) -> crate::Result<Command> {
             if strategies.is_empty() {
                 bail!("--strategies needs at least one strategy");
             }
+            let zones = args.take_opt("zones");
+            if let Some(z) = &zones {
+                crate::hash::parse_zone_spec(z).map_err(anyhow::Error::msg)?;
+            }
             let json = args.take_opt("json").map(PathBuf::from);
             args.finish()?;
-            Ok(Command::Chaos { seeds, items, faults, strategies, json })
+            Ok(Command::Chaos { seeds, items, faults, strategies, zones, json })
         }
         "run" => {
             let mut cfg = PipelineConfig::default();
@@ -254,6 +266,9 @@ pub fn parse(argv: &[String]) -> crate::Result<Command> {
             }
             if let Some(v) = args.take_opt_parse("checkpoint-interval")? {
                 cfg.checkpoint_interval = v;
+            }
+            if let Some(v) = args.take_opt("zones") {
+                cfg.zones = Some(v);
             }
             let executor = match args.take_opt("executor").as_deref() {
                 None | Some("wordcount") => ExecutorKind::WordCount,
@@ -359,8 +374,9 @@ pub fn execute(cmd: Command) -> crate::Result<i32> {
             print!("{out}");
             Ok(i32::from(!ok))
         }
-        Command::Chaos { seeds, items, faults, strategies, json } => {
-            let (out, report_json, ok) = chaos_demo(seeds, items, &faults, &strategies)?;
+        Command::Chaos { seeds, items, faults, strategies, zones, json } => {
+            let (out, report_json, ok) =
+                chaos_demo(seeds, items, &faults, &strategies, zones.as_deref())?;
             print!("{out}");
             if let Some(path) = json {
                 std::fs::write(&path, report_json)
@@ -488,6 +504,7 @@ pub fn chaos_demo(
     items: usize,
     faults: &[String],
     strategies: &[Strategy],
+    zones: Option<&str>,
 ) -> crate::Result<(String, String, bool)> {
     let mut ok = true;
     let mut out = format!(
@@ -523,6 +540,7 @@ pub fn chaos_demo(
                 base.seed = seed;
                 base.chaos = Some(plan.spec());
                 base.checkpoint_interval = 8;
+                base.zones = zones.map(str::to_string);
                 let w = generators::uniform(items, 60, seed);
                 let oracle = {
                     let mut m = std::collections::HashMap::new();
@@ -1029,8 +1047,9 @@ mod tests {
     #[test]
     fn parse_chaos_command() {
         match parse(&sv(&["chaos"])).unwrap() {
-            Command::Chaos { seeds, items, faults, strategies, json } => {
+            Command::Chaos { seeds, items, faults, strategies, zones, json } => {
                 assert_eq!(seeds, 2);
+                assert!(zones.is_none());
                 assert_eq!(items, 400);
                 assert_eq!(faults, vec!["kill", "slow", "stall"]);
                 assert_eq!(
@@ -1061,8 +1080,9 @@ mod tests {
         ]))
         .unwrap();
         match cmd {
-            Command::Chaos { seeds, items, faults, strategies, json } => {
+            Command::Chaos { seeds, items, faults, strategies, zones, json } => {
                 assert_eq!((seeds, items), (1, 200));
+                assert!(zones.is_none());
                 assert_eq!(faults, vec!["drop"]);
                 assert_eq!(strategies, vec![Strategy::Halving]);
                 assert_eq!(json, Some(PathBuf::from("out.json")));
@@ -1096,7 +1116,8 @@ mod tests {
         // one slow-fault cell on the doubling family, both drivers: the
         // answer must match the oracle and the fault must actually fire
         let faults = vec!["slow".to_string()];
-        let (out, json, ok) = chaos_demo(1, 300, &faults, &[Strategy::Doubling]).unwrap();
+        let (out, json, ok) =
+            chaos_demo(1, 300, &faults, &[Strategy::Doubling], None).unwrap();
         assert!(ok, "{out}");
         assert!(json.contains("\"cells\": 1"), "{json}");
         assert!(json.contains("\"failures\": 0"), "{json}");

@@ -13,23 +13,30 @@
 //! [`router`] lifts the routing/redistribution surface into the pluggable
 //! [`Router`] trait: the token ring is one implementation
 //! ([`TokenRingRouter`]) next to multi-probe hashing
-//! ([`MultiProbeRouter`]), power-of-two-choices ([`TwoChoicesRouter`])
-//! and d-way partial key grouping ([`SplitKeyRouter`], the one family
-//! with an [`MergeContract::Associative`] merge contract); [`strategy`]
+//! ([`MultiProbeRouter`]), power-of-two-choices ([`TwoChoicesRouter`]),
+//! d-way partial key grouping ([`SplitKeyRouter`], the one family
+//! with an [`MergeContract::Associative`] merge contract) and the O(1)
+//! flat partition table ([`PartitionTableRouter`], one indexed load per
+//! route, zone-aware replica placement); [`strategy`]
 //! holds the parsed specs that construct them. `docs/ROUTING.md` is the
 //! family-by-family decision guide.
 
 pub mod murmur3;
+pub mod ptable;
 pub mod ring;
 pub mod router;
 pub mod strategy;
 
 pub use murmur3::murmur3_x86_32;
+pub use ptable::{
+    effective_zone, parse_zone_spec, PartitionTableRouter, DEFAULT_PTABLE_BITS,
+    DEFAULT_PTABLE_REPLICAS, MAX_PTABLE_BITS, MAX_PTABLE_REPLICAS, ZONE_UNSET,
+};
 pub use ring::{Ring, SharedRing, Token};
 pub use router::{
     probe_route, split_candidates_in, two_choices_candidates, two_choices_candidates_in,
     AssignTable, Loads, MergeContract, MultiProbeRouter, RingOp, RouteDelta, RouteSnapshot,
-    Router, RouterCache, RouterHandle, SnapshotState, SplitKeyRouter, TokenRingRouter,
-    TwoChoicesRouter, MAX_SPLIT_D, SPLIT_SENTINEL,
+    Router, RouterBuilder, RouterCache, RouterHandle, SnapshotState, SplitKeyRouter,
+    TokenRingRouter, TwoChoicesRouter, MAX_SPLIT_D, SPLIT_SENTINEL,
 };
-pub use strategy::{Strategy, StrategySpec, DEFAULT_PROBES, DEFAULT_SPLIT_D};
+pub use strategy::{ParseStrategyError, Strategy, StrategySpec, DEFAULT_PROBES, DEFAULT_SPLIT_D};

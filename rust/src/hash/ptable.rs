@@ -1,0 +1,727 @@
+//! O(1) partition-table routing with zone-aware replica placement —
+//! the production alternative to walking a consistent-hash ring.
+//!
+//! A [`PartitionTableRouter`] holds a flat `2^B`-entry partition→node
+//! table (Garage's ring simulator is the exemplar): routing is **one
+//! indexed load**, `table[hash >> (32 - B)]`, with no ring walk, no
+//! probe loop and no argmin. Rebalancing, elastic membership changes and
+//! chaos surgeries all become *table rewrites* with provable movement
+//! bounds:
+//!
+//! * the router maintains the **ownership invariant** that every live
+//!   node owns at most `ceil(2^B / live)` partitions;
+//! * [`Router::add_node`] moves exactly `floor(2^B / n)` partitions —
+//!   all of them *to* the joiner, taken from the currently
+//!   largest-owning survivors (preferring ones flagged overloaded at the
+//!   last redistribute), so survivors never exchange partitions among
+//!   themselves;
+//! * [`Router::retire_node`] moves exactly the victim's partitions —
+//!   `<= ceil(2^B / n)` by the invariant — promoting each partition's
+//!   first live backup replica (cross-zone by placement) when one has
+//!   quota headroom;
+//! * [`Router::redistribute`] sheds up to half of the overloaded node's
+//!   partitions — hottest first, per a per-partition hit sketch — onto
+//!   the coldest non-overloaded receivers, swapping a cold partition
+//!   back when the receiver is already at quota so the invariant
+//!   survives load shedding too. Moves are gated by the signal's
+//!   migration-gain guard, and the hysteresis overload flags are frozen
+//!   per epoch exactly like [`MultiProbeRouter`](super::MultiProbeRouter).
+//!
+//! **Zones.** An optional `zone_of` map (node id → failure-domain index,
+//! `balancer.zones` / `--zones`) makes the R-replica placement walk
+//! *distinct zones first*, Garage's datacenter-aware walk: a partition's
+//! backup replicas land in different failure domains than its primary
+//! whenever the live topology allows, so checkpoint-to-peer recovery
+//! (PR 9) survives a whole zone going dark. Nodes absent from the map
+//! (e.g. chaos respawns beyond the configured topology) get a unique
+//! singleton zone, which keeps every preference rule vacuously correct.
+//!
+//! Reads always route to the **primary** (`table[p]`); backups are
+//! checkpoint/recovery targets, never read targets, so the compiled
+//! lowering ([`SnapshotState::Table`]) ships only the primary table.
+
+#![forbid(unsafe_code)]
+#![warn(missing_docs)]
+
+use std::cmp::Reverse;
+
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::Arc;
+
+use super::murmur3::murmur3_x86_32_seed;
+use super::router::{Loads, RouteDelta, RouteSnapshot, Router, SnapshotState};
+
+/// Default partition bits `B` (`ptable` with no parameter): 1024
+/// partitions — comfortably finer than any realistic reducer count, and
+/// exactly the compiled artifacts' `PT` capacity.
+pub const DEFAULT_PTABLE_BITS: u32 = 10;
+
+/// Default replication factor `R`: primaries only, no backups.
+pub const DEFAULT_PTABLE_REPLICAS: u32 = 1;
+
+/// Largest supported `B` (a 2^16-entry table is 256 KiB of `u32`s;
+/// anything coarser than 2^1 cannot split load at all).
+pub const MAX_PTABLE_BITS: u32 = 16;
+
+/// Largest supported replication factor `R`.
+pub const MAX_PTABLE_REPLICAS: u32 = 4;
+
+/// Sentinel for an unplaceable backup slot (fewer live nodes than `R`).
+const BACKUP_NONE: u32 = u32::MAX;
+
+/// Sentinel inside a parsed zone map for a node no zone group names.
+pub const ZONE_UNSET: u32 = u32::MAX;
+
+/// The failure domain of node `id` under a (possibly partial) zone map:
+/// the configured zone index when the map names the node, otherwise a
+/// unique singleton zone derived from the id. Unconfigured nodes — and
+/// every node when no zones are configured at all — therefore never
+/// share a domain, which makes zone-preference rules (cross-zone
+/// checkpoint peers, distinct-zone replica walks) degrade *exactly* to
+/// the pre-zones behavior instead of needing a special case.
+#[inline]
+pub fn effective_zone(zone_of: &[u32], id: usize) -> u32 {
+    match zone_of.get(id) {
+        Some(&z) if z != ZONE_UNSET => z,
+        _ => ZONE_UNSET - 1 - (id as u32),
+    }
+}
+
+/// Parse the CLI/TOML zone grammar: zone groups separated by `;`, node
+/// ids inside a group separated by `,` — `"0,1;2,3"` puts nodes 0 and 1
+/// in zone 0 and nodes 2 and 3 in zone 1 (the `toml_lite` subset has no
+/// arrays, so `balancer.zones` is this string). Returns the
+/// node-id-indexed zone map ([`ZONE_UNSET`] for ids no group names).
+/// Rejects empty groups, unparsable ids and a node named by two zones.
+pub fn parse_zone_spec(s: &str) -> Result<Vec<u32>, String> {
+    let mut zone_of: Vec<u32> = Vec::new();
+    for (zi, group) in s.split(';').enumerate() {
+        let group = group.trim();
+        if group.is_empty() {
+            return Err(format!("zone spec '{s}': empty zone group"));
+        }
+        for tok in group.split(',') {
+            let tok = tok.trim();
+            let id: usize = tok
+                .parse()
+                .map_err(|_| format!("zone spec '{s}': bad node id '{tok}'"))?;
+            if id >= 4096 {
+                return Err(format!("zone spec '{s}': node id {id} unreasonably large"));
+            }
+            if zone_of.len() <= id {
+                zone_of.resize(id + 1, ZONE_UNSET);
+            }
+            if zone_of[id] != ZONE_UNSET {
+                return Err(format!("zone spec '{s}': node {id} appears in two zones"));
+            }
+            zone_of[id] = zi as u32;
+        }
+    }
+    Ok(zone_of)
+}
+
+/// Garage-style fixed-table router: `2^B` partitions, each owned by one
+/// primary node (and `R - 1` backup replicas placed across distinct
+/// zones). See the module docs for the rewrite invariants.
+#[derive(Clone)]
+pub struct PartitionTableRouter {
+    /// Partition bits: the table has `1 << bits` entries.
+    bits: u32,
+    /// Replication factor `R` (primary + `R - 1` backups).
+    replicas: u32,
+    /// Partition → primary node id (the routing function).
+    table: Vec<u32>,
+    /// Partition → backup node ids, flat with stride `replicas - 1`
+    /// ([`BACKUP_NONE`] when the live set is too small). Empty for R=1.
+    backups: Vec<u32>,
+    /// Dense id space; retired ids stay allocated but unroutable.
+    live: Vec<bool>,
+    /// Node id → failure-domain index (may be shorter than the id
+    /// space; [`effective_zone`] resolves the gaps).
+    zones: Vec<u32>,
+    /// Hysteresis overload flags frozen at the last redistribute — the
+    /// membership rewrites' "prefer shedding from hot nodes" signal.
+    overloaded: Vec<bool>,
+    /// Per-partition record hits (Relaxed statistics, shared across
+    /// clones like the split router's sketch): tells redistribute which
+    /// of an overloaded node's partitions actually carry the heat.
+    hits: Arc<Vec<AtomicU64>>,
+    epoch: u64,
+}
+
+impl PartitionTableRouter {
+    /// `nodes` live primaries over `1 << bits` partitions with `replicas`
+    /// total placements per partition. The initial table deals partitions
+    /// round-robin, so every node starts within the ownership quota.
+    pub fn new(nodes: usize, bits: u32, replicas: u32) -> Self {
+        assert!(nodes > 0, "partition-table router needs at least one node");
+        assert!(
+            (1..=MAX_PTABLE_BITS).contains(&bits),
+            "partition bits must be in 1..={MAX_PTABLE_BITS}, got {bits}"
+        );
+        assert!(
+            (1..=MAX_PTABLE_REPLICAS).contains(&replicas),
+            "replication factor must be in 1..={MAX_PTABLE_REPLICAS}, got {replicas}"
+        );
+        let partitions = 1usize << bits;
+        let mut r = PartitionTableRouter {
+            bits,
+            replicas,
+            table: (0..partitions).map(|p| (p % nodes) as u32).collect(),
+            backups: Vec::new(),
+            live: vec![true; nodes],
+            zones: Vec::new(),
+            overloaded: vec![false; nodes],
+            hits: Arc::new((0..partitions).map(|_| AtomicU64::new(0)).collect()),
+            epoch: 1,
+        };
+        r.rebuild_backups();
+        r
+    }
+
+    /// The partition a key hash falls in: the hash's top `B` bits.
+    #[inline]
+    pub fn partition_of(&self, hash: u32) -> usize {
+        (hash >> (32 - self.bits)) as usize
+    }
+
+    /// Number of partitions (`1 << bits`).
+    pub fn partitions(&self) -> usize {
+        self.table.len()
+    }
+
+    /// Configured partition bits `B`.
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Configured replication factor `R`.
+    pub fn replication(&self) -> u32 {
+        self.replicas
+    }
+
+    /// The ownership ceiling: `ceil(2^B / live_count)` — no live node
+    /// ever owns more primaries than this, which is what bounds every
+    /// membership rewrite's movement.
+    pub fn quota(&self) -> usize {
+        self.table.len().div_ceil(self.live_count().max(1))
+    }
+
+    /// Primary owner of partition `p`.
+    pub fn owner_of(&self, p: usize) -> usize {
+        self.table[p] as usize
+    }
+
+    /// Full placement of partition `p`: primary first, then the live
+    /// backup replicas in walk order (fewer than `R` entries when the
+    /// live set is too small to place them all).
+    pub fn replicas_of(&self, p: usize) -> Vec<usize> {
+        let mut out = vec![self.table[p] as usize];
+        let stride = (self.replicas as usize).saturating_sub(1);
+        for s in 0..stride {
+            let b = self.backups[p * stride + s];
+            if b != BACKUP_NONE {
+                out.push(b as usize);
+            }
+        }
+        out
+    }
+
+    /// Primaries owned per node id (retired ids own zero).
+    pub fn partition_counts(&self) -> Vec<usize> {
+        let mut c = vec![0usize; self.live.len()];
+        for &n in &self.table {
+            c[n as usize] += 1;
+        }
+        c
+    }
+
+    /// Ascending live node ids.
+    fn live_ids(&self) -> Vec<u32> {
+        (0..self.live.len() as u32)
+            .filter(|&n| self.live[n as usize])
+            .collect()
+    }
+
+    /// Recompute every partition's backup replicas from scratch. Backups
+    /// are checkpoint targets, not read targets, so a wholesale rebuild
+    /// after a membership change costs nothing on the hot path. The walk
+    /// per partition: candidates (live nodes minus the primary) ordered
+    /// by a per-`(partition, node)` hash — a deterministic pseudo-random
+    /// ring walk — picked **distinct zones first** (Garage's
+    /// datacenter-aware rule), then distinct nodes once zones are
+    /// exhausted.
+    fn rebuild_backups(&mut self) {
+        let stride = (self.replicas as usize).saturating_sub(1);
+        if stride == 0 {
+            self.backups = Vec::new();
+            return;
+        }
+        let live = self.live_ids();
+        let mut backups = vec![BACKUP_NONE; self.table.len() * stride];
+        for p in 0..self.table.len() {
+            let primary = self.table[p];
+            let mut cands: Vec<(u32, u32)> = live
+                .iter()
+                .filter(|&&n| n != primary)
+                .map(|&n| {
+                    (murmur3_x86_32_seed(&(p as u32).to_le_bytes(), 0x9E37_79B9 ^ n), n)
+                })
+                .collect();
+            cands.sort_unstable();
+            let mut used_zones = vec![effective_zone(&self.zones, primary as usize)];
+            let mut picked: Vec<u32> = Vec::with_capacity(stride);
+            for &(_, n) in &cands {
+                if picked.len() == stride {
+                    break;
+                }
+                let z = effective_zone(&self.zones, n as usize);
+                if !used_zones.contains(&z) {
+                    used_zones.push(z);
+                    picked.push(n);
+                }
+            }
+            for &(_, n) in &cands {
+                if picked.len() == stride {
+                    break;
+                }
+                if !picked.contains(&n) {
+                    picked.push(n);
+                }
+            }
+            for (i, n) in picked.into_iter().enumerate() {
+                backups[p * stride + i] = n;
+            }
+        }
+        self.backups = backups;
+    }
+
+    /// Halve every hit counter so stale heat decays across LB rounds
+    /// (the split router's sketch discipline).
+    fn decay_hits(&self) {
+        for h in self.hits.iter() {
+            let cur = h.load(Ordering::Relaxed);
+            if cur != 0 {
+                h.store(cur >> 1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+impl Router for PartitionTableRouter {
+    fn name(&self) -> &'static str {
+        "partition-table"
+    }
+
+    fn nodes(&self) -> usize {
+        self.live.len()
+    }
+
+    fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    fn route(&self, hash: u32, _loads: &Loads) -> usize {
+        let p = self.partition_of(hash);
+        // Relaxed statistics only — the hit sketch never affects the
+        // routing decision, so routing stays a pure function of
+        // (hash, epoch)
+        self.hits[p].fetch_add(1, Ordering::Relaxed);
+        self.table[p] as usize
+    }
+
+    fn redistribute(&mut self, target: usize, loads: &Loads) -> RouteDelta {
+        if target >= self.live.len() || !self.live[target] {
+            return RouteDelta::unchanged();
+        }
+        let mut flags = loads.flags_vec();
+        flags.resize(self.live.len(), false);
+        let quota = self.quota();
+        let mut counts = self.partition_counts();
+        // coldest-first receivers: live, not the target, not overloaded
+        let mut receivers: Vec<usize> = (0..self.live.len())
+            .filter(|&n| n != target && self.live[n] && !flags[n])
+            .collect();
+        receivers.sort_unstable_by_key(|&n| (loads.decayed(n), n));
+        if receivers.is_empty() {
+            self.decay_hits();
+            return RouteDelta::unchanged();
+        }
+        // hottest partitions of the target first: the flags say which
+        // NODE is hot, the sketch says which of its partitions are
+        let mut owned: Vec<usize> = (0..self.table.len())
+            .filter(|&p| self.table[p] as usize == target)
+            .collect();
+        owned.sort_unstable_by_key(|&p| (Reverse(self.hits[p].load(Ordering::Relaxed)), p));
+        let shed = owned.len().div_ceil(2);
+        let mut moved = 0u64;
+        for (i, &p) in owned.iter().take(shed).enumerate() {
+            // round-robin over the cold receivers so the shed load
+            // spreads instead of dog-piling the single coldest node
+            let r = receivers[i % receivers.len()];
+            if !loads.migration_gain_ok(target, r) {
+                continue;
+            }
+            if counts[r] < quota {
+                self.table[p] = r as u32;
+                counts[target] -= 1;
+                counts[r] += 1;
+                moved += 1;
+            } else {
+                // receiver already at quota: swap its coldest partition
+                // back so the ownership invariant survives load shedding
+                let back = (0..self.table.len())
+                    .filter(|&q| self.table[q] as usize == r)
+                    .min_by_key(|&q| (self.hits[q].load(Ordering::Relaxed), q));
+                let Some(q) = back else { continue };
+                self.table[p] = r as u32;
+                self.table[q] = target as u32;
+                moved += 2;
+            }
+        }
+        self.decay_hits();
+        if moved == 0 {
+            return RouteDelta::unchanged();
+        }
+        self.overloaded = flags;
+        self.rebuild_backups();
+        self.epoch += 1;
+        RouteDelta { changed: true, partitions_moved: moved, ..RouteDelta::default() }
+    }
+
+    fn add_node(&mut self, id: usize) -> RouteDelta {
+        assert_eq!(id, self.live.len(), "node ids are dense and never reused");
+        self.live.push(true);
+        self.overloaded.push(false);
+        // the joiner claims exactly floor(2^B / n) partitions — within
+        // the ceil(2^B / n) movement bound — taken one at a time from
+        // the currently largest-owning survivor (preferring survivors
+        // flagged overloaded at the last redistribute), which provably
+        // leaves every survivor at or under the new quota. No partition
+        // moves between survivors.
+        let need = self.table.len() / self.live_count();
+        let mut counts = self.partition_counts();
+        let mut moved = 0u64;
+        for _ in 0..need {
+            let donor = (0..self.live.len())
+                .filter(|&d| d != id && self.live[d] && counts[d] > 0)
+                .min_by_key(|&d| (Reverse(counts[d]), Reverse(self.overloaded[d]), d));
+            let Some(d) = donor else { break };
+            // hand the joiner the donor's hottest partition: the joiner
+            // is the coldest node by construction
+            let p = (0..self.table.len())
+                .filter(|&p| self.table[p] as usize == d)
+                .min_by_key(|&p| (Reverse(self.hits[p].load(Ordering::Relaxed)), p))
+                .expect("donor owns at least one partition");
+            self.table[p] = id as u32;
+            counts[d] -= 1;
+            counts[id] += 1;
+            moved += 1;
+        }
+        self.rebuild_backups();
+        self.epoch += 1;
+        RouteDelta {
+            changed: true,
+            nodes_added: 1,
+            partitions_moved: moved,
+            ..RouteDelta::default()
+        }
+    }
+
+    fn retire_node(&mut self, id: usize, loads: &Loads) -> RouteDelta {
+        if id >= self.live.len() || !self.live[id] {
+            return RouteDelta::unchanged(); // already retired
+        }
+        if self.live_count() <= 1 {
+            return RouteDelta::unchanged(); // the last live node must stay
+        }
+        self.live[id] = false;
+        self.overloaded[id] = false;
+        // only the victim's partitions move — <= ceil(2^B / n) of them
+        // by the ownership invariant. Each prefers promotion of its
+        // first live backup replica (cross-zone by placement, so the
+        // checkpoint that recovery replays is already there), falling
+        // back to the least-loaded under-quota survivor.
+        let quota = self.quota();
+        let mut counts = self.partition_counts();
+        let orphans: Vec<usize> = (0..self.table.len())
+            .filter(|&p| self.table[p] as usize == id)
+            .collect();
+        let stride = (self.replicas as usize).saturating_sub(1);
+        let mut moved = 0u64;
+        for p in orphans {
+            let mut dest: Option<usize> = None;
+            for s in 0..stride {
+                let b = self.backups[p * stride + s];
+                if b == BACKUP_NONE {
+                    continue;
+                }
+                let b = b as usize;
+                if self.live[b] && counts[b] < quota {
+                    dest = Some(b);
+                    break;
+                }
+            }
+            let dest = dest.or_else(|| {
+                (0..self.live.len())
+                    .filter(|&n| self.live[n] && counts[n] < quota)
+                    .min_by_key(|&n| (self.overloaded[n], loads.decayed(n), n))
+            });
+            // an under-quota survivor always exists: live nodes all at
+            // quota could absorb the whole table, contradiction while
+            // orphans remain
+            let Some(dst) = dest else { break };
+            self.table[p] = dst as u32;
+            counts[id] -= 1;
+            counts[dst] += 1;
+            moved += 1;
+        }
+        self.rebuild_backups();
+        self.epoch += 1;
+        RouteDelta {
+            changed: true,
+            nodes_retired: 1,
+            partitions_moved: moved,
+            ..RouteDelta::default()
+        }
+    }
+
+    fn is_live(&self, id: usize) -> bool {
+        id < self.live.len() && self.live[id]
+    }
+
+    fn live_count(&self) -> usize {
+        self.live.iter().filter(|&&l| l).count()
+    }
+
+    fn snapshot(&self, _loads: &Loads) -> RouteSnapshot {
+        RouteSnapshot {
+            router: self.name(),
+            epoch: self.epoch,
+            nodes: self.live.len(),
+            state: SnapshotState::Table { table: self.table.clone(), bits: self.bits },
+        }
+    }
+
+    fn set_zones(&mut self, zone_of: &[u32]) {
+        self.zones = zone_of.to_vec();
+        // primaries are untouched — zones shape only the backup walk —
+        // but placement changed, so downstream caches must re-snapshot
+        self.rebuild_backups();
+        self.epoch += 1;
+    }
+
+    fn clone_router(&self) -> Box<dyn Router> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loads(n: usize) -> Loads {
+        Loads::new(n)
+    }
+
+    #[test]
+    fn routes_by_top_bits_and_stays_within_quota() {
+        let r = PartitionTableRouter::new(4, 10, 1);
+        let l = loads(4);
+        for hash in [0u32, 0xFFFF_FFFF, 0x8000_0000, 0xDEAD_BEEF, 0x0042_4242] {
+            let p = (hash >> 22) as usize;
+            assert_eq!(r.route(hash, &l), r.owner_of(p), "hash {hash:#x}");
+        }
+        let quota = r.quota();
+        assert_eq!(quota, 256);
+        for (n, &c) in r.partition_counts().iter().enumerate() {
+            assert!(c <= quota, "node {n} over quota: {c} > {quota}");
+            assert!(c > 0, "node {n} owns nothing");
+        }
+    }
+
+    #[test]
+    fn add_node_moves_at_most_quota_and_only_to_the_joiner() {
+        let mut r = PartitionTableRouter::new(3, 10, 1);
+        let before = r.table.clone();
+        let d = r.add_node(3);
+        assert!(d.changed);
+        assert_eq!(d.nodes_added, 1);
+        let bound = 1024usize.div_ceil(4);
+        assert!(
+            (d.partitions_moved as usize) <= bound,
+            "moved {} > ceil(2^B/n) = {bound}",
+            d.partitions_moved
+        );
+        let mut moved = 0usize;
+        for (p, (&a, &b)) in r.table.iter().zip(&before).enumerate() {
+            if a != b {
+                moved += 1;
+                assert_eq!(a, 3, "partition {p} moved between survivors: {b} -> {a}");
+            }
+        }
+        assert_eq!(moved as u64, d.partitions_moved);
+        let quota = r.quota();
+        for (n, &c) in r.partition_counts().iter().enumerate() {
+            assert!(c <= quota, "node {n} over quota after join: {c} > {quota}");
+        }
+    }
+
+    #[test]
+    fn retire_node_moves_only_the_victims_partitions() {
+        let mut r = PartitionTableRouter::new(4, 8, 1);
+        let l = loads(4);
+        let before = r.table.clone();
+        let victim_owned = r.partition_counts()[1];
+        let d = r.retire_node(1, &l);
+        assert!(d.changed);
+        assert_eq!(d.nodes_retired, 1);
+        assert_eq!(d.partitions_moved as usize, victim_owned);
+        let bound = 256usize.div_ceil(4); // n includes the leaving node
+        assert!(victim_owned <= bound);
+        for (p, (&a, &b)) in r.table.iter().zip(&before).enumerate() {
+            if b == 1 {
+                assert_ne!(a, 1, "partition {p} still on the retired node");
+            } else {
+                assert_eq!(a, b, "partition {p} moved between survivors");
+            }
+        }
+        assert!(!r.is_live(1));
+        assert_eq!(r.live_count(), 3);
+        // double retire is a no-op
+        assert!(!r.retire_node(1, &l).changed);
+    }
+
+    #[test]
+    fn last_live_node_cannot_retire() {
+        let mut r = PartitionTableRouter::new(1, 4, 1);
+        assert!(!r.retire_node(0, &loads(1)).changed);
+    }
+
+    #[test]
+    fn redistribute_sheds_hot_partitions_and_keeps_the_quota_invariant() {
+        let mut r = PartitionTableRouter::new(4, 10, 1);
+        let l = loads(4);
+        // heat up node 0's partitions so the sketch has signal
+        for p in 0..r.partitions() {
+            if r.owner_of(p) == 0 {
+                r.hits[p].store(50, Ordering::Relaxed);
+            }
+        }
+        l.set(0, 100);
+        let before = r.partition_counts()[0];
+        let e0 = r.epoch();
+        let d = r.redistribute(0, &l);
+        assert!(d.changed);
+        assert!(d.partitions_moved > 0);
+        assert!(r.epoch() > e0);
+        let counts = r.partition_counts();
+        assert!(counts[0] < before, "hot node did not shed: {counts:?}");
+        let quota = r.quota();
+        for (n, &c) in counts.iter().enumerate() {
+            assert!(c <= quota, "node {n} over quota after shed: {c} > {quota}");
+        }
+        // routing stays deterministic within the new epoch
+        let a = r.route(0xABCD_EF01, &l);
+        assert_eq!(r.route(0xABCD_EF01, &l), a);
+    }
+
+    #[test]
+    fn redistribute_of_a_retired_target_is_a_no_op() {
+        let mut r = PartitionTableRouter::new(3, 6, 1);
+        let l = loads(3);
+        r.retire_node(2, &l);
+        assert!(!r.redistribute(2, &l).changed);
+    }
+
+    #[test]
+    fn replica_walk_prefers_distinct_zones() {
+        let mut r = PartitionTableRouter::new(4, 6, 2);
+        r.set_zones(&parse_zone_spec("0,1;2,3").unwrap());
+        for p in 0..r.partitions() {
+            let placement = r.replicas_of(p);
+            assert_eq!(placement.len(), 2, "partition {p} missing a backup");
+            let zones: Vec<u32> = placement
+                .iter()
+                .map(|&n| effective_zone(&parse_zone_spec("0,1;2,3").unwrap(), n))
+                .collect();
+            assert_ne!(zones[0], zones[1], "partition {p} replicas co-located: {placement:?}");
+        }
+    }
+
+    #[test]
+    fn retire_promotes_a_backup_replica_when_it_has_headroom() {
+        let mut r = PartitionTableRouter::new(4, 6, 2);
+        r.set_zones(&parse_zone_spec("0,1;2,3").unwrap());
+        let l = loads(4);
+        // record each orphan's backup before the surgery
+        let orphans: Vec<(usize, Vec<usize>)> = (0..r.partitions())
+            .filter(|&p| r.owner_of(p) == 0)
+            .map(|p| (p, r.replicas_of(p)))
+            .collect();
+        let d = r.retire_node(0, &l);
+        assert!(d.changed);
+        let quota = r.quota();
+        let mut promoted = 0usize;
+        for (p, placement) in orphans {
+            let new_owner = r.owner_of(p);
+            assert!(r.is_live(new_owner));
+            if placement.len() > 1 && new_owner == placement[1] {
+                promoted += 1;
+            }
+        }
+        assert!(promoted > 0, "no orphan promoted its cross-zone backup");
+        for (n, &c) in r.partition_counts().iter().enumerate() {
+            assert!(c <= quota, "node {n} over quota after promotion: {c}");
+        }
+    }
+
+    #[test]
+    fn unconfigured_nodes_get_singleton_zones() {
+        let zones = parse_zone_spec("0,1").unwrap();
+        assert_eq!(effective_zone(&zones, 0), 0);
+        assert_eq!(effective_zone(&zones, 1), 0);
+        let a = effective_zone(&zones, 2);
+        let b = effective_zone(&zones, 3);
+        assert_ne!(a, b, "two unconfigured nodes share a zone");
+        assert_ne!(a, 0);
+        assert_eq!(effective_zone(&[], 5), effective_zone(&[], 5), "deterministic");
+    }
+
+    #[test]
+    fn zone_spec_parser_rejects_garbage() {
+        assert!(parse_zone_spec("0,1;;2").is_err(), "empty group");
+        assert!(parse_zone_spec("0,x").is_err(), "bad id");
+        assert!(parse_zone_spec("0,1;1,2").is_err(), "node in two zones");
+        assert_eq!(parse_zone_spec("2").unwrap(), vec![ZONE_UNSET, ZONE_UNSET, 0]);
+    }
+
+    #[test]
+    fn elastic_churn_preserves_invariants_across_a_long_schedule() {
+        let mut r = PartitionTableRouter::new(2, 10, 2);
+        let l = Loads::with_capacity(2, 8, &crate::balancer::signal::SignalConfig::legacy());
+        let mut next_id = 2usize;
+        for step in 0..6 {
+            if step % 2 == 0 {
+                let n_after = r.live_count() + 1;
+                let d = r.add_node(next_id);
+                let bound = r.partitions().div_ceil(n_after);
+                assert!((d.partitions_moved as usize) <= bound, "step {step}");
+                next_id += 1;
+            } else {
+                let victim = (0..r.nodes()).find(|&n| r.is_live(n)).unwrap();
+                let n_before = r.live_count();
+                let d = r.retire_node(victim, &l);
+                let bound = r.partitions().div_ceil(n_before);
+                assert!((d.partitions_moved as usize) <= bound, "step {step}");
+            }
+            let quota = r.quota();
+            for (n, &c) in r.partition_counts().iter().enumerate() {
+                assert!(c <= quota, "step {step}: node {n} at {c} > {quota}");
+                if !r.is_live(n) {
+                    assert_eq!(c, 0, "step {step}: retired node {n} owns partitions");
+                }
+            }
+        }
+    }
+}

@@ -96,6 +96,10 @@ pub struct RouteDelta {
     pub nodes_added: u32,
     /// Nodes that left the routable set (elastic scale-down).
     pub nodes_retired: u32,
+    /// Partition-table entries rewritten (partition-table family) — the
+    /// quantity the `ceil(2^B / n)` minimal-movement bound is stated
+    /// over (see `rust/src/hash/ptable.rs`).
+    pub partitions_moved: u64,
 }
 
 impl RouteDelta {
@@ -177,6 +181,18 @@ pub enum SnapshotState {
         loads: Vec<u64>,
         d: u32,
     },
+    /// Partition-table family (`route_table` program): the flat
+    /// `2^bits`-entry partition → primary node table. Routing is one
+    /// indexed load — `table[hash >> (32 - bits)]` — which lowers to a
+    /// trivial XLA gather, the cheapest compiled route program of any
+    /// family. Backup replicas are checkpoint targets, never read
+    /// targets, so they are deliberately absent here.
+    Table {
+        /// Partition → primary node id, `1 << bits` entries.
+        table: Vec<u32>,
+        /// Partition bits `B` (the hash's top bits index the table).
+        bits: u32,
+    },
 }
 
 impl RouteSnapshot {
@@ -200,6 +216,15 @@ impl RouteSnapshot {
     pub fn weights(&self) -> Option<&[u64]> {
         match &self.state {
             SnapshotState::Probe { weights, .. } => Some(weights),
+            _ => None,
+        }
+    }
+
+    /// The flat partition → node table and its bit width, if this is a
+    /// partition-table snapshot.
+    pub fn partition_table(&self) -> Option<(&[u32], u32)> {
+        match &self.state {
+            SnapshotState::Table { table, bits } => Some((table, *bits)),
             _ => None,
         }
     }
@@ -262,6 +287,9 @@ impl RouteSnapshot {
                         best
                     }
                 }
+            }
+            SnapshotState::Table { table, bits } => {
+                table[(hash >> (32 - bits)) as usize] as usize
             }
         }
     }
@@ -366,6 +394,14 @@ pub trait Router: Send + Sync {
     fn route_is_shared(&self) -> bool {
         false
     }
+
+    /// Install a failure-domain map (node id → zone index; see
+    /// [`effective_zone`](super::ptable::effective_zone)). Routers whose
+    /// placement is zone-aware ([`PartitionTableRouter`](super::ptable::PartitionTableRouter)
+    /// walks distinct zones for backup replicas) rebuild their placement;
+    /// everyone else ignores it. Called by
+    /// [`RouterBuilder::zones`](RouterBuilder) before the first publish.
+    fn set_zones(&mut self, _zone_of: &[u32]) {}
 
     /// Token-ring escape hatch (elastic scale-out claims tokens directly;
     /// the XLA parity harness feeds raw rings). `None` for probe routers.
@@ -1806,47 +1842,112 @@ pub struct RouterHandle {
     published: Arc<RwLock<Arc<dyn Router>>>,
     epoch: Arc<AtomicU64>,
     loads: Loads,
+    /// Failure-domain map (node id → zone index; empty = no zones
+    /// configured). Resolved through
+    /// [`effective_zone`](super::ptable::effective_zone), so ids beyond
+    /// the map get unique singleton zones.
+    zones: Arc<Vec<u32>>,
 }
 
-impl RouterHandle {
-    /// A handle whose load view carries the legacy (unsmoothed) signal —
-    /// bit-compatible with the raw-load era. The pipeline threads the
-    /// configured smoothing through [`Self::with_signal`] instead.
-    pub fn new(router: Box<dyn Router>) -> Self {
-        Self::with_loads(router, Loads::new)
+/// Builder for [`RouterHandle`] — the single construction path that
+/// replaced the `new` / `with_signal` / `with_signal_capacity`
+/// constructor sprawl. Every knob is optional:
+///
+/// * [`signal`](Self::signal) — the [`SignalConfig`] the load view
+///   carries (default: the legacy unsmoothed signal, bit-compatible
+///   with the raw-load era);
+/// * [`capacity`](Self::capacity) — pre-allocated load-signal slots,
+///   the elastic id ceiling ([`RouterHandle::add_node`] refuses to grow
+///   past it; default: the router's current node count);
+/// * [`zones`](Self::zones) — the failure-domain map, pushed into the
+///   router ([`Router::set_zones`]) before the first publish and kept
+///   on the handle for the runtime's cross-zone checkpoint preference.
+///
+/// ```
+/// use dpa::hash::{Ring, RingOp, RouterHandle, TokenRingRouter};
+///
+/// let handle = RouterHandle::builder(Box::new(TokenRingRouter::new(
+///     Ring::new(4, 8),
+///     RingOp::Halve,
+/// )))
+/// .capacity(8)
+/// .build();
+/// assert_eq!(handle.nodes(), 4);
+/// assert_eq!(handle.capacity(), 8);
+/// ```
+pub struct RouterBuilder {
+    router: Box<dyn Router>,
+    signal: SignalConfig,
+    capacity: usize,
+    zones: Vec<u32>,
+}
+
+impl RouterBuilder {
+    /// Use `signal` (EWMA decay, hysteresis band, migration-gain guard)
+    /// for the handle's load view instead of the legacy default.
+    pub fn signal(mut self, cfg: &SignalConfig) -> Self {
+        self.signal = cfg.clone();
+        self
     }
 
-    /// A handle whose load view is a [`LoadSignal`] configured with
-    /// `signal` (EWMA decay, hysteresis band, migration-gain guard).
-    pub fn with_signal(router: Box<dyn Router>, signal: &SignalConfig) -> Self {
-        Self::with_loads(router, |nodes| Loads::with_config(nodes, signal))
+    /// Pre-allocate load-signal slots for up to `n` nodes — the elastic
+    /// ceiling (`balancer.max_reducers` plus chaos respawn headroom).
+    /// Clamped up to the router's current node count.
+    pub fn capacity(mut self, n: usize) -> Self {
+        self.capacity = n;
+        self
     }
 
-    /// Like [`Self::with_signal`], but pre-allocating load-signal slots
-    /// for up to `capacity` nodes — the elastic ceiling
-    /// (`balancer.max_reducers`). [`Self::add_node`] refuses to grow past
-    /// it, so everything sized off the capacity (reducer queues, tracker
-    /// slots) stays valid for every id the router can ever return.
-    pub fn with_signal_capacity(
-        router: Box<dyn Router>,
-        signal: &SignalConfig,
-        capacity: usize,
-    ) -> Self {
-        Self::with_loads(router, |nodes| {
-            Loads::with_capacity(nodes, capacity.max(nodes), signal)
-        })
+    /// Install a failure-domain map (node id → zone index, e.g. from
+    /// [`parse_zone_spec`](super::ptable::parse_zone_spec)). Zone-aware
+    /// routers rebuild their replica placement; the runtime's
+    /// checkpoint-to-peer path prefers a cross-zone peer.
+    pub fn zones(mut self, zone_of: Vec<u32>) -> Self {
+        self.zones = zone_of;
+        self
     }
 
-    fn with_loads(router: Box<dyn Router>, mk: impl FnOnce(usize) -> Loads) -> Self {
+    /// Construct the handle: zones reach the router before the first
+    /// publish, so no reader ever observes a zone-less placement.
+    pub fn build(self) -> RouterHandle {
+        let RouterBuilder { mut router, signal, capacity, zones } = self;
+        if !zones.is_empty() {
+            router.set_zones(&zones);
+        }
         let epoch = router.epoch();
-        let loads = mk(router.nodes());
+        let nodes = router.nodes();
+        let loads = Loads::with_capacity(nodes, capacity.max(nodes), &signal);
         let published: Arc<dyn Router> = Arc::from(router.clone_router());
         RouterHandle {
             writer: Arc::new(Mutex::new(router)),
             published: Arc::new(RwLock::new(published)),
             epoch: Arc::new(AtomicU64::new(epoch)),
             loads,
+            zones: Arc::new(zones),
         }
+    }
+}
+
+impl RouterHandle {
+    /// Start building a handle over `router` — see [`RouterBuilder`].
+    pub fn builder(router: Box<dyn Router>) -> RouterBuilder {
+        RouterBuilder {
+            router,
+            signal: SignalConfig::legacy(),
+            capacity: 0,
+            zones: Vec::new(),
+        }
+    }
+
+    /// Thin alias for `RouterHandle::builder(router).build()`, kept for
+    /// the many call sites that want the all-defaults handle.
+    ///
+    /// **Deprecated in spirit:** new code should use
+    /// [`RouterHandle::builder`], which is the only path offering the
+    /// signal/capacity/zones knobs. (Not `#[deprecated]` — the bare
+    /// form is still the idiomatic spelling in tests.)
+    pub fn new(router: Box<dyn Router>) -> Self {
+        Self::builder(router).build()
     }
 
     /// The last published router snapshot (shared, immutable-by-readers).
@@ -1933,7 +2034,7 @@ impl RouterHandle {
     /// Elastic scale-up: grow the routable set by one brand-new node and
     /// publish the new epoch. Returns the node's id and the membership
     /// delta, or `None` when the pre-allocated slot capacity (see
-    /// [`Self::with_signal_capacity`]) is exhausted. The new node joins
+    /// [`RouterBuilder::capacity`]) is exhausted. The new node joins
     /// the load signal with a clean history.
     pub fn add_node(&self) -> Option<(usize, RouteDelta)> {
         let mut g = self.writer.lock().unwrap();
@@ -1981,6 +2082,20 @@ impl RouterHandle {
     /// Pre-allocated id-space ceiling (the load signal's slot count).
     pub fn capacity(&self) -> usize {
         self.loads.nodes()
+    }
+
+    /// The failure-domain map installed via [`RouterBuilder::zones`]
+    /// (empty when no zones were configured).
+    pub fn zones(&self) -> &[u32] {
+        &self.zones
+    }
+
+    /// Failure domain of node `id`, resolved through
+    /// [`effective_zone`](super::ptable::effective_zone): nodes outside
+    /// the configured map get unique singleton zones, so "different
+    /// zone" checks degrade to "different node" without a special case.
+    pub fn zone_of(&self, id: usize) -> u32 {
+        super::ptable::effective_zone(&self.zones, id)
     }
 
     /// Mutate the underlying token ring directly (elastic scale-out, test
@@ -2749,11 +2864,10 @@ mod tests {
     #[test]
     fn handle_add_node_respects_capacity_and_signal() {
         let cfg = SignalConfig::legacy();
-        let handle = RouterHandle::with_signal_capacity(
-            Box::new(MultiProbeRouter::new(2, 3)),
-            &cfg,
-            3,
-        );
+        let handle = RouterHandle::builder(Box::new(MultiProbeRouter::new(2, 3)))
+            .signal(&cfg)
+            .capacity(3)
+            .build();
         assert_eq!(handle.capacity(), 3);
         let e0 = handle.epoch();
         let (id, d) = handle.add_node().expect("one slot free");

@@ -24,14 +24,32 @@
 //!   candidates once their estimated decayed load crosses the split
 //!   watermark (`balancer.split_watermark`). The one family with an
 //!   [`MergeContract::Associative`] merge contract.
+//! * [`StrategySpec::Ptable`] — O(1) flat partition table
+//!   (`ptable[:B][:R]`): `2^B` partitions dealt over the nodes, routing
+//!   is one indexed load, membership changes are minimal-movement table
+//!   rewrites, and `R`-replica placement walks distinct failure domains
+//!   when zones are configured (`balancer.zones`).
+//!
+//! Parsing and `Display` are driven by one [`FamilyDef`] registry row per
+//! family (canonical name, aliases, `:`-parameter grammar), so the
+//! accepted spellings, the error message's expected-syntax list and the
+//! round-trip property in `tests/props.rs` (`parse ∘ display == id`) all
+//! read from the same table. Unknown names and bad parameters surface as
+//! the typed [`ParseStrategyError`] — `dpa table1 --strategies` propagates
+//! it instead of skipping silently.
 //!
 //! `Strategy` remains as an alias — the spec is the same value that used
 //! to be the closed strategy enum, so TOML/CLI round-trips and existing
 //! call sites keep working.
 
+use std::error::Error;
 use std::fmt;
 use std::str::FromStr;
 
+use super::ptable::{
+    PartitionTableRouter, DEFAULT_PTABLE_BITS, DEFAULT_PTABLE_REPLICAS, MAX_PTABLE_BITS,
+    MAX_PTABLE_REPLICAS,
+};
 use super::ring::Ring;
 use super::router::{
     MergeContract, MultiProbeRouter, RingOp, Router, SplitKeyRouter, TokenRingRouter,
@@ -58,15 +76,231 @@ pub enum StrategySpec {
     MultiProbe { probes: u32 },
     TwoChoices,
     SplitKey { d: u32 },
+    Ptable { bits: u32, replicas: u32 },
 }
 
 /// Historical name: the spec used to be the closed strategy enum.
 pub type Strategy = StrategySpec;
 
+/// Why a strategy string failed to parse. Carries enough structure for
+/// callers to distinguish "no such family" (the `--strategies` filter
+/// rejects these outright) from "family exists, parameter out of range",
+/// while `Display` keeps the old human-readable phrasing — CLI call
+/// sites still just `.map_err(anyhow::Error::msg)`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ParseStrategyError {
+    /// The family name matched no registry row (canonical or alias).
+    UnknownFamily {
+        /// The unrecognized (lowercased) family name.
+        name: String,
+    },
+    /// The family exists but a `:`-parameter was malformed or out of
+    /// range for its grammar.
+    BadParameter {
+        /// Canonical name of the family whose parameter was rejected.
+        family: &'static str,
+        /// Human-readable description of the rejection.
+        detail: String,
+    },
+}
+
+impl fmt::Display for ParseStrategyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ParseStrategyError::UnknownFamily { name } => {
+                write!(f, "unknown strategy '{name}' (expected {})", syntax_summary())
+            }
+            ParseStrategyError::BadParameter { family, detail } => {
+                write!(f, "strategy '{family}': {detail}")
+            }
+        }
+    }
+}
+
+impl Error for ParseStrategyError {}
+
+/// One registry row: everything the parser, `Display`, and error
+/// messages need to know about a strategy family. [`REGISTRY`] holds one
+/// per [`StrategySpec`] variant, in declaration order.
+struct FamilyDef {
+    /// Canonical name — what `Display` prints and errors cite.
+    name: &'static str,
+    /// Accepted alternative spellings (lowercase).
+    aliases: &'static [&'static str],
+    /// Grammar shown in the unknown-strategy error, e.g. `ptable[:B][:R]`.
+    syntax: &'static str,
+    /// Maximum number of `:`-separated parameters.
+    max_args: usize,
+    /// Construct the spec from the (possibly empty) parameter list.
+    build: fn(&[&str]) -> Result<StrategySpec, ParseStrategyError>,
+}
+
+fn parse_param(
+    family: &'static str,
+    what: &str,
+    raw: &str,
+) -> Result<u32, ParseStrategyError> {
+    raw.parse().map_err(|e| ParseStrategyError::BadParameter {
+        family,
+        detail: format!("invalid {what} '{raw}': {e}"),
+    })
+}
+
+fn build_none(_: &[&str]) -> Result<StrategySpec, ParseStrategyError> {
+    Ok(StrategySpec::None)
+}
+
+fn build_halving(_: &[&str]) -> Result<StrategySpec, ParseStrategyError> {
+    Ok(StrategySpec::Halving)
+}
+
+fn build_doubling(_: &[&str]) -> Result<StrategySpec, ParseStrategyError> {
+    Ok(StrategySpec::Doubling)
+}
+
+fn build_multiprobe(args: &[&str]) -> Result<StrategySpec, ParseStrategyError> {
+    let probes = match args {
+        [] => DEFAULT_PROBES,
+        [k, ..] => parse_param("multiprobe", "probe count", k)?,
+    };
+    if probes == 0 {
+        return Err(ParseStrategyError::BadParameter {
+            family: "multiprobe",
+            detail: "probe count must be at least 1".into(),
+        });
+    }
+    Ok(StrategySpec::MultiProbe { probes })
+}
+
+fn build_twochoices(_: &[&str]) -> Result<StrategySpec, ParseStrategyError> {
+    Ok(StrategySpec::TwoChoices)
+}
+
+fn build_splitkey(args: &[&str]) -> Result<StrategySpec, ParseStrategyError> {
+    let d = match args {
+        [] => DEFAULT_SPLIT_D,
+        [d, ..] => parse_param("splitkey", "split fan-out", d)?,
+    };
+    if !(2..=MAX_SPLIT_D as u32).contains(&d) {
+        return Err(ParseStrategyError::BadParameter {
+            family: "splitkey",
+            detail: format!("split fan-out must be in 2..={MAX_SPLIT_D}, got {d}"),
+        });
+    }
+    Ok(StrategySpec::SplitKey { d })
+}
+
+fn build_ptable(args: &[&str]) -> Result<StrategySpec, ParseStrategyError> {
+    let bits = match args.first() {
+        None => DEFAULT_PTABLE_BITS,
+        Some(b) => parse_param("ptable", "partition bits", b)?,
+    };
+    if !(1..=MAX_PTABLE_BITS).contains(&bits) {
+        return Err(ParseStrategyError::BadParameter {
+            family: "ptable",
+            detail: format!("partition bits must be in 1..={MAX_PTABLE_BITS}, got {bits}"),
+        });
+    }
+    let replicas = match args.get(1) {
+        None => DEFAULT_PTABLE_REPLICAS,
+        Some(r) => parse_param("ptable", "replica count", r)?,
+    };
+    if !(1..=MAX_PTABLE_REPLICAS).contains(&replicas) {
+        return Err(ParseStrategyError::BadParameter {
+            family: "ptable",
+            detail: format!(
+                "replica count must be in 1..={MAX_PTABLE_REPLICAS}, got {replicas}"
+            ),
+        });
+    }
+    Ok(StrategySpec::Ptable { bits, replicas })
+}
+
+/// The family registry, one row per [`StrategySpec`] variant in
+/// declaration order ([`StrategySpec::family_def`] indexes it).
+static REGISTRY: &[FamilyDef] = &[
+    FamilyDef {
+        name: "none",
+        aliases: &["nolb", "no-lb", "off"],
+        syntax: "none",
+        max_args: 0,
+        build: build_none,
+    },
+    FamilyDef {
+        name: "halving",
+        aliases: &["halve"],
+        syntax: "halving",
+        max_args: 0,
+        build: build_halving,
+    },
+    FamilyDef {
+        name: "doubling",
+        aliases: &["double"],
+        syntax: "doubling",
+        max_args: 0,
+        build: build_doubling,
+    },
+    FamilyDef {
+        name: "multiprobe",
+        aliases: &["multi-probe", "mpch"],
+        syntax: "multiprobe[:K]",
+        max_args: 1,
+        build: build_multiprobe,
+    },
+    FamilyDef {
+        name: "twochoices",
+        aliases: &["two-choices", "2choices"],
+        syntax: "twochoices",
+        max_args: 0,
+        build: build_twochoices,
+    },
+    FamilyDef {
+        name: "splitkey",
+        aliases: &["split-key", "pkg"],
+        syntax: "splitkey[:D]",
+        max_args: 1,
+        build: build_splitkey,
+    },
+    FamilyDef {
+        name: "ptable",
+        aliases: &["partition-table", "table"],
+        syntax: "ptable[:B][:R]",
+        max_args: 2,
+        build: build_ptable,
+    },
+];
+
+/// `none|halving|…|ptable[:B][:R]` — the expected-syntax list in the
+/// unknown-strategy error, generated from the registry.
+fn syntax_summary() -> String {
+    let names: Vec<&str> = REGISTRY.iter().map(|d| d.syntax).collect();
+    names.join("|")
+}
+
 impl StrategySpec {
+    fn family_def(&self) -> &'static FamilyDef {
+        let idx = match self {
+            StrategySpec::None => 0,
+            StrategySpec::Halving => 1,
+            StrategySpec::Doubling => 2,
+            StrategySpec::MultiProbe { .. } => 3,
+            StrategySpec::TwoChoices => 4,
+            StrategySpec::SplitKey { .. } => 5,
+            StrategySpec::Ptable { .. } => 6,
+        };
+        &REGISTRY[idx]
+    }
+
+    /// Canonical family name from the registry (`Display` appends any
+    /// non-default parameters to it).
+    pub fn family_name(&self) -> &'static str {
+        self.family_def().name
+    }
+
     /// Initial tokens per node for the ring-based layouts. `halving_init`
     /// must be a power of two (§4.2: "N initial tokens where N is a power
-    /// of 2"). Probe-based strategies have one position per node.
+    /// of 2"). Probe- and table-based strategies have one position per
+    /// node.
     pub fn initial_tokens(&self, halving_init: u32) -> u32 {
         match self {
             // The no-LB baseline in the paper is the same runtime with the
@@ -84,7 +318,8 @@ impl StrategySpec {
             StrategySpec::Doubling => 1,
             StrategySpec::MultiProbe { .. }
             | StrategySpec::TwoChoices
-            | StrategySpec::SplitKey { .. } => 1,
+            | StrategySpec::SplitKey { .. }
+            | StrategySpec::Ptable { .. } => 1,
         }
     }
 
@@ -153,11 +388,14 @@ impl StrategySpec {
             StrategySpec::SplitKey { d } => {
                 Box::new(SplitKeyRouter::with_watermark(nodes, *d as usize, split_watermark))
             }
+            StrategySpec::Ptable { bits, replicas } => {
+                Box::new(PartitionTableRouter::new(nodes, *bits, *replicas))
+            }
         }
     }
 
     /// Every spec (one representative per family parameterization).
-    pub fn all() -> [StrategySpec; 6] {
+    pub fn all() -> [StrategySpec; 7] {
         [
             StrategySpec::None,
             StrategySpec::Halving,
@@ -165,6 +403,10 @@ impl StrategySpec {
             StrategySpec::MultiProbe { probes: DEFAULT_PROBES },
             StrategySpec::TwoChoices,
             StrategySpec::SplitKey { d: DEFAULT_SPLIT_D },
+            StrategySpec::Ptable {
+                bits: DEFAULT_PTABLE_BITS,
+                replicas: DEFAULT_PTABLE_REPLICAS,
+            },
         ]
     }
 
@@ -174,7 +416,9 @@ impl StrategySpec {
     }
 
     /// Parse a comma-separated strategy list (the `--strategies` filter).
-    pub fn parse_list(s: &str) -> Result<Vec<StrategySpec>, String> {
+    /// Any unknown name or bad parameter fails the whole list — nothing
+    /// is silently skipped.
+    pub fn parse_list(s: &str) -> Result<Vec<StrategySpec>, ParseStrategyError> {
         s.split(',')
             .map(str::trim)
             .filter(|p| !p.is_empty())
@@ -185,67 +429,50 @@ impl StrategySpec {
 
 impl fmt::Display for StrategySpec {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.family_name())?;
         match self {
-            StrategySpec::None => write!(f, "none"),
-            StrategySpec::Halving => write!(f, "halving"),
-            StrategySpec::Doubling => write!(f, "doubling"),
-            StrategySpec::MultiProbe { probes } if *probes == DEFAULT_PROBES => {
-                write!(f, "multiprobe")
+            StrategySpec::MultiProbe { probes } if *probes != DEFAULT_PROBES => {
+                write!(f, ":{probes}")
             }
-            StrategySpec::MultiProbe { probes } => write!(f, "multiprobe:{probes}"),
-            StrategySpec::TwoChoices => write!(f, "twochoices"),
-            StrategySpec::SplitKey { d } if *d == DEFAULT_SPLIT_D => write!(f, "splitkey"),
-            StrategySpec::SplitKey { d } => write!(f, "splitkey:{d}"),
+            StrategySpec::SplitKey { d } if *d != DEFAULT_SPLIT_D => write!(f, ":{d}"),
+            // Only trailing defaults elide: `ptable:12`, `ptable:10:2`.
+            StrategySpec::Ptable { bits, replicas } if *replicas != DEFAULT_PTABLE_REPLICAS => {
+                write!(f, ":{bits}:{replicas}")
+            }
+            StrategySpec::Ptable { bits, replicas: _ } if *bits != DEFAULT_PTABLE_BITS => {
+                write!(f, ":{bits}")
+            }
+            _ => Ok(()),
         }
     }
 }
 
 impl FromStr for StrategySpec {
-    type Err = String;
+    type Err = ParseStrategyError;
 
     fn from_str(s: &str) -> Result<Self, Self::Err> {
-        let lower = s.to_ascii_lowercase();
-        if let Some((name, arg)) = lower.split_once(':') {
-            return match name {
-                "multiprobe" | "multi-probe" | "mpch" => {
-                    let probes: u32 = arg
-                        .parse()
-                        .map_err(|e| format!("invalid probe count '{arg}': {e}"))?;
-                    if probes == 0 {
-                        return Err("probe count must be at least 1".into());
-                    }
-                    Ok(StrategySpec::MultiProbe { probes })
-                }
-                "splitkey" | "split-key" | "pkg" => {
-                    let d: u32 = arg
-                        .parse()
-                        .map_err(|e| format!("invalid split fan-out '{arg}': {e}"))?;
-                    if !(2..=MAX_SPLIT_D as u32).contains(&d) {
-                        return Err(format!(
-                            "split fan-out must be in 2..={MAX_SPLIT_D}, got {d}"
-                        ));
-                    }
-                    Ok(StrategySpec::SplitKey { d })
-                }
-                other => Err(format!("strategy '{other}' takes no ':' parameter")),
-            };
+        let lower = s.trim().to_ascii_lowercase();
+        let mut parts = lower.split(':');
+        let name = parts.next().unwrap_or_default();
+        let args: Vec<&str> = parts.collect();
+        let def = REGISTRY
+            .iter()
+            .find(|d| d.name == name || d.aliases.contains(&name))
+            .ok_or_else(|| ParseStrategyError::UnknownFamily { name: name.to_string() })?;
+        if args.len() > def.max_args {
+            return Err(ParseStrategyError::BadParameter {
+                family: def.name,
+                detail: if def.max_args == 0 {
+                    "takes no ':' parameter".into()
+                } else {
+                    format!(
+                        "takes at most {} ':' parameter(s), syntax {}",
+                        def.max_args, def.syntax
+                    )
+                },
+            });
         }
-        match lower.as_str() {
-            "none" | "nolb" | "no-lb" | "off" => Ok(StrategySpec::None),
-            "halving" | "halve" => Ok(StrategySpec::Halving),
-            "doubling" | "double" => Ok(StrategySpec::Doubling),
-            "multiprobe" | "multi-probe" | "mpch" => {
-                Ok(StrategySpec::MultiProbe { probes: DEFAULT_PROBES })
-            }
-            "twochoices" | "two-choices" | "2choices" => Ok(StrategySpec::TwoChoices),
-            "splitkey" | "split-key" | "pkg" => {
-                Ok(StrategySpec::SplitKey { d: DEFAULT_SPLIT_D })
-            }
-            other => Err(format!(
-                "unknown strategy '{other}' \
-                 (expected none|halving|doubling|multiprobe[:K]|twochoices|splitkey[:D])"
-            )),
-        }
+        (def.build)(&args)
     }
 }
 
@@ -281,6 +508,60 @@ mod tests {
         assert_eq!(StrategySpec::SplitKey { d: 4 }.to_string(), "splitkey:4");
         assert!("splitkey:1".parse::<StrategySpec>().is_err(), "d < 2");
         assert!("splitkey:9".parse::<StrategySpec>().is_err(), "d > seeds");
+    }
+
+    #[test]
+    fn ptable_parse_and_display() {
+        // every alias and parameterization lands on the same family
+        assert_eq!(
+            "ptable".parse::<StrategySpec>().unwrap(),
+            StrategySpec::Ptable {
+                bits: DEFAULT_PTABLE_BITS,
+                replicas: DEFAULT_PTABLE_REPLICAS
+            }
+        );
+        assert_eq!(
+            "partition-table:8".parse::<StrategySpec>().unwrap(),
+            StrategySpec::Ptable { bits: 8, replicas: DEFAULT_PTABLE_REPLICAS }
+        );
+        assert_eq!(
+            "table:10:2".parse::<StrategySpec>().unwrap(),
+            StrategySpec::Ptable { bits: 10, replicas: 2 }
+        );
+        // Display elides only trailing defaults: a non-default replica
+        // count forces the bits out too, so the string re-parses exactly.
+        assert_eq!(
+            StrategySpec::Ptable { bits: DEFAULT_PTABLE_BITS, replicas: 2 }.to_string(),
+            "ptable:10:2"
+        );
+        assert_eq!(
+            StrategySpec::Ptable { bits: 12, replicas: 1 }.to_string(),
+            "ptable:12"
+        );
+        assert!("ptable:0".parse::<StrategySpec>().is_err(), "bits < 1");
+        assert!("ptable:17".parse::<StrategySpec>().is_err(), "bits > max");
+        assert!("ptable:10:0".parse::<StrategySpec>().is_err(), "r < 1");
+        assert!("ptable:10:5".parse::<StrategySpec>().is_err(), "r > max");
+        assert!("ptable:10:2:3".parse::<StrategySpec>().is_err(), "arity");
+    }
+
+    #[test]
+    fn typed_errors_distinguish_unknown_from_bad_parameter() {
+        match "bogus".parse::<StrategySpec>() {
+            Err(ParseStrategyError::UnknownFamily { name }) => assert_eq!(name, "bogus"),
+            other => panic!("expected UnknownFamily, got {other:?}"),
+        }
+        match "ptable:99".parse::<StrategySpec>() {
+            Err(ParseStrategyError::BadParameter { family, .. }) => {
+                assert_eq!(family, "ptable");
+            }
+            other => panic!("expected BadParameter, got {other:?}"),
+        }
+        // the unknown-family message lists every registry syntax
+        let msg = "bogus".parse::<StrategySpec>().unwrap_err().to_string();
+        for def in ["none", "halving", "doubling", "multiprobe[:K]", "ptable[:B][:R]"] {
+            assert!(msg.contains(def), "missing '{def}' in: {msg}");
+        }
     }
 
     #[test]

@@ -92,6 +92,13 @@ pub struct PipelineConfig {
     /// are untouched; the signal shapes what the probe routers freeze and
     /// which key migrations two-choices admits.
     pub signal: SignalConfig,
+    /// Failure-domain map: zone groups separated by `;`, node ids by `,`
+    /// (`"0,1;2,3"` = two zones of two reducers). `None` = no zones —
+    /// every node is its own singleton domain. Zone-aware routers
+    /// (`ptable[:B][:R]`) place replicas across distinct zones and the
+    /// chaos checkpoint path prefers a cross-zone peer. TOML:
+    /// `balancer.zones`; CLI: `--zones`.
+    pub zones: Option<String>,
     /// Elastic reducer membership: `None` = the reducer set is fixed for
     /// the whole run (the paper's setup); `Some` attaches the
     /// decayed-signal scaling policy — the run starts at `reducers` live
@@ -149,6 +156,7 @@ impl Default for PipelineConfig {
             cooldown: 50,
             split_watermark: crate::hash::SplitKeyRouter::DEFAULT_WATERMARK,
             signal: SignalConfig::default(),
+            zones: None,
             elastic: None,
             report_interval: 2,
             chunk_size: 10,
@@ -218,6 +226,9 @@ impl PipelineConfig {
                 }
                 "balancer.min_gain" => {
                     self.signal.min_gain = doc.get_float(key).context("min_gain")?
+                }
+                "balancer.zones" => {
+                    self.zones = Some(doc.get_str(key).context("zones")?.to_string())
                 }
                 "balancer.scale_up" => {
                     self.elastic_mut().scale_up = doc.get_float(key).context("scale_up")?
@@ -331,6 +342,11 @@ impl PipelineConfig {
             bail!("threads.batch_max must be at least 1 (reducers must pop something)");
         }
         self.signal.validate().map_err(anyhow::Error::msg)?;
+        if let Some(spec) = &self.zones {
+            // ids beyond the starting reducer set are allowed — they name
+            // zones for elastic joiners / chaos respawns.
+            crate::hash::parse_zone_spec(spec).map_err(anyhow::Error::msg)?;
+        }
         if self.checkpoint_interval == 0 {
             bail!("chaos.checkpoint_interval must be at least 1");
         }
@@ -383,10 +399,20 @@ impl PipelineConfig {
         }
     }
 
+    /// The parsed node-id-indexed zone map (empty when `balancer.zones`
+    /// is unset). Callers run [`validate`](Self::validate) first (the
+    /// drivers do), so the spec is known to parse.
+    pub fn zone_map(&self) -> Vec<u32> {
+        self.zones
+            .as_deref()
+            .map(|s| crate::hash::parse_zone_spec(s).expect("zone spec validated"))
+            .unwrap_or_default()
+    }
+
     /// Construct the routing layer this configuration describes, with
-    /// its load view carrying the configured [`SignalConfig`] and —
-    /// under elastic membership — slots pre-allocated up to
-    /// `max_reducers`.
+    /// its load view carrying the configured [`SignalConfig`], the
+    /// failure-domain map installed, and — under elastic membership —
+    /// slots pre-allocated up to `max_reducers`.
     pub fn build_router(&self) -> RouterHandle {
         let router = self.strategy.build_router_tuned(
             self.reducers,
@@ -394,10 +420,11 @@ impl PipelineConfig {
             self.initial_tokens,
             self.split_watermark,
         );
-        match self.reducer_capacity() {
-            0 => RouterHandle::with_signal(router, &self.signal),
-            cap => RouterHandle::with_signal_capacity(router, &self.signal, cap),
-        }
+        RouterHandle::builder(router)
+            .signal(&self.signal)
+            .capacity(self.reducer_capacity())
+            .zones(self.zone_map())
+            .build()
     }
 
     /// Reducer-id ceiling the drivers pre-allocate for (0 = fixed
@@ -992,5 +1019,43 @@ max_rounds = 3
         let r = Pipeline::wordcount(cfg).run(items).unwrap();
         assert_eq!(r.total_processed(), 60);
         assert_eq!(r.result.len(), 6);
+    }
+
+    #[test]
+    fn zones_config_round_trip_and_reach_the_router() {
+        let doc = crate::config::parse(
+            "[balancer]\nstrategy = \"ptable:6:2\"\nzones = \"0,1;2,3\"\n",
+        )
+        .unwrap();
+        let mut cfg = PipelineConfig::default();
+        cfg.apply_document(&doc).unwrap();
+        assert_eq!(cfg.strategy, Strategy::Ptable { bits: 6, replicas: 2 });
+        assert_eq!(cfg.zones.as_deref(), Some("0,1;2,3"));
+        assert!(cfg.validate().is_ok());
+        assert_eq!(cfg.zone_map(), vec![0, 0, 1, 1]);
+
+        let router = cfg.build_router();
+        assert_eq!(router.name(), "partition-table");
+        assert_eq!(router.zones(), &[0, 0, 1, 1]);
+        assert_eq!(router.zone_of(0), router.zone_of(1));
+        assert_ne!(router.zone_of(0), router.zone_of(2));
+
+        // and the pipeline still runs oracle-exact under zones
+        let items: Vec<String> = (0..60).map(|i| format!("w{}", i % 6)).collect();
+        let r = Pipeline::wordcount(cfg).run(items).unwrap();
+        assert_eq!(r.total_processed(), 60);
+        assert_eq!(r.result.len(), 6);
+    }
+
+    #[test]
+    fn invalid_zone_specs_rejected() {
+        for bad in ["0,1;;2", "0,x", "0,1;1", ""] {
+            let mut cfg = PipelineConfig::default();
+            cfg.zones = Some(bad.to_string());
+            assert!(cfg.validate().is_err(), "zone spec {bad:?} must be rejected");
+        }
+        // unset zones stay a no-op
+        let cfg = PipelineConfig::default();
+        assert!(cfg.zone_map().is_empty());
     }
 }

@@ -34,6 +34,9 @@ pub struct Manifest {
     /// `route_assign` is reported unsupported (typed error) instead of
     /// being fed tensors whose shapes it predates.
     pub av: usize,
+    /// Partition-table capacity of `route_table` (max `2^B` entries a
+    /// `ptable` snapshot may carry).
+    pub pt: usize,
 }
 
 impl Manifest {
@@ -65,6 +68,10 @@ impl Manifest {
             k: get_or("K", 8),
             a: get_or("A", 4096),
             av: get_or("AV", 1),
+            // PT arrived with the partition-table route program; absent =
+            // old artifacts, whose missing route_table.hlo.txt makes the
+            // ptable snapshot a typed unsupported error at use
+            pt: get_or("PT", 1024),
         };
         if m.b == 0 || m.w == 0 || m.t == 0 || m.v == 0 || m.p == 0 || m.k == 0 || m.a == 0 {
             bail!("manifest has zero-sized dimension: {m:?}");
@@ -130,12 +137,13 @@ mod tests {
     #[test]
     fn parse_manifest() {
         let m = Manifest::parse(
-            r#"{"B": 256, "W": 8, "T": 512, "V": 4096, "P": 64, "K": 8, "A": 4096, "AV": 2}"#,
+            r#"{"B": 256, "W": 8, "T": 512, "V": 4096, "P": 64, "K": 8, "A": 4096, "AV": 2,
+                "PT": 1024}"#,
         )
         .unwrap();
         assert_eq!(
             m,
-            Manifest { b: 256, w: 8, t: 512, v: 4096, p: 64, k: 8, a: 4096, av: 2 }
+            Manifest { b: 256, w: 8, t: 512, v: 4096, p: 64, k: 8, a: 4096, av: 2, pt: 1024 }
         );
         assert_eq!(m.max_key_bytes(), 32);
     }
@@ -146,6 +154,7 @@ mod tests {
         let m = Manifest::parse(r#"{"B": 256, "W": 8, "T": 512, "V": 4096}"#).unwrap();
         assert_eq!((m.p, m.k, m.a), (64, 8, 4096));
         assert_eq!(m.av, 1, "pre-elastic manifests default to assign ABI v1");
+        assert_eq!(m.pt, 1024, "pre-ptable manifests default the table capacity");
         let m = Manifest::parse(
             r#"{"B": 256, "W": 8, "T": 512, "V": 4096, "P": 16, "K": 4, "A": 128}"#,
         )

@@ -143,7 +143,12 @@ impl ExecCore {
                 .map(|_| DataQueue::new(params.queue_capacity))
                 .collect(),
             monitor: ShutdownMonitor::new(n_mappers),
-            tracker: StageTracker::with_capacity(n_reducers, capacity, router.epoch()),
+            tracker: {
+                let mut t = StageTracker::with_capacity(n_reducers, capacity, router.epoch());
+                // checkpoint-to-peer then prefers a cross-zone replica
+                t.set_zones(router.zones());
+                t
+            },
             mode: params.mode,
             report_interval: params.report_interval,
             latency: Histogram::new(),
@@ -692,8 +697,9 @@ mod tests {
     fn apply_report_feeds_the_load_signal() {
         use crate::balancer::signal::{FRAC_BITS, SignalConfig};
         let cfg = SignalConfig { decay_alpha: 0.5, hysteresis: 0.0, min_gain: 0.0 };
-        let router =
-            RouterHandle::with_signal(Strategy::TwoChoices.build_router(4, 8, None), &cfg);
+        let router = RouterHandle::builder(Strategy::TwoChoices.build_router(4, 8, None))
+            .signal(&cfg)
+            .build();
         let c = core(ConsistencyMode::MergeAtEnd, &router, vec![]);
         let mut balancer =
             BalancerCore::new(router.clone(), Strategy::TwoChoices, 0.2, 4, 1, 0)
@@ -717,11 +723,10 @@ mod tests {
         use crate::balancer::signal::SignalConfig;
         let cfg =
             ElasticConfig { scale_up: 2.0, scale_down: 0.5, min_reducers: 2, max_reducers: 4 };
-        let router = RouterHandle::with_signal_capacity(
-            Strategy::Doubling.build_router(2, 8, None),
-            &SignalConfig::legacy(),
-            cfg.max_reducers,
-        );
+        let router = RouterHandle::builder(Strategy::Doubling.build_router(2, 8, None))
+            .signal(&SignalConfig::legacy())
+            .capacity(cfg.max_reducers)
+            .build();
         let mut balancer = BalancerCore::new(router.clone(), Strategy::Doubling, 0.2, 4, 1, 0)
             .with_elastic(ElasticController::from_watermarks(cfg, 0))
             .without_warmup();

@@ -3,8 +3,9 @@
 //!
 //! Routing is compiled per router *family*: a [`RouteSnapshot`] lowers
 //! through [`snapshot_tensors`] into a tagged [`SnapshotTensors`] —
-//! token table (`route`), probe table (`route_probe`) or assignment
-//! table (`route_assign`) — and [`Runtime::route_batch_snapshot`]
+//! token table (`route`), probe table (`route_probe`), assignment
+//! table (`route_assign`) or flat partition table (`route_table`, a
+//! single gather) — and [`Runtime::route_batch_snapshot`]
 //! dispatches on the tag, so every router the `hash::router` layer can
 //! build routes in one batched XLA call. The one exception is the
 //! split-key family: its per-record least-loaded-of-d decision has no
@@ -124,6 +125,11 @@ pub enum SnapshotTensors {
         live: Vec<i32>,
         n_live: i32,
     },
+    /// `route_table`: the flat `2^bits`-entry partition→node table
+    /// (padded with 0 — the kernel only gathers the first `2^bits`
+    /// entries) and the partition bit count. Routing is
+    /// `table[hash >> (32 - bits)]`, one gather per key.
+    Table { table: Vec<i32>, bits: i32 },
 }
 
 /// Lower a router snapshot of **any** family to its compiled-program
@@ -197,6 +203,14 @@ pub fn snapshot_tensors(snap: &RouteSnapshot, m: &Manifest) -> crate::Result<Sna
                 n_live: live.len() as i32,
             })
         }
+        SnapshotState::Table { table, bits } => {
+            cap("route_table", "partition table", table.len(), m.pt)?;
+            let mut padded = vec![0i32; m.pt];
+            for (o, &n) in padded.iter_mut().zip(table) {
+                *o = n as i32;
+            }
+            Ok(SnapshotTensors::Table { table: padded, bits: *bits as i32 })
+        }
         // No compiled lowering: the split decision is least-loaded-of-d
         // with a rotation tie-break, i.e. per-record mutable state the
         // pure batched kernel cannot express. The mapper downcasts this
@@ -243,6 +257,8 @@ pub struct Runtime {
     route_probe: Option<xla::PjRtLoadedExecutable>,
     /// Assignment-family route program (`None` as above).
     route_assign: Option<xla::PjRtLoadedExecutable>,
+    /// Partition-table route program (`None` as above).
+    route_table: Option<xla::PjRtLoadedExecutable>,
     reduce_count: xla::PjRtLoadedExecutable,
     /// Untupled variant whose output buffer feeds back as the next
     /// call's input (device-resident state path).
@@ -275,6 +291,7 @@ impl Runtime {
             route: compile("route.hlo.txt")?,
             route_probe: compile_opt("route_probe.hlo.txt")?,
             route_assign: compile_opt("route_assign.hlo.txt")?,
+            route_table: compile_opt("route_table.hlo.txt")?,
             reduce_count: compile("reduce_count.hlo.txt")?,
             reduce_count_raw: compile("reduce_count_raw.hlo.txt")?,
             merge_state: compile("merge_state.hlo.txt")?,
@@ -428,7 +445,8 @@ impl Runtime {
     /// router family — the trait-layer entry point
     /// ([`crate::hash::RouterCache::snapshot`] feeds it). Dispatches on
     /// the [`SnapshotTensors`] tag: token table → `route`, probe table →
-    /// `route_probe`, assignment table → `route_assign`. Returns a typed
+    /// `route_probe`, assignment table → `route_assign`, partition
+    /// table → `route_table`. Returns a typed
     /// [`Error::UnsupportedSnapshot`] when the loaded artifacts lack the
     /// family's program.
     pub fn route_batch_snapshot(
@@ -480,6 +498,12 @@ impl Runtime {
                     xla::Literal::vec1(&live),
                     xla::Literal::scalar(n_live),
                 ],
+            ),
+            SnapshotTensors::Table { table, bits } => (
+                self.route_table.as_ref().ok_or_else(|| {
+                    unsupported("artifacts lack route_table.hlo.txt — run `make artifacts`")
+                })?,
+                vec![xla::Literal::vec1(&table), xla::Literal::scalar(bits)],
             ),
         };
         // native fallback: the snapshot's own host-side route — the same
@@ -725,7 +749,7 @@ mod tests {
     }
 
     fn mini_manifest() -> Manifest {
-        Manifest { b: 64, w: 8, t: 16, v: 512, p: 8, k: 4, a: 16, av: 2 }
+        Manifest { b: 64, w: 8, t: 16, v: 512, p: 8, k: 4, a: 16, av: 2, pt: 64 }
     }
 
     #[test]
@@ -821,6 +845,49 @@ mod tests {
                 assert_eq!(live, vec![0, 2, 3, 0, 0, 0, 0, 0], "gap at the retired id");
             }
             other => panic!("expected Assignment tensors, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn snapshot_tensors_table_family_pads_to_pt() {
+        use crate::hash::{RouterHandle, StrategySpec};
+        let handle = RouterHandle::new(
+            StrategySpec::Ptable { bits: 4, replicas: 1 }.build_router(3, 8, None),
+        );
+        let snap = handle.snapshot();
+        match snapshot_tensors(&snap, &mini_manifest()).unwrap() {
+            SnapshotTensors::Table { table, bits } => {
+                assert_eq!(bits, 4);
+                assert_eq!(table.len(), 64, "padded to the manifest PT capacity");
+                assert!(table[..16].iter().all(|&n| (0..3).contains(&n)), "live entries own nodes");
+                assert!(table[16..].iter().all(|&n| n == 0), "padding");
+                // the lowered table is the same one the scalar route reads
+                let (raw, b) = snap.partition_table().unwrap();
+                assert_eq!(b, 4);
+                for (i, &n) in raw.iter().enumerate() {
+                    assert_eq!(table[i], n as i32);
+                }
+            }
+            other => panic!("expected Table tensors, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn snapshot_tensors_table_beyond_pt_is_typed() {
+        use crate::hash::{RouterHandle, StrategySpec};
+        // default bits=10 → 1024 entries > the mini manifest's PT=64
+        let handle = RouterHandle::new(
+            "ptable".parse::<StrategySpec>().unwrap().build_router(3, 8, None),
+        );
+        let err = snapshot_tensors(&handle.snapshot(), &mini_manifest()).unwrap_err();
+        match err.downcast_ref::<Error>() {
+            Some(Error::CapacityExceeded { program, what, have, cap }) => {
+                assert_eq!(
+                    (*program, *what, *have, *cap),
+                    ("route_table", "partition table", 1024, 64)
+                );
+            }
+            other => panic!("expected CapacityExceeded, got {other:?}"),
         }
     }
 

@@ -502,11 +502,10 @@ mod tests {
         let items: Vec<String> = (0..400).map(|i| format!("k{}", i % 29)).collect();
         let mut cfg = ChaosConfig::new(ChaosPlan::parse("kill@1:10").unwrap());
         cfg.checkpoint_interval = 8;
-        let router = RouterHandle::with_signal_capacity(
-            Strategy::Doubling.build_router(4, 8, None),
-            &crate::balancer::signal::SignalConfig::default(),
-            5, // one slot of respawn headroom
-        );
+        let router = RouterHandle::builder(Strategy::Doubling.build_router(4, 8, None))
+            .signal(&crate::balancer::signal::SignalConfig::default())
+            .capacity(5) // one slot of respawn headroom
+            .build();
         let balancer = BalancerCore::new(router, Strategy::Doubling, 0.2, 8, 2, 50);
         let driver = SimDriver::new(SimParams {
             seed: 11,

@@ -45,6 +45,48 @@ fn multiprobe_parity_both_modes() {
 }
 
 #[test]
+fn ptable_parity_both_modes() {
+    // O(1) flat-table router: one indexed load per key, no ring walk —
+    // sim and threads must agree with the serial oracle in both modes
+    let strategy = Strategy::Ptable { bits: 8, replicas: 1 };
+    for w in paperwl::all() {
+        for mode in [ConsistencyMode::MergeAtEnd, ConsistencyMode::StateForward] {
+            assert_driver_parity(&w.name, &w.items, strategy, mode);
+        }
+    }
+}
+
+#[test]
+fn ptable_kill_recovers_via_a_cross_zone_checkpoint() {
+    // ISSUE 10 tentpole: under a zone map, a killed ptable primary
+    // recovers from its checkpoint through the cross-zone peer
+    // preference (StageTracker::next_live_peer walks distinct failure
+    // domains first) and the merged output stays oracle-exact
+    let items: Vec<String> = (0..400).map(|i| format!("k{}", i % 29)).collect();
+    let oracle = wordcount_oracle(&items);
+    for driver in [DriverKind::Sim, DriverKind::Threads] {
+        let mut cfg = PipelineConfig::default();
+        cfg.driver = driver;
+        cfg.strategy = Strategy::Ptable { bits: 8, replicas: 2 };
+        cfg.zones = Some("0,1;2,3".into());
+        cfg.mode = ConsistencyMode::StateForward;
+        cfg.max_rounds = 2;
+        cfg.chaos = Some("kill@2:10".into());
+        cfg.checkpoint_interval = 4;
+        if driver == DriverKind::Threads {
+            cfg.reduce_delay_us = 150;
+        }
+        let r = Pipeline::wordcount(cfg).run(items.clone()).unwrap();
+        r.check_conservation().unwrap();
+        assert_eq!(r.result, oracle, "{driver:?}: zoned kill-recovery diverged from the oracle");
+        assert_eq!(r.recovery.kills, 1, "{driver:?}: the scheduled kill never fired");
+        assert_eq!(r.recovery.respawns, 1, "{driver:?}: the victim never respawned");
+        assert_eq!(r.fault_events.len(), 1, "{driver:?}: fault log wrong: {:?}", r.fault_events);
+        assert_eq!(r.fault_events[0].reducer, 2);
+    }
+}
+
+#[test]
 fn twochoices_parity_both_modes() {
     // sticky-assignment router: the key-splitting guard must hold on real
     // threads too — StateForward's disjoint-merge assertion checks it
@@ -138,11 +180,10 @@ fn elastic_scale_schedule_parity_state_forward_wl1() {
         vec![ScaleOp::Up, ScaleOp::Up, ScaleOp::Down(0), ScaleOp::Down(0)]
     };
     let mk_balancer = || {
-        let router = RouterHandle::with_signal_capacity(
-            Strategy::Doubling.build_router(4, 8, Some(1)),
-            &dpa::balancer::signal::SignalConfig::default(),
-            8,
-        );
+        let router = RouterHandle::builder(Strategy::Doubling.build_router(4, 8, Some(1)))
+            .signal(&dpa::balancer::signal::SignalConfig::default())
+            .capacity(8)
+            .build();
         BalancerCore::new(router, Strategy::Doubling, 0.2, 8, 2, 30)
             .with_elastic(ElasticController::from_schedule(schedule(), 6, 4, 8))
     };

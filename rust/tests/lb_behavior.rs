@@ -294,7 +294,9 @@ fn movable_hot_key(strategy: Strategy) -> String {
 /// loads chase the key around. Returns how many redistributions actually
 /// changed the routing.
 fn adversarial_drift_migrations(strategy: Strategy, signal: &SignalConfig, key: &str) -> usize {
-    let router = RouterHandle::with_signal(strategy.build_router(4, 8, None), signal);
+    let router = RouterHandle::builder(strategy.build_router(4, 8, None))
+        .signal(signal)
+        .build();
     let mut b =
         BalancerCore::new(router.clone(), strategy, 0.2, 4, 100, 0).without_warmup();
     let mut events = 0;

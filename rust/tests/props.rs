@@ -312,17 +312,17 @@ fn prop_token_ring_redistribute_moves_only_affected_keys() {
 /// handle, with some routed keys warming any sticky state.
 fn random_elastic_handle(g: &mut Gen, keys: &[String]) -> RouterHandle {
     let nodes = g.usize_in(2, 6);
-    let spec = match g.usize_in(0, 3) {
+    let spec = match g.usize_in(0, 4) {
         0 => StrategySpec::Halving,
         1 => StrategySpec::Doubling,
         2 => StrategySpec::MultiProbe { probes: 1 + g.usize_in(0, 6) as u32 },
+        3 => StrategySpec::Ptable { bits: g.usize_in(4, 8) as u32, replicas: 1 },
         _ => StrategySpec::TwoChoices,
     };
-    let handle = RouterHandle::with_signal_capacity(
-        spec.build_router(nodes, 8, None),
-        &dpa::balancer::signal::SignalConfig::legacy(),
-        nodes + 4,
-    );
+    let handle = RouterHandle::builder(spec.build_router(nodes, 8, None))
+        .signal(&dpa::balancer::signal::SignalConfig::legacy())
+        .capacity(nodes + 4)
+        .build();
     for n in 0..nodes {
         handle.loads().set(n, g.usize_in(0, 50) as u64);
     }
@@ -489,11 +489,10 @@ fn prop_lockfree_two_choices_matches_locked_reference() {
     forall("lock-free two-choices == locked reference model", 25, |g| {
         let nodes = g.usize_in(2, 6);
         let capacity = nodes + 3;
-        let handle = RouterHandle::with_signal_capacity(
-            StrategySpec::TwoChoices.build_router(nodes, 8, None),
-            &dpa::balancer::signal::SignalConfig::legacy(),
-            capacity,
-        );
+        let handle = RouterHandle::builder(StrategySpec::TwoChoices.build_router(nodes, 8, None))
+            .signal(&dpa::balancer::signal::SignalConfig::legacy())
+            .capacity(capacity)
+            .build();
         let mut model: BTreeMap<u32, u32> = BTreeMap::new();
         let mut live: Vec<u32> = (0..nodes as u32).collect();
         let mut id_space = nodes;
@@ -596,6 +595,177 @@ fn prop_lockfree_two_choices_matches_locked_reference() {
             prop_assert!(
                 handle.route_hash(h) == n as usize,
                 "final sweep: hash {h:#x} diverged"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_strategy_parse_display_roundtrip_every_family() {
+    // ISSUE 10 satellite: `parse ∘ display == id` for every registry
+    // family at random parameters — the Display form is the canonical
+    // config spelling, so a spec that cannot survive the round trip
+    // would be unreproducible from a report
+    forall("parse(display(spec)) == spec for all families", 100, |g| {
+        let spec = match g.usize_in(0, 6) {
+            0 => StrategySpec::None,
+            1 => StrategySpec::Halving,
+            2 => StrategySpec::Doubling,
+            3 => StrategySpec::MultiProbe { probes: 1 + g.usize_in(0, 15) as u32 },
+            4 => StrategySpec::TwoChoices,
+            5 => StrategySpec::SplitKey { d: g.usize_in(2, dpa::hash::MAX_SPLIT_D) as u32 },
+            _ => StrategySpec::Ptable {
+                bits: g.usize_in(1, 16) as u32,
+                replicas: 1 + g.usize_in(0, 3) as u32,
+            },
+        };
+        let shown = spec.to_string();
+        let back: StrategySpec = shown
+            .parse()
+            .map_err(|e| format!("'{shown}' failed to re-parse: {e}"))?;
+        prop_assert!(back == spec, "'{shown}' round-tripped to {back:?}, not {spec:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ptable_rewrites_bounded_and_survivors_never_exchange() {
+    // ISSUE 10 tentpole invariants, randomized: every membership rewrite
+    // of the partition table (a) moves at most `ceil(2^B / n)` partitions
+    // (n counting the joiner/victim) and (b) only moves partitions onto
+    // the joiner or off the victim — two survivors never exchange a
+    // partition during a membership change
+    forall("ptable rewrites: bounded movement, survivor-stable", 30, |g| {
+        let nodes = g.usize_in(2, 6);
+        let bits = g.usize_in(4, 8) as u32;
+        let partitions = 1usize << bits;
+        let capacity = nodes + 4;
+        let handle = RouterHandle::builder(
+            StrategySpec::Ptable { bits, replicas: 1 }.build_router(nodes, 8, None),
+        )
+        .capacity(capacity)
+        .build();
+        let mut live: Vec<usize> = (0..nodes).collect();
+        let mut id_space = nodes;
+        for step in 0..g.usize_in(4, 12) {
+            // warm the hit sketch so rewrites have a heat signal to prefer
+            for _ in 0..20 {
+                handle.route_hash(g.u32());
+            }
+            let before: Vec<u32> =
+                handle.snapshot().partition_table().expect("ptable snapshot").0.to_vec();
+            let adding = g.bool() && id_space < capacity;
+            let (delta, bound, explain): (_, usize, Box<dyn Fn(usize) -> bool>) = if adding {
+                let (id, delta) = handle.add_node().expect("capacity reserved");
+                live.push(id);
+                id_space += 1;
+                let after: Vec<u32> =
+                    handle.snapshot().partition_table().expect("ptable snapshot").0.to_vec();
+                let bound = partitions.div_ceil(live.len());
+                (delta, bound, {
+                    let after = after.clone();
+                    Box::new(move |p: usize| after[p] as usize == id)
+                })
+            } else {
+                let victim = live[g.usize_in(0, live.len() - 1)];
+                let delta = handle.retire_node(victim);
+                if !delta.changed {
+                    continue; // last live node: refused
+                }
+                let bound = partitions.div_ceil(live.len());
+                live.retain(|&n| n != victim);
+                let owned_before = before.clone();
+                (delta, bound, Box::new(move |p: usize| owned_before[p] as usize == victim))
+            };
+            let after: Vec<u32> =
+                handle.snapshot().partition_table().expect("ptable snapshot").0.to_vec();
+            let changed: Vec<usize> =
+                (0..partitions).filter(|&p| before[p] != after[p]).collect();
+            prop_assert!(
+                changed.len() <= bound,
+                "step {step}: {} partitions moved, quota bound {bound}",
+                changed.len()
+            );
+            prop_assert!(
+                delta.partitions_moved as usize == changed.len(),
+                "step {step}: delta says {} moved, table diff says {}",
+                delta.partitions_moved,
+                changed.len()
+            );
+            for &p in &changed {
+                prop_assert!(
+                    explain(p),
+                    "step {step}: partition {p} moved {} -> {} between survivors",
+                    before[p],
+                    after[p]
+                );
+            }
+            for &p in &changed {
+                prop_assert!(
+                    live.contains(&(after[p] as usize)),
+                    "step {step}: partition {p} landed on dead node {}",
+                    after[p]
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ptable_replicas_never_colocate_in_a_zone() {
+    // ISSUE 10 satellite: with R-replica placement under a zone map, no
+    // partition's placement ever puts two replicas in one failure domain
+    // — as long as there are at least R distinct zones to walk
+    use dpa::hash::{effective_zone, PartitionTableRouter, Router};
+    forall("R replicas span R distinct zones", 30, |g| {
+        let replicas = 2 + g.usize_in(0, 2) as u32;
+        let zones_n = g.usize_in(1, 5);
+        if (zones_n as u32) < replicas {
+            // fewer domains than replicas: colocation is unavoidable by
+            // pigeonhole — the placement walk degrades to distinct nodes,
+            // which prop_ptable_rewrites covers; skip the zone claim
+            return Ok(());
+        }
+        let nodes = g.usize_in(zones_n, 8);
+        let bits = g.usize_in(3, 7) as u32;
+        let mut r = PartitionTableRouter::new(nodes, bits, replicas);
+        // nodes dealt round-robin across zones: every zone is populated
+        let zone_of: Vec<u32> = (0..nodes).map(|n| (n % zones_n) as u32).collect();
+        r.set_zones(&zone_of);
+        // a couple of membership changes must preserve the placement rule
+        let loads = dpa::hash::Loads::new(nodes);
+        for _ in 0..g.usize_in(0, 2) {
+            if g.bool() {
+                r.add_node(r.nodes());
+            } else {
+                r.retire_node(g.usize_in(0, nodes - 1), &loads);
+            }
+        }
+        // retires may have shrunk zone diversity below R; the walk then
+        // legitimately degrades to distinct *nodes*, so the zone claim
+        // only binds while the live set still spans ≥ R domains
+        let mut live_zones: Vec<u32> = (0..r.nodes())
+            .filter(|&n| r.is_live(n))
+            .map(|n| effective_zone(&zone_of, n))
+            .collect();
+        live_zones.sort_unstable();
+        live_zones.dedup();
+        if (live_zones.len() as u32) < replicas {
+            return Ok(());
+        }
+        for p in 0..r.partitions() {
+            let placed = r.replicas_of(p);
+            let mut zs: Vec<u32> =
+                placed.iter().map(|&n| effective_zone(&zone_of, n)).collect();
+            zs.sort_unstable();
+            let before = zs.len();
+            zs.dedup();
+            prop_assert!(
+                zs.len() == before,
+                "partition {p}: placement {placed:?} co-locates two replicas in a zone \
+                 (zones {zone_of:?})"
             );
         }
         Ok(())

@@ -107,6 +107,8 @@ fn compiled_route_parity_all_router_families_across_epochs() {
         StrategySpec::MultiProbe { probes: 2 },
         StrategySpec::MultiProbe { probes: 4 },
         StrategySpec::TwoChoices,
+        StrategySpec::Ptable { bits: 8, replicas: 1 },
+        StrategySpec::Ptable { bits: 10, replicas: 2 },
     ];
     for spec in specs {
         let handle = RouterHandle::new(spec.build_router(4, 8, None));
@@ -153,7 +155,9 @@ fn compiled_route_parity_with_decayed_signal_snapshots() {
     let refs: Vec<&[u8]> = keys.iter().map(Vec::as_slice).collect();
     let signal = SignalConfig { decay_alpha: 0.3, hysteresis: 0.5, min_gain: 0.2 };
     for spec in [StrategySpec::MultiProbe { probes: 3 }, StrategySpec::TwoChoices] {
-        let handle = RouterHandle::with_signal(spec.build_router(4, 8, None), &signal);
+        let handle = RouterHandle::builder(spec.build_router(4, 8, None))
+            .signal(&signal)
+            .build();
         for &k in refs.iter().take(100) {
             handle.route_key(k);
         }
@@ -187,7 +191,7 @@ fn compiled_route_parity_with_elastic_membership() {
     // the elastic acceptance contract: the compiled route programs must
     // agree bit-for-bit with the scalar routers across epochs whose NODE
     // COUNT varies — scale-up adds ids, scale-down leaves gaps in the id
-    // space — for all four router families
+    // space — for every compiled router family
     use dpa::balancer::signal::SignalConfig;
     use dpa::hash::{RouterHandle, StrategySpec};
     let rt = runtime();
@@ -198,13 +202,13 @@ fn compiled_route_parity_with_elastic_membership() {
         StrategySpec::Doubling,
         StrategySpec::MultiProbe { probes: 3 },
         StrategySpec::TwoChoices,
+        StrategySpec::Ptable { bits: 8, replicas: 2 },
     ];
     for spec in specs {
-        let handle = RouterHandle::with_signal_capacity(
-            spec.build_router(3, 8, None),
-            &SignalConfig::legacy(),
-            8,
-        );
+        let handle = RouterHandle::builder(spec.build_router(3, 8, None))
+            .signal(&SignalConfig::legacy())
+            .capacity(8)
+            .build();
         // warm the sticky table so retires exercise the orphan rewrite
         for &k in refs.iter().take(100) {
             handle.route_key(k);
@@ -273,6 +277,18 @@ fn probe_snapshot_on_legacy_artifacts_errors_typed() {
     match err.downcast_ref::<dpa::runtime::Error>() {
         Some(dpa::runtime::Error::UnsupportedSnapshot { router, .. }) => {
             assert_eq!(router, "multi-probe");
+        }
+        other => panic!("expected UnsupportedSnapshot, got {other:?}"),
+    }
+
+    // same for a partition-table snapshot: route_table.hlo.txt is absent
+    let tabled = RouterHandle::new(
+        StrategySpec::Ptable { bits: 8, replicas: 1 }.build_router(4, 8, None),
+    );
+    let err = rt.route_batch_snapshot(&keys, &tabled.snapshot()).unwrap_err();
+    match err.downcast_ref::<dpa::runtime::Error>() {
+        Some(dpa::runtime::Error::UnsupportedSnapshot { router, .. }) => {
+            assert_eq!(router, "partition-table");
         }
         other => panic!("expected UnsupportedSnapshot, got {other:?}"),
     }
@@ -442,6 +458,7 @@ fn full_pipeline_compiled_route_path_every_router_family() {
         Strategy::Doubling,
         Strategy::MultiProbe { probes: 3 },
         Strategy::TwoChoices,
+        Strategy::Ptable { bits: 8, replicas: 1 },
     ] {
         let factory = xla_wordcount_factory(rt.clone());
         let mut cfg = PipelineConfig::default();
